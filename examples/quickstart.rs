@@ -1,0 +1,60 @@
+//! Quickstart: train a multiclass SVM on Iris across the simulated cluster
+//! with the device (PJRT) backend, then classify held-out flowers.
+//!
+//!     make artifacts && cargo run --release --offline --example quickstart
+
+use std::sync::Arc;
+
+use parasvm::backend::{Solver, XlaBackend};
+use parasvm::coordinator::{train_multiclass, TrainConfig};
+use parasvm::data::{iris, scale::Scaler, split};
+use parasvm::harness::hyperparams_for;
+use parasvm::util::fmt_secs;
+use parasvm::util::rng::Rng;
+
+fn main() -> parasvm::Result<()> {
+    // 1. Data: the real (embedded) Iris set, min-max scaled, 80/20 split.
+    let ds = iris::load();
+    let ds = Scaler::fit_minmax(&ds).apply(&ds);
+    let (train, test) = split::stratified(&ds, 0.8, &mut Rng::new(7));
+
+    // 2. Backend: AOT artifacts on the PJRT device (the "CUDA" stack).
+    let backend = Arc::new(XlaBackend::open_default()?);
+
+    // 3. Train one-vs-one across 3 simulated MPI ranks (paper Fig 4).
+    let cfg = TrainConfig {
+        workers: 3,
+        solver: Solver::Smo,
+        params: hyperparams_for(&train),
+        ..Default::default()
+    };
+    let (model, report) = train_multiclass(&train, backend, &cfg)?;
+
+    println!(
+        "trained {} binary classifiers in {} ({} device iterations, {} SVs)",
+        model.binaries.len(),
+        fmt_secs(report.wall_secs),
+        report.total_iters(),
+        model.total_svs(),
+    );
+    println!(
+        "interconnect: {} messages, {} bytes, {} simulated wire time",
+        report.net_messages,
+        report.net_bytes,
+        fmt_secs(report.net_sim_secs)
+    );
+
+    // 4. Evaluate.
+    println!("train accuracy: {:.3}", model.accuracy(&train.x, &train.y));
+    println!("test  accuracy: {:.3}", model.accuracy(&test.x, &test.y));
+
+    // 5. Classify one flower.
+    let q = test.row(0);
+    let class = model.predict(q);
+    println!(
+        "sample 0 -> predicted {:?}, actual {:?}",
+        model.class_names[class],
+        model.class_names[test.y[0] as usize]
+    );
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Serving demo: latency/throughput of the dynamic-batching classifier
+//! under open-loop load, with a batching on/off comparison.
+//!
+//!     cargo run --release --offline --example serve_demo -- --backend native
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use parasvm::backend::{NativeBackend, SvmBackend, XlaBackend};
+use parasvm::config::BackendKind;
+use parasvm::coordinator::{train_multiclass, TrainConfig};
+use parasvm::data::{self, scale::Scaler};
+use parasvm::harness::hyperparams_for;
+use parasvm::metrics::stats::Summary;
+use parasvm::serve::{BatchPolicy, Server};
+use parasvm::util::args::Args;
+use parasvm::util::fmt_secs;
+use parasvm::util::rng::Rng;
+
+fn main() -> parasvm::Result<()> {
+    let args = Args::parse_with_flags(std::env::args().skip(1), &[])
+        .map_err(parasvm::Error::Config)?;
+    let dataset = args.opt("dataset").unwrap_or("wdbc").to_string();
+    let n_requests: usize =
+        args.get("requests").map_err(parasvm::Error::Config)?.unwrap_or(5000);
+    let backend_kind: BackendKind = args
+        .opt("backend")
+        .unwrap_or("xla")
+        .parse()
+        .map_err(parasvm::Error::Config)?;
+    args.finish().map_err(parasvm::Error::Config)?;
+
+    let raw = data::by_name(&dataset, 42)
+        .ok_or_else(|| parasvm::Error::Config(format!("unknown dataset {dataset}")))?;
+    let ds = Scaler::fit_minmax(&raw).apply(&raw);
+    let backend: Arc<dyn SvmBackend> = match backend_kind {
+        BackendKind::Xla => Arc::new(XlaBackend::open_default()?),
+        BackendKind::Native => Arc::new(NativeBackend::new()),
+    };
+    let cfg = TrainConfig { workers: 2, params: hyperparams_for(&ds), ..Default::default() };
+    let (model, _) = train_multiclass(&ds, backend, &cfg)?;
+    println!("model: {} classes, {} total SVs", model.n_classes, model.total_svs());
+
+    for (label, policy) in [
+        ("no batching  (max_batch=1) ", BatchPolicy { max_batch: 1, max_wait: Duration::ZERO }),
+        ("batching     (64 / 2ms)    ", BatchPolicy::default()),
+        ("batching big (256 / 5ms)   ", BatchPolicy {
+            max_batch: 256,
+            max_wait: Duration::from_millis(5),
+        }),
+    ] {
+        let server = Server::start(model.clone(), policy);
+        let mut rng = Rng::new(1);
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = (0..n_requests)
+            .map(|_| server.submit(ds.row(rng.below(ds.n)).to_vec()).unwrap())
+            .collect();
+        let mut lats = Vec::with_capacity(n_requests);
+        for rx in rxs {
+            let resp = rx.recv().map_err(|_| parasvm::Error::Serve("dropped".into()))?;
+            lats.push(resp.latency_secs);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let s = Summary::of(&lats);
+        println!(
+            "{label} {:>8.0} req/s   p50 {:>9}  p95 {:>9}  mean batch {:>5.1}",
+            n_requests as f64 / wall,
+            fmt_secs(s.median),
+            fmt_secs(s.p95),
+            server.stats().mean_batch_size(),
+        );
+        server.shutdown();
+    }
+    Ok(())
+}

@@ -1,0 +1,214 @@
+"""AOT pipeline: lower every device entry point to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the rust runtime loads the
+text with ``HloModuleProto::from_text_file`` and compiles it on the PJRT
+CPU client. HLO text — NOT ``lowered.compile()`` / serialized protos — is
+the interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README).
+
+Artifacts are emitted per *shape bucket* (DESIGN.md §4):
+
+    gram_n{N}_d{D}        (x[N,D], gamma)                       -> (K[N,N],)
+    cross_n{N}_q{Q}_d{D}  (x[N,D], z[Q,D], gamma)               -> (K[N,Q],)
+    smo_chunk_n{N}        (K, y, alpha, f, mask, C, tol, steps) -> (alpha, f, b_up, b_low, steps)
+    gd_epochs_n{N}        (K, y, alpha, mask, C, lr, epochs)    -> (alpha, obj)
+    gd_bias_n{N}          (K, y, alpha, mask, C)                -> (bias,)
+    predict_n{N}_q{Q}_d{D}(x, q, alpha, y, mask, bias, gamma)   -> (dec[Q],)
+
+A ``manifest.json`` records the input-source digest and per-artifact shapes;
+re-running with unchanged sources is a no-op, so ``make artifacts`` is
+incremental and the rust side can sanity-check shapes without parsing HLO.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+
+# The device SMO keeps its state vectors in f64 (see model.smo_chunk);
+# without x64 JAX silently downcasts and the solver stalls on
+# ill-conditioned kernels. Must run before any tracing.
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# Shape buckets (DESIGN.md §4). Rows cover the paper's sweeps:
+#   Iris binary     n=80    -> 128
+#   WDBC binary     n=380   -> 512
+#   Pavia binary    n=400..1600 -> 512/1024/1536/2048 (one bucket per sweep
+#   point so the Fig 6/7 growth shape is not flattened by padding)
+# Feature buckets: iris d=4 -> 16 (pallas lane alignment), wdbc d=30 -> 32,
+# pavia d=102 -> 128. Query bucket fixed at 256.
+N_BUCKETS = (128, 512, 1024, 1536, 2048)
+D_BUCKETS = (16, 32, 128)
+Q_BUCKETS = (256,)
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def entry_points():
+    """(name, fn, example_args, tuple_out) for every artifact.
+
+    Names are parsed by rust/src/runtime/registry.rs — keep the grammar in
+    sync. `tuple_out=False` single-output entry points lower without a tuple
+    root so their result is directly a device buffer the rust runtime can
+    feed into the next executable (device-resident Gram chaining);
+    multi-output entry points keep the tuple root and are decomposed on the
+    host.
+    """
+    s = _spec
+    eps = []
+    for n in N_BUCKETS:
+        for d in D_BUCKETS:
+            eps.append((f"gram_n{n}_d{d}", model.gram, (s((n, d)), s(())), False))
+        eps.append((
+            f"smo_chunk_n{n}",
+            model.smo_chunk,
+            (s((n, n)), s((n,)), s((n,)), s((n,)), s((n,)), s(()), s(()), s((), I32)),
+            True,
+        ))
+        eps.append((
+            f"gd_epochs_n{n}",
+            model.gd_epochs,
+            (s((n, n)), s((n,)), s((n,)), s((n,)), s(()), s(()), s((), I32)),
+            True,
+        ))
+        for d in D_BUCKETS:
+            eps.append((
+                f"gd_step_n{n}_d{d}",
+                model.gd_step_full,
+                (s((n, d)), s((n,)), s((n,)), s((n,)), s(()), s(()), s(())),
+                False,
+            ))
+        eps.append((
+            f"gd_bias_n{n}",
+            model.gd_bias,
+            (s((n, n)), s((n,)), s((n,)), s((n,)), s(())),
+            False,
+        ))
+        for q in Q_BUCKETS:
+            for d in D_BUCKETS:
+                eps.append((
+                    f"predict_n{n}_q{q}_d{d}",
+                    model.predict,
+                    (s((n, d)), s((q, d)), s((n,)), s((n,)), s((n,)), s(()), s(())),
+                    False,
+                ))
+    return eps
+
+
+def to_hlo_text(lowered, tuple_out: bool) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=tuple_out
+    )
+    return comp.as_hlo_text()
+
+
+def _source_digest() -> str:
+    """Digest of every python source that feeds the artifacts."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        if "__pycache__" in root:
+            continue
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                p = os.path.join(root, fn)
+                h.update(p.encode())
+                with open(p, "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def _arg_manifest(args):
+    return [
+        {"shape": list(a.shape), "dtype": str(a.dtype.name)} for a in args
+    ]
+
+
+def build(out_dir: str, force: bool = False, only: str | None = None) -> int:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    digest = _source_digest()
+
+    old = {}
+    if os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as fh:
+                old = json.load(fh)
+        except (json.JSONDecodeError, OSError):
+            old = {}
+
+    if not force and only is None and old.get("digest") == digest:
+        missing = [
+            ep[0] for ep in entry_points()
+            if not os.path.exists(os.path.join(out_dir, f"{ep[0]}.hlo.txt"))
+        ]
+        if not missing:
+            print(f"artifacts up-to-date (digest {digest[:12]}), nothing to do")
+            return 0
+
+    entries = {}
+    t0 = time.time()
+    n_built = 0
+    for name, fn, args, tuple_out in entry_points():
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        if only is not None and only not in name:
+            continue
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered, tuple_out)
+        with open(path, "w") as fh:
+            fh.write(text)
+        entries[name] = {
+            "file": f"{name}.hlo.txt",
+            "bytes": len(text),
+            "tuple_out": tuple_out,
+            "args": _arg_manifest(args),
+        }
+        n_built += 1
+        print(f"  [{n_built:3d}] {name:28s} {len(text):>9d} B  "
+              f"({time.time() - t0:6.1f}s elapsed)")
+
+    if only is None:
+        manifest = {
+            "digest": digest,
+            "jax": jax.__version__,
+            "n_buckets": list(N_BUCKETS),
+            "d_buckets": list(D_BUCKETS),
+            "q_buckets": list(Q_BUCKETS),
+            "entries": entries,
+        }
+        with open(manifest_path, "w") as fh:
+            json.dump(manifest, fh, indent=1, sort_keys=True)
+    print(f"built {n_built} artifacts into {out_dir} in {time.time() - t0:.1f}s")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--force", action="store_true", help="rebuild even if fresh")
+    ap.add_argument("--only", default=None, help="substring filter (no manifest update)")
+    ns = ap.parse_args()
+    return build(ns.out, force=ns.force, only=ns.only)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,172 @@
+"""L1 Pallas kernel: tiled RBF (Gaussian) kernel-matrix computation.
+
+This is the compute hot-spot of both stacks in the paper: every binary SMO
+problem first materializes the Gram matrix K[i,j] = exp(-g*||x_i - z_j||^2)
+(the paper's CUDA code caches kernel rows in device memory; the TF code
+builds the same matrix inside its dataflow graph).
+
+Hardware adaptation (paper CUDA -> TPU-style Pallas, see DESIGN.md):
+
+  * CUDA threadblock tiles in shared memory      -> BlockSpec (TM, TN) tiles
+    staged through VMEM.
+  * per-thread dot products                      -> one (TM,d) x (d,TN)
+    contraction per tile on the MXU via jnp.dot with
+    preferred_element_type=f32.
+  * grid-stride loops over the sample dimension  -> a (ceil(n/TM), ceil(m/TN))
+    Pallas grid; XLA pipelines the HBM->VMEM copies.
+
+The squared distance uses the expanded identity ||x||^2 + ||z||^2 - 2 x.z so
+the inner loop is a matmul (MXU) instead of a broadcast-subtract (VPU).
+
+VMEM budget per grid cell (f32): TM*d + TN*d + TM*TN words. For the default
+TM=TN=128 and the largest feature bucket d=128 that is 3 * 64 KiB = 192 KiB,
+far below the ~16 MiB VMEM of a real TPU core — chosen so the same BlockSpec
+would compile unchanged with interpret=False on device. `interpret=True` is
+mandatory here because the CPU PJRT plugin cannot execute Mosaic
+custom-calls (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile-size policy. 128 is the MXU systolic-array edge (the minimum useful
+# tile); AUTO_TILE_MAX caps auto-chosen tiles at 512, keeping the largest
+# grid cell's VMEM working set ~1.6 MiB (d=128) — far under the 16 MiB
+# budget — while cutting grid-cell count 16x. Measured on the CPU PJRT
+# interpret path (n=2048, d=128): tile 128 -> 133 ms, tile 512 -> 30 ms
+# (grid-loop overhead dominates small tiles); see EXPERIMENTS.md §Perf.
+TILE_M = 128
+TILE_N = 128
+AUTO_TILE_MAX = 512
+
+
+def auto_tile(rows: int) -> int:
+    """Largest MXU-aligned tile <= AUTO_TILE_MAX that divides `rows`."""
+    t = min(rows, AUTO_TILE_MAX)
+    while t > TILE_M and rows % t != 0:
+        t -= TILE_M
+    return t
+
+
+def _rbf_tile_kernel(x_ref, z_ref, gamma_ref, out_ref):
+    """One (TM, TN) output tile: exp(-gamma * ||x_i - z_j||^2).
+
+    x_ref:     (TM, d) VMEM block of left samples
+    z_ref:     (TN, d) VMEM block of right samples
+    gamma_ref: (1, 1)  broadcast scalar
+    out_ref:   (TM, TN) output tile
+    """
+    x = x_ref[...]
+    z = z_ref[...]
+    gamma = gamma_ref[0, 0]
+    # Row norms on the VPU, cross terms on the MXU.
+    xx = jnp.sum(x * x, axis=1, keepdims=True)           # (TM, 1)
+    zz = jnp.sum(z * z, axis=1, keepdims=True).T         # (1, TN)
+    xz = jnp.dot(x, z.T, preferred_element_type=jnp.float32)  # (TM, TN) MXU
+    d2 = jnp.maximum(xx + zz - 2.0 * xz, 0.0)
+    out_ref[...] = jnp.exp(-gamma * d2)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n"))
+def rbf_gram(x, z, gamma, *, tile_m: int | None = None, tile_n: int | None = None):
+    """Tiled RBF kernel matrix between row sets `x` (n,d) and `z` (m,d).
+
+    Both n and m must be multiples of the tile sizes (the AOT shape buckets
+    guarantee this; see aot.py). `gamma` is a scalar (traced or concrete).
+    Tiles default to `auto_tile` (<=512, MXU-aligned).
+    """
+    n, d = x.shape
+    m, _ = z.shape
+    tile_m = auto_tile(n) if tile_m is None else tile_m
+    tile_n = auto_tile(m) if tile_n is None else tile_n
+    if n % tile_m or m % tile_n:
+        raise ValueError(f"rows ({n},{m}) not multiples of tiles ({tile_m},{tile_n})")
+    gamma_arr = jnp.asarray(gamma, jnp.float32).reshape(1, 1)
+
+    grid = (n // tile_m, m // tile_n)
+    return pl.pallas_call(
+        _rbf_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_n, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, z, gamma_arr)
+
+
+def _decision_tile_kernel(q_ref, x_ref, w_ref, gamma_ref, acc_ref):
+    """One (TQ,) slice of the decision function, accumulated over x tiles.
+
+    Grid is (q_tiles, n_tiles); the n axis is the reduction axis, so the
+    accumulator tile is revisited (same index map on axis 0) and we add the
+    partial kernel-weighted sums into it — the Pallas idiom for a tiled
+    matvec reduction (double-buffered HBM->VMEM streaming on real hardware).
+    """
+    j = pl.program_id(1)
+    q = q_ref[...]
+    x = x_ref[...]
+    w = w_ref[...]  # (TN, 1) weights alpha*y*mask for this x tile
+    gamma = gamma_ref[0, 0]
+    qq = jnp.sum(q * q, axis=1, keepdims=True)                 # (TQ, 1)
+    xx = jnp.sum(x * x, axis=1, keepdims=True).T               # (1, TN)
+    qx = jnp.dot(q, x.T, preferred_element_type=jnp.float32)   # (TQ, TN) MXU
+    k = jnp.exp(-gamma * jnp.maximum(qq + xx - 2.0 * qx, 0.0))
+    partial = jnp.dot(k, w, preferred_element_type=jnp.float32)  # (TQ, 1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("tile_q", "tile_n"))
+def rbf_decision(queries, x, w, gamma, *, tile_q: int | None = None, tile_n: int | None = None):
+    """Fused decision kernel: (exp(-g*||q - x||^2) @ w) without materializing
+    the (q, n) cross-kernel matrix in HBM.
+
+    queries: (q, d); x: (n, d); w: (n,) combined alpha*y*mask weights.
+    Returns (q,) decision values (bias NOT added — caller adds it).
+    """
+    qn, d = queries.shape
+    n, _ = x.shape
+    tile_q = auto_tile(qn) if tile_q is None else tile_q
+    tile_n = auto_tile(n) if tile_n is None else tile_n
+    if qn % tile_q or n % tile_n:
+        raise ValueError(f"rows ({qn},{n}) not multiples of tiles ({tile_q},{tile_n})")
+    gamma_arr = jnp.asarray(gamma, jnp.float32).reshape(1, 1)
+    w2 = w.reshape(n, 1).astype(jnp.float32)
+
+    grid = (qn // tile_q, n // tile_n)
+    out = pl.pallas_call(
+        _decision_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_n, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile_n, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_q, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((qn, 1), jnp.float32),
+        interpret=True,
+    )(queries, x, w2, gamma_arr)
+    return out[:, 0]
+
+
+def vmem_bytes(tile_m: int, tile_n: int, d: int) -> int:
+    """Estimated VMEM working set (f32 words * 4) of one rbf_gram grid cell.
+
+    Used by DESIGN.md §Perf and python/tests/test_vmem_budget.py to assert
+    every shipped BlockSpec stays under the real-TPU VMEM budget.
+    """
+    return 4 * (tile_m * d + tile_n * d + tile_m * tile_n + 1)

@@ -1,0 +1,137 @@
+"""Pure-jnp reference oracles for the Pallas kernels and device solvers.
+
+Everything in this module is deliberately written in the most obvious way
+possible (no tiling, no fusion, no while_loop tricks) so it can serve as the
+correctness ground truth for:
+
+  * the tiled Pallas RBF kernels (`rbf_gram.py`)  — via pytest/hypothesis,
+  * the AOT device SMO / GD solvers (`model.py`)  — via duality-gap and
+    KKT-residual checks,
+  * the pure-rust native backend                  — via golden vectors
+    checked by `python/tests/test_golden.py` against the same constants
+    embedded in `rust/src/svm/golden.rs`.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def sq_dists(x: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise squared Euclidean distances, (n,d) x (m,d) -> (n,m)."""
+    # Expanded ||x-z||^2 = ||x||^2 + ||z||^2 - 2 x.z — the same identity the
+    # Pallas kernel tiles, so numerics match closely; clamp for round-off.
+    xx = jnp.sum(x * x, axis=1)[:, None]
+    zz = jnp.sum(z * z, axis=1)[None, :]
+    d2 = xx + zz - 2.0 * (x @ z.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def rbf_gram(x: jnp.ndarray, z: jnp.ndarray, gamma) -> jnp.ndarray:
+    """RBF (Gaussian) kernel matrix K[i,j] = exp(-gamma * ||x_i - z_j||^2)."""
+    return jnp.exp(-gamma * sq_dists(x, z))
+
+
+def decision(x_train, queries, alpha, y, mask, bias, gamma):
+    """SVM decision values for a batch of queries, masked training rows."""
+    k = rbf_gram(queries, x_train, gamma)  # (q, n)
+    w = alpha * y * mask
+    return k @ w + bias
+
+
+# ---------------------------------------------------------------------------
+# NumPy SMO oracle (Keerthi dual-threshold variant, one pair per iteration).
+# Mirrors exactly the update rule the device `smo_chunk` implements, but as
+# a plain python loop — slow, obvious, debuggable.
+# ---------------------------------------------------------------------------
+
+def smo_reference(K, y, C, tol=1e-3, max_iter=100_000):
+    """Solve the SVM dual over a precomputed Gram matrix.
+
+    Returns (alpha, bias, iters, b_up, b_low).
+    """
+    n = K.shape[0]
+    alpha = np.zeros(n, dtype=np.float64)
+    f = -y.astype(np.float64)  # f_i = sum_j a_j y_j K_ij - y_i, alpha == 0
+    Kd = np.asarray(K, dtype=np.float64)
+    yd = np.asarray(y, dtype=np.float64)
+    eps = 1e-12
+
+    it = 0
+    b_up, b_low = 0.0, 0.0
+    while it < max_iter:
+        in_up = ((yd > 0) & (alpha < C - eps)) | ((yd < 0) & (alpha > eps))
+        in_low = ((yd > 0) & (alpha > eps)) | ((yd < 0) & (alpha < C - eps))
+        f_up = np.where(in_up, f, np.inf)
+        f_low = np.where(in_low, f, -np.inf)
+        i = int(np.argmin(f_up))   # i_up / "high"
+        j = int(np.argmax(f_low))  # i_low
+        b_up, b_low = float(f_up[i]), float(f_low[j])
+        if b_low <= b_up + 2.0 * tol:
+            break
+
+        # Two-variable analytic step on the (i, j) = (high, low) pair.
+        eta = max(Kd[i, i] + Kd[j, j] - 2.0 * Kd[i, j], 1e-12)
+        s = yd[i] * yd[j]
+        if s > 0:
+            L = max(0.0, alpha[j] + alpha[i] - C)
+            H = min(C, alpha[j] + alpha[i])
+        else:
+            L = max(0.0, alpha[j] - alpha[i])
+            H = min(C, C + alpha[j] - alpha[i])
+        aj_new = min(max(alpha[j] + yd[j] * (b_up - b_low) / eta, L), H)
+        d_aj = aj_new - alpha[j]
+        d_ai = -s * d_aj
+        alpha[j] = aj_new
+        alpha[i] += d_ai
+        f += d_ai * yd[i] * Kd[i, :] + d_aj * yd[j] * Kd[j, :]
+        it += 1
+
+    bias = -(b_up + b_low) / 2.0
+    return alpha, bias, it, b_up, b_low
+
+
+def dual_objective(K, y, alpha) -> float:
+    """W(a) = sum a - 1/2 a^T (yy^T o K) a  (to be maximized)."""
+    ay = alpha * y
+    return float(np.sum(alpha) - 0.5 * ay @ np.asarray(K, dtype=np.float64) @ ay)
+
+
+def kkt_violation(K, y, alpha, C) -> float:
+    """Max KKT violation (b_low - b_up, clamped at 0) of a dual solution."""
+    f = np.asarray(K, dtype=np.float64) @ (alpha * y) - y
+    eps = 1e-9
+    in_up = ((y > 0) & (alpha < C - eps)) | ((y < 0) & (alpha > eps))
+    in_low = ((y > 0) & (alpha > eps)) | ((y < 0) & (alpha < C - eps))
+    if not in_up.any() or not in_low.any():
+        return 0.0
+    b_up = float(np.min(f[in_up]))
+    b_low = float(np.max(f[in_low]))
+    return max(0.0, b_low - b_up)
+
+
+# ---------------------------------------------------------------------------
+# NumPy projected-gradient-ascent oracle for the TF-analog solver.
+# ---------------------------------------------------------------------------
+
+def gd_reference(K, y, C, lr, epochs):
+    """Fixed-step projected gradient ascent on the dual (no early exit).
+
+    This is the cost shape of the paper's TensorFlow implementation: a static
+    dataflow graph run for a fixed number of optimizer steps.
+    Returns (alpha, bias, final_dual_objective).
+    """
+    n = K.shape[0]
+    alpha = np.zeros(n, dtype=np.float64)
+    yd = np.asarray(y, dtype=np.float64)
+    Q = (yd[:, None] * yd[None, :]) * np.asarray(K, dtype=np.float64)
+    for _ in range(epochs):
+        grad = 1.0 - Q @ alpha
+        alpha = np.clip(alpha + lr * grad, 0.0, C)
+    # Bias from margin SVs (0 < a < C); fall back to all SVs.
+    f = np.asarray(K, dtype=np.float64) @ (alpha * yd)
+    on_margin = (alpha > 1e-6) & (alpha < C - 1e-6)
+    sel = on_margin if on_margin.any() else (alpha > 1e-6)
+    bias = float(np.mean(yd[sel] - f[sel])) if sel.any() else 0.0
+    return alpha, bias, dual_objective(K, yd, alpha)

@@ -1,0 +1,32 @@
+import os
+import sys
+
+# Make `compile` importable as a package when pytest runs from python/ or repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+
+# Match the AOT configuration (see compile/aot.py): the device SMO keeps
+# f64 state internally.
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xC0FFEE)
+
+
+def make_blobs(rng, n_per, d, sep=2.0, scale=1.0):
+    """Two Gaussian blobs, labels +1/-1 — linearly separable-ish."""
+    mu = rng.normal(size=d)
+    dirn = rng.normal(size=d)
+    dirn /= np.linalg.norm(dirn)
+    xp = rng.normal(scale=scale, size=(n_per, d)) + mu + sep * dirn
+    xm = rng.normal(scale=scale, size=(n_per, d)) + mu - sep * dirn
+    x = np.concatenate([xp, xm]).astype(np.float32)
+    y = np.concatenate([np.ones(n_per), -np.ones(n_per)]).astype(np.float32)
+    perm = rng.permutation(2 * n_per)
+    return x[perm], y[perm]

@@ -1,0 +1,61 @@
+"""L1 fused decision kernel vs oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.rbf_gram import rbf_decision
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+@pytest.mark.parametrize("q,n,d", [(128, 128, 16), (256, 128, 32), (128, 256, 128)])
+def test_matches_dense_path(rng, q, n, d):
+    qs, x, w = _rand(rng, q, d), _rand(rng, n, d), _rand(rng, n)
+    got = rbf_decision(qs, x, w, 0.2)
+    want = ref.rbf_gram(qs, x, 0.2) @ w
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_zero_weights_zero_decision(rng):
+    qs, x = _rand(rng, 128, 16), _rand(rng, 128, 16)
+    got = np.asarray(rbf_decision(qs, x, jnp.zeros(128), 0.2))
+    np.testing.assert_allclose(got, 0.0, atol=1e-7)
+
+
+def test_masked_rows_do_not_contribute(rng):
+    """Zeroing w on padded rows must equal shrinking the training set."""
+    qs = _rand(rng, 128, 16)
+    x = _rand(rng, 256, 16)
+    w = np.array(_rand(rng, 256))
+    w[128:] = 0.0
+    full = rbf_decision(qs, x, jnp.asarray(w), 0.7)
+    # reference on only the valid half
+    want = ref.rbf_gram(qs, x[:128], 0.7) @ w[:128]
+    np.testing.assert_allclose(full, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    tq=st.sampled_from([8, 32]),
+    tn=st.sampled_from([8, 32]),
+    mi=st.integers(1, 3),
+    mj=st.integers(1, 4),
+    d=st.sampled_from([2, 4, 30, 102]),
+    gamma=st.floats(1e-3, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_reduction_tiling(tq, tn, mi, mj, d, gamma, seed):
+    """The accumulated-over-n-tiles reduction must match however n splits."""
+    rng = np.random.default_rng(seed)
+    q, n = tq * mi, tn * mj
+    qs = jnp.asarray(rng.normal(size=(q, d)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    got = rbf_decision(qs, x, w, gamma, tile_q=tq, tile_n=tn)
+    want = ref.rbf_gram(qs, x, gamma) @ w
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

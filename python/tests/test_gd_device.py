@@ -1,0 +1,86 @@
+"""Device GD solver (TF-analog) vs numpy oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+from tests.conftest import make_blobs
+
+C = 10.0
+
+
+def test_matches_numpy_gd_exactly(rng):
+    x, y = make_blobs(rng, 40, 6)
+    K = np.asarray(ref.rbf_gram(jnp.asarray(x), jnp.asarray(x), 0.5))
+    lr, epochs = 0.01, 50
+    a_dev, obj_dev = jax.jit(model.gd_epochs)(
+        jnp.asarray(K), jnp.asarray(y), jnp.zeros(80, jnp.float32),
+        jnp.ones(80, jnp.float32), jnp.float32(C), jnp.float32(lr), jnp.int32(epochs),
+    )
+    a_ref, _, obj_ref = ref.gd_reference(K, y, C, lr, epochs)
+    np.testing.assert_allclose(np.asarray(a_dev), a_ref, rtol=1e-3, atol=1e-4)
+    assert abs(float(obj_dev) - obj_ref) < 1e-2 * max(1.0, abs(obj_ref))
+
+
+def test_fixed_epochs_no_early_exit(rng):
+    """The TF-analog cost shape: 2x epochs must do 2x work (same graph),
+    verified behaviourally — more epochs keeps improving or stays put."""
+    x, y = make_blobs(rng, 32, 4)
+    K = jnp.asarray(ref.rbf_gram(jnp.asarray(x), jnp.asarray(x), 0.5))
+    run = jax.jit(model.gd_epochs)
+    objs = []
+    for e in (10, 100, 400):
+        _, obj = run(K, jnp.asarray(y), jnp.zeros(64, jnp.float32),
+                     jnp.ones(64, jnp.float32), jnp.float32(C),
+                     jnp.float32(0.003), jnp.int32(e))
+        objs.append(float(obj))
+    assert objs[0] <= objs[1] + 1e-3 and objs[1] <= objs[2] + 1e-3
+
+
+def test_padding_stays_zero(rng):
+    x, y = make_blobs(rng, 30, 4)
+    n, pad = 60, 128
+    K = np.zeros((pad, pad), np.float32)
+    K[:n, :n] = np.asarray(ref.rbf_gram(jnp.asarray(x), jnp.asarray(x), 0.5))
+    yp = np.zeros(pad, np.float32)
+    yp[:n] = y
+    mask = np.zeros(pad, np.float32)
+    mask[:n] = 1.0
+    a, _ = jax.jit(model.gd_epochs)(
+        jnp.asarray(K), jnp.asarray(yp), jnp.zeros(pad, jnp.float32),
+        jnp.asarray(mask), jnp.float32(C), jnp.float32(0.01), jnp.int32(100),
+    )
+    np.testing.assert_allclose(np.asarray(a)[n:], 0.0, atol=0.0)
+
+
+def test_gd_reaches_near_smo_objective(rng):
+    """GD (enough epochs) and SMO optimize the same dual; objectives agree
+    loosely — this is the accuracy-parity premise behind the paper's
+    time-only comparison."""
+    x, y = make_blobs(rng, 40, 6, sep=2.5)
+    K0 = np.asarray(ref.rbf_gram(jnp.asarray(x), jnp.asarray(x), 0.5))
+    a_smo, *_ = ref.smo_reference(K0, y, C, 1e-3)
+    w_smo = ref.dual_objective(K0, y, a_smo)
+    a_gd, _ = jax.jit(model.gd_epochs)(
+        jnp.asarray(K0), jnp.asarray(y), jnp.zeros(80, jnp.float32),
+        jnp.ones(80, jnp.float32), jnp.float32(C), jnp.float32(0.01),
+        jnp.int32(2000),
+    )
+    w_gd = ref.dual_objective(K0, y, np.asarray(a_gd, np.float64))
+    assert w_gd >= 0.80 * w_smo
+
+
+def test_gd_bias_reasonable(rng):
+    x, y = make_blobs(rng, 40, 6, sep=3.0)
+    K = jnp.asarray(ref.rbf_gram(jnp.asarray(x), jnp.asarray(x), 0.3))
+    mask = jnp.ones(80, jnp.float32)
+    a, _ = jax.jit(model.gd_epochs)(
+        K, jnp.asarray(y), jnp.zeros(80, jnp.float32), mask,
+        jnp.float32(C), jnp.float32(0.01), jnp.int32(1000),
+    )
+    (b,) = jax.jit(model.gd_bias)(K, jnp.asarray(y), a, mask, jnp.float32(C))
+    dec = np.asarray(K) @ (np.asarray(a) * y) + float(b)
+    acc = float(((dec > 0) == (y > 0)).mean())
+    assert acc >= 0.9

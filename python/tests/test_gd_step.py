@@ -1,0 +1,72 @@
+"""Session-style GD step (TF-1.8 cost model) vs the fused GD graph."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+from tests.conftest import make_blobs
+
+C, LR, GAMMA = 10.0, 0.01, 0.5
+
+
+def test_stepwise_equals_fused(rng):
+    """N session steps == one fused N-epoch call (same update rule)."""
+    x, y = make_blobs(rng, 64, 4)
+    n = 128
+    xj = jnp.asarray(x)
+    yj = jnp.asarray(y)
+    mask = jnp.ones(n, jnp.float32)
+    K = ref.rbf_gram(xj, xj, GAMMA).astype(jnp.float32)
+
+    step = jax.jit(model.gd_step_full)
+    alpha_s = jnp.zeros(n, jnp.float32)
+    for _ in range(40):
+        alpha_s = step(xj, yj, alpha_s, mask, jnp.float32(GAMMA),
+                       jnp.float32(C), jnp.float32(LR))
+
+    alpha_f, _ = jax.jit(model.gd_epochs)(
+        K, yj, jnp.zeros(n, jnp.float32), mask, jnp.float32(C),
+        jnp.float32(LR), jnp.int32(40),
+    )
+    np.testing.assert_allclose(np.asarray(alpha_s), np.asarray(alpha_f),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_step_recomputes_kernel_from_inputs(rng):
+    """Scaling the inputs must change the step outcome — the Gram is not
+    cached anywhere (the TF placeholder semantics)."""
+    x, y = make_blobs(rng, 64, 3)
+    n = 128
+    yj = jnp.asarray(y)
+    mask = jnp.ones(n, jnp.float32)
+    step = jax.jit(model.gd_step_full)
+
+    def run(xs, steps=3):  # >1 step: the very first step is K-independent
+        a = jnp.zeros(n, jnp.float32)
+        for _ in range(steps):
+            a = step(xs, yj, a, mask, jnp.float32(GAMMA),
+                     jnp.float32(C), jnp.float32(LR))
+        return np.asarray(a)
+
+    a1 = run(jnp.asarray(x))
+    a2 = run(jnp.asarray(x * 3.0))
+    assert not np.allclose(a1, a2)
+
+
+def test_padding_rows_stay_zero(rng):
+    x, y = make_blobs(rng, 32, 3)
+    n, pad = 64, 128
+    xp = np.zeros((pad, 3), np.float32)
+    xp[:n] = x
+    yp = np.zeros(pad, np.float32)
+    yp[:n] = y
+    mask = np.zeros(pad, np.float32)
+    mask[:n] = 1.0
+    step = jax.jit(model.gd_step_full)
+    alpha = jnp.zeros(pad, jnp.float32)
+    for _ in range(10):
+        alpha = step(jnp.asarray(xp), jnp.asarray(yp), alpha, jnp.asarray(mask),
+                     jnp.float32(GAMMA), jnp.float32(C), jnp.float32(LR))
+    np.testing.assert_allclose(np.asarray(alpha)[n:], 0.0, atol=0.0)

@@ -1,0 +1,58 @@
+"""Cross-language golden test (pair of rust/tests/golden_cross_language.rs).
+
+The numpy oracle and the rust native SMO solve the same closed-form
+problem; both assert against the same embedded constants.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import ref
+
+N, D = 64, 8
+GOLDEN_OBJ = 27.681971
+GOLDEN_BIAS = 0.427110
+GOLDEN_NSV = 13
+
+
+def golden_problem():
+    x = np.array(
+        [[np.sin(0.7 * i + 1.3 * j) for j in range(D)] for i in range(N)],
+        np.float32,
+    )
+    y = np.array([1.0 if np.sin(2.1 * i) > 0 else -1.0 for i in range(N)])
+    return x, y
+
+
+def test_oracle_reproduces_golden_constants():
+    x, y = golden_problem()
+    assert int((y > 0).sum()) == 42
+    K = np.asarray(ref.rbf_gram(jnp.asarray(x), jnp.asarray(x), 0.5), np.float64)
+    a, b, it, *_ = ref.smo_reference(K, y, 10.0, 1e-3)
+    obj = ref.dual_objective(K, y, a)
+    np.testing.assert_allclose(obj, GOLDEN_OBJ, rtol=1e-4)
+    np.testing.assert_allclose(b, GOLDEN_BIAS, atol=1e-3)
+    assert int((a > 1e-6).sum()) == GOLDEN_NSV
+    assert it > 0
+
+
+def test_device_smo_hits_golden_optimum():
+    import jax
+
+    from compile import model
+
+    x, y = golden_problem()
+    K = ref.rbf_gram(jnp.asarray(x), jnp.asarray(x), 0.5).astype(jnp.float32)
+    yj = jnp.asarray(y, jnp.float32)
+    mask = jnp.ones(N, jnp.float32)
+    alpha, f = model.smo_init(yj, mask)
+    step = jax.jit(model.smo_chunk)
+    for _ in range(100):
+        alpha, f, b_up, b_low, _ = step(
+            K, yj, alpha, f, mask, jnp.float32(10.0), jnp.float32(1e-3), jnp.int32(256)
+        )
+        if float(b_low) <= float(b_up) + 2e-3:
+            break
+    Kd = np.asarray(K, np.float64)
+    obj = ref.dual_objective(Kd, y, np.asarray(alpha, np.float64))
+    np.testing.assert_allclose(obj, GOLDEN_OBJ, rtol=2e-2)

@@ -1,0 +1,104 @@
+"""L1 Pallas RBF Gram kernel vs pure-jnp oracle (the CORE L1 signal)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.rbf_gram import rbf_gram, vmem_bytes
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def _rand(rng, n, d):
+    return jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+
+
+@pytest.mark.parametrize("n,m,d", [(128, 128, 16), (256, 128, 32), (128, 256, 128)])
+def test_matches_ref_default_tiles(rng, n, m, d):
+    x, z = _rand(rng, n, d), _rand(rng, m, d)
+    got = rbf_gram(x, z, 0.1)
+    want = ref.rbf_gram(x, z, 0.1)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@pytest.mark.parametrize("gamma", [1e-4, 0.01, 0.5, 1.0, 10.0])
+def test_gamma_sweep(rng, gamma):
+    # A tiny f32 round-off eps in d2 becomes a gamma*eps relative error in
+    # exp(-gamma*d2); scale the tolerance accordingly.
+    x = _rand(rng, 128, 32)
+    tol = max(1e-5, 3e-5 * gamma)
+    np.testing.assert_allclose(
+        rbf_gram(x, x, gamma), ref.rbf_gram(x, x, gamma), rtol=tol, atol=tol
+    )
+
+
+def test_symmetric_unit_diagonal(rng):
+    x = _rand(rng, 128, 16)
+    k = np.asarray(rbf_gram(x, x, 0.3))
+    np.testing.assert_allclose(k, k.T, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.diag(k), 1.0, rtol=1e-6, atol=1e-6)
+    assert (k >= 0).all() and (k <= 1.0 + 1e-6).all()
+
+
+def test_identical_rows_give_one(rng):
+    x = jnp.tile(_rand(rng, 1, 32), (128, 1))
+    k = np.asarray(rbf_gram(x, x, 2.0))
+    np.testing.assert_allclose(k, 1.0, rtol=1e-6, atol=1e-6)
+
+
+def test_rejects_non_tile_multiple(rng):
+    # Explicit tiles that do not divide the rows must be rejected;
+    # auto-tiling (tile=None) adapts and accepts the same shape.
+    x = _rand(rng, 100, 16)
+    with pytest.raises(ValueError):
+        rbf_gram(x, x, 0.1, tile_m=64, tile_n=64)
+    got = rbf_gram(x, x, 0.1)  # auto tile = 100
+    np.testing.assert_allclose(got, ref.rbf_gram(x, x, 0.1), rtol=1e-5, atol=1e-5)
+
+
+def test_gamma_zero_gives_all_ones(rng):
+    x = _rand(rng, 128, 16)
+    np.testing.assert_allclose(np.asarray(rbf_gram(x, x, 0.0)), 1.0, atol=1e-7)
+
+
+def test_large_gamma_off_diagonal_underflows(rng):
+    x = _rand(rng, 128, 16)
+    k = np.asarray(rbf_gram(x, x, 1e4))
+    off = k - np.diag(np.diag(k))
+    assert off.max() < 1e-6
+
+
+# -- hypothesis sweep over shapes, tiles, gamma, data scale -----------------
+
+tile_sizes = st.sampled_from([8, 16, 32, 64])
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    tm=tile_sizes,
+    tn=tile_sizes,
+    mi=st.integers(1, 3),
+    mj=st.integers(1, 3),
+    d=st.sampled_from([1, 3, 4, 16, 32, 102]),
+    gamma=st.floats(1e-4, 50.0),
+    scale=st.floats(0.01, 100.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shapes(tm, tn, mi, mj, d, gamma, scale, seed):
+    rng = np.random.default_rng(seed)
+    n, m = tm * mi, tn * mj
+    x = jnp.asarray(rng.normal(scale=scale, size=(n, d)), jnp.float32)
+    z = jnp.asarray(rng.normal(scale=scale, size=(m, d)), jnp.float32)
+    got = rbf_gram(x, z, gamma, tile_m=tm, tile_n=tn)
+    want = ref.rbf_gram(x, z, gamma)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_vmem_budget_of_shipped_buckets():
+    """Every shipped BlockSpec must fit a real TPU core's VMEM (~16 MiB)."""
+    from compile.aot import D_BUCKETS
+
+    for d in D_BUCKETS:
+        assert vmem_bytes(512, 512, d) < 16 * 2**20  # largest auto tile

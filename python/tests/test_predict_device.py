@@ -1,0 +1,37 @@
+"""L2 predict entry point (fused L1 kernel + bias) vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_predict_matches_oracle(rng):
+    n, q, d = 128, 256, 32
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    qs = jnp.asarray(rng.normal(size=(q, d)), jnp.float32)
+    a = jnp.asarray(np.abs(rng.normal(size=n)), jnp.float32)
+    y = jnp.asarray(np.sign(rng.normal(size=n)), jnp.float32)
+    mask = jnp.ones(n, jnp.float32)
+    (got,) = jax.jit(model.predict)(x, qs, a, y, mask, jnp.float32(0.37), jnp.float32(0.2))
+    want = ref.decision(x, qs, a, y, mask, 0.37, 0.2)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_predict_ignores_padded_train_rows(rng):
+    n, q, d = 256, 128, 16
+    x = np.asarray(rng.normal(size=(n, d)), np.float32)
+    x[128:] = 1e3  # poison the padding
+    qs = jnp.asarray(rng.normal(size=(q, d)), jnp.float32)
+    a = jnp.asarray(np.abs(rng.normal(size=n)), jnp.float32)
+    y = jnp.asarray(np.sign(rng.normal(size=n)), jnp.float32)
+    mask = np.zeros(n, np.float32)
+    mask[:128] = 1.0
+    (got,) = jax.jit(model.predict)(
+        jnp.asarray(x), qs, a, y, jnp.asarray(mask), jnp.float32(0.0), jnp.float32(0.2)
+    )
+    want = ref.decision(jnp.asarray(x[:128]), qs, a[:128], y[:128],
+                        jnp.ones(128, jnp.float32), 0.0, 0.2)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,141 @@
+"""Device SMO (L2 while_loop graph) vs the numpy oracle.
+
+Drives `smo_chunk` exactly the way the rust coordinator does (paper Fig 3):
+Gram once, then chunks of device iterations with host convergence checks.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from tests.conftest import make_blobs
+
+C, TOL = 10.0, 1e-3
+
+
+def train_device(K, y, mask, C=C, tol=TOL, chunk=256, max_chunks=200):
+    """Host convergence loop over device chunks; returns (alpha, bias, iters)."""
+    step = jax.jit(model.smo_chunk)
+    alpha, f = model.smo_init(jnp.asarray(y), jnp.asarray(mask))
+    total = 0
+    for _ in range(max_chunks):
+        alpha, f, b_up, b_low, steps = step(
+            K, y, alpha, f, mask, jnp.float32(C), jnp.float32(tol), jnp.int32(chunk)
+        )
+        total += int(steps)
+        if float(b_low) <= float(b_up) + 2 * tol:  # host-side check (Fig 3)
+            break
+    bias = -(float(b_up) + float(b_low)) / 2.0
+    return np.asarray(alpha), bias, total
+
+
+def _problem(rng, n_per=48, d=6, gamma=0.5, pad_to=None):
+    x, y = make_blobs(rng, n_per, d)
+    n = 2 * n_per
+    K = np.asarray(ref.rbf_gram(jnp.asarray(x), jnp.asarray(x), gamma))
+    if pad_to and pad_to > n:
+        Kp = np.zeros((pad_to, pad_to), np.float32)
+        Kp[:n, :n] = K
+        yp = np.zeros(pad_to, np.float32)
+        yp[:n] = y
+        mask = np.zeros(pad_to, np.float32)
+        mask[:n] = 1.0
+        return Kp, yp, mask, K, y
+    return K, y, np.ones(n, np.float32), K, y
+
+
+def test_converges_and_matches_oracle_objective(rng):
+    K, y, mask, K0, y0 = _problem(rng)
+    a_dev, b_dev, iters = train_device(
+        jnp.asarray(K), jnp.asarray(y), jnp.asarray(mask)
+    )
+    a_ref, b_ref, it_ref, *_ = ref.smo_reference(K0, y0, C, TOL)
+    w_dev = ref.dual_objective(K0, y0, a_dev.astype(np.float64))
+    w_ref = ref.dual_objective(K0, y0, a_ref)
+    assert iters > 0
+    # Same optimum (the dual is strictly concave in the objective value).
+    assert abs(w_dev - w_ref) <= 1e-2 * max(1.0, abs(w_ref))
+    assert abs(b_dev - b_ref) < 0.05
+
+
+def test_kkt_satisfied_at_exit(rng):
+    K, y, mask, K0, y0 = _problem(rng, n_per=64, d=10)
+    a_dev, _, _ = train_device(jnp.asarray(K), jnp.asarray(y), jnp.asarray(mask))
+    assert ref.kkt_violation(K0, y0, a_dev.astype(np.float64), C) <= 2 * TOL + 1e-4
+
+
+def test_box_and_equality_constraints(rng):
+    K, y, mask, K0, y0 = _problem(rng)
+    a, _, _ = train_device(jnp.asarray(K), jnp.asarray(y), jnp.asarray(mask))
+    assert (a >= -1e-6).all() and (a <= C + 1e-6).all()
+    # sum alpha_i y_i stays 0 (it starts 0; every update preserves it)
+    assert abs(float(a @ y)) < 1e-3
+
+
+def test_padding_rows_never_selected(rng):
+    Kp, yp, mask, K0, y0 = _problem(rng, n_per=40, d=5, pad_to=128)
+    a, b, _ = train_device(jnp.asarray(Kp), jnp.asarray(yp), jnp.asarray(mask))
+    np.testing.assert_allclose(a[80:], 0.0, atol=0.0)
+    # padded problem solves the same dual as the unpadded one
+    a_ref, b_ref, *_ = ref.smo_reference(K0, y0, C, TOL)
+    w_pad = ref.dual_objective(K0, y0, a[:80].astype(np.float64))
+    w_ref = ref.dual_objective(K0, y0, a_ref)
+    assert abs(w_pad - w_ref) <= 1e-2 * max(1.0, abs(w_ref))
+
+
+def test_chunk_budget_respected(rng):
+    K, y, mask, *_ = _problem(rng)
+    alpha, f = model.smo_init(jnp.asarray(y), jnp.asarray(mask))
+    out = jax.jit(model.smo_chunk)(
+        jnp.asarray(K), jnp.asarray(y), alpha, f, jnp.asarray(mask),
+        jnp.float32(C), jnp.float32(TOL), jnp.int32(7),
+    )
+    assert int(out[4]) <= 7
+
+
+def test_zero_chunk_is_identity(rng):
+    K, y, mask, *_ = _problem(rng)
+    alpha, f = model.smo_init(jnp.asarray(y), jnp.asarray(mask))
+    a2, f2, b_up, b_low, steps = jax.jit(model.smo_chunk)(
+        jnp.asarray(K), jnp.asarray(y), alpha, f, jnp.asarray(mask),
+        jnp.float32(C), jnp.float32(TOL), jnp.int32(0),
+    )
+    assert int(steps) == 0
+    np.testing.assert_array_equal(np.asarray(a2), np.asarray(alpha))
+    np.testing.assert_array_equal(np.asarray(f2), np.asarray(f))
+
+
+def test_resume_equals_one_shot(rng):
+    """Chunked training (the Fig-3 host loop) equals one big device chunk."""
+    K, y, mask, K0, y0 = _problem(rng, n_per=32, d=4)
+    Kj, yj, mj = jnp.asarray(K), jnp.asarray(y), jnp.asarray(mask)
+    step = jax.jit(model.smo_chunk)
+
+    a1, f1 = model.smo_init(yj, mj)
+    a1, f1, *_ = step(Kj, yj, a1, f1, mj, jnp.float32(C), jnp.float32(TOL), jnp.int32(10_000))
+
+    a2, f2 = model.smo_init(yj, mj)
+    for _ in range(100):
+        a2, f2, b_up, b_low, _ = step(Kj, yj, a2, f2, mj, jnp.float32(C), jnp.float32(TOL), jnp.int32(17))
+        if float(b_low) <= float(b_up) + 2 * TOL:
+            break
+    w1 = ref.dual_objective(K0, y0, np.asarray(a1, np.float64))
+    w2 = ref.dual_objective(K0, y0, np.asarray(a2, np.float64))
+    assert abs(w1 - w2) <= 1e-3 * max(1.0, abs(w1))
+
+
+def test_accuracy_on_separable_blobs(rng):
+    x, y = make_blobs(rng, 60, 8, sep=3.0)
+    gamma = 0.3
+    K = ref.rbf_gram(jnp.asarray(x), jnp.asarray(x), gamma)
+    mask = np.ones(120, np.float32)
+    a, b, _ = train_device(K, jnp.asarray(y), jnp.asarray(mask))
+    dec = np.asarray(
+        ref.decision(jnp.asarray(x), jnp.asarray(x), jnp.asarray(a),
+                     jnp.asarray(y), jnp.asarray(mask), b, gamma)
+    )
+    acc = float(((dec > 0) == (y > 0)).mean())
+    assert acc >= 0.95

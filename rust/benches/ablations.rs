@@ -1,0 +1,149 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!  A. TF-analog decomposition: session-style GD (per-step dispatch +
+//!     in-graph Gram recompute + session cost model) vs the same without
+//!     the session model vs fully-fused GD. Quantifies where the paper's
+//!     100x lives.
+//!  B. SMO chunk size (device iterations per host round trip, paper Fig 3).
+//!  C. Pair partition strategy (paper's block split vs round-robin vs LPT).
+//!
+//!     cargo bench --offline --bench ablations
+
+use std::sync::Arc;
+
+use parasvm::backend::{Solver, SvmBackend, XlaBackend};
+use parasvm::coordinator::{train_multiclass, Partition, TrainConfig};
+use parasvm::harness::{binary_workload, multiclass_workload};
+use parasvm::metrics::bench::{bench, BenchConfig};
+use parasvm::metrics::table::Table;
+
+fn main() {
+    let quick = std::env::var("PARASVM_BENCH_QUICK").is_ok();
+    let cfg = BenchConfig {
+        warmup: 1,
+        min_samples: if quick { 2 } else { 3 },
+        max_samples: if quick { 3 } else { 5 },
+        cv_target: 0.15,
+    };
+    let be = Arc::new(XlaBackend::open_default().expect("artifacts (make artifacts)"));
+
+    ablation_a_tf_decomposition(&be, &cfg);
+    ablation_b_chunk_size(&be, &cfg);
+    ablation_c_partition(&be, &cfg, quick);
+}
+
+/// A: where does the TF-analog's cost come from?
+fn ablation_a_tf_decomposition(be: &Arc<XlaBackend>, cfg: &BenchConfig) {
+    let mut t = Table::new(
+        "Ablation A — TF-analog cost decomposition (pavia 400/class)",
+        &["variant", "time (s)", "vs fused"],
+    );
+    let w = binary_workload("pavia", 400, 42);
+    let prob = w.problem();
+
+    let mut fused_params = w.params;
+    fused_params.session_overhead_secs = 0.0;
+    let fused = bench("gd-fused", cfg, || {
+        be.train_binary(&prob, &fused_params, Solver::GdFused).unwrap();
+    })
+    .summary
+    .median;
+
+    let mut session_pure = w.params;
+    session_pure.session_overhead_secs = 0.0;
+    let pure = bench("gd-session-pure", cfg, || {
+        be.train_binary(&prob, &session_pure, Solver::Gd).unwrap();
+    })
+    .summary
+    .median;
+
+    // One sample is enough for the sleep-dominated variant.
+    let one = BenchConfig { warmup: 0, min_samples: 1, max_samples: 1, cv_target: 1.0 };
+    let modeled = bench("gd-session-tf", &one, || {
+        be.train_binary(&prob, &w.params, Solver::Gd).unwrap();
+    })
+    .summary
+    .median;
+
+    t.row(&["fused (1 dispatch, Gram cached)".into(), format!("{fused:.4}"), "1.0x".into()]);
+    t.row(&[
+        "session (300 dispatches + Gram recompute)".into(),
+        format!("{pure:.4}"),
+        format!("{:.1}x", pure / fused),
+    ]);
+    t.row(&[
+        "session + TF-1.8 loop cost model (5ms/step)".into(),
+        format!("{modeled:.4}"),
+        format!("{:.1}x", modeled / fused),
+    ]);
+    println!("{}", t.render());
+    t.save_csv(std::path::Path::new("results/ablation_a.csv")).unwrap();
+    assert!(pure > fused, "per-step dispatch must cost more than fused");
+    assert!(modeled > pure, "the session cost model must dominate");
+}
+
+/// B: SMO chunk size (device iterations per host convergence check).
+fn ablation_b_chunk_size(be: &Arc<XlaBackend>, cfg: &BenchConfig) {
+    let mut t = Table::new(
+        "Ablation B — SMO chunk size (pavia 400/class)",
+        &["chunk", "time (s)", "host round trips"],
+    );
+    let w = binary_workload("pavia", 400, 42);
+    let prob = w.problem();
+    for chunk in [32, 128, 512, 2048, 8192] {
+        let mut be2 = XlaBackend::new(Arc::clone(be.registry()));
+        be2.chunk = chunk;
+        let mut chunks = 0usize;
+        let r = bench(&format!("chunk-{chunk}"), cfg, || {
+            let (_, st) = be2.train_binary(&prob, &w.params, Solver::Smo).unwrap();
+            chunks = st.chunks;
+        });
+        t.row(&[
+            chunk.to_string(),
+            format!("{:.4}", r.summary.median),
+            chunks.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    t.save_csv(std::path::Path::new("results/ablation_b.csv")).unwrap();
+}
+
+/// C: partition strategy for the 36 binary problems over 4 ranks.
+fn ablation_c_partition(be: &Arc<XlaBackend>, cfg: &BenchConfig, quick: bool) {
+    let mut t = Table::new(
+        "Ablation C — OvO pair partition over 4 ranks (pavia 9-class)",
+        &["strategy", "wall (s)", "makespan (s)", "imbalance"],
+    );
+    let per_class = if quick { 100 } else { 200 };
+    let (ds, mut params) = multiclass_workload(per_class, 42);
+    params.session_overhead_secs = 0.0;
+    let one = BenchConfig { warmup: 1, min_samples: cfg.min_samples, max_samples: cfg.max_samples, cv_target: cfg.cv_target };
+    for (name, strategy) in [
+        ("block (paper Fig 4)", Partition::Block),
+        ("round-robin", Partition::RoundRobin),
+        ("LPT", Partition::Lpt),
+    ] {
+        let tc = TrainConfig {
+            workers: 4,
+            solver: Solver::Smo,
+            params,
+            partition: strategy,
+            ..Default::default()
+        };
+        let backend: Arc<dyn SvmBackend> = Arc::clone(be) as Arc<dyn SvmBackend>;
+        let mut last = None;
+        let r = bench(name, &one, || {
+            let (_, rep) = train_multiclass(&ds, Arc::clone(&backend), &tc).unwrap();
+            last = Some(rep);
+        });
+        let rep = last.unwrap();
+        t.row(&[
+            name.into(),
+            format!("{:.4}", r.summary.median),
+            format!("{:.4}", rep.makespan_secs()),
+            format!("{:.2}", rep.imbalance()),
+        ]);
+    }
+    println!("{}", t.render());
+    t.save_csv(std::path::Path::new("results/ablation_c.csv")).unwrap();
+}

@@ -1,0 +1,87 @@
+//! §Perf microbenchmarks (EXPERIMENTS.md §Perf): per-layer hot-path costs
+//! and the before/after pairs of the optimization log.
+//!
+//!     cargo bench --offline --bench perf_microbench
+
+use std::sync::Arc;
+
+use parasvm::backend::{Solver, SvmBackend, XlaBackend};
+use parasvm::harness::binary_workload;
+use parasvm::metrics::bench::{bench, BenchConfig};
+use parasvm::runtime::{GramExe, SmoChunkExe, SmoState};
+use parasvm::util::rng::Rng;
+
+fn main() {
+    let cfg = BenchConfig { warmup: 2, min_samples: 5, max_samples: 15, cv_target: 0.05 };
+    let be = Arc::new(XlaBackend::open_default().expect("artifacts (make artifacts)"));
+    let reg = be.registry();
+
+    println!("== L2/L3 device hot paths ==");
+    // Largest-bucket Gram build (the O(n^2 d) device kernel).
+    let w = binary_workload("pavia", 800, 42); // n=1600 -> bucket 2048
+    let prob = w.problem();
+    let gram = GramExe::new(reg, prob.n(), prob.d).unwrap();
+    let r = bench("gram_n2048_d128 exec", &cfg, || {
+        std::hint::black_box(gram.run(&prob.x, prob.n(), prob.d, w.params.gamma).unwrap());
+    });
+    println!("{}", r.report_line());
+
+    // One SMO chunk dispatch (512 device iterations + state round trip).
+    let k_buf = gram.run(&prob.x, prob.n(), prob.d, w.params.gamma).unwrap();
+    let smo = SmoChunkExe::new(reg, &prob.y, w.params.c, w.params.tol).unwrap();
+    let r = bench("smo_chunk_n2048 dispatch (512 it)", &cfg, || {
+        let mut st = SmoState::init(&prob.y, smo.nb);
+        smo.run(&k_buf, &mut st, 512).unwrap();
+        std::hint::black_box(st.iters);
+    });
+    println!("{}", r.report_line());
+
+    // Full binary SMO train (the Table III row-4 unit).
+    let r = bench("binary SMO train (pavia 800/class)", &cfg, || {
+        std::hint::black_box(be.train_binary(&prob, &w.params, Solver::Smo).unwrap());
+    });
+    println!("{}", r.report_line());
+
+    // One session-style GD step (TF-analog unit, without the sleep model).
+    let mut p0 = w.params;
+    p0.session_overhead_secs = 0.0;
+    p0.gd_epochs = 1;
+    let r = bench("gd_step session dispatch (1 step)", &cfg, || {
+        std::hint::black_box(be.train_binary(&prob, &p0, Solver::Gd).unwrap());
+    });
+    println!("{}", r.report_line());
+
+    println!("\n== L3 serving hot path (before/after, EXPERIMENTS.md §Perf row 4) ==");
+    let (model, _) = be.train_binary(&prob, &w.params, Solver::Smo).unwrap();
+    let mut rng = Rng::new(3);
+    let q: Vec<f32> = (0..256 * prob.d).map(|_| rng.normal()).collect();
+    let r_naive = bench("decision_batch naive (256 q)", &cfg, || {
+        std::hint::black_box(model.decision_batch_naive(&q, 256));
+    });
+    println!("{}", r_naive.report_line());
+    let r_fast = bench("decision_batch fast  (256 q)", &cfg, || {
+        std::hint::black_box(model.decision_batch(&q, 256));
+    });
+    println!("{}", r_fast.report_line());
+    println!(
+        "  -> speedup {:.2}x (n_sv={})",
+        r_naive.summary.median / r_fast.summary.median,
+        model.n_sv()
+    );
+
+    println!("\n== native substrate reference points ==");
+    let r = bench("native rbf_gram n=1600 d=102", &cfg, || {
+        std::hint::black_box(parasvm::svm::kernel::rbf_gram(
+            &prob.x,
+            prob.n(),
+            prob.d,
+            w.params.gamma,
+        ));
+    });
+    println!("{}", r.report_line());
+    let r = bench("native SMO solve (gram cached)", &cfg, || {
+        let k = parasvm::svm::kernel::rbf_gram(&prob.x, prob.n(), prob.d, w.params.gamma);
+        std::hint::black_box(parasvm::svm::smo::solve_gram(&k, &prob.y, &w.params));
+    });
+    println!("{}", r.report_line());
+}

@@ -1,0 +1,58 @@
+//! Strong-scaling study (extension of paper Table IV): MPI-SMO multiclass
+//! wall time vs rank count P ∈ {1, 2, 4, 8} at fixed problem size.
+//!
+//! The paper evaluates one fixed node count; this bench measures how the
+//! Fig-4 block partition actually scales on this substrate and reports
+//! the parallel efficiency (T1 / (P * TP)).
+//!
+//!     cargo bench --offline --bench scaling
+
+use std::sync::Arc;
+
+use parasvm::backend::{Solver, SvmBackend, XlaBackend};
+use parasvm::coordinator::{train_multiclass, TrainConfig};
+use parasvm::harness::multiclass_workload;
+use parasvm::metrics::bench::{bench, BenchConfig};
+use parasvm::metrics::table::Table;
+
+fn main() {
+    let quick = std::env::var("PARASVM_BENCH_QUICK").is_ok();
+    let per_class = if quick { 100 } else { 200 };
+    let cfg = BenchConfig {
+        warmup: 1,
+        min_samples: if quick { 2 } else { 3 },
+        max_samples: if quick { 3 } else { 5 },
+        cv_target: 0.15,
+    };
+    let be = Arc::new(XlaBackend::open_default().expect("artifacts (make artifacts)"));
+    let (ds, params) = multiclass_workload(per_class, 42);
+
+    let mut t = Table::new(
+        format!("Strong scaling — pavia 9-class ({per_class}/class), MPI-SMO"),
+        &["ranks", "wall (s)", "speedup", "efficiency", "imbalance", "net KiB"],
+    );
+    let mut t1 = None;
+    for workers in [1usize, 2, 4, 8] {
+        let tc = TrainConfig { workers, solver: Solver::Smo, params, ..Default::default() };
+        let backend: Arc<dyn SvmBackend> = Arc::clone(&be) as Arc<dyn SvmBackend>;
+        let mut last = None;
+        let r = bench(&format!("P={workers}"), &cfg, || {
+            let (_, rep) = train_multiclass(&ds, Arc::clone(&backend), &tc).unwrap();
+            last = Some(rep);
+        });
+        let rep = last.unwrap();
+        let wall = r.summary.median;
+        let base = *t1.get_or_insert(wall);
+        t.row(&[
+            workers.to_string(),
+            format!("{wall:.4}"),
+            format!("{:.2}x", base / wall),
+            format!("{:.0}%", 100.0 * base / (workers as f64 * wall)),
+            format!("{:.2}", rep.imbalance()),
+            format!("{:.1}", rep.net_bytes as f64 / 1024.0),
+        ]);
+    }
+    println!("{}", t.render());
+    t.save_csv(std::path::Path::new("results/scaling.csv")).unwrap();
+    println!("scaling bench OK");
+}

@@ -1,0 +1,41 @@
+//! Bench: paper Table III / Fig 6 — binary Pavia training time,
+//! CUDA-analog (chunked device SMO) vs TF-analog (session-style device GD).
+//!
+//!     cargo bench --offline --bench table3_binary_pavia
+//!
+//! `PARASVM_BENCH_QUICK=1` shrinks the repetition budget.
+
+use std::sync::Arc;
+
+use parasvm::backend::XlaBackend;
+use parasvm::harness::run_table3;
+use parasvm::metrics::bench::BenchConfig;
+
+fn bench_config() -> BenchConfig {
+    if std::env::var("PARASVM_BENCH_QUICK").is_ok() {
+        BenchConfig { warmup: 1, min_samples: 2, max_samples: 3, cv_target: 0.2 }
+    } else {
+        BenchConfig::heavy()
+    }
+}
+
+fn main() {
+    let be = Arc::new(XlaBackend::open_default().expect("artifacts (make artifacts)"));
+    let (table, rows) =
+        run_table3(&be, &[200, 400, 600, 800], &bench_config(), 42).expect("table3");
+    println!("{}", table.render());
+    table
+        .save_csv(std::path::Path::new("results/table3.csv"))
+        .expect("csv");
+    // Bench-level shape assertions (who wins + growth).
+    for r in &rows {
+        assert!(r.speedup > 1.0, "SMO must beat session-GD at {}", r.per_class);
+    }
+    for w in rows.windows(2) {
+        assert!(
+            w[1].tf_secs > w[0].tf_secs * 0.9,
+            "TF-analog time should grow with n"
+        );
+    }
+    println!("table3 bench OK");
+}

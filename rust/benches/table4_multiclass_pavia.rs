@@ -1,0 +1,37 @@
+//! Bench: paper Table IV / Fig 7 — 9-class Pavia, MPI-CUDA-analog
+//! (device SMO over P simulated ranks) vs Multi-TF-analog (sequential
+//! session GD).
+//!
+//!     cargo bench --offline --bench table4_multiclass_pavia
+//!
+//! This is the heaviest bench (36 binary problems per point, the GD side
+//! paying the TF session cost model); the repetition budget is minimal and
+//! `PARASVM_BENCH_QUICK=1` also trims the sweep.
+
+use std::sync::Arc;
+
+use parasvm::backend::XlaBackend;
+use parasvm::harness::run_table4;
+use parasvm::metrics::bench::BenchConfig;
+
+fn main() {
+    let quick = std::env::var("PARASVM_BENCH_QUICK").is_ok();
+    let cfg = BenchConfig { warmup: 0, min_samples: 1, max_samples: if quick { 1 } else { 2 }, cv_target: 0.5 };
+    let sweep: &[usize] = if quick { &[200, 400] } else { &[200, 400, 600, 800] };
+    let be = Arc::new(XlaBackend::open_default().expect("artifacts (make artifacts)"));
+    let (table, rows) = run_table4(&be, sweep, 4, &cfg, 42).expect("table4");
+    println!("{}", table.render());
+    table
+        .save_csv(std::path::Path::new("results/table4.csv"))
+        .expect("csv");
+    for r in &rows {
+        assert!(r.speedup > 1.0, "MPI-SMO must beat Multi-GD at {}", r.per_class);
+        // The paper's Table IV discussion: interconnect overhead negligible.
+        assert!(
+            r.net_sim_secs < 0.1 * r.mpi_cuda_secs,
+            "MPI overhead should be negligible at {}",
+            r.per_class
+        );
+    }
+    println!("table4 bench OK");
+}

@@ -1,0 +1,28 @@
+//! Bench: paper Table V — Iris and WDBC binary training, CUDA-analog vs
+//! TF-analog.
+//!
+//!     cargo bench --offline --bench table5_small_datasets
+
+use std::sync::Arc;
+
+use parasvm::backend::XlaBackend;
+use parasvm::harness::run_table5;
+use parasvm::metrics::bench::BenchConfig;
+
+fn main() {
+    let cfg = if std::env::var("PARASVM_BENCH_QUICK").is_ok() {
+        BenchConfig { warmup: 1, min_samples: 2, max_samples: 3, cv_target: 0.2 }
+    } else {
+        BenchConfig::heavy()
+    };
+    let be = Arc::new(XlaBackend::open_default().expect("artifacts (make artifacts)"));
+    let (table, rows) = run_table5(&be, &cfg, 42).expect("table5");
+    println!("{}", table.render());
+    table
+        .save_csv(std::path::Path::new("results/table5.csv"))
+        .expect("csv");
+    for r in &rows {
+        assert!(r.speedup > 1.0, "SMO must beat session-GD on {}", r.dataset);
+    }
+    println!("table5 bench OK");
+}

@@ -1,0 +1,35 @@
+//! Bench: paper Table VI — the same GD definition on two execution
+//! providers (native host vs XLA device), the portability argument.
+//!
+//!     cargo bench --offline --bench table6_portability
+
+use std::sync::Arc;
+
+use parasvm::backend::XlaBackend;
+use parasvm::harness::run_table6;
+use parasvm::metrics::bench::BenchConfig;
+
+fn main() {
+    let cfg = if std::env::var("PARASVM_BENCH_QUICK").is_ok() {
+        BenchConfig { warmup: 1, min_samples: 2, max_samples: 3, cv_target: 0.2 }
+    } else {
+        BenchConfig::heavy()
+    };
+    let be = Arc::new(XlaBackend::open_default().expect("artifacts (make artifacts)"));
+    let (table, rows) = run_table6(&be, &cfg, 42).expect("table6");
+    println!("{}", table.render());
+    table
+        .save_csv(std::path::Path::new("results/table6.csv"))
+        .expect("csv");
+    // Shape: the device provider wins, but within a small factor — the
+    // paper's point is that the definition is portable at all.
+    for r in &rows {
+        assert!(
+            r.speedup > 0.2,
+            "provider gap out of range on {}: {}",
+            r.dataset,
+            r.speedup
+        );
+    }
+    println!("table6 bench OK");
+}

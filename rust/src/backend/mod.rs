@@ -1,0 +1,70 @@
+//! Execution backends: the two "frameworks" the paper compares, behind one
+//! trait.
+//!
+//! * [`XlaBackend`] — the accelerator stack: AOT-compiled artifacts on the
+//!   PJRT device, chunked device SMO with host convergence checks ("CUDA"),
+//!   or fixed-step device GD ("TensorFlow-GPU").
+//! * [`NativeBackend`] — pure-rust host execution of the *same algorithms*
+//!   ("sequential CPU" profile; also the artifact-free test oracle, and the
+//!   "TensorFlow-CPU" side of the Table VI portability experiment).
+//!
+//! Both return identical model types, so the coordinator, server and
+//! benchmarks are backend-agnostic.
+
+pub mod native;
+pub mod xla_backend;
+
+pub use native::NativeBackend;
+pub use xla_backend::XlaBackend;
+
+use crate::data::BinaryProblem;
+use crate::error::Result;
+use crate::svm::{BinaryModel, SvmParams, TrainStats};
+
+/// Which dual solver to run (the paper's two stacks + one ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Solver {
+    /// Chunked SMO — the MPI-CUDA stack's solver (early exit on KKT).
+    Smo,
+    /// Fixed-step projected gradient, TF-1.8 session style: one device
+    /// dispatch per step with the Gram recomputed in-graph from re-fed
+    /// inputs — the paper's TensorFlow stack.
+    Gd,
+    /// Ablation: the same GD budget fused into one device call over a
+    /// cached Gram ("what TF could have done"); quantifies how much of the
+    /// paper's gap is dispatch + kernel-recompute overhead.
+    GdFused,
+}
+
+impl std::str::FromStr for Solver {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<Solver, String> {
+        match s {
+            "smo" | "cuda" => Ok(Solver::Smo),
+            "gd" | "tf" | "tensorflow" => Ok(Solver::Gd),
+            "gd-fused" | "gdfused" => Ok(Solver::GdFused),
+            other => Err(format!("unknown solver {other:?} (want smo|gd|gd-fused)")),
+        }
+    }
+}
+
+/// An execution provider for binary SVM training and batch prediction.
+pub trait SvmBackend: Send + Sync {
+    /// Provider name for reports ("xla-pjrt", "native").
+    fn name(&self) -> &'static str;
+
+    /// Train one binary problem with the given solver.
+    fn train_binary(
+        &self,
+        prob: &BinaryProblem,
+        params: &SvmParams,
+        solver: Solver,
+    ) -> Result<(BinaryModel, TrainStats)>;
+
+    /// Batched decision values for a trained model (serving path).
+    /// Default: native evaluation over the model's support vectors.
+    fn decision_batch(&self, model: &BinaryModel, queries: &[f32], q: usize) -> Result<Vec<f32>> {
+        Ok(model.decision_batch(queries, q))
+    }
+}

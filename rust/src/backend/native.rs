@@ -1,0 +1,80 @@
+//! Pure-rust execution provider (host profile / test oracle).
+
+use super::{Solver, SvmBackend};
+use crate::data::BinaryProblem;
+use crate::error::Result;
+use crate::svm::{gd, smo, BinaryModel, SvmParams, TrainStats};
+
+/// Host CPU backend: scalar rust implementations of both solvers.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend
+    }
+}
+
+impl SvmBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn train_binary(
+        &self,
+        prob: &BinaryProblem,
+        params: &SvmParams,
+        solver: Solver,
+    ) -> Result<(BinaryModel, TrainStats)> {
+        Ok(match solver {
+            Solver::Smo => smo::train(prob, params),
+            // Natively there is no dispatch boundary, so session-style and
+            // fused GD coincide: one in-process loop over a cached Gram.
+            Solver::Gd | Solver::GdFused => gd::train(prob, params),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::svm::testutil::blobs;
+
+    #[test]
+    fn trains_both_solvers() {
+        let prob = blobs(40, 4, 3.0, 1);
+        let be = NativeBackend::new();
+        let p = SvmParams::default();
+        for solver in [Solver::Smo, Solver::Gd] {
+            let (model, stats) = be.train_binary(&prob, &p, solver).unwrap();
+            assert!(model.n_sv() > 0);
+            assert!(stats.total_secs() >= 0.0);
+            let acc = (0..prob.n())
+                .filter(|&i| (model.decision(prob.row(i)) > 0.0) == (prob.y[i] > 0.0))
+                .count() as f64
+                / prob.n() as f64;
+            assert!(acc >= 0.9, "{solver:?} acc {acc}");
+        }
+    }
+
+    #[test]
+    fn solver_parse() {
+        assert_eq!("smo".parse::<Solver>().unwrap(), Solver::Smo);
+        assert_eq!("cuda".parse::<Solver>().unwrap(), Solver::Smo);
+        assert_eq!("tf".parse::<Solver>().unwrap(), Solver::Gd);
+        assert!("mystery".parse::<Solver>().is_err());
+    }
+
+    #[test]
+    fn decision_batch_default_matches_model() {
+        let prob = blobs(20, 3, 2.0, 2);
+        let be = NativeBackend::new();
+        let (model, _) = be.train_binary(&prob, &SvmParams::default(), Solver::Smo).unwrap();
+        let dec = be.decision_batch(&model, &prob.x, prob.n()).unwrap();
+        for i in 0..prob.n() {
+            // The batch path uses the expanded-identity formulation; exact
+            // bit equality with the single-query path is not expected.
+            assert!((dec[i] - model.decision(prob.row(i))).abs() < 1e-4);
+        }
+    }
+}

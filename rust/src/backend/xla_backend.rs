@@ -1,0 +1,185 @@
+//! XLA/PJRT execution provider — the accelerator ("device") stack.
+//!
+//! Implements paper Fig 3 for SMO: the Gram matrix is built once by the L1
+//! Pallas kernel and stays device-resident; the host dispatches bounded
+//! chunks of device SMO iterations and checks convergence between chunks.
+//! For GD it is the paper's TensorFlow graph: one device call running the
+//! full fixed epoch budget.
+
+use std::sync::Arc;
+
+use super::{Solver, SvmBackend};
+use crate::data::BinaryProblem;
+use crate::error::{Error, Result};
+use crate::runtime::{
+    ArtifactRegistry, GdBiasExe, GdEpochsExe, GdStepExe, GramExe, SmoChunkExe, SmoState,
+};
+use crate::svm::{BinaryModel, SvmParams, TrainStats};
+
+/// Device iterations per chunk between host convergence checks (paper
+/// Fig 3's "set of iterations"). Ablation: `benches/ablations.rs`.
+pub const DEFAULT_CHUNK: i32 = 512;
+
+/// PJRT-backed provider.
+pub struct XlaBackend {
+    reg: Arc<ArtifactRegistry>,
+    /// SMO chunk size (device iterations per host round trip).
+    pub chunk: i32,
+    /// Hard cap on host round trips (guards non-converging problems).
+    pub max_chunks: usize,
+}
+
+impl XlaBackend {
+    pub fn new(reg: Arc<ArtifactRegistry>) -> XlaBackend {
+        XlaBackend { reg, chunk: DEFAULT_CHUNK, max_chunks: 10_000 }
+    }
+
+    /// Open with the default artifact directory.
+    pub fn open_default() -> Result<XlaBackend> {
+        Ok(XlaBackend::new(Arc::new(ArtifactRegistry::open_default()?)))
+    }
+
+    pub fn registry(&self) -> &Arc<ArtifactRegistry> {
+        &self.reg
+    }
+
+    fn train_smo(
+        &self,
+        prob: &BinaryProblem,
+        p: &SvmParams,
+    ) -> Result<(BinaryModel, TrainStats)> {
+        let n = prob.n();
+        let t0 = std::time::Instant::now();
+        let gram = GramExe::new(&self.reg, n, prob.d)?;
+        let k_buf = gram.run(&prob.x, n, prob.d, p.gamma)?; // device-resident
+        let gram_secs = t0.elapsed().as_secs_f64();
+
+        let t1 = std::time::Instant::now();
+        let smo = SmoChunkExe::new(&self.reg, &prob.y, p.c, p.tol)?;
+        let mut state = SmoState::init(&prob.y, smo.nb);
+        let mut converged = false;
+        while state.chunks < self.max_chunks && state.iters < p.max_iter {
+            let budget = (p.max_iter - state.iters).min(self.chunk as usize) as i32;
+            smo.run(&k_buf, &mut state, budget)?;
+            if state.converged(p.tol) {
+                converged = true;
+                break;
+            }
+        }
+        let solve_secs = t1.elapsed().as_secs_f64();
+
+        let model = BinaryModel::from_dense(prob, &state.alpha[..n], state.bias(), p.gamma);
+        let stats = TrainStats {
+            iters: state.iters,
+            converged,
+            gram_secs,
+            solve_secs,
+            chunks: state.chunks,
+            n_sv: model.n_sv(),
+        };
+        Ok((model, stats))
+    }
+
+    /// The paper's TensorFlow stack, faithfully: one device dispatch per
+    /// optimizer step, Gram recomputed in-graph from per-step re-fed
+    /// inputs (`feed_dict`), no early exit.
+    fn train_gd_session(
+        &self,
+        prob: &BinaryProblem,
+        p: &SvmParams,
+    ) -> Result<(BinaryModel, TrainStats)> {
+        let n = prob.n();
+        let t1 = std::time::Instant::now();
+        let step = GdStepExe::new(&self.reg, &prob.y, prob.d, p.gamma, p.c, p.gd_lr)?;
+        let mut alpha_buf = step.zero_alpha()?;
+        let overhead = std::time::Duration::from_secs_f64(p.session_overhead_secs.max(0.0));
+        for _ in 0..p.gd_epochs {
+            // feed_dict: TF-1.8 re-feeds the training placeholders every
+            // session run, so the upload is part of the per-step cost.
+            let x_buf = step.upload_x(&prob.x, n, prob.d)?;
+            alpha_buf = step.run(&x_buf, &alpha_buf)?;
+            if !overhead.is_zero() {
+                // Cost model for the python session loop the paper's TF
+                // stack pays per step (DESIGN.md §Substitutions).
+                std::thread::sleep(overhead);
+            }
+        }
+        let alpha = step.download_alpha(&alpha_buf)?;
+        let solve_secs = t1.elapsed().as_secs_f64();
+
+        // Bias: one Gram build + the bias artifact (outside the timed
+        // session loop in the paper's implementation as well).
+        let t0 = std::time::Instant::now();
+        let gram = GramExe::new(&self.reg, n, prob.d)?;
+        let k_buf = gram.run(&prob.x, n, prob.d, p.gamma)?;
+        let bias = GdBiasExe::new(&self.reg, n)?.run(&k_buf, &prob.y, &alpha, p.c)?;
+        let gram_secs = t0.elapsed().as_secs_f64();
+
+        let model = BinaryModel::from_dense(prob, &alpha[..n], bias, p.gamma);
+        let stats = TrainStats {
+            iters: p.gd_epochs,
+            converged: true,
+            gram_secs,
+            solve_secs,
+            chunks: p.gd_epochs, // one dispatch per step
+            n_sv: model.n_sv(),
+        };
+        Ok((model, stats))
+    }
+
+    /// Ablation: same GD budget, fused into a single device call over a
+    /// cached Gram matrix.
+    fn train_gd_fused(
+        &self,
+        prob: &BinaryProblem,
+        p: &SvmParams,
+    ) -> Result<(BinaryModel, TrainStats)> {
+        let n = prob.n();
+        let t0 = std::time::Instant::now();
+        let gram = GramExe::new(&self.reg, n, prob.d)?;
+        let k_buf = gram.run(&prob.x, n, prob.d, p.gamma)?;
+        let gram_secs = t0.elapsed().as_secs_f64();
+
+        let t1 = std::time::Instant::now();
+        let gd = GdEpochsExe::new(&self.reg, &prob.y, p.c)?;
+        if gd.nb != gram.nb {
+            return Err(Error::Runtime("bucket mismatch between gram and gd".into()));
+        }
+        let alpha0 = vec![0.0f32; gd.nb];
+        let (alpha, _obj) = gd.run(&k_buf, &alpha0, p.gd_lr, p.gd_epochs as i32)?;
+        let bias = GdBiasExe::new(&self.reg, n)?.run(&k_buf, &prob.y, &alpha, p.c)?;
+        let solve_secs = t1.elapsed().as_secs_f64();
+
+        let model = BinaryModel::from_dense(prob, &alpha[..n], bias, p.gamma);
+        let stats = TrainStats {
+            iters: p.gd_epochs,
+            converged: true,
+            gram_secs,
+            solve_secs,
+            chunks: 1,
+            n_sv: model.n_sv(),
+        };
+        Ok((model, stats))
+    }
+}
+
+impl SvmBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+
+    fn train_binary(
+        &self,
+        prob: &BinaryProblem,
+        params: &SvmParams,
+        solver: Solver,
+    ) -> Result<(BinaryModel, TrainStats)> {
+        match solver {
+            Solver::Smo => self.train_smo(prob, params),
+            Solver::Gd => self.train_gd_session(prob, params),
+            Solver::GdFused => self.train_gd_fused(prob, params),
+        }
+    }
+}
+
+// Integration tests against real artifacts live in rust/tests/runtime_integration.rs.

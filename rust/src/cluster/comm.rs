@@ -1,0 +1,239 @@
+//! Point-to-point communicator (rank handle).
+//!
+//! Each rank owns an mpsc receiver; senders to every rank are shared.
+//! Messages carry (src, tag, payload). `recv` matches on (src, tag) and
+//! buffers out-of-order arrivals locally, like an MPI unexpected-message
+//! queue.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::costmodel::{CostModel, NetStats};
+use crate::error::{Error, Result};
+
+/// Message envelope on the simulated wire.
+#[derive(Debug)]
+pub struct Envelope {
+    pub src: usize,
+    pub tag: u32,
+    pub payload: Vec<u8>,
+}
+
+/// Per-rank communicator handle.
+pub struct Comm {
+    rank: usize,
+    size: usize,
+    senders: Vec<Sender<Envelope>>,
+    inbox: Receiver<Envelope>,
+    /// Unexpected-message queue (arrived before being asked for).
+    pending: VecDeque<Envelope>,
+    stats: Arc<NetStats>,
+    model: CostModel,
+    recv_timeout: Duration,
+}
+
+impl Comm {
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn new(
+        rank: usize,
+        size: usize,
+        senders: Vec<Sender<Envelope>>,
+        inbox: Receiver<Envelope>,
+        stats: Arc<NetStats>,
+        model: CostModel,
+    ) -> Comm {
+        Comm {
+            rank,
+            size,
+            senders,
+            inbox,
+            pending: VecDeque::new(),
+            stats,
+            model,
+            recv_timeout: Duration::from_secs(30),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn stats(&self) -> &NetStats {
+        &self.stats
+    }
+
+    pub fn model(&self) -> CostModel {
+        self.model
+    }
+
+    /// Override the receive timeout (default 30s). Failure-injection tests
+    /// use short timeouts to exercise the deadlock-detection path.
+    pub fn set_recv_timeout(&mut self, timeout: Duration) {
+        self.recv_timeout = timeout;
+    }
+
+    /// Send raw bytes to `dst` with a tag. Self-sends are allowed (loopback)
+    /// and accounted at zero cost.
+    pub fn send(&self, dst: usize, tag: u32, payload: Vec<u8>) -> Result<()> {
+        if dst >= self.size {
+            return Err(Error::Cluster(format!("send to invalid rank {dst}")));
+        }
+        if dst != self.rank {
+            self.stats.record(payload.len(), &self.model);
+        }
+        self.senders[dst]
+            .send(Envelope { src: self.rank, tag, payload })
+            .map_err(|_| Error::Cluster(format!("rank {dst} hung up")))
+    }
+
+    /// Receive the next message matching (src, tag), buffering others.
+    pub fn recv(&mut self, src: usize, tag: u32) -> Result<Vec<u8>> {
+        // Check the unexpected-message queue first.
+        if let Some(pos) = self.pending.iter().position(|e| e.src == src && e.tag == tag) {
+            return Ok(self.pending.remove(pos).unwrap().payload);
+        }
+        loop {
+            let env = self
+                .inbox
+                .recv_timeout(self.recv_timeout)
+                .map_err(|_| {
+                    Error::Cluster(format!(
+                        "rank {}: timeout waiting for (src={src}, tag={tag})",
+                        self.rank
+                    ))
+                })?;
+            if env.src == src && env.tag == tag {
+                return Ok(env.payload);
+            }
+            self.pending.push_back(env);
+        }
+    }
+
+    // ---- typed helpers (f32/u64 slices in little-endian) ----
+
+    pub fn send_f32s(&self, dst: usize, tag: u32, data: &[f32]) -> Result<()> {
+        self.send(dst, tag, f32s_to_bytes(data))
+    }
+
+    pub fn recv_f32s(&mut self, src: usize, tag: u32) -> Result<Vec<f32>> {
+        bytes_to_f32s(&self.recv(src, tag)?)
+    }
+
+    pub fn send_u64s(&self, dst: usize, tag: u32, data: &[u64]) -> Result<()> {
+        let mut out = Vec::with_capacity(data.len() * 8);
+        for v in data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        self.send(dst, tag, out)
+    }
+
+    pub fn recv_u64s(&mut self, src: usize, tag: u32) -> Result<Vec<u64>> {
+        let b = self.recv(src, tag)?;
+        if b.len() % 8 != 0 {
+            return Err(Error::Cluster("u64 payload not 8-aligned".into()));
+        }
+        Ok(b.chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+pub fn f32s_to_bytes(data: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+pub fn bytes_to_f32s(b: &[u8]) -> Result<Vec<f32>> {
+    if b.len() % 4 != 0 {
+        return Err(Error::Cluster("f32 payload not 4-aligned".into()));
+    }
+    Ok(b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Universe;
+
+    #[test]
+    fn p2p_roundtrip() {
+        let out = Universe::new(2, CostModel::free()).run(|mut comm| {
+            if comm.rank() == 0 {
+                comm.send_f32s(1, 7, &[1.0, 2.0, 3.0]).unwrap();
+                0.0f32
+            } else {
+                comm.recv_f32s(0, 7).unwrap().iter().sum()
+            }
+        });
+        assert_eq!(out[1], 6.0);
+    }
+
+    #[test]
+    fn out_of_order_tags_are_buffered() {
+        let out = Universe::new(2, CostModel::free()).run(|mut comm| {
+            if comm.rank() == 0 {
+                comm.send_f32s(1, 1, &[10.0]).unwrap();
+                comm.send_f32s(1, 2, &[20.0]).unwrap();
+                vec![]
+            } else {
+                // Ask for tag 2 first; tag 1 must be buffered, not lost.
+                let b = comm.recv_f32s(0, 2).unwrap();
+                let a = comm.recv_f32s(0, 1).unwrap();
+                vec![a[0], b[0]]
+            }
+        });
+        assert_eq!(out[1], vec![10.0, 20.0]);
+    }
+
+    #[test]
+    fn self_send_loopback() {
+        let out = Universe::new(1, CostModel::free()).run(|mut comm| {
+            comm.send_u64s(0, 3, &[42]).unwrap();
+            comm.recv_u64s(0, 3).unwrap()[0]
+        });
+        assert_eq!(out[0], 42);
+    }
+
+    #[test]
+    fn invalid_rank_rejected() {
+        Universe::new(1, CostModel::free()).run(|comm| {
+            assert!(comm.send(5, 0, vec![]).is_err());
+        });
+    }
+
+    #[test]
+    fn bytes_accounted_excluding_loopback() {
+        let u = Universe::new(2, CostModel::gige10());
+        let stats = u.stats();
+        u.run(|mut comm| {
+            if comm.rank() == 0 {
+                comm.send_f32s(1, 0, &[0.0; 100]).unwrap(); // 400 B on the wire
+                comm.send_f32s(0, 1, &[0.0; 50]).unwrap(); // loopback, free
+                comm.recv_f32s(0, 1).unwrap();
+            } else {
+                comm.recv_f32s(0, 0).unwrap();
+            }
+        });
+        assert_eq!(stats.bytes(), 400);
+        assert_eq!(stats.messages(), 1);
+        assert!(stats.sim_secs() >= 50e-6);
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let data = vec![1.5f32, -2.25, 0.0, f32::MAX];
+        assert_eq!(bytes_to_f32s(&f32s_to_bytes(&data)).unwrap(), data);
+        assert!(bytes_to_f32s(&[1, 2, 3]).is_err());
+    }
+}

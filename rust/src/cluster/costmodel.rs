@@ -1,0 +1,103 @@
+//! Interconnect cost model + byte accounting.
+//!
+//! We account rather than sleep: every message adds `latency + bytes/bw`
+//! of *simulated* seconds to the destination rank's network clock and the
+//! byte counters. Reports then show both measured wall time (threads are
+//! in-process, effectively free) and the simulated wire time an MPICH
+//! cluster with these parameters would have spent — which is how we
+//! reproduce the paper's MPI-overhead discussion without real hardware.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Latency/bandwidth parameters of the simulated interconnect.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    /// Per-message latency in seconds (e.g. 50µs for cluster ethernet).
+    pub latency: f64,
+    /// Bandwidth in bytes/second (e.g. 1.25e9 for 10 GbE).
+    pub bandwidth: f64,
+}
+
+impl CostModel {
+    /// 10-gigabit ethernet with 50µs MPI latency — a typical small cluster
+    /// of the paper's era.
+    pub fn gige10() -> Self {
+        CostModel { latency: 50e-6, bandwidth: 1.25e9 }
+    }
+
+    /// Zero-cost interconnect (shared-memory ranks).
+    pub fn free() -> Self {
+        CostModel { latency: 0.0, bandwidth: f64::INFINITY }
+    }
+
+    /// Simulated seconds for one message of `bytes`.
+    pub fn transfer_secs(&self, bytes: usize) -> f64 {
+        self.latency + bytes as f64 / self.bandwidth
+    }
+}
+
+/// Shared network statistics (all ranks account into one instance).
+#[derive(Debug, Default)]
+pub struct NetStats {
+    messages: AtomicU64,
+    bytes: AtomicU64,
+    /// Simulated wire time in nanoseconds (atomic-friendly integer).
+    sim_nanos: AtomicU64,
+}
+
+impl NetStats {
+    pub fn new() -> Arc<NetStats> {
+        Arc::new(NetStats::default())
+    }
+
+    pub fn record(&self, bytes: usize, model: &CostModel) {
+        self.messages.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        let nanos = (model.transfer_secs(bytes) * 1e9) as u64;
+        self.sim_nanos.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    pub fn messages(&self) -> u64 {
+        self.messages.load(Ordering::Relaxed)
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    /// Total simulated wire seconds summed over all messages (an upper
+    /// bound on overhead — real transfers overlap).
+    pub fn sim_secs(&self) -> f64 {
+        self.sim_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_formula() {
+        let m = CostModel { latency: 1e-3, bandwidth: 1e6 };
+        assert!((m.transfer_secs(0) - 1e-3).abs() < 1e-12);
+        assert!((m.transfer_secs(1_000_000) - 1.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn free_model_is_free() {
+        let m = CostModel::free();
+        assert_eq!(m.transfer_secs(1 << 30), 0.0);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let s = NetStats::new();
+        let m = CostModel { latency: 1e-6, bandwidth: 1e9 };
+        s.record(1000, &m);
+        s.record(500, &m);
+        assert_eq!(s.messages(), 2);
+        assert_eq!(s.bytes(), 1500);
+        assert!(s.sim_secs() > 0.0);
+    }
+}

@@ -1,0 +1,23 @@
+//! Simulated MPI: the distributed-memory half of the paper's hybrid
+//! architecture (paper Fig 1), reproduced in-process.
+//!
+//! Real MPICH ranks become OS threads; the interconnect becomes tagged
+//! channels with a configurable latency/bandwidth *cost model* that
+//! accounts — without sleeping — the simulated wire time and exact bytes of
+//! every transfer. That makes the paper's "MPI communication overhead is
+//! only initial scatter + final gather" claim *measurable* (Table IV
+//! discussion, EXPERIMENTS.md).
+//!
+//! The API mirrors the MPI subset the paper's Fig 4 pseudocode needs:
+//! point-to-point `send`/`recv`, and the collectives `bcast`, `scatter`,
+//! `gather`, `allreduce`, `barrier` — all implemented over p2p exactly as a
+//! simple MPI layer would.
+
+pub mod collectives;
+pub mod comm;
+pub mod costmodel;
+pub mod universe;
+
+pub use comm::Comm;
+pub use costmodel::{CostModel, NetStats};
+pub use universe::Universe;

@@ -1,0 +1,119 @@
+//! Universe: spawn P ranks as threads and run an SPMD closure on each
+//! (the `mpiexec -n P` of the simulated cluster).
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use super::comm::{Comm, Envelope};
+use super::costmodel::{CostModel, NetStats};
+
+/// A P-rank SPMD world.
+pub struct Universe {
+    size: usize,
+    model: CostModel,
+    stats: Arc<NetStats>,
+}
+
+impl Universe {
+    pub fn new(size: usize, model: CostModel) -> Universe {
+        assert!(size > 0, "universe needs at least one rank");
+        Universe { size, model, stats: NetStats::new() }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Shared byte/time accounting for the whole world.
+    pub fn stats(&self) -> Arc<NetStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// Run `f(comm)` on every rank; returns per-rank results ordered by
+    /// rank. Panics in a rank propagate (fail-fast, like an MPI abort).
+    pub fn run<T, F>(&self, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(Comm) -> T + Send + Sync + 'static,
+    {
+        // Build the all-to-all channel mesh.
+        let mut senders = Vec::with_capacity(self.size);
+        let mut inboxes = Vec::with_capacity(self.size);
+        for _ in 0..self.size {
+            let (tx, rx) = mpsc::channel::<Envelope>();
+            senders.push(tx);
+            inboxes.push(rx);
+        }
+
+        let f = Arc::new(f);
+        let mut handles = Vec::with_capacity(self.size);
+        for (rank, inbox) in inboxes.into_iter().enumerate() {
+            let comm = Comm::new(
+                rank,
+                self.size,
+                senders.clone(),
+                inbox,
+                Arc::clone(&self.stats),
+                self.model,
+            );
+            let f = Arc::clone(&f);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("rank-{rank}"))
+                    .spawn(move || f(comm))
+                    .expect("spawn rank thread"),
+            );
+        }
+        // Drop our copies of the senders so rank hangups are detectable.
+        drop(senders);
+
+        handles
+            .into_iter()
+            .enumerate()
+            .map(|(rank, h)| match h.join() {
+                Ok(v) => v,
+                Err(e) => {
+                    let msg = e
+                        .downcast_ref::<String>()
+                        .map(|s| s.as_str())
+                        .or_else(|| e.downcast_ref::<&str>().copied())
+                        .unwrap_or("<non-string panic>");
+                    panic!("rank {rank}: {msg}");
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_ordered_by_rank() {
+        let out = Universe::new(4, CostModel::free()).run(|comm| comm.rank() * 10);
+        assert_eq!(out, vec![0, 10, 20, 30]);
+    }
+
+    #[test]
+    fn size_visible_to_all_ranks() {
+        let out = Universe::new(3, CostModel::free()).run(|comm| comm.size());
+        assert_eq!(out, vec![3, 3, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_ranks_rejected() {
+        Universe::new(0, CostModel::free());
+    }
+
+    #[test]
+    #[should_panic(expected = "rank 2")]
+    fn rank_panic_propagates() {
+        Universe::new(3, CostModel::free()).run(|comm| {
+            if comm.rank() == 2 {
+                panic!("boom");
+            }
+        });
+    }
+}

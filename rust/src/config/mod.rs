@@ -1,0 +1,283 @@
+//! Run configuration: defaults, JSON file loading, CLI overrides.
+//!
+//! One `RunConfig` drives the trainer, server and benchmark harness; the
+//! JSON form makes runs reproducible (`parasvm train --config run.json`).
+
+use std::path::Path;
+
+use crate::backend::Solver;
+use crate::cluster::CostModel;
+use crate::coordinator::{Partition, TrainConfig};
+use crate::error::{Error, Result};
+use crate::svm::SvmParams;
+use crate::util::args::Args;
+use crate::util::json::{self, Json};
+
+/// Which execution provider to use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT artifacts on the PJRT device (the paper's GPU stacks).
+    Xla,
+    /// Pure-rust host execution (the paper's CPU profile / no artifacts).
+    Native,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<BackendKind, String> {
+        match s {
+            "xla" | "pjrt" | "device" | "gpu" => Ok(BackendKind::Xla),
+            "native" | "cpu" | "host" => Ok(BackendKind::Native),
+            other => Err(format!("unknown backend {other:?} (want xla|native)")),
+        }
+    }
+}
+
+/// Full run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub dataset: String,
+    /// Per-class subsample (0 = use everything).
+    pub per_class: usize,
+    pub seed: u64,
+    pub train_frac: f64,
+    pub backend: BackendKind,
+    pub solver: Solver,
+    pub workers: usize,
+    pub partition: Partition,
+    pub params: SvmParams,
+    /// Interconnect latency (seconds) and bandwidth (bytes/sec).
+    pub net_latency: f64,
+    pub net_bandwidth: f64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: "iris".into(),
+            per_class: 0,
+            seed: 42,
+            train_frac: 0.8,
+            backend: BackendKind::Xla,
+            solver: Solver::Smo,
+            workers: 4,
+            partition: Partition::Block,
+            params: SvmParams::default(),
+            net_latency: 50e-6,
+            net_bandwidth: 1.25e9,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn train_config(&self) -> TrainConfig {
+        TrainConfig {
+            workers: self.workers,
+            solver: self.solver,
+            params: self.params,
+            partition: self.partition,
+            net: CostModel { latency: self.net_latency, bandwidth: self.net_bandwidth },
+        }
+    }
+
+    /// Apply CLI overrides (each flag optional).
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        let e = |m: String| Error::Config(m);
+        if let Some(v) = args.opt("dataset") {
+            self.dataset = v.to_string();
+        }
+        self.per_class = args.get("per-class").map_err(e)?.unwrap_or(self.per_class);
+        self.seed = args.get("seed").map_err(e)?.unwrap_or(self.seed);
+        self.train_frac = args.get("train-frac").map_err(e)?.unwrap_or(self.train_frac);
+        self.workers = args.get("workers").map_err(e)?.unwrap_or(self.workers);
+        if let Some(v) = args.opt("backend") {
+            self.backend = v.parse().map_err(e)?;
+        }
+        if let Some(v) = args.opt("solver") {
+            self.solver = v.parse().map_err(e)?;
+        }
+        if let Some(v) = args.opt("partition") {
+            self.partition = v.parse().map_err(e)?;
+        }
+        self.params.c = args.get("c").map_err(e)?.unwrap_or(self.params.c);
+        self.params.gamma = args.get("gamma").map_err(e)?.unwrap_or(self.params.gamma);
+        self.params.tol = args.get("tol").map_err(e)?.unwrap_or(self.params.tol);
+        self.params.max_iter = args.get("max-iter").map_err(e)?.unwrap_or(self.params.max_iter);
+        self.params.gd_epochs = args.get("epochs").map_err(e)?.unwrap_or(self.params.gd_epochs);
+        self.params.gd_lr = args.get("lr").map_err(e)?.unwrap_or(self.params.gd_lr);
+        self.net_latency = args.get("net-latency").map_err(e)?.unwrap_or(self.net_latency);
+        self.net_bandwidth =
+            args.get("net-bandwidth").map_err(e)?.unwrap_or(self.net_bandwidth);
+        if self.workers == 0 {
+            return Err(Error::Config("workers must be > 0".into()));
+        }
+        if !(0.0..=1.0).contains(&self.train_frac) {
+            return Err(Error::Config("train-frac must be in [0,1]".into()));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("dataset", json::s(&self.dataset)),
+            ("per_class", json::num(self.per_class as f64)),
+            ("seed", json::num(self.seed as f64)),
+            ("train_frac", json::num(self.train_frac)),
+            (
+                "backend",
+                json::s(match self.backend {
+                    BackendKind::Xla => "xla",
+                    BackendKind::Native => "native",
+                }),
+            ),
+            (
+                "solver",
+                json::s(match self.solver {
+                    Solver::Smo => "smo",
+                    Solver::Gd => "gd",
+                    Solver::GdFused => "gd-fused",
+                }),
+            ),
+            ("workers", json::num(self.workers as f64)),
+            (
+                "partition",
+                json::s(match self.partition {
+                    Partition::Block => "block",
+                    Partition::RoundRobin => "rr",
+                    Partition::Lpt => "lpt",
+                }),
+            ),
+            ("c", json::num(self.params.c as f64)),
+            ("gamma", json::num(self.params.gamma as f64)),
+            ("tol", json::num(self.params.tol as f64)),
+            ("max_iter", json::num(self.params.max_iter as f64)),
+            ("gd_epochs", json::num(self.params.gd_epochs as f64)),
+            ("gd_lr", json::num(self.params.gd_lr as f64)),
+            ("net_latency", json::num(self.net_latency)),
+            ("net_bandwidth", json::num(self.net_bandwidth)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunConfig> {
+        let mut c = RunConfig::default();
+        let gs = |k: &str| j.get(k).and_then(Json::as_str);
+        let gn = |k: &str| j.get(k).and_then(Json::as_f64);
+        if let Some(v) = gs("dataset") {
+            c.dataset = v.to_string();
+        }
+        if let Some(v) = gn("per_class") {
+            c.per_class = v as usize;
+        }
+        if let Some(v) = gn("seed") {
+            c.seed = v as u64;
+        }
+        if let Some(v) = gn("train_frac") {
+            c.train_frac = v;
+        }
+        if let Some(v) = gs("backend") {
+            c.backend = v.parse().map_err(Error::Config)?;
+        }
+        if let Some(v) = gs("solver") {
+            c.solver = v.parse().map_err(Error::Config)?;
+        }
+        if let Some(v) = gn("workers") {
+            c.workers = v as usize;
+        }
+        if let Some(v) = gs("partition") {
+            c.partition = v.parse().map_err(Error::Config)?;
+        }
+        if let Some(v) = gn("c") {
+            c.params.c = v as f32;
+        }
+        if let Some(v) = gn("gamma") {
+            c.params.gamma = v as f32;
+        }
+        if let Some(v) = gn("tol") {
+            c.params.tol = v as f32;
+        }
+        if let Some(v) = gn("max_iter") {
+            c.params.max_iter = v as usize;
+        }
+        if let Some(v) = gn("gd_epochs") {
+            c.params.gd_epochs = v as usize;
+        }
+        if let Some(v) = gn("gd_lr") {
+            c.params.gd_lr = v as f32;
+        }
+        if let Some(v) = gn("net_latency") {
+            c.net_latency = v;
+        }
+        if let Some(v) = gn("net_bandwidth") {
+            c.net_bandwidth = v;
+        }
+        Ok(c)
+    }
+
+    pub fn load(path: &Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("read {}: {e}", path.display())))?;
+        let j = Json::parse(&text).map_err(|e| Error::Config(format!("parse config: {e}")))?;
+        RunConfig::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = RunConfig::default();
+        c.dataset = "pavia".into();
+        c.workers = 8;
+        c.solver = Solver::Gd;
+        c.backend = BackendKind::Native;
+        c.partition = Partition::Lpt;
+        c.params.gamma = 0.125;
+        let back = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.dataset, "pavia");
+        assert_eq!(back.workers, 8);
+        assert_eq!(back.solver, Solver::Gd);
+        assert_eq!(back.backend, BackendKind::Native);
+        assert_eq!(back.partition, Partition::Lpt);
+        assert_eq!(back.params.gamma, 0.125);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let args = Args::parse(
+            "train --dataset wdbc --workers 2 --solver tf --gamma 0.25 --backend native"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let mut c = RunConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.dataset, "wdbc");
+        assert_eq!(c.workers, 2);
+        assert_eq!(c.solver, Solver::Gd);
+        assert_eq!(c.params.gamma, 0.25);
+        assert_eq!(c.backend, BackendKind::Native);
+        assert!(args.finish().is_ok());
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        let mut c = RunConfig::default();
+        let bad = Args::parse("x --workers 0".split_whitespace().map(String::from)).unwrap();
+        assert!(c.apply_args(&bad).is_err());
+        let bad2 =
+            Args::parse("x --solver banana".split_whitespace().map(String::from)).unwrap();
+        assert!(RunConfig::default().apply_args(&bad2).is_err());
+    }
+
+    #[test]
+    fn train_config_mapping() {
+        let mut c = RunConfig::default();
+        c.net_latency = 1e-3;
+        let tc = c.train_config();
+        assert_eq!(tc.workers, c.workers);
+        assert_eq!(tc.net.latency, 1e-3);
+    }
+}

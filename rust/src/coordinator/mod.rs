@@ -1,0 +1,19 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! * [`pairs`] — one-vs-one task decomposition and partitioning over
+//!   workers: the paper's static block split (Fig 4, `N = C/P`) plus
+//!   round-robin and LPT (longest-processing-time) strategies as ablations.
+//! * [`multiclass`] — the hybrid driver (paper Fig 4): rank 0 broadcasts
+//!   the training set over the simulated interconnect, every rank trains
+//!   its share of the m(m-1)/2 binary problems on its backend (each binary
+//!   problem internally runs the Fig 3 host/device chunk loop), and rank 0
+//!   gathers the models into an [`crate::svm::OvoModel`].
+//! * [`wire`] — compact f32 wire codec for datasets and models so the
+//!   cost model sees realistic byte counts.
+
+pub mod multiclass;
+pub mod pairs;
+pub mod wire;
+
+pub use multiclass::{train_multiclass, MulticlassReport, TrainConfig};
+pub use pairs::Partition;

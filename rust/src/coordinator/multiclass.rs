@@ -1,0 +1,300 @@
+//! The hybrid multiclass driver — paper Fig 4 (`MPI-CUDA_multiSMO`).
+//!
+//! Rank 0 (leader) holds the dataset. Execution:
+//!
+//!  1. leader encodes the training set and **broadcasts** it (the paper's
+//!     only pre-training communication);
+//!  2. every rank derives the canonical pair list and its partition
+//!     (`N = C/P` block split by default, Fig 4 step 3);
+//!  3. each rank trains its binary problems on its backend — every problem
+//!     internally runs the Fig 3 chunked host/device SMO loop (or the
+//!     fixed-step GD graph for the TF-analog stack);
+//!  4. workers send their models to the leader (**gather**, the paper's
+//!     only post-training communication) which assembles the OvO ensemble.
+//!
+//! The returned report carries per-rank compute seconds, per-pair stats and
+//! the interconnect's byte/simulated-time accounting, which feeds the
+//! Table IV overhead discussion in EXPERIMENTS.md.
+
+use std::sync::Arc;
+
+use super::pairs::{assign, size_cost, Partition};
+use super::wire;
+use crate::backend::{Solver, SvmBackend};
+use crate::cluster::{CostModel, Universe};
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::svm::multiclass::ovo_pairs;
+use crate::svm::{OvoModel, SvmParams, TrainStats};
+
+/// Multiclass training configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub workers: usize,
+    pub solver: Solver,
+    pub params: SvmParams,
+    pub partition: Partition,
+    pub net: CostModel,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            workers: 4,
+            solver: Solver::Smo,
+            params: SvmParams::default(),
+            partition: Partition::Block,
+            net: CostModel::gige10(),
+        }
+    }
+}
+
+/// Per-pair outcome (classes, stats, owning rank).
+#[derive(Debug, Clone)]
+pub struct PairReport {
+    pub pos_class: usize,
+    pub neg_class: usize,
+    pub rank: usize,
+    pub n_samples: usize,
+    pub stats: TrainStats,
+}
+
+/// Everything the harness needs to reproduce the paper's tables.
+#[derive(Debug, Clone)]
+pub struct MulticlassReport {
+    pub wall_secs: f64,
+    /// Per-rank busy seconds (compute only).
+    pub rank_secs: Vec<f64>,
+    pub pairs: Vec<PairReport>,
+    /// Interconnect accounting.
+    pub net_messages: u64,
+    pub net_bytes: u64,
+    pub net_sim_secs: f64,
+    pub workers: usize,
+}
+
+impl MulticlassReport {
+    /// Slowest rank (the multiclass makespan the paper measures).
+    pub fn makespan_secs(&self) -> f64 {
+        self.rank_secs.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Load imbalance: makespan / mean rank time.
+    pub fn imbalance(&self) -> f64 {
+        let mean = self.rank_secs.iter().sum::<f64>() / self.rank_secs.len().max(1) as f64;
+        if mean > 0.0 {
+            self.makespan_secs() / mean
+        } else {
+            1.0
+        }
+    }
+
+    pub fn total_iters(&self) -> usize {
+        self.pairs.iter().map(|p| p.stats.iters).sum()
+    }
+}
+
+/// Train a one-vs-one multiclass SVM across the simulated cluster.
+///
+/// `backend` is shared by all ranks (in a real deployment each node has its
+/// own device; sharing one PJRT CPU client keeps the simulation honest on a
+/// single host — per-rank wall time is still measured per thread).
+pub fn train_multiclass(
+    ds: &Dataset,
+    backend: Arc<dyn SvmBackend>,
+    cfg: &TrainConfig,
+) -> Result<(OvoModel, MulticlassReport)> {
+    if ds.n_classes < 2 {
+        return Err(Error::Train("need at least 2 classes".into()));
+    }
+    let universe = Universe::new(cfg.workers, cfg.net);
+    let stats = universe.stats();
+    let t0 = std::time::Instant::now();
+
+    let ds_frame = wire::encode_dataset(ds)?;
+    let n_classes = ds.n_classes;
+    let cfg2 = cfg.clone();
+
+    // SPMD worker body. Rank 0 doubles as the leader.
+    type RankOut = (Vec<f32>, f64, Vec<f32>); // (models frame, busy secs, pair stats frame)
+    let results: Vec<Result<RankOut>> = universe.run(move |mut comm| -> Result<RankOut> {
+        // (1) dataset broadcast — the only pre-training traffic.
+        let frame = if comm.rank() == 0 {
+            comm.bcast_f32s(0, &ds_frame)?
+        } else {
+            comm.bcast_f32s(0, &[])?
+        };
+        let local_ds = wire::decode_dataset(&frame, "bcast")?;
+
+        // (2) canonical pair list + partition (identical on every rank).
+        let pairs = ovo_pairs(n_classes);
+        let counts: Vec<usize> = (0..n_classes).map(|c| local_ds.class_count(c)).collect();
+        let mine = assign(pairs.len(), comm.size(), cfg2.partition, size_cost(&counts))
+            [comm.rank()]
+        .clone();
+
+        // (3) train my share.
+        let busy = std::time::Instant::now();
+        let mut models = Vec::with_capacity(mine.len());
+        let mut stats_frame: Vec<f32> = Vec::new();
+        for &pi in &mine {
+            let (a, b) = pairs[pi];
+            let prob = local_ds.binary_pair(a, b);
+            let n_samples = prob.n();
+            let (model, st) = backend.train_binary(&prob, &cfg2.params, cfg2.solver)?;
+            // pair stats frame: [pair_idx, n, iters, converged, gram_s, solve_s, chunks, n_sv]
+            stats_frame.extend_from_slice(&[
+                pi as f32,
+                n_samples as f32,
+                st.iters as f32,
+                if st.converged { 1.0 } else { 0.0 },
+                st.gram_secs as f32,
+                st.solve_secs as f32,
+                st.chunks as f32,
+                st.n_sv as f32,
+            ]);
+            models.push(model);
+        }
+        let busy_secs = busy.elapsed().as_secs_f64();
+
+        // (4) gather models at the leader — the only post-training traffic.
+        let models_frame = wire::encode_models(&models)?;
+        Ok((models_frame, busy_secs, stats_frame))
+    });
+
+    // Collect rank results (fail if any rank failed).
+    let mut frames = Vec::with_capacity(cfg.workers);
+    let mut rank_secs = Vec::with_capacity(cfg.workers);
+    let mut stat_frames = Vec::with_capacity(cfg.workers);
+    for (rank, r) in results.into_iter().enumerate() {
+        let (mf, bs, sf) = r.map_err(|e| Error::Train(format!("rank {rank}: {e}")))?;
+        // Account the gather explicitly (worker frames -> leader).
+        if rank != 0 {
+            stats.record(mf.len() * 4 + sf.len() * 4, &cfg.net);
+        }
+        frames.push(mf);
+        rank_secs.push(bs);
+        stat_frames.push(sf);
+    }
+
+    // Leader-side assembly.
+    let pairs = ovo_pairs(ds.n_classes);
+    let mut binaries = Vec::with_capacity(pairs.len());
+    let mut pair_reports = Vec::with_capacity(pairs.len());
+    for (rank, (mf, sf)) in frames.iter().zip(stat_frames.iter()).enumerate() {
+        let models = wire::decode_models(mf)?;
+        for (k, model) in models.into_iter().enumerate() {
+            let s = &sf[k * 8..(k + 1) * 8];
+            pair_reports.push(PairReport {
+                pos_class: model.pos_class,
+                neg_class: model.neg_class,
+                rank,
+                n_samples: s[1] as usize,
+                stats: TrainStats {
+                    iters: s[2] as usize,
+                    converged: s[3] > 0.5,
+                    gram_secs: s[4] as f64,
+                    solve_secs: s[5] as f64,
+                    chunks: s[6] as usize,
+                    n_sv: s[7] as usize,
+                },
+            });
+            binaries.push(model);
+        }
+    }
+    // Canonical order for the ensemble (pair order, not arrival order).
+    binaries.sort_by_key(|m| (m.pos_class, m.neg_class));
+    pair_reports.sort_by_key(|p| (p.pos_class, p.neg_class));
+    if binaries.len() != pairs.len() {
+        return Err(Error::Train(format!(
+            "expected {} binary models, got {}",
+            pairs.len(),
+            binaries.len()
+        )));
+    }
+
+    let model = OvoModel::new(ds.n_classes, ds.d, binaries, ds.class_names.clone());
+    let report = MulticlassReport {
+        wall_secs: t0.elapsed().as_secs_f64(),
+        rank_secs,
+        pairs: pair_reports,
+        net_messages: stats.messages(),
+        net_bytes: stats.bytes(),
+        net_sim_secs: stats.sim_secs(),
+        workers: cfg.workers,
+    };
+    Ok((model, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::data::iris;
+
+    fn quick_cfg(workers: usize) -> TrainConfig {
+        TrainConfig { workers, ..Default::default() }
+    }
+
+    #[test]
+    fn trains_iris_three_ways() {
+        let ds = iris::load();
+        let be = Arc::new(NativeBackend::new());
+        let (model, report) = train_multiclass(&ds, be, &quick_cfg(3)).unwrap();
+        assert_eq!(model.binaries.len(), 3);
+        assert_eq!(report.pairs.len(), 3);
+        // Iris is easy: training accuracy must be high.
+        assert!(model.accuracy(&ds.x, &ds.y) >= 0.95);
+        // Every pair converged and is owned by some rank < 3.
+        for p in &report.pairs {
+            assert!(p.stats.converged);
+            assert!(p.rank < 3);
+        }
+    }
+
+    #[test]
+    fn worker_counts_give_same_model() {
+        let ds = iris::load();
+        let be = Arc::new(NativeBackend::new());
+        let (m1, _) = train_multiclass(&ds, be.clone(), &quick_cfg(1)).unwrap();
+        let (m4, _) = train_multiclass(&ds, be, &quick_cfg(4)).unwrap();
+        // Same deterministic binary problems -> identical ensembles.
+        for (a, b) in m1.binaries.iter().zip(m4.binaries.iter()) {
+            assert_eq!(a.pos_class, b.pos_class);
+            assert_eq!(a.coef, b.coef);
+            assert_eq!(a.bias, b.bias);
+        }
+    }
+
+    #[test]
+    fn net_accounting_scales_with_workers() {
+        let ds = iris::load();
+        let be = Arc::new(NativeBackend::new());
+        let (_, r1) = train_multiclass(&ds, be.clone(), &quick_cfg(1)).unwrap();
+        let (_, r4) = train_multiclass(&ds, be, &quick_cfg(4)).unwrap();
+        // 1 worker: loopback only -> zero wire traffic.
+        assert_eq!(r1.net_bytes, 0);
+        // 4 workers: 3 bcast frames + 3 gathers.
+        assert!(r4.net_bytes > 0);
+        assert!(r4.net_messages >= 6);
+        assert!(r4.net_sim_secs > 0.0);
+    }
+
+    #[test]
+    fn single_class_rejected() {
+        let ds = Dataset::new("one", vec![0.0, 1.0], vec![0, 0], 1, vec!["a".into()]);
+        let be = Arc::new(NativeBackend::new());
+        assert!(train_multiclass(&ds, be, &quick_cfg(2)).is_err());
+    }
+
+    #[test]
+    fn report_metrics_consistent() {
+        let ds = iris::load();
+        let be = Arc::new(NativeBackend::new());
+        let (_, r) = train_multiclass(&ds, be, &quick_cfg(2)).unwrap();
+        assert_eq!(r.rank_secs.len(), 2);
+        assert!(r.makespan_secs() <= r.wall_secs + 1e-3);
+        assert!(r.imbalance() >= 1.0);
+        assert!(r.total_iters() > 0);
+    }
+}

@@ -1,0 +1,154 @@
+//! One-vs-one pair scheduling: which worker trains which binary problem.
+
+use crate::svm::multiclass::ovo_pairs;
+
+/// Partitioning strategy for distributing the m(m-1)/2 binary problems.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Partition {
+    /// Contiguous blocks of ceil(C/P) — exactly the paper's Fig 4.
+    Block,
+    /// Cyclic assignment (pair i -> worker i mod P).
+    RoundRobin,
+    /// Longest-processing-time-first greedy using per-pair cost estimates
+    /// (sum of the two class sizes — SMO cost grows with n). Extension over
+    /// the paper; ablated in `benches/ablations.rs`.
+    Lpt,
+}
+
+impl std::str::FromStr for Partition {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Partition, String> {
+        match s {
+            "block" => Ok(Partition::Block),
+            "round_robin" | "rr" => Ok(Partition::RoundRobin),
+            "lpt" => Ok(Partition::Lpt),
+            other => Err(format!("unknown partition {other:?} (want block|rr|lpt)")),
+        }
+    }
+}
+
+/// Assign pair indices `0..n_pairs` to `workers` buckets.
+///
+/// `cost` estimates the work of pair `i` (only used by Lpt).
+pub fn assign(
+    n_pairs: usize,
+    workers: usize,
+    strategy: Partition,
+    cost: impl Fn(usize) -> f64,
+) -> Vec<Vec<usize>> {
+    assert!(workers > 0);
+    let mut out = vec![Vec::new(); workers];
+    match strategy {
+        Partition::Block => {
+            // ceil(C/P) contiguous chunk per worker (paper Fig 4 step 3).
+            let chunk = n_pairs.div_ceil(workers);
+            for i in 0..n_pairs {
+                out[(i / chunk.max(1)).min(workers - 1)].push(i);
+            }
+        }
+        Partition::RoundRobin => {
+            for i in 0..n_pairs {
+                out[i % workers].push(i);
+            }
+        }
+        Partition::Lpt => {
+            let mut order: Vec<usize> = (0..n_pairs).collect();
+            order.sort_by(|&a, &b| cost(b).partial_cmp(&cost(a)).unwrap());
+            let mut load = vec![0.0f64; workers];
+            for i in order {
+                let w = (0..workers)
+                    .min_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap())
+                    .unwrap();
+                out[w].push(i);
+                load[w] += cost(i);
+            }
+            for bucket in &mut out {
+                bucket.sort_unstable(); // deterministic per-worker order
+            }
+        }
+    }
+    out
+}
+
+/// Per-pair cost estimate from class sizes: the binary problem over classes
+/// (a, b) has |a| + |b| samples; SMO iterations and Gram cost grow with it.
+pub fn size_cost(class_counts: &[usize]) -> impl Fn(usize) -> f64 + '_ {
+    let pairs = ovo_pairs(class_counts.len());
+    move |i: usize| {
+        let (a, b) = pairs[i];
+        (class_counts[a] + class_counts[b]) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat(assignment: &[Vec<usize>]) -> Vec<usize> {
+        let mut v: Vec<usize> = assignment.iter().flatten().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn block_matches_paper_fig4() {
+        // 36 pairs (9 classes) over 4 workers -> 9 contiguous each.
+        let a = assign(36, 4, Partition::Block, |_| 1.0);
+        assert_eq!(a.iter().map(Vec::len).collect::<Vec<_>>(), vec![9, 9, 9, 9]);
+        assert_eq!(a[0], (0..9).collect::<Vec<_>>());
+        assert_eq!(a[3], (27..36).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn every_strategy_covers_exactly_once() {
+        for strategy in [Partition::Block, Partition::RoundRobin, Partition::Lpt] {
+            for workers in 1..8 {
+                for n in [1usize, 3, 10, 36] {
+                    let a = assign(n, workers, strategy, |i| (i + 1) as f64);
+                    assert_eq!(flat(&a), (0..n).collect::<Vec<_>>(), "{strategy:?} {workers} {n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_balanced_within_one() {
+        let a = assign(10, 4, Partition::RoundRobin, |_| 1.0);
+        let lens: Vec<usize> = a.iter().map(Vec::len).collect();
+        assert_eq!(lens, vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn lpt_beats_block_on_skewed_costs() {
+        // One huge pair + many small: block puts the huge one with others,
+        // LPT isolates it.
+        let cost = |i: usize| if i == 0 { 100.0 } else { 1.0 };
+        let makespan = |a: &[Vec<usize>]| {
+            a.iter()
+                .map(|b| b.iter().map(|&i| cost(i)).sum::<f64>())
+                .fold(0.0, f64::max)
+        };
+        let block = assign(8, 4, Partition::Block, cost);
+        let lpt = assign(8, 4, Partition::Lpt, cost);
+        assert!(makespan(&lpt) <= makespan(&block));
+        assert_eq!(makespan(&lpt), 100.0); // the huge pair runs alone
+    }
+
+    #[test]
+    fn more_workers_than_pairs() {
+        let a = assign(2, 5, Partition::Block, |_| 1.0);
+        assert_eq!(flat(&a), vec![0, 1]);
+        assert!(a.iter().filter(|b| !b.is_empty()).count() <= 2);
+    }
+
+    #[test]
+    fn size_cost_uses_class_counts() {
+        let counts = [10usize, 20, 30];
+        let cost = size_cost(&counts);
+        // pairs: (0,1)=30, (0,2)=40, (1,2)=50
+        assert_eq!(cost(0), 30.0);
+        assert_eq!(cost(1), 40.0);
+        assert_eq!(cost(2), 50.0);
+    }
+}

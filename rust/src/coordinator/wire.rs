@@ -1,0 +1,213 @@
+//! Wire codec for datasets and binary models over the simulated
+//! interconnect — all-f32 framing so the cost model accounts the same
+//! byte volume a real MPI implementation would move.
+//!
+//! Frames are self-describing little vectors of f32:
+//!   dataset: [n, d, n_classes, y..., x...]
+//!   model:   [pos, neg, d, n_sv, bias, gamma, coef..., sv...]
+//! Counts < 2^24 are exactly representable in f32 (asserted).
+
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::svm::BinaryModel;
+
+fn push_count(out: &mut Vec<f32>, v: usize, what: &str) -> Result<()> {
+    if v >= (1 << 24) {
+        return Err(Error::Cluster(format!("{what} {v} too large for f32 wire count")));
+    }
+    out.push(v as f32);
+    Ok(())
+}
+
+fn read_count(v: f32, what: &str) -> Result<usize> {
+    if v < 0.0 || v.fract() != 0.0 {
+        return Err(Error::Cluster(format!("bad wire count for {what}: {v}")));
+    }
+    Ok(v as usize)
+}
+
+/// Encode a dataset (features + labels, no class names — those ride along
+/// out of band since only rank 0 reports).
+pub fn encode_dataset(ds: &Dataset) -> Result<Vec<f32>> {
+    let mut out = Vec::with_capacity(3 + ds.n + ds.x.len());
+    push_count(&mut out, ds.n, "n")?;
+    push_count(&mut out, ds.d, "d")?;
+    push_count(&mut out, ds.n_classes, "n_classes")?;
+    out.extend(ds.y.iter().map(|&c| c as f32));
+    out.extend_from_slice(&ds.x);
+    Ok(out)
+}
+
+pub fn decode_dataset(buf: &[f32], name: &str) -> Result<Dataset> {
+    if buf.len() < 3 {
+        return Err(Error::Cluster("dataset frame too short".into()));
+    }
+    let n = read_count(buf[0], "n")?;
+    let d = read_count(buf[1], "d")?;
+    let n_classes = read_count(buf[2], "n_classes")?;
+    let need = 3 + n + n * d;
+    if buf.len() != need {
+        return Err(Error::Cluster(format!(
+            "dataset frame length {} != expected {need}",
+            buf.len()
+        )));
+    }
+    let y: Vec<i32> = buf[3..3 + n].iter().map(|&v| v as i32).collect();
+    let x = buf[3 + n..].to_vec();
+    let class_names = (0..n_classes).map(|c| format!("class{c}")).collect();
+    Ok(Dataset::new(name, x, y, d, class_names))
+}
+
+/// Encode a trained binary model.
+pub fn encode_model(m: &BinaryModel) -> Result<Vec<f32>> {
+    let mut out = Vec::with_capacity(6 + m.coef.len() + m.sv.len());
+    push_count(&mut out, m.pos_class, "pos_class")?;
+    push_count(&mut out, m.neg_class, "neg_class")?;
+    push_count(&mut out, m.d, "d")?;
+    push_count(&mut out, m.n_sv(), "n_sv")?;
+    out.push(m.bias);
+    out.push(m.gamma);
+    out.extend_from_slice(&m.coef);
+    out.extend_from_slice(&m.sv);
+    Ok(out)
+}
+
+pub fn decode_model(buf: &[f32]) -> Result<BinaryModel> {
+    if buf.len() < 6 {
+        return Err(Error::Cluster("model frame too short".into()));
+    }
+    let pos_class = read_count(buf[0], "pos_class")?;
+    let neg_class = read_count(buf[1], "neg_class")?;
+    let d = read_count(buf[2], "d")?;
+    let n_sv = read_count(buf[3], "n_sv")?;
+    let bias = buf[4];
+    let gamma = buf[5];
+    let need = 6 + n_sv + n_sv * d;
+    if buf.len() != need {
+        return Err(Error::Cluster(format!(
+            "model frame length {} != expected {need}",
+            buf.len()
+        )));
+    }
+    let coef = buf[6..6 + n_sv].to_vec();
+    let sv = buf[6 + n_sv..].to_vec();
+    Ok(BinaryModel { sv, coef, d, bias, gamma, pos_class, neg_class })
+}
+
+/// Concatenate several model frames with a leading count per frame.
+pub fn encode_models(models: &[BinaryModel]) -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    push_count(&mut out, models.len(), "n_models")?;
+    for m in models {
+        let frame = encode_model(m)?;
+        push_count(&mut out, frame.len(), "frame_len")?;
+        out.extend(frame);
+    }
+    Ok(out)
+}
+
+pub fn decode_models(buf: &[f32]) -> Result<Vec<BinaryModel>> {
+    if buf.is_empty() {
+        return Err(Error::Cluster("models frame empty".into()));
+    }
+    let n = read_count(buf[0], "n_models")?;
+    let mut out = Vec::with_capacity(n);
+    let mut pos = 1usize;
+    for _ in 0..n {
+        let len = read_count(
+            *buf.get(pos).ok_or_else(|| Error::Cluster("models frame truncated".into()))?,
+            "frame_len",
+        )?;
+        pos += 1;
+        let end = pos + len;
+        if end > buf.len() {
+            return Err(Error::Cluster("models frame truncated".into()));
+        }
+        out.push(decode_model(&buf[pos..end])?);
+        pos = end;
+    }
+    if pos != buf.len() {
+        return Err(Error::Cluster("models frame has trailing data".into()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::iris;
+
+    #[test]
+    fn dataset_roundtrip() {
+        let ds = iris::load();
+        let enc = encode_dataset(&ds).unwrap();
+        let back = decode_dataset(&enc, "iris").unwrap();
+        assert_eq!(back.n, ds.n);
+        assert_eq!(back.d, ds.d);
+        assert_eq!(back.y, ds.y);
+        assert_eq!(back.x, ds.x);
+    }
+
+    #[test]
+    fn model_roundtrip() {
+        let m = BinaryModel {
+            sv: vec![1.0, 2.0, 3.0, 4.0],
+            coef: vec![0.5, -0.5],
+            d: 2,
+            bias: 0.25,
+            gamma: 0.7,
+            pos_class: 3,
+            neg_class: 8,
+        };
+        let back = decode_model(&encode_model(&m).unwrap()).unwrap();
+        assert_eq!(back.sv, m.sv);
+        assert_eq!(back.coef, m.coef);
+        assert_eq!((back.pos_class, back.neg_class, back.d), (3, 8, 2));
+        assert_eq!((back.bias, back.gamma), (0.25, 0.7));
+    }
+
+    #[test]
+    fn multi_model_roundtrip() {
+        let mk = |pos: usize| BinaryModel {
+            sv: vec![pos as f32],
+            coef: vec![1.0],
+            d: 1,
+            bias: 0.0,
+            gamma: 1.0,
+            pos_class: pos,
+            neg_class: pos + 1,
+        };
+        let models = vec![mk(0), mk(1), mk(2)];
+        let back = decode_models(&encode_models(&models).unwrap()).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back[2].pos_class, 2);
+    }
+
+    #[test]
+    fn corrupt_frames_rejected() {
+        assert!(decode_dataset(&[1.0], "x").is_err());
+        assert!(decode_model(&[0.0, 1.0, 2.0]).is_err());
+        assert!(decode_models(&[]).is_err());
+        // bad count
+        assert!(decode_model(&[0.5, 1.0, 1.0, 1.0, 0.0, 1.0, 1.0, 1.0]).is_err());
+        // trailing garbage
+        let m = BinaryModel {
+            sv: vec![1.0],
+            coef: vec![1.0],
+            d: 1,
+            bias: 0.0,
+            gamma: 1.0,
+            pos_class: 0,
+            neg_class: 1,
+        };
+        let mut enc = encode_models(&[m]).unwrap();
+        enc.push(9.0);
+        assert!(decode_models(&enc).is_err());
+    }
+
+    #[test]
+    fn empty_model_list_roundtrips() {
+        let back = decode_models(&encode_models(&[]).unwrap()).unwrap();
+        assert!(back.is_empty());
+    }
+}

@@ -1,0 +1,160 @@
+//! CSV import/export for datasets (feature columns + a label column).
+//!
+//! Format: optional header, comma-separated floats, label last. Labels may
+//! be integers or arbitrary strings (mapped to class ids in first-seen
+//! order). Gives users a path to run the pipeline on their own data.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use super::dataset::Dataset;
+use crate::error::{Error, Result};
+
+/// Parse a dataset from CSV text. `has_header` skips the first line.
+pub fn parse(text: &str, name: &str, has_header: bool) -> Result<Dataset> {
+    let mut x: Vec<f32> = Vec::new();
+    let mut raw_labels: Vec<String> = Vec::new();
+    let mut d: Option<usize> = None;
+
+    for (lineno, line) in text.lines().enumerate() {
+        if lineno == 0 && has_header {
+            continue;
+        }
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        if fields.len() < 2 {
+            return Err(Error::Data(format!(
+                "line {}: need at least 1 feature + label",
+                lineno + 1
+            )));
+        }
+        let row_d = fields.len() - 1;
+        match d {
+            None => d = Some(row_d),
+            Some(expect) if expect != row_d => {
+                return Err(Error::Data(format!(
+                    "line {}: {} features, expected {}",
+                    lineno + 1,
+                    row_d,
+                    expect
+                )));
+            }
+            _ => {}
+        }
+        for f in &fields[..row_d] {
+            x.push(f.parse::<f32>().map_err(|_| {
+                Error::Data(format!("line {}: bad float {f:?}", lineno + 1))
+            })?);
+        }
+        raw_labels.push(fields[row_d].to_string());
+    }
+
+    let d = d.ok_or_else(|| Error::Data("empty csv".into()))?;
+    // Map labels to ids in first-seen order (stable across runs).
+    let mut ids: BTreeMap<String, i32> = BTreeMap::new();
+    let mut order: Vec<String> = Vec::new();
+    for l in &raw_labels {
+        if !ids.contains_key(l) {
+            ids.insert(l.clone(), order.len() as i32);
+            order.push(l.clone());
+        }
+    }
+    let y: Vec<i32> = raw_labels.iter().map(|l| ids[l]).collect();
+    Ok(Dataset::new(name, x, y, d, order))
+}
+
+/// Load from a file path.
+pub fn load(path: &Path, has_header: bool) -> Result<Dataset> {
+    let file = std::fs::File::open(path)
+        .map_err(|e| Error::Data(format!("open {}: {e}", path.display())))?;
+    let mut text = String::new();
+    let mut reader = std::io::BufReader::new(file);
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line).map_err(|e| Error::Data(e.to_string()))? == 0 {
+            break;
+        }
+        text.push_str(&line);
+    }
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "csv".into());
+    parse(&text, &name, has_header)
+}
+
+/// Write a dataset to CSV (no header; label names in the last column).
+pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .map_err(|e| Error::Data(format!("create {}: {e}", path.display())))?;
+    let mut w = BufWriter::new(file);
+    for i in 0..ds.n {
+        let mut line = String::new();
+        for v in ds.row(i) {
+            line.push_str(&format!("{v},"));
+        }
+        line.push_str(&ds.class_names[ds.y[i] as usize]);
+        line.push('\n');
+        w.write_all(line.as_bytes())
+            .map_err(|e| Error::Data(e.to_string()))?;
+    }
+    w.flush().map_err(|e| Error::Data(e.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let ds = parse("1.0,2.0,cat\n3.0,4.0,dog\n5.5,6.5,cat\n", "t", false).unwrap();
+        assert_eq!((ds.n, ds.d, ds.n_classes), (3, 2, 2));
+        assert_eq!(ds.y, vec![0, 1, 0]);
+        assert_eq!(ds.class_names, vec!["cat", "dog"]);
+        assert_eq!(ds.row(2), &[5.5, 6.5]);
+    }
+
+    #[test]
+    fn header_comments_blank_lines() {
+        let ds = parse("a,b,label\n# comment\n\n1,2,0\n3,4,1\n", "t", true).unwrap();
+        assert_eq!(ds.n, 2);
+    }
+
+    #[test]
+    fn ragged_rows_rejected() {
+        assert!(parse("1,2,a\n1,2,3,b\n", "t", false).is_err());
+    }
+
+    #[test]
+    fn bad_float_rejected() {
+        assert!(parse("1,x,a\n", "t", false).is_err());
+    }
+
+    #[test]
+    fn empty_rejected() {
+        assert!(parse("", "t", false).is_err());
+    }
+
+    #[test]
+    fn roundtrip_through_file() {
+        let ds = crate::data::iris::load();
+        let dir = std::env::temp_dir().join("parasvm_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("iris.csv");
+        save(&ds, &path).unwrap();
+        let back = load(&path, false).unwrap();
+        assert_eq!(back.n, ds.n);
+        assert_eq!(back.d, ds.d);
+        assert_eq!(back.y, ds.y);
+        for i in 0..ds.n {
+            for j in 0..ds.d {
+                assert!((back.row(i)[j] - ds.row(i)[j]).abs() < 1e-5);
+            }
+        }
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,171 @@
+//! Core dataset container and binary-pair views.
+
+/// A dense, row-major labelled dataset.
+///
+/// `x` has `n * d` f32 features; `y[i]` is a class id in `0..n_classes`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dataset {
+    pub name: String,
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub n: usize,
+    pub d: usize,
+    pub n_classes: usize,
+    pub class_names: Vec<String>,
+}
+
+impl Dataset {
+    pub fn new(
+        name: impl Into<String>,
+        x: Vec<f32>,
+        y: Vec<i32>,
+        d: usize,
+        class_names: Vec<String>,
+    ) -> Self {
+        let n = y.len();
+        assert_eq!(x.len(), n * d, "x length must be n*d");
+        let n_classes = class_names.len();
+        assert!(
+            y.iter().all(|&c| c >= 0 && (c as usize) < n_classes),
+            "labels out of range"
+        );
+        Dataset { name: name.into(), x, y, n, d, n_classes, class_names }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn class_count(&self, c: usize) -> usize {
+        self.y.iter().filter(|&&v| v == c as i32).count()
+    }
+
+    /// New dataset containing only the given row indices (order preserved).
+    pub fn select(&self, idx: &[usize]) -> Dataset {
+        let mut x = Vec::with_capacity(idx.len() * self.d);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.row(i));
+            y.push(self.y[i]);
+        }
+        Dataset {
+            name: self.name.clone(),
+            x,
+            y,
+            n: idx.len(),
+            d: self.d,
+            n_classes: self.n_classes,
+            class_names: self.class_names.clone(),
+        }
+    }
+
+    /// Extract the one-vs-one binary problem for classes `(a, b)`:
+    /// class `a` becomes +1, class `b` becomes -1.
+    pub fn binary_pair(&self, a: usize, b: usize) -> BinaryProblem {
+        assert!(a < self.n_classes && b < self.n_classes && a != b);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..self.n {
+            let c = self.y[i] as usize;
+            if c == a || c == b {
+                x.extend_from_slice(self.row(i));
+                y.push(if c == a { 1.0 } else { -1.0 });
+            }
+        }
+        BinaryProblem { x, y, d: self.d, pos_class: a, neg_class: b }
+    }
+
+    /// Feature-wise (min, max) over all rows — used by min-max scaling.
+    pub fn feature_ranges(&self) -> Vec<(f32, f32)> {
+        let mut ranges = vec![(f32::INFINITY, f32::NEG_INFINITY); self.d];
+        for i in 0..self.n {
+            for (j, &v) in self.row(i).iter().enumerate() {
+                ranges[j].0 = ranges[j].0.min(v);
+                ranges[j].1 = ranges[j].1.max(v);
+            }
+        }
+        ranges
+    }
+}
+
+/// A +1/-1 labelled binary training problem (one OvO pair).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BinaryProblem {
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub d: usize,
+    pub pos_class: usize,
+    pub neg_class: usize,
+}
+
+impl BinaryProblem {
+    pub fn n(&self) -> usize {
+        self.y.len()
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset::new(
+            "toy",
+            vec![
+                0.0, 0.0, //
+                1.0, 0.0, //
+                0.0, 1.0, //
+                1.0, 1.0, //
+                2.0, 2.0, //
+            ],
+            vec![0, 1, 1, 2, 2],
+            2,
+            vec!["a".into(), "b".into(), "c".into()],
+        )
+    }
+
+    #[test]
+    fn rows_and_counts() {
+        let ds = toy();
+        assert_eq!(ds.row(1), &[1.0, 0.0]);
+        assert_eq!(ds.class_count(1), 2);
+        assert_eq!(ds.class_count(0), 1);
+    }
+
+    #[test]
+    fn select_preserves_order_and_labels() {
+        let ds = toy();
+        let s = ds.select(&[4, 0]);
+        assert_eq!(s.n, 2);
+        assert_eq!(s.row(0), &[2.0, 2.0]);
+        assert_eq!(s.y, vec![2, 0]);
+    }
+
+    #[test]
+    fn binary_pair_signs() {
+        let ds = toy();
+        let p = ds.binary_pair(1, 2);
+        assert_eq!(p.n(), 4);
+        assert_eq!(p.y, vec![1.0, 1.0, -1.0, -1.0]);
+        assert_eq!(p.pos_class, 1);
+        assert_eq!(p.row(3), &[2.0, 2.0]);
+    }
+
+    #[test]
+    fn feature_ranges() {
+        let ds = toy();
+        assert_eq!(ds.feature_ranges(), vec![(0.0, 2.0), (0.0, 2.0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "labels out of range")]
+    fn rejects_bad_labels() {
+        Dataset::new("bad", vec![0.0], vec![5], 1, vec!["a".into()]);
+    }
+}

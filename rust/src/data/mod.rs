@@ -1,0 +1,92 @@
+//! Dataset substrate: the three datasets of paper Table I plus the
+//! machinery around them (scaling, splits, CSV IO, binary-pair views).
+//!
+//! * `iris`  — the real Fisher Iris data (public domain), embedded.
+//! * `wdbc`  — synthetic Breast-Cancer-Wisconsin-shaped generator
+//!             (569 samples, 30 features, 2 classes; see DESIGN.md
+//!             §Substitutions for why synthetic is equivalent here).
+//! * `pavia` — synthetic Pavia Centre-shaped hyperspectral generator
+//!             (9 classes, 102 bands, 1096x715 scene).
+
+pub mod csv;
+pub mod dataset;
+pub mod iris;
+pub mod pavia;
+pub mod scale;
+pub mod split;
+pub mod wdbc;
+
+pub use dataset::{BinaryProblem, Dataset};
+
+use crate::util::rng::Rng;
+
+/// The paper's three datasets by name (Table I), with a deterministic seed.
+pub fn by_name(name: &str, seed: u64) -> Option<Dataset> {
+    match name {
+        "iris" => Some(iris::load()),
+        "wdbc" | "breast_cancer" => Some(wdbc::generate(seed)),
+        "pavia" => Some(pavia::generate(&pavia::PaviaConfig::default(), seed)),
+        _ => None,
+    }
+}
+
+/// Subsample `per_class` points from each class (paper's
+/// "#Trainingsamples/#classes" sweeps). Classes with fewer points keep all.
+pub fn per_class_subset(ds: &Dataset, per_class: usize, rng: &mut Rng) -> Dataset {
+    let mut keep: Vec<usize> = Vec::new();
+    for c in 0..ds.n_classes {
+        let idx: Vec<usize> = (0..ds.n).filter(|&i| ds.y[i] == c as i32).collect();
+        if idx.len() <= per_class {
+            keep.extend(idx);
+        } else {
+            let mut r = rng.split(c as u64);
+            let sel = r.sample_indices(idx.len(), per_class);
+            keep.extend(sel.into_iter().map(|j| idx[j]));
+        }
+    }
+    keep.sort_unstable();
+    ds.select(&keep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_covers_paper_table1() {
+        let iris = by_name("iris", 0).unwrap();
+        assert_eq!((iris.n, iris.d, iris.n_classes), (150, 4, 3));
+        let wdbc = by_name("wdbc", 0).unwrap();
+        assert_eq!((wdbc.n, wdbc.d, wdbc.n_classes), (569, 30, 2));
+        let pavia = by_name("pavia", 0).unwrap();
+        assert_eq!((pavia.d, pavia.n_classes), (102, 9));
+        assert!(by_name("mnist", 0).is_none());
+    }
+
+    #[test]
+    fn per_class_subset_counts() {
+        let ds = by_name("pavia", 7).unwrap();
+        let mut rng = Rng::new(1);
+        let sub = per_class_subset(&ds, 200, &mut rng);
+        assert_eq!(sub.n, 200 * 9);
+        for c in 0..9 {
+            assert_eq!(sub.class_count(c), 200);
+        }
+    }
+
+    #[test]
+    fn per_class_subset_is_deterministic() {
+        let ds = by_name("wdbc", 3).unwrap();
+        let a = per_class_subset(&ds, 50, &mut Rng::new(9));
+        let b = per_class_subset(&ds, 50, &mut Rng::new(9));
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn per_class_subset_keeps_small_classes() {
+        let ds = by_name("iris", 0).unwrap();
+        let sub = per_class_subset(&ds, 1000, &mut Rng::new(0));
+        assert_eq!(sub.n, 150);
+    }
+}

@@ -1,0 +1,149 @@
+//! Feature scaling. SVMs with RBF kernels need comparable feature scales
+//! (the paper's datasets span 0.006..2500 in raw units); we provide the two
+//! standard transforms with fit/apply separation so test data is scaled
+//! with *training* statistics.
+
+use super::dataset::Dataset;
+
+/// A fitted feature-wise affine transform x' = (x - shift) * scale.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scaler {
+    pub shift: Vec<f32>,
+    pub scale: Vec<f32>,
+}
+
+impl Scaler {
+    /// Min-max to [0, 1]. Constant features map to 0.
+    pub fn fit_minmax(ds: &Dataset) -> Scaler {
+        let ranges = ds.feature_ranges();
+        let shift = ranges.iter().map(|r| r.0).collect();
+        let scale = ranges
+            .iter()
+            .map(|r| {
+                let w = r.1 - r.0;
+                if w > 0.0 {
+                    1.0 / w
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        Scaler { shift, scale }
+    }
+
+    /// Standardize to zero mean / unit variance. Constant features map to 0.
+    pub fn fit_standard(ds: &Dataset) -> Scaler {
+        let d = ds.d;
+        let n = ds.n.max(1) as f64;
+        let mut mean = vec![0.0f64; d];
+        let mut m2 = vec![0.0f64; d];
+        for i in 0..ds.n {
+            for (j, &v) in ds.row(i).iter().enumerate() {
+                mean[j] += v as f64;
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n;
+        }
+        for i in 0..ds.n {
+            for (j, &v) in ds.row(i).iter().enumerate() {
+                let e = v as f64 - mean[j];
+                m2[j] += e * e;
+            }
+        }
+        let shift = mean.iter().map(|&m| m as f32).collect();
+        let scale = m2
+            .iter()
+            .map(|&s| {
+                let sd = (s / n).sqrt();
+                if sd > 1e-12 {
+                    (1.0 / sd) as f32
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        Scaler { shift, scale }
+    }
+
+    /// Apply in place to a row-major feature buffer with `d = self.shift.len()`.
+    pub fn apply_slice(&self, x: &mut [f32]) {
+        let d = self.shift.len();
+        assert_eq!(x.len() % d, 0);
+        for row in x.chunks_mut(d) {
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = (*v - self.shift[j]) * self.scale[j];
+            }
+        }
+    }
+
+    /// Apply to a dataset, returning a new one.
+    pub fn apply(&self, ds: &Dataset) -> Dataset {
+        let mut out = ds.clone();
+        self.apply_slice(&mut out.x);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset::new(
+            "t",
+            vec![0.0, 10.0, 5.0, 20.0, 10.0, 30.0],
+            vec![0, 0, 1],
+            2,
+            vec!["a".into(), "b".into()],
+        )
+    }
+
+    #[test]
+    fn minmax_maps_to_unit_interval() {
+        let ds = toy();
+        let s = Scaler::fit_minmax(&ds);
+        let out = s.apply(&ds);
+        assert_eq!(out.row(0), &[0.0, 0.0]);
+        assert_eq!(out.row(2), &[1.0, 1.0]);
+        assert_eq!(out.row(1), &[0.5, 0.5]);
+    }
+
+    #[test]
+    fn standard_zero_mean_unit_var() {
+        let ds = toy();
+        let s = Scaler::fit_standard(&ds);
+        let out = s.apply(&ds);
+        for j in 0..2 {
+            let m: f32 = (0..3).map(|i| out.row(i)[j]).sum::<f32>() / 3.0;
+            let v: f32 = (0..3).map(|i| (out.row(i)[j] - m).powi(2)).sum::<f32>() / 3.0;
+            assert!(m.abs() < 1e-6);
+            assert!((v - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn constant_feature_maps_to_zero() {
+        let ds = Dataset::new(
+            "c",
+            vec![3.0, 1.0, 3.0, 2.0],
+            vec![0, 1],
+            2,
+            vec!["a".into(), "b".into()],
+        );
+        for s in [Scaler::fit_minmax(&ds), Scaler::fit_standard(&ds)] {
+            let out = s.apply(&ds);
+            assert_eq!(out.row(0)[0], 0.0);
+            assert_eq!(out.row(1)[0], 0.0);
+        }
+    }
+
+    #[test]
+    fn train_stats_apply_to_test() {
+        let train = toy();
+        let s = Scaler::fit_minmax(&train);
+        let mut test_x = vec![20.0f32, 50.0]; // outside the train range
+        s.apply_slice(&mut test_x);
+        assert!((test_x[0] - 2.0).abs() < 1e-6); // extrapolates, no re-fit
+    }
+}

@@ -1,0 +1,64 @@
+//! Train/test splitting (stratified, deterministic).
+
+use super::dataset::Dataset;
+use crate::util::rng::Rng;
+
+/// Stratified split: `train_frac` of each class goes to train (at least one
+/// sample per non-empty class on each side when possible).
+pub fn stratified(ds: &Dataset, train_frac: f64, rng: &mut Rng) -> (Dataset, Dataset) {
+    assert!((0.0..=1.0).contains(&train_frac));
+    let mut train_idx = Vec::new();
+    let mut test_idx = Vec::new();
+    for c in 0..ds.n_classes {
+        let mut idx: Vec<usize> = (0..ds.n).filter(|&i| ds.y[i] == c as i32).collect();
+        if idx.is_empty() {
+            continue;
+        }
+        let mut r = rng.split(c as u64);
+        r.shuffle(&mut idx);
+        let k = ((idx.len() as f64 * train_frac).round() as usize)
+            .clamp(1.min(idx.len()), idx.len());
+        train_idx.extend_from_slice(&idx[..k]);
+        test_idx.extend_from_slice(&idx[k..]);
+    }
+    train_idx.sort_unstable();
+    test_idx.sort_unstable();
+    (ds.select(&train_idx), ds.select(&test_idx))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::iris;
+
+    #[test]
+    fn split_is_disjoint_and_complete() {
+        let ds = iris::load();
+        let (tr, te) = stratified(&ds, 0.8, &mut Rng::new(0));
+        assert_eq!(tr.n + te.n, ds.n);
+        assert_eq!(tr.n, 120);
+        // per-class stratification
+        for c in 0..3 {
+            assert_eq!(tr.class_count(c), 40);
+            assert_eq!(te.class_count(c), 10);
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let ds = iris::load();
+        let (a, _) = stratified(&ds, 0.7, &mut Rng::new(42));
+        let (b, _) = stratified(&ds, 0.7, &mut Rng::new(42));
+        assert_eq!(a.x, b.x);
+    }
+
+    #[test]
+    fn extreme_fractions_keep_a_sample() {
+        let ds = iris::load();
+        let (tr, _) = stratified(&ds, 0.0, &mut Rng::new(0));
+        assert_eq!(tr.n, 3); // one per class
+        let (tr2, te2) = stratified(&ds, 1.0, &mut Rng::new(0));
+        assert_eq!(tr2.n, 150);
+        assert_eq!(te2.n, 0);
+    }
+}

@@ -1,0 +1,33 @@
+//! Library-wide error type.
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("data error: {0}")]
+    Data(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("cluster error: {0}")]
+    Cluster(String),
+
+    #[error("training error: {0}")]
+    Train(String),
+
+    #[error("serve error: {0}")]
+    Serve(String),
+
+    #[error(transparent)]
+    Xla(#[from] xla::Error),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}

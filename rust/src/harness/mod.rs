@@ -1,0 +1,22 @@
+//! Reproduction harness: one entry point per paper table/figure.
+//!
+//! Each `run_table*` builds the paper's workload, times both stacks through
+//! the public API and returns a [`crate::metrics::table::Table`] whose rows
+//! mirror the paper's layout (plus machine-readable rows for CSV/JSON). The
+//! criterion-style benches (`rust/benches/*.rs`) and the
+//! `examples/reproduce_paper.rs` driver are thin wrappers over this module.
+//!
+//! Paper reference values are embedded (`paper::*`) so reports can print
+//! measured-vs-paper shape comparisons side by side.
+
+pub mod paper;
+pub mod tables;
+pub mod workloads;
+
+pub use tables::{
+    run_table3, run_table4, run_table5, run_table6, Table3Row, Table4Row, Table56Row,
+};
+pub use workloads::{
+    binary_workload, gamma_scale, hyperparams, hyperparams_for, multiclass_workload,
+    BinaryWorkload,
+};

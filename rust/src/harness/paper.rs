@@ -1,0 +1,75 @@
+//! The paper's reported numbers (Tables III–VI), embedded for side-by-side
+//! shape comparison. We do not expect to match absolute seconds (GTX950M +
+//! CUDA 9 + TF 1.8 vs XLA-CPU PJRT); the *shape* — who wins, rough factor,
+//! growth with n, binary-vs-multiclass compression — is the reproduction
+//! target (DESIGN.md §3).
+
+/// Table III: Pavia binary, samples/class -> (cuda_secs, tf_secs, speedup).
+pub const TABLE3: [(usize, f64, f64, f64); 4] = [
+    (200, 0.017667, 2.0345, 115.2),
+    (400, 0.019695, 2.43, 123.4),
+    (600, 0.02487, 3.09, 124.2),
+    (800, 0.02797, 4.315, 154.3),
+];
+
+/// Table IV: Pavia 9-class, samples/class -> (mpi_cuda_secs, multi_tf_secs, speedup).
+pub const TABLE4: [(usize, f64, f64, f64); 4] = [
+    (200, 8.4855, 82.762, 9.8),
+    (400, 9.13105, 96.72, 10.6),
+    (600, 9.6268, 120.32, 12.5),
+    (800, 10.688, 157.97, 14.9),
+];
+
+/// Table V: (dataset, per-class, d, cuda_secs, tf_secs, speedup).
+pub const TABLE5: [(&str, usize, usize, f64, f64, f64); 2] = [
+    ("iris", 40, 4, 0.018, 1.125, 60.5),
+    ("wdbc", 190, 32, 0.0233, 2.746, 117.9),
+];
+
+/// Table VI: (dataset, tf_cpu_secs, tf_gpu_secs).
+pub const TABLE6: [(&str, f64, f64); 2] = [("iris", 3.09, 1.125), ("wdbc", 4.65, 2.746)];
+
+/// Paper hardware (Table II) — printed in harness banners for context.
+pub const PAPER_HW: &str = "paper: Core i7-7500M 2.7GHz + GTX950M (5 SMP/640 cores), \
+                            CUDA 9.0 + MPICH2 + TF 1.8, Windows 10";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_columns_are_consistent() {
+        // The embedded constants must satisfy speedup ~= tf/cuda (the
+        // paper's own arithmetic, within rounding).
+        for (n, cuda, tf, speedup) in TABLE3 {
+            let ratio = tf / cuda;
+            assert!(
+                (ratio - speedup).abs() / speedup < 0.05,
+                "table3 row {n}: {ratio} vs {speedup}"
+            );
+        }
+        for (n, cuda, tf, speedup) in TABLE4 {
+            let ratio = tf / cuda;
+            assert!(
+                (ratio - speedup).abs() / speedup < 0.06,
+                "table4 row {n}: {ratio} vs {speedup}"
+            );
+        }
+    }
+
+    #[test]
+    fn paper_shape_claims() {
+        // Monotone growth with n on both stacks (paper Fig 6/7 shape).
+        for w in TABLE3.windows(2) {
+            assert!(w[1].1 > w[0].1 && w[1].2 > w[0].2);
+        }
+        // Multiclass compresses the speedup (154x -> 15x).
+        let max3 = TABLE3.iter().map(|r| r.3).fold(0.0, f64::max);
+        let max4 = TABLE4.iter().map(|r| r.3).fold(0.0, f64::max);
+        assert!(max4 < max3 / 5.0);
+        // TF-GPU beats TF-CPU but only modestly (Table VI).
+        for (_, cpu, gpu) in TABLE6 {
+            assert!(cpu > gpu && cpu / gpu < 5.0);
+        }
+    }
+}

@@ -1,0 +1,255 @@
+//! Table runners: regenerate every paper table/figure from this stack.
+
+use std::sync::Arc;
+
+use super::paper;
+use super::workloads::{binary_workload, multiclass_workload};
+use crate::backend::{NativeBackend, Solver, SvmBackend, XlaBackend};
+use crate::coordinator::{train_multiclass, Partition, TrainConfig};
+use crate::error::Result;
+use crate::metrics::bench::{BenchConfig, BenchResult};
+use crate::metrics::table::Table;
+
+/// Repeat-and-summarize a training closure (median over samples).
+fn time_train(name: &str, cfg: &BenchConfig, mut f: impl FnMut()) -> BenchResult {
+    crate::metrics::bench::bench(name, cfg, &mut f)
+}
+
+/// One Table III / Fig 6 row.
+#[derive(Debug, Clone)]
+pub struct Table3Row {
+    pub per_class: usize,
+    pub cuda_secs: f64,
+    pub tf_secs: f64,
+    pub speedup: f64,
+    pub smo_iters: usize,
+}
+
+/// Table III: Pavia binary training, CUDA-analog (chunked device SMO) vs
+/// TF-analog (fixed-step device GD), sweep over samples/class.
+pub fn run_table3(
+    be: &XlaBackend,
+    sweep: &[usize],
+    cfg: &BenchConfig,
+    seed: u64,
+) -> Result<(Table, Vec<Table3Row>)> {
+    let mut table = Table::new(
+        "Table III — binary training time, Pavia (CUDA-analog vs TF-analog)",
+        &["#samples/#classes", "SMO-device (s)", "GD-device (s)", "speedup", "paper"],
+    );
+    let mut rows = Vec::new();
+    for (i, &per_class) in sweep.iter().enumerate() {
+        let w = binary_workload("pavia", per_class, seed);
+        let prob = w.problem();
+
+        let mut iters = 0usize;
+        let cuda = time_train(&format!("smo-{per_class}"), cfg, || {
+            let (_, st) = be.train_binary(&prob, &w.params, Solver::Smo).unwrap();
+            iters = st.iters;
+        });
+        let tf = time_train(&format!("gd-{per_class}"), cfg, || {
+            be.train_binary(&prob, &w.params, Solver::Gd).unwrap();
+        });
+
+        let row = Table3Row {
+            per_class,
+            cuda_secs: cuda.summary.median,
+            tf_secs: tf.summary.median,
+            speedup: tf.summary.median / cuda.summary.median,
+            smo_iters: iters,
+        };
+        let paper_row = paper::TABLE3.get(i).filter(|p| p.0 == per_class);
+        table.row(&[
+            format!("{per_class}/2"),
+            format!("{:.5}", row.cuda_secs),
+            format!("{:.4}", row.tf_secs),
+            format!("{:.1}x", row.speedup),
+            paper_row
+                .map(|p| format!("{:.1}x", p.3))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+        rows.push(row);
+    }
+    Ok((table, rows))
+}
+
+/// One Table IV / Fig 7 row.
+#[derive(Debug, Clone)]
+pub struct Table4Row {
+    pub per_class: usize,
+    pub mpi_cuda_secs: f64,
+    pub multi_tf_secs: f64,
+    pub speedup: f64,
+    pub net_bytes: u64,
+    pub net_sim_secs: f64,
+}
+
+/// Table IV: 9-class Pavia. "MPI-CUDA" = device SMO across P simulated
+/// ranks; "Multi-Tensorflow" = device GD run sequentially (the paper's
+/// multiple-sessions-one-GPU setup).
+pub fn run_table4(
+    be: &Arc<XlaBackend>,
+    sweep: &[usize],
+    workers: usize,
+    cfg: &BenchConfig,
+    seed: u64,
+) -> Result<(Table, Vec<Table4Row>)> {
+    let mut table = Table::new(
+        format!("Table IV — multiclass training time, Pavia 9-class (P={workers})"),
+        &["#samples/#classes", "MPI-SMO (s)", "Multi-GD (s)", "speedup", "paper", "net KiB"],
+    );
+    let mut rows = Vec::new();
+    for (i, &per_class) in sweep.iter().enumerate() {
+        let (ds, params) = multiclass_workload(per_class, seed);
+
+        let smo_cfg = TrainConfig {
+            workers,
+            solver: Solver::Smo,
+            params,
+            partition: Partition::Block,
+            ..Default::default()
+        };
+
+        let backend: Arc<dyn SvmBackend> = Arc::clone(be) as Arc<dyn SvmBackend>;
+        let mut net = (0u64, 0.0f64);
+        let mpi = time_train(&format!("mpi-smo-{per_class}"), cfg, || {
+            let (_, r) = train_multiclass(&ds, Arc::clone(&backend), &smo_cfg).unwrap();
+            net = (r.net_bytes, r.net_sim_secs);
+        });
+
+        // Multi-TF = 36 strictly sequential, independent sessions. Every
+        // OvO pair of this workload has exactly 2*per_class samples, so
+        // the per-pair session cost is iid; we measure one representative
+        // pair (including its graph/session construction) and scale by the
+        // pair count instead of burning 36x the wall time (documented in
+        // EXPERIMENTS.md; the sampling error across pairs is the bench
+        // repeatability error).
+        let n_pairs = crate::svm::multiclass::ovo_pairs(ds.n_classes).len();
+        let pair_prob = ds.binary_pair(0, 1);
+        let tf_pair = time_train(&format!("multi-gd-pair-{per_class}"), cfg, || {
+            be.train_binary(&pair_prob, &params, Solver::Gd).unwrap();
+        });
+        let multi_tf_secs = tf_pair.summary.median * n_pairs as f64;
+
+        let row = Table4Row {
+            per_class,
+            mpi_cuda_secs: mpi.summary.median,
+            multi_tf_secs,
+            speedup: multi_tf_secs / mpi.summary.median,
+            net_bytes: net.0,
+            net_sim_secs: net.1,
+        };
+        let paper_row = paper::TABLE4.get(i).filter(|p| p.0 == per_class);
+        table.row(&[
+            format!("{per_class}/9"),
+            format!("{:.4}", row.mpi_cuda_secs),
+            format!("{:.4}", row.multi_tf_secs),
+            format!("{:.1}x", row.speedup),
+            paper_row
+                .map(|p| format!("{:.1}x", p.3))
+                .unwrap_or_else(|| "-".into()),
+            format!("{:.1}", row.net_bytes as f64 / 1024.0),
+        ]);
+        rows.push(row);
+    }
+    Ok((table, rows))
+}
+
+/// One Table V / VI row.
+#[derive(Debug, Clone)]
+pub struct Table56Row {
+    pub dataset: String,
+    pub per_class: usize,
+    pub a_secs: f64,
+    pub b_secs: f64,
+    pub speedup: f64,
+}
+
+/// Table V: small datasets, CUDA-analog vs TF-analog (both on device).
+pub fn run_table5(
+    be: &XlaBackend,
+    cfg: &BenchConfig,
+    seed: u64,
+) -> Result<(Table, Vec<Table56Row>)> {
+    let mut table = Table::new(
+        "Table V — binary training time (SMO-device vs GD-device)",
+        &["dataset (n/d/2)", "SMO-device (s)", "GD-device (s)", "speedup", "paper"],
+    );
+    let mut rows = Vec::new();
+    for (i, &(name, per_class, _d, ..)) in paper::TABLE5.iter().enumerate() {
+        let w = binary_workload(name, per_class, seed);
+        let prob = w.problem();
+        let a = time_train(&format!("smo-{name}"), cfg, || {
+            be.train_binary(&prob, &w.params, Solver::Smo).unwrap();
+        });
+        let b = time_train(&format!("gd-{name}"), cfg, || {
+            be.train_binary(&prob, &w.params, Solver::Gd).unwrap();
+        });
+        let row = Table56Row {
+            dataset: name.to_string(),
+            per_class,
+            a_secs: a.summary.median,
+            b_secs: b.summary.median,
+            speedup: b.summary.median / a.summary.median,
+        };
+        table.row(&[
+            format!("{name} ({per_class}/{}/2)", w.ds.d),
+            format!("{:.5}", row.a_secs),
+            format!("{:.4}", row.b_secs),
+            format!("{:.1}x", row.speedup),
+            format!("{:.1}x", paper::TABLE5[i].5),
+        ]);
+        rows.push(row);
+    }
+    Ok((table, rows))
+}
+
+/// Table VI: the same GD graph on both execution providers — the paper's
+/// portability experiment (TF-CPU vs TF-GPU becomes native vs XLA device).
+pub fn run_table6(
+    be: &XlaBackend,
+    cfg: &BenchConfig,
+    seed: u64,
+) -> Result<(Table, Vec<Table56Row>)> {
+    let native = NativeBackend::new();
+    let mut table = Table::new(
+        "Table VI — GD solver portability (native-host vs XLA-device, same definition)",
+        &["dataset", "GD native (s)", "GD device (s)", "ratio", "paper ratio"],
+    );
+    let mut rows = Vec::new();
+    for (i, &(name, ..)) in paper::TABLE6.iter().enumerate() {
+        let per_class = paper::TABLE5[i].1; // same workloads as Table V
+        let w = binary_workload(name, per_class, seed);
+        let prob = w.problem();
+        // Pure provider comparison: the paper's Table VI varies only the
+        // device under an otherwise identical TF program, so both sides
+        // here run the *same fused structure* (one training loop over a
+        // cached Gram, no session model) and differ only in who executes
+        // it: scalar rust vs vectorized XLA.
+        let mut params = w.params;
+        params.session_overhead_secs = 0.0;
+        let cpu = time_train(&format!("gd-native-{name}"), cfg, || {
+            native.train_binary(&prob, &params, Solver::GdFused).unwrap();
+        });
+        let gpu = time_train(&format!("gd-xla-{name}"), cfg, || {
+            be.train_binary(&prob, &params, Solver::GdFused).unwrap();
+        });
+        let row = Table56Row {
+            dataset: name.to_string(),
+            per_class,
+            a_secs: cpu.summary.median,
+            b_secs: gpu.summary.median,
+            speedup: cpu.summary.median / gpu.summary.median,
+        };
+        let (_, p_cpu, p_gpu) = paper::TABLE6[i];
+        table.row(&[
+            name.to_string(),
+            format!("{:.4}", row.a_secs),
+            format!("{:.4}", row.b_secs),
+            format!("{:.2}x", row.speedup),
+            format!("{:.2}x", p_cpu / p_gpu),
+        ]);
+        rows.push(row);
+    }
+    Ok((table, rows))
+}

@@ -1,0 +1,180 @@
+//! Workload construction for the paper's experiments.
+
+use crate::data::{self, pavia, scale::Scaler, Dataset};
+use crate::svm::SvmParams;
+use crate::util::rng::Rng;
+
+/// Per-`sess.run` host overhead of a TF-1.8 python training loop —
+/// interpreter dispatch, graph pruning, feed_dict marshalling. 3-10 ms/step
+/// is the well-documented magnitude for small graphs of that era; we use
+/// 5 ms. This is a *declared cost model* (like the MPI latency model), not
+/// a measurement of this stack: our AOT/PJRT dispatch is ~100 µs, and the
+/// paper's 100x+ gaps do not exist without TF's loop overhead — exactly
+/// the "explicit vs implicit control" point the paper argues. The
+/// `ablations` bench reports the 0-overhead variant.
+pub const TF_SESSION_OVERHEAD_SECS: f64 = 5e-3;
+
+/// Paper-matched hyper-parameters.
+///
+/// The paper reports none, so we use the standard defaults of its
+/// ecosystem: features min-max scaled, the sklearn `gamma='scale'`
+/// heuristic (see [`gamma_scale`]; callers that have the data use it —
+/// this function's 1/d is the data-free libsvm fallback), C = 10,
+/// tol = 1e-3, and the TF-cookbook 300-step GD budget with the
+/// session-loop cost model above.
+pub fn hyperparams(d: usize) -> SvmParams {
+    SvmParams {
+        c: 10.0,
+        gamma: 1.0 / d as f32,
+        tol: 1e-3,
+        max_iter: 200_000,
+        gd_epochs: 300,
+        gd_lr: 0.01,
+        session_overhead_secs: TF_SESSION_OVERHEAD_SECS,
+    }
+}
+
+/// sklearn's `gamma='scale'`: 1 / (d * Var(X)) over all features jointly.
+/// On min-max scaled hyperspectral data the plain 1/d underestimates by
+/// ~10x (variance after scaling is ~0.05, not 1).
+pub fn gamma_scale(ds: &Dataset) -> f32 {
+    let n = (ds.n * ds.d).max(1) as f64;
+    let mean: f64 = ds.x.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let var: f64 = ds.x.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+    (1.0 / (ds.d as f64 * var.max(1e-6))) as f32
+}
+
+/// Hyper-parameters with the data-dependent gamma heuristic applied.
+pub fn hyperparams_for(ds: &Dataset) -> SvmParams {
+    let mut p = hyperparams(ds.d);
+    p.gamma = gamma_scale(ds);
+    p
+}
+
+/// A prepared binary training workload (paper Tables III/V rows).
+#[derive(Debug, Clone)]
+pub struct BinaryWorkload {
+    pub name: String,
+    pub ds: Dataset,
+    /// The two classes forming the binary problem.
+    pub pair: (usize, usize),
+    pub params: SvmParams,
+}
+
+impl BinaryWorkload {
+    pub fn problem(&self) -> crate::data::BinaryProblem {
+        self.ds.binary_pair(self.pair.0, self.pair.1)
+    }
+}
+
+/// Build a scaled binary workload: `per_class` samples from each of the
+/// first two classes of `dataset`.
+pub fn binary_workload(dataset: &str, per_class: usize, seed: u64) -> BinaryWorkload {
+    let full = load_scaled(dataset, seed);
+    let mut rng = Rng::new(seed ^ 0xB1);
+    let two_class = restrict_classes(&full, &[0, 1]);
+    let ds = data::per_class_subset(&two_class, per_class, &mut rng);
+    BinaryWorkload {
+        name: format!("{dataset}-{per_class}/2"),
+        params: hyperparams_for(&ds),
+        pair: (0, 1),
+        ds,
+    }
+}
+
+/// Build the 9-class Pavia multiclass workload (paper Table IV rows).
+pub fn multiclass_workload(per_class: usize, seed: u64) -> (Dataset, SvmParams) {
+    let full = load_scaled("pavia", seed);
+    let mut rng = Rng::new(seed ^ 0x9C);
+    let ds = data::per_class_subset(&full, per_class, &mut rng);
+    let params = hyperparams_for(&ds);
+    (ds, params)
+}
+
+/// Load a named dataset with min-max scaling applied.
+pub fn load_scaled(dataset: &str, seed: u64) -> Dataset {
+    let ds = match dataset {
+        // Keep the Pavia generator large enough for the 800/class sweep.
+        "pavia" => pavia::generate(
+            &pavia::PaviaConfig { samples_per_class: 1000, ..Default::default() },
+            seed,
+        ),
+        other => data::by_name(other, seed)
+            .unwrap_or_else(|| panic!("unknown dataset {other}")),
+    };
+    Scaler::fit_minmax(&ds).apply(&ds)
+}
+
+/// Project a dataset onto a subset of classes, relabelled 0..k.
+pub fn restrict_classes(ds: &Dataset, classes: &[usize]) -> Dataset {
+    let idx: Vec<usize> = (0..ds.n)
+        .filter(|&i| classes.contains(&(ds.y[i] as usize)))
+        .collect();
+    let sub = ds.select(&idx);
+    let remap: Vec<i32> = sub
+        .y
+        .iter()
+        .map(|&c| classes.iter().position(|&k| k == c as usize).unwrap() as i32)
+        .collect();
+    Dataset::new(
+        sub.name.clone(),
+        sub.x,
+        remap,
+        sub.d,
+        classes.iter().map(|&c| ds.class_names[c].clone()).collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binary_workload_shapes_match_paper() {
+        let w = binary_workload("pavia", 200, 1);
+        assert_eq!(w.ds.n, 400);
+        assert_eq!(w.ds.d, 102);
+        assert_eq!(w.ds.n_classes, 2);
+        let prob = w.problem();
+        assert_eq!(prob.n(), 400);
+        let w_iris = binary_workload("iris", 40, 1);
+        assert_eq!((w_iris.ds.n, w_iris.ds.d), (80, 4));
+        let w_wdbc = binary_workload("wdbc", 190, 1);
+        assert_eq!((w_wdbc.ds.n, w_wdbc.ds.d), (380, 30));
+    }
+
+    #[test]
+    fn multiclass_workload_is_nine_way() {
+        let (ds, p) = multiclass_workload(50, 2);
+        assert_eq!(ds.n_classes, 9);
+        assert_eq!(ds.n, 450);
+        assert!(p.gamma > 1.0 / 102.0 && p.gamma < 10.0); // gamma="scale"
+    }
+
+    #[test]
+    fn scaling_bounds_features() {
+        let ds = load_scaled("wdbc", 3);
+        let (lo, hi) = ds
+            .feature_ranges()
+            .into_iter()
+            .fold((f32::MAX, f32::MIN), |a, r| (a.0.min(r.0), a.1.max(r.1)));
+        assert!(lo >= -1e-6 && hi <= 1.0 + 1e-6);
+    }
+
+    #[test]
+    fn restrict_relabels() {
+        let ds = load_scaled("iris", 0);
+        let two = restrict_classes(&ds, &[1, 2]);
+        assert_eq!(two.n, 100);
+        assert_eq!(two.n_classes, 2);
+        assert!(two.y.iter().all(|&c| c == 0 || c == 1));
+        assert_eq!(two.class_names, vec!["versicolor", "virginica"]);
+    }
+
+    #[test]
+    fn workloads_deterministic() {
+        let a = binary_workload("pavia", 100, 7);
+        let b = binary_workload("pavia", 100, 7);
+        assert_eq!(a.ds.x, b.ds.x);
+    }
+}

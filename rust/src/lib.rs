@@ -1,0 +1,33 @@
+//! # parasvm
+//!
+//! SVM training and serving on a hybrid distributed/accelerator stack — a
+//! full reproduction of Elgarhy, *"Support Vector Machine Implementation on
+//! MPI-CUDA and Tensorflow Framework"* (CS.DC 2023) as a three-layer
+//! rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordinator: a simulated-MPI cluster runtime,
+//!   one-vs-one multiclass scheduling (paper Fig 4), the host-side SMO
+//!   convergence loop (paper Fig 3), a batching classification server, and
+//!   the benchmark harness that regenerates every table/figure.
+//! * **L2** (`python/compile/model.py`) — JAX graphs for both solver stacks
+//!   (chunked device SMO = "CUDA"; fixed-step GD = "TensorFlow"), AOT-lowered
+//!   to HLO text at build time.
+//! * **L1** (`python/compile/kernels/`) — Pallas tiled RBF kernels.
+//!
+//! Python never runs at request time: `runtime` loads the HLO artifacts via
+//! the PJRT C API (`xla` crate) and executes them from rust.
+
+pub mod backend;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod harness;
+pub mod metrics;
+pub mod runtime;
+pub mod serve;
+pub mod svm;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,352 @@
+//! `parasvm` — CLI launcher for the coordinator.
+//!
+//! Subcommands:
+//!   train      train a multiclass OvO SVM across the simulated cluster
+//!   eval       train + held-out accuracy
+//!   serve      start the batching classifier and drive a synthetic load
+//!   bench      regenerate a paper table (--table 3|4|5|6)
+//!   datasets   paper Table I inventory
+//!   artifacts  list the AOT artifact registry
+//!   selfcheck  device + artifact smoke test
+//!
+//! Common options: --dataset iris|wdbc|pavia|<csv path>, --backend
+//! xla|native, --solver smo|gd, --workers N, --per-class N, --seed N,
+//! --config file.json, plus hyper-parameters (--c --gamma --tol --epochs
+//! --lr) and interconnect (--net-latency --net-bandwidth).
+
+use std::sync::Arc;
+
+use parasvm::backend::{NativeBackend, SvmBackend, XlaBackend};
+use parasvm::config::{BackendKind, RunConfig};
+use parasvm::coordinator::train_multiclass;
+use parasvm::data::{self, scale::Scaler, split, Dataset};
+use parasvm::error::Result;
+use parasvm::harness;
+use parasvm::metrics::bench::BenchConfig;
+use parasvm::runtime::{ArtifactRegistry, Device};
+use parasvm::serve::{BatchPolicy, Server};
+use parasvm::util::args::Args;
+use parasvm::util::fmt_secs;
+use parasvm::util::rng::Rng;
+
+const FLAGS: &[&str] = &["verbose", "help", "quick", "no-scale"];
+
+fn main() {
+    let args = match Args::parse_with_flags(std::env::args().skip(1), FLAGS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("help") || args.subcommand.is_none() || args.subcommand.as_deref() == Some("help")
+    {
+        print_help();
+        return;
+    }
+    let sub = args.subcommand.clone().unwrap();
+    let code = match run(&sub, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "parasvm — SVM on a hybrid simulated-MPI + PJRT accelerator stack\n\
+         (reproduction of Elgarhy 2023, MPI-CUDA vs TensorFlow SVM)\n\n\
+         usage: parasvm <train|eval|serve|bench|datasets|artifacts|selfcheck> [options]\n\n\
+         common options:\n\
+           --dataset NAME     iris | wdbc | pavia (default iris)\n\
+           --backend KIND     xla | native (default xla)\n\
+           --solver NAME      smo (CUDA-analog) | gd (TF-analog)\n\
+           --workers N        simulated MPI ranks (default 4)\n\
+           --per-class N      subsample N points per class\n\
+           --config FILE      load a JSON RunConfig (CLI flags override)\n\
+           --seed N           dataset/run seed (default 42)\n\
+         bench options:\n\
+           --table N          3 | 4 | 5 | 6 (paper table to regenerate)\n\
+           --quick            fewer repetitions\n\
+           --out DIR          CSV output directory (default results/)"
+    );
+}
+
+fn load_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => RunConfig::load(std::path::Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    cfg.apply_args(args)?;
+    Ok(cfg)
+}
+
+fn make_backend(kind: BackendKind) -> Result<Arc<dyn SvmBackend>> {
+    Ok(match kind {
+        BackendKind::Xla => Arc::new(XlaBackend::open_default()?),
+        BackendKind::Native => Arc::new(NativeBackend::new()),
+    })
+}
+
+fn load_dataset(cfg: &RunConfig) -> Result<Dataset> {
+    let raw = if cfg.dataset.ends_with(".csv") {
+        data::csv::load(std::path::Path::new(&cfg.dataset), false)?
+    } else {
+        data::by_name(&cfg.dataset, cfg.seed).ok_or_else(|| {
+            parasvm::Error::Config(format!(
+                "unknown dataset {:?} (want iris|wdbc|pavia|*.csv)",
+                cfg.dataset
+            ))
+        })?
+    };
+    let scaled = Scaler::fit_minmax(&raw).apply(&raw);
+    Ok(if cfg.per_class > 0 {
+        data::per_class_subset(&scaled, cfg.per_class, &mut Rng::new(cfg.seed))
+    } else {
+        scaled
+    })
+}
+
+fn run(sub: &str, args: &Args) -> Result<()> {
+    match sub {
+        "train" => cmd_train(args, false),
+        "eval" => cmd_train(args, true),
+        "serve" => cmd_serve(args),
+        "bench" => cmd_bench(args),
+        "datasets" => cmd_datasets(args),
+        "artifacts" => cmd_artifacts(args),
+        "selfcheck" => cmd_selfcheck(args),
+        other => {
+            print_help();
+            Err(parasvm::Error::Config(format!("unknown subcommand {other:?}")))
+        }
+    }
+}
+
+fn cmd_train(args: &Args, eval: bool) -> Result<()> {
+    let cfg = load_config(args)?;
+    let save_path = args.opt("save").map(std::path::PathBuf::from);
+    args.finish().map_err(parasvm::Error::Config)?;
+    let ds = load_dataset(&cfg)?;
+    let backend = make_backend(cfg.backend)?;
+    println!(
+        "training {} (n={}, d={}, classes={}) on {} / {:?}, {} worker(s)",
+        ds.name, ds.n, ds.d, ds.n_classes, backend.name(), cfg.solver, cfg.workers
+    );
+
+    let (train_ds, test_ds) = if eval {
+        split::stratified(&ds, cfg.train_frac, &mut Rng::new(cfg.seed ^ 0x5))
+    } else {
+        (ds.clone(), ds.clone())
+    };
+
+    let (model, report) = train_multiclass(&train_ds, backend, &cfg.train_config())?;
+    println!(
+        "trained {} binary problems in {} (makespan {}, imbalance {:.2})",
+        report.pairs.len(),
+        fmt_secs(report.wall_secs),
+        fmt_secs(report.makespan_secs()),
+        report.imbalance()
+    );
+    println!(
+        "net: {} msgs, {} bytes, simulated wire {}",
+        report.net_messages,
+        report.net_bytes,
+        fmt_secs(report.net_sim_secs)
+    );
+    for p in &report.pairs {
+        println!(
+            "  pair ({},{}) rank {} n={} iters={} chunks={} sv={} {}",
+            p.pos_class,
+            p.neg_class,
+            p.rank,
+            p.n_samples,
+            p.stats.iters,
+            p.stats.chunks,
+            p.stats.n_sv,
+            fmt_secs(p.stats.total_secs()),
+        );
+    }
+    println!("train accuracy: {:.4}", model.accuracy(&train_ds.x, &train_ds.y));
+    if eval {
+        println!("test  accuracy: {:.4}", model.accuracy(&test_ds.x, &test_ds.y));
+    }
+    if let Some(path) = save_path {
+        parasvm::svm::persist::save(&model, &path)?;
+        println!("model saved to {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let n_requests: usize = args
+        .get("requests")
+        .map_err(parasvm::Error::Config)?
+        .unwrap_or(2000);
+    let model_path = args.opt("model").map(std::path::PathBuf::from);
+    args.finish().map_err(parasvm::Error::Config)?;
+    let ds = load_dataset(&cfg)?;
+    let model = match model_path {
+        Some(p) => parasvm::svm::persist::load(&p)?,
+        None => {
+            let backend = make_backend(cfg.backend)?;
+            train_multiclass(&ds, backend, &cfg.train_config())?.0
+        }
+    };
+    let server = Server::start(model, BatchPolicy::default());
+
+    println!("serving synthetic load: {n_requests} requests over {}", ds.name);
+    let t0 = std::time::Instant::now();
+    let mut rng = Rng::new(cfg.seed);
+    let pending: Vec<_> = (0..n_requests)
+        .map(|_| {
+            let i = rng.below(ds.n);
+            server.submit(ds.row(i).to_vec()).unwrap()
+        })
+        .collect();
+    let mut correct_dim = 0usize;
+    for rx in pending {
+        let resp = rx.recv().map_err(|_| parasvm::Error::Serve("dropped".into()))?;
+        correct_dim += usize::from(resp.class < ds.n_classes);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.stats();
+    println!(
+        "throughput {:.0} req/s, mean latency {}, mean batch {:.1}, {} ok",
+        n_requests as f64 / wall,
+        fmt_secs(stats.mean_latency_secs()),
+        stats.mean_batch_size(),
+        correct_dim
+    );
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let table: u32 = args.get("table").map_err(parasvm::Error::Config)?.unwrap_or(3);
+    let quick = args.flag("quick");
+    let out_dir = args.opt("out").unwrap_or("results").to_string();
+    let workers: usize = args.get("workers").map_err(parasvm::Error::Config)?.unwrap_or(4);
+    let seed: u64 = args.get("seed").map_err(parasvm::Error::Config)?.unwrap_or(42);
+    args.finish().map_err(parasvm::Error::Config)?;
+
+    let cfg = if quick {
+        BenchConfig { warmup: 1, min_samples: 2, max_samples: 3, cv_target: 0.2 }
+    } else {
+        BenchConfig::heavy()
+    };
+    let be = Arc::new(XlaBackend::open_default()?);
+    println!("{}", harness::paper::PAPER_HW);
+    println!("here: XLA CPU PJRT ({} artifacts)\n", be.registry().names().len());
+
+    let sweep = [200usize, 400, 600, 800];
+    let out = std::path::Path::new(&out_dir);
+    match table {
+        3 => {
+            let (t, _) = harness::run_table3(&be, &sweep, &cfg, seed)?;
+            println!("{}", t.render());
+            t.save_csv(&out.join("table3.csv"))?;
+        }
+        4 => {
+            let (t, _) = harness::run_table4(&be, &sweep, workers, &cfg, seed)?;
+            println!("{}", t.render());
+            t.save_csv(&out.join("table4.csv"))?;
+        }
+        5 => {
+            let (t, _) = harness::run_table5(&be, &cfg, seed)?;
+            println!("{}", t.render());
+            t.save_csv(&out.join("table5.csv"))?;
+        }
+        6 => {
+            let (t, _) = harness::run_table6(&be, &cfg, seed)?;
+            println!("{}", t.render());
+            t.save_csv(&out.join("table6.csv"))?;
+        }
+        other => {
+            return Err(parasvm::Error::Config(format!("unknown table {other} (want 3-6)")))
+        }
+    }
+    Ok(())
+}
+
+fn cmd_datasets(args: &Args) -> Result<()> {
+    args.finish().map_err(parasvm::Error::Config)?;
+    let mut t = parasvm::metrics::table::Table::new(
+        "Table I — datasets",
+        &["dataset", "#classes", "#features", "#samples", "source"],
+    );
+    for (name, source) in [
+        ("pavia", "synthetic hyperspectral generator (paper: ROSIS Pavia Centre)"),
+        ("iris", "embedded real data (Fisher 1936)"),
+        ("wdbc", "synthetic WDBC-shaped generator (paper: UCI Breast Cancer)"),
+    ] {
+        let ds = data::by_name(name, 42).unwrap();
+        t.row(&[
+            name.into(),
+            ds.n_classes.to_string(),
+            ds.d.to_string(),
+            ds.n.to_string(),
+            source.into(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    args.finish().map_err(parasvm::Error::Config)?;
+    let reg = ArtifactRegistry::open_default()?;
+    println!("artifact registry ({} entries):", reg.names().len());
+    for name in reg.names() {
+        let e = reg.entry(name).unwrap();
+        let shapes: Vec<String> = e
+            .args
+            .iter()
+            .map(|a| format!("{:?}", a.shape))
+            .collect();
+        println!("  {name:<26} {} args: {}", e.args.len(), shapes.join(" "));
+    }
+    println!(
+        "buckets: n={:?} d={:?} q={:?}",
+        reg.buckets().n,
+        reg.buckets().d,
+        reg.buckets().q
+    );
+    Ok(())
+}
+
+fn cmd_selfcheck(args: &Args) -> Result<()> {
+    args.finish().map_err(parasvm::Error::Config)?;
+    let device = Device::shared()?;
+    println!("PJRT platform: {}", device.platform());
+    let reg = ArtifactRegistry::open_default()?;
+    println!("artifacts: {} entries", reg.names().len());
+    let warmed = reg.warm("n128")?;
+    println!("compiled {warmed} n128 artifacts OK");
+
+    // Micro end-to-end: train iris binary on the device, expect convergence.
+    let w = harness::binary_workload("iris", 40, 1);
+    let be = XlaBackend::new(Arc::new(reg));
+    let (model, stats) = parasvm::backend::SvmBackend::train_binary(
+        &be,
+        &w.problem(),
+        &w.params,
+        parasvm::backend::Solver::Smo,
+    )?;
+    println!(
+        "iris binary: converged={} iters={} sv={} in {}",
+        stats.converged,
+        stats.iters,
+        model.n_sv(),
+        fmt_secs(stats.total_secs())
+    );
+    if !stats.converged {
+        return Err(parasvm::Error::Train("selfcheck did not converge".into()));
+    }
+    println!("selfcheck OK");
+    Ok(())
+}

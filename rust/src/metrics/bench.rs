@@ -1,0 +1,111 @@
+//! Micro-benchmark runner — the criterion stand-in for the offline build.
+//!
+//! Method: warmup runs, then adaptive sampling until either `max_samples`
+//! is reached or the coefficient of variation drops under `cv_target`
+//! (whichever first, with a floor of `min_samples`). Reports the robust
+//! median plus spread. For heavyweight end-to-end cases (multi-second
+//! multiclass training) callers lower the sample counts explicitly.
+
+use super::stats::Summary;
+use crate::util::fmt_secs;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup: usize,
+    pub min_samples: usize,
+    pub max_samples: usize,
+    pub cv_target: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup: 2, min_samples: 5, max_samples: 30, cv_target: 0.05 }
+    }
+}
+
+impl BenchConfig {
+    /// For expensive end-to-end runs (seconds each).
+    pub fn heavy() -> Self {
+        BenchConfig { warmup: 1, min_samples: 3, max_samples: 5, cv_target: 0.10 }
+    }
+}
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} median {:>10}  mean {:>10}  ±{:>5.1}%  (n={})",
+            self.name,
+            fmt_secs(self.summary.median),
+            fmt_secs(self.summary.mean),
+            self.summary.cv() * 100.0,
+            self.summary.n,
+        )
+    }
+}
+
+/// Run `f` repeatedly and summarize wall-clock seconds per run.
+pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    for _ in 0..cfg.warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.max_samples);
+    while samples.len() < cfg.max_samples {
+        let t0 = std::time::Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() >= cfg.min_samples {
+            let s = Summary::of(&samples);
+            if s.cv() < cfg.cv_target {
+                break;
+            }
+        }
+    }
+    BenchResult { name: name.to_string(), summary: Summary::of(&samples) }
+}
+
+/// Time a single run (for workloads too heavy to repeat).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = std::time::Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let mut count = 0usize;
+        let cfg = BenchConfig { warmup: 1, min_samples: 3, max_samples: 5, cv_target: 0.0 };
+        let r = bench("spin", &cfg, || {
+            count += 1;
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        // warmup + max_samples runs (cv_target 0 never met)
+        assert_eq!(count, 6);
+        assert_eq!(r.summary.n, 5);
+        assert!(r.report_line().contains("spin"));
+    }
+
+    #[test]
+    fn early_exit_on_stable_cv() {
+        let cfg = BenchConfig { warmup: 0, min_samples: 3, max_samples: 100, cv_target: 10.0 };
+        let r = bench("fast", &cfg, || std::thread::sleep(std::time::Duration::from_micros(50)));
+        assert!(r.summary.n <= 4);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, t) = time_once(|| 42);
+        assert_eq!(v, 42);
+        assert!(t >= 0.0);
+    }
+}

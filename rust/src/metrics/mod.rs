@@ -1,0 +1,78 @@
+//! Metrics substrate: timing, summary statistics, table rendering, CSV
+//! emission, and a micro-benchmark runner (criterion is unavailable in the
+//! offline build environment, so `bench` implements warmup + repeated
+//! sampling + robust statistics itself).
+
+pub mod bench;
+pub mod stats;
+pub mod table;
+
+use std::time::Instant;
+
+/// Simple scoped stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn lap(&mut self) -> f64 {
+        let t = self.start.elapsed().as_secs_f64();
+        self.start = Instant::now();
+        t
+    }
+}
+
+/// Monotonic counters keyed by static names (cheap, single-threaded).
+#[derive(Debug, Default, Clone)]
+pub struct Counters {
+    entries: std::collections::BTreeMap<&'static str, u64>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, key: &'static str, v: u64) {
+        *self.entries.entry(key).or_insert(0) += v;
+    }
+
+    pub fn get(&self, key: &'static str) -> u64 {
+        self.entries.get(key).copied().unwrap_or(0)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
+        self.entries.iter().map(|(k, v)| (*k, *v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_measures() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert!(sw.elapsed_secs() >= 0.009);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut c = Counters::new();
+        c.add("x", 2);
+        c.add("x", 3);
+        assert_eq!(c.get("x"), 5);
+        assert_eq!(c.get("y"), 0);
+        assert_eq!(c.iter().count(), 1);
+    }
+}

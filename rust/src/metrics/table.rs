@@ -1,0 +1,224 @@
+//! Paper-style table rendering (monospace) + CSV emission.
+//!
+//! The reproduction harness prints tables in the same row/column layout as
+//! the paper (Tables III–VI) and mirrors each to a CSV file so the figures
+//! (Figs 6–7 are plots of the same series) can be regenerated elsewhere.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A simple column-aligned text table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render as an aligned monospace table.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "## {}", self.title);
+        let line_of = |ch: char, widths: &[usize]| {
+            let mut s = String::from("+");
+            for w in widths {
+                for _ in 0..w + 2 {
+                    s.push(ch);
+                }
+                s.push('+');
+            }
+            s
+        };
+        let sep = line_of('-', &widths);
+        let _ = writeln!(out, "{sep}");
+        let mut hdr = String::from("|");
+        for i in 0..ncol {
+            let _ = write!(hdr, " {:<w$} |", self.headers[i], w = widths[i]);
+        }
+        let _ = writeln!(out, "{hdr}");
+        let _ = writeln!(out, "{sep}");
+        for row in &self.rows {
+            let mut line = String::from("|");
+            for i in 0..ncol {
+                let _ = write!(line, " {:>w$} |", row[i], w = widths[i]);
+            }
+            let _ = writeln!(out, "{line}");
+        }
+        let _ = writeln!(out, "{sep}");
+        out
+    }
+
+    /// CSV form (RFC-4180-ish: quote cells containing commas/quotes).
+    pub fn to_csv(&self) -> String {
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{}",
+            self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    pub fn save_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+/// An ASCII scatter/line plot of (x, series...) — stands in for the paper's
+/// Figs 6 and 7 in terminal output.
+pub struct AsciiPlot {
+    pub title: String,
+    pub width: usize,
+    pub height: usize,
+}
+
+impl AsciiPlot {
+    pub fn new(title: impl Into<String>) -> Self {
+        AsciiPlot { title: title.into(), width: 64, height: 16 }
+    }
+
+    /// `series`: (label, points); y is auto-scaled (log10 when the spread
+    /// exceeds 100x, like the paper's training-time plots).
+    pub fn render(&self, series: &[(&str, Vec<(f64, f64)>)]) -> String {
+        let pts: Vec<(f64, f64)> =
+            series.iter().flat_map(|(_, p)| p.iter().copied()).collect();
+        if pts.is_empty() {
+            return format!("## {}\n(no data)\n", self.title);
+        }
+        let (xmin, xmax) = pts.iter().fold((f64::MAX, f64::MIN), |a, p| {
+            (a.0.min(p.0), a.1.max(p.0))
+        });
+        let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+        let (ymin_raw, ymax_raw) = ys.iter().fold((f64::MAX, f64::MIN), |a, &v| {
+            (a.0.min(v), a.1.max(v))
+        });
+        let log = ymin_raw > 0.0 && ymax_raw / ymin_raw > 100.0;
+        let ty = |v: f64| if log { v.log10() } else { v };
+        let (ymin, ymax) = (ty(ymin_raw), ty(ymax_raw));
+
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        let marks = ['o', 'x', '*', '+', '#'];
+        for (si, (_, points)) in series.iter().enumerate() {
+            for &(x, y) in points {
+                let cx = if xmax > xmin {
+                    ((x - xmin) / (xmax - xmin) * (self.width - 1) as f64).round() as usize
+                } else {
+                    0
+                };
+                let cy = if ymax > ymin {
+                    ((ty(y) - ymin) / (ymax - ymin) * (self.height - 1) as f64).round() as usize
+                } else {
+                    0
+                };
+                grid[self.height - 1 - cy][cx.min(self.width - 1)] =
+                    marks[si % marks.len()];
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "## {} {}", self.title, if log { "(log y)" } else { "" });
+        for (i, row) in grid.iter().enumerate() {
+            let yv = ymax - (ymax - ymin) * i as f64 / (self.height - 1).max(1) as f64;
+            let yv = if log { 10f64.powf(yv) } else { yv };
+            let _ = writeln!(out, "{yv:>9.3} |{}", row.iter().collect::<String>());
+        }
+        let _ = writeln!(out, "{:>10}+{}", "", "-".repeat(self.width));
+        let _ = writeln!(out, "{:>11}{:<.0}{:>w$.0}", "", xmin, xmax, w = self.width - 2);
+        for (si, (label, _)) in series.iter().enumerate() {
+            let _ = writeln!(out, "{:>11}{} = {}", "", marks[si % marks.len()], label);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_and_contains_cells() {
+        let mut t = Table::new("Demo", &["a", "long_header", "c"]);
+        t.row(&["1".into(), "2".into(), "3".into()]);
+        t.row(&["10".into(), "200000".into(), "x".into()]);
+        let r = t.render();
+        assert!(r.contains("## Demo"));
+        assert!(r.contains("long_header"));
+        assert!(r.contains("200000"));
+        // all body lines have equal length
+        let lines: Vec<&str> = r.lines().skip(1).collect();
+        let lens: Vec<usize> = lines.iter().map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("x", &["a,b", "c"]);
+        t.row(&["v\"q".into(), "plain".into()]);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("\"a,b\",c\n"));
+        assert!(csv.contains("\"v\"\"q\",plain"));
+    }
+
+    #[test]
+    fn plot_renders_points() {
+        let p = AsciiPlot::new("times");
+        let s = p.render(&[
+            ("cuda", vec![(200.0, 0.01), (800.0, 0.03)]),
+            ("tf", vec![(200.0, 2.0), (800.0, 4.3)]),
+        ]);
+        assert!(s.contains("o"));
+        assert!(s.contains("x"));
+        assert!(s.contains("cuda"));
+        assert!(s.contains("(log y)")); // 430x spread -> log scale
+    }
+
+    #[test]
+    fn plot_empty_series() {
+        let p = AsciiPlot::new("none");
+        assert!(p.render(&[]).contains("no data"));
+    }
+}

@@ -1,0 +1,95 @@
+//! Shape-bucket selection (DESIGN.md §4).
+//!
+//! Artifacts are compiled for a small set of (n, d, q) buckets; a problem
+//! of size (n, d) runs on the smallest bucket that fits, with padded rows
+//! masked out. Bucket lists come from `manifest.json` so rust and python
+//! can never disagree.
+
+use crate::error::{Error, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Buckets {
+    pub n: Vec<usize>,
+    pub d: Vec<usize>,
+    pub q: Vec<usize>,
+}
+
+impl Buckets {
+    pub fn new(mut n: Vec<usize>, mut d: Vec<usize>, mut q: Vec<usize>) -> Buckets {
+        n.sort_unstable();
+        d.sort_unstable();
+        q.sort_unstable();
+        Buckets { n, d, q }
+    }
+
+    fn pick(list: &[usize], want: usize, what: &str) -> Result<usize> {
+        list.iter()
+            .copied()
+            .find(|&b| b >= want)
+            .ok_or_else(|| {
+                Error::Artifact(format!(
+                    "no {what} bucket fits {want} (available: {list:?})"
+                ))
+            })
+    }
+
+    /// Smallest row bucket holding `n` samples.
+    pub fn n_bucket(&self, n: usize) -> Result<usize> {
+        Self::pick(&self.n, n, "n")
+    }
+
+    /// Smallest feature bucket holding `d` features.
+    pub fn d_bucket(&self, d: usize) -> Result<usize> {
+        Self::pick(&self.d, d, "d")
+    }
+
+    /// Smallest query bucket holding `q` rows (batches larger than the
+    /// largest bucket are split by the caller).
+    pub fn q_bucket(&self, q: usize) -> Result<usize> {
+        Self::pick(&self.q, q, "q")
+    }
+
+    pub fn max_q(&self) -> usize {
+        *self.q.last().expect("non-empty q buckets")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn b() -> Buckets {
+        Buckets::new(vec![2048, 128, 512], vec![16, 32, 128], vec![256])
+    }
+
+    #[test]
+    fn picks_smallest_fitting() {
+        let b = b();
+        assert_eq!(b.n_bucket(1).unwrap(), 128);
+        assert_eq!(b.n_bucket(128).unwrap(), 128);
+        assert_eq!(b.n_bucket(129).unwrap(), 512);
+        assert_eq!(b.n_bucket(1600).unwrap(), 2048);
+        assert_eq!(b.d_bucket(4).unwrap(), 16);
+        assert_eq!(b.d_bucket(102).unwrap(), 128);
+        assert_eq!(b.q_bucket(10).unwrap(), 256);
+    }
+
+    #[test]
+    fn selection_is_monotone() {
+        let b = b();
+        let mut last = 0;
+        for n in 1..=2048 {
+            let got = b.n_bucket(n).unwrap();
+            assert!(got >= last);
+            assert!(got >= n);
+            last = got;
+        }
+    }
+
+    #[test]
+    fn oversize_rejected() {
+        let b = b();
+        assert!(b.n_bucket(4096).is_err());
+        assert!(b.d_bucket(500).is_err());
+    }
+}

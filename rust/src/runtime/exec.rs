@@ -1,0 +1,431 @@
+//! Typed entry-point wrappers over the artifact registry.
+//!
+//! Each wrapper owns the compiled executable for one (entry, bucket) pair
+//! and handles padding, buffer upload (`execute_b` with device buffers —
+//! never the leaky literal path), and output decomposition. The Gram matrix
+//! stays device-resident between calls (see module docs in `mod.rs`).
+
+use std::sync::Arc;
+
+use super::pad;
+use super::registry::ArtifactRegistry;
+use super::Device;
+use crate::error::{Error, Result};
+
+fn single_output(mut out: Vec<Vec<xla::PjRtBuffer>>, what: &str) -> Result<xla::PjRtBuffer> {
+    let replica = out
+        .pop()
+        .ok_or_else(|| Error::Runtime(format!("{what}: no outputs")))?;
+    replica
+        .into_iter()
+        .next()
+        .ok_or_else(|| Error::Runtime(format!("{what}: empty replica output")))
+}
+
+/// Gram-matrix builder for one (n-bucket, d-bucket).
+pub struct GramExe {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    device: Arc<Device>,
+    pub nb: usize,
+    pub db: usize,
+}
+
+impl GramExe {
+    pub fn new(reg: &ArtifactRegistry, n: usize, d: usize) -> Result<GramExe> {
+        let nb = reg.buckets().n_bucket(n)?;
+        let db = reg.buckets().d_bucket(d)?;
+        Ok(GramExe {
+            exe: reg.load(&format!("gram_n{nb}_d{db}"))?,
+            device: Arc::clone(reg.device()),
+            nb,
+            db,
+        })
+    }
+
+    /// Build the (nb x nb) Gram matrix for row-major `x` (n x d), padded.
+    /// Returns the device-resident buffer.
+    pub fn run(&self, x: &[f32], n: usize, d: usize, gamma: f32) -> Result<xla::PjRtBuffer> {
+        let xp = pad::pad_rows(x, n, d, self.nb, self.db);
+        let xb = self.device.upload(&xp, &[self.nb, self.db])?;
+        let gb = self.device.upload_scalar(gamma)?;
+        single_output(self.exe.execute_b(&[&xb, &gb])?, "gram")
+    }
+}
+
+/// Host-visible SMO solver state between device chunks (paper Fig 3).
+#[derive(Debug, Clone)]
+pub struct SmoState {
+    pub alpha: Vec<f32>,
+    pub f: Vec<f32>,
+    pub b_up: f32,
+    pub b_low: f32,
+    /// Total device iterations so far.
+    pub iters: usize,
+    /// Device chunks dispatched (host round trips).
+    pub chunks: usize,
+}
+
+impl SmoState {
+    /// Initial state for labels `y` padded to `nb` (alpha = 0, f = -y).
+    pub fn init(y: &[f32], nb: usize) -> SmoState {
+        let mut f = vec![0.0f32; nb];
+        for (i, &v) in y.iter().enumerate() {
+            f[i] = -v;
+        }
+        SmoState {
+            alpha: vec![0.0; nb],
+            f,
+            b_up: f32::NEG_INFINITY,
+            b_low: f32::INFINITY,
+            iters: 0,
+            chunks: 0,
+        }
+    }
+
+    /// Convergence check — the host side of Fig 3.
+    pub fn converged(&self, tol: f32) -> bool {
+        self.b_low <= self.b_up + 2.0 * tol
+    }
+
+    pub fn bias(&self) -> f32 {
+        -(self.b_up + self.b_low) / 2.0
+    }
+}
+
+/// Chunked device SMO for one n-bucket.
+pub struct SmoChunkExe {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    device: Arc<Device>,
+    pub nb: usize,
+    y_buf: xla::PjRtBuffer,
+    mask_buf: xla::PjRtBuffer,
+    c_buf: xla::PjRtBuffer,
+    tol_buf: xla::PjRtBuffer,
+}
+
+impl SmoChunkExe {
+    /// Bind the executable to a problem's constants: labels `y` (len n),
+    /// bucket-padded internally.
+    pub fn new(reg: &ArtifactRegistry, y: &[f32], c: f32, tol: f32) -> Result<SmoChunkExe> {
+        let n = y.len();
+        let nb = reg.buckets().n_bucket(n)?;
+        let device = Arc::clone(reg.device());
+        let yp = pad::pad_vec(y, nb, 0.0);
+        let m = pad::mask(n, nb);
+        Ok(SmoChunkExe {
+            exe: reg.load(&format!("smo_chunk_n{nb}"))?,
+            y_buf: device.upload(&yp, &[nb])?,
+            mask_buf: device.upload(&m, &[nb])?,
+            c_buf: device.upload_scalar(c)?,
+            tol_buf: device.upload_scalar(tol)?,
+            device,
+            nb,
+        })
+    }
+
+    /// Run one device chunk of at most `max_steps` SMO iterations.
+    pub fn run(
+        &self,
+        k: &xla::PjRtBuffer,
+        state: &mut SmoState,
+        max_steps: i32,
+    ) -> Result<()> {
+        let alpha_b = self.device.upload(&state.alpha, &[self.nb])?;
+        let f_b = self.device.upload(&state.f, &[self.nb])?;
+        let steps_b = self.device.upload_scalar_i32(max_steps)?;
+        let out = single_output(
+            self.exe.execute_b(&[
+                k,
+                &self.y_buf,
+                &alpha_b,
+                &f_b,
+                &self.mask_buf,
+                &self.c_buf,
+                &self.tol_buf,
+                &steps_b,
+            ])?,
+            "smo_chunk",
+        )?;
+        let tuple = out.to_literal_sync()?.to_tuple()?;
+        if tuple.len() != 5 {
+            return Err(Error::Runtime(format!(
+                "smo_chunk: expected 5 outputs, got {}",
+                tuple.len()
+            )));
+        }
+        state.alpha = tuple[0].to_vec::<f32>()?;
+        state.f = tuple[1].to_vec::<f32>()?;
+        state.b_up = tuple[2].get_first_element::<f32>()?;
+        state.b_low = tuple[3].get_first_element::<f32>()?;
+        state.iters += tuple[4].get_first_element::<i32>()? as usize;
+        state.chunks += 1;
+        Ok(())
+    }
+}
+
+/// Fixed-step GD solver (TF-analog) for one n-bucket.
+pub struct GdEpochsExe {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    device: Arc<Device>,
+    pub nb: usize,
+    y_buf: xla::PjRtBuffer,
+    mask_buf: xla::PjRtBuffer,
+    c_buf: xla::PjRtBuffer,
+}
+
+impl GdEpochsExe {
+    pub fn new(reg: &ArtifactRegistry, y: &[f32], c: f32) -> Result<GdEpochsExe> {
+        let n = y.len();
+        let nb = reg.buckets().n_bucket(n)?;
+        let device = Arc::clone(reg.device());
+        let yp = pad::pad_vec(y, nb, 0.0);
+        let m = pad::mask(n, nb);
+        Ok(GdEpochsExe {
+            exe: reg.load(&format!("gd_epochs_n{nb}"))?,
+            y_buf: device.upload(&yp, &[nb])?,
+            mask_buf: device.upload(&m, &[nb])?,
+            c_buf: device.upload_scalar(c)?,
+            device,
+            nb,
+        })
+    }
+
+    /// Run `epochs` optimizer steps from `alpha0` (padded len nb).
+    /// Returns (alpha, dual_objective).
+    pub fn run(
+        &self,
+        k: &xla::PjRtBuffer,
+        alpha0: &[f32],
+        lr: f32,
+        epochs: i32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let alpha_b = self.device.upload(alpha0, &[self.nb])?;
+        let lr_b = self.device.upload_scalar(lr)?;
+        let ep_b = self.device.upload_scalar_i32(epochs)?;
+        let out = single_output(
+            self.exe.execute_b(&[
+                k,
+                &self.y_buf,
+                &alpha_b,
+                &self.mask_buf,
+                &self.c_buf,
+                &lr_b,
+                &ep_b,
+            ])?,
+            "gd_epochs",
+        )?;
+        let tuple = out.to_literal_sync()?.to_tuple()?;
+        if tuple.len() != 2 {
+            return Err(Error::Runtime("gd_epochs: expected 2 outputs".into()));
+        }
+        Ok((
+            tuple[0].to_vec::<f32>()?,
+            tuple[1].get_first_element::<f32>()?,
+        ))
+    }
+}
+
+/// One TF-session-style GD step: in-graph Gram recompute + one projected
+/// gradient update, dispatched by the host once per epoch (the faithful
+/// TF-1.8 cost model — see python/compile/model.py::gd_step_full).
+pub struct GdStepExe {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    device: Arc<Device>,
+    pub nb: usize,
+    pub db: usize,
+    y_buf: xla::PjRtBuffer,
+    mask_buf: xla::PjRtBuffer,
+    gamma_buf: xla::PjRtBuffer,
+    c_buf: xla::PjRtBuffer,
+    lr_buf: xla::PjRtBuffer,
+}
+
+impl GdStepExe {
+    pub fn new(
+        reg: &ArtifactRegistry,
+        y: &[f32],
+        d: usize,
+        gamma: f32,
+        c: f32,
+        lr: f32,
+    ) -> Result<GdStepExe> {
+        let n = y.len();
+        let nb = reg.buckets().n_bucket(n)?;
+        let db = reg.buckets().d_bucket(d)?;
+        let device = Arc::clone(reg.device());
+        let yp = pad::pad_vec(y, nb, 0.0);
+        let m = pad::mask(n, nb);
+        Ok(GdStepExe {
+            exe: reg.load(&format!("gd_step_n{nb}_d{db}"))?,
+            y_buf: device.upload(&yp, &[nb])?,
+            mask_buf: device.upload(&m, &[nb])?,
+            gamma_buf: device.upload_scalar(gamma)?,
+            c_buf: device.upload_scalar(c)?,
+            lr_buf: device.upload_scalar(lr)?,
+            device,
+            nb,
+            db,
+        })
+    }
+
+    /// Upload the padded feature matrix (the per-step `feed_dict` transfer
+    /// TF-1.8 performs; the caller decides whether to re-upload each step
+    /// for faithfulness or reuse the buffer as an optimization).
+    pub fn upload_x(&self, x: &[f32], n: usize, d: usize) -> Result<xla::PjRtBuffer> {
+        let xp = pad::pad_rows(x, n, d, self.nb, self.db);
+        self.device.upload(&xp, &[self.nb, self.db])
+    }
+
+    /// Fresh zero alpha buffer.
+    pub fn zero_alpha(&self) -> Result<xla::PjRtBuffer> {
+        self.device.upload(&vec![0.0f32; self.nb], &[self.nb])
+    }
+
+    /// One session step: alpha' = step(x, alpha). Output chains on device.
+    pub fn run(
+        &self,
+        x: &xla::PjRtBuffer,
+        alpha: &xla::PjRtBuffer,
+    ) -> Result<xla::PjRtBuffer> {
+        single_output(
+            self.exe.execute_b(&[
+                x,
+                &self.y_buf,
+                alpha,
+                &self.mask_buf,
+                &self.gamma_buf,
+                &self.c_buf,
+                &self.lr_buf,
+            ])?,
+            "gd_step",
+        )
+    }
+
+    /// Download an alpha buffer.
+    pub fn download_alpha(&self, alpha: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        Ok(alpha.to_literal_sync()?.to_vec::<f32>()?)
+    }
+}
+
+/// Post-hoc bias for a GD solution.
+pub struct GdBiasExe {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    device: Arc<Device>,
+    pub nb: usize,
+}
+
+impl GdBiasExe {
+    pub fn new(reg: &ArtifactRegistry, n: usize) -> Result<GdBiasExe> {
+        let nb = reg.buckets().n_bucket(n)?;
+        Ok(GdBiasExe {
+            exe: reg.load(&format!("gd_bias_n{nb}"))?,
+            device: Arc::clone(reg.device()),
+            nb,
+        })
+    }
+
+    pub fn run(
+        &self,
+        k: &xla::PjRtBuffer,
+        y: &[f32],
+        alpha: &[f32],
+        c: f32,
+    ) -> Result<f32> {
+        let n = y.len();
+        let yp = pad::pad_vec(y, self.nb, 0.0);
+        let m = pad::mask(n, self.nb);
+        let y_b = self.device.upload(&yp, &[self.nb])?;
+        let a_b = self.device.upload(alpha, &[self.nb])?;
+        let m_b = self.device.upload(&m, &[self.nb])?;
+        let c_b = self.device.upload_scalar(c)?;
+        let out = single_output(
+            self.exe.execute_b(&[k, &y_b, &a_b, &m_b, &c_b])?,
+            "gd_bias",
+        )?;
+        Ok(out.to_literal_sync()?.get_first_element::<f32>()?)
+    }
+}
+
+/// Batched decision-function evaluation for one (n, q, d) bucket triple.
+pub struct PredictExe {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    device: Arc<Device>,
+    pub nb: usize,
+    pub qb: usize,
+    pub db: usize,
+    x_buf: xla::PjRtBuffer,
+    w_state: (xla::PjRtBuffer, xla::PjRtBuffer, xla::PjRtBuffer), // alpha, y, mask
+    bias_buf: xla::PjRtBuffer,
+    gamma_buf: xla::PjRtBuffer,
+}
+
+impl PredictExe {
+    /// Bind to a trained binary model's data: training rows `x` (n x d),
+    /// dense `alpha`, labels `y`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        reg: &ArtifactRegistry,
+        x: &[f32],
+        y: &[f32],
+        alpha: &[f32],
+        n: usize,
+        d: usize,
+        bias: f32,
+        gamma: f32,
+    ) -> Result<PredictExe> {
+        let nb = reg.buckets().n_bucket(n)?;
+        let db = reg.buckets().d_bucket(d)?;
+        let qb = reg.buckets().q_bucket(1)?; // single query bucket size
+        let device = Arc::clone(reg.device());
+        let xp = pad::pad_rows(x, n, d, nb, db);
+        let yp = pad::pad_vec(y, nb, 0.0);
+        let ap = pad::pad_vec(&alpha[..n.min(alpha.len())], nb, 0.0);
+        let m = pad::mask(n, nb);
+        Ok(PredictExe {
+            exe: reg.load(&format!("predict_n{nb}_q{qb}_d{db}"))?,
+            x_buf: device.upload(&xp, &[nb, db])?,
+            w_state: (
+                device.upload(&ap, &[nb])?,
+                device.upload(&yp, &[nb])?,
+                device.upload(&m, &[nb])?,
+            ),
+            bias_buf: device.upload_scalar(bias)?,
+            gamma_buf: device.upload_scalar(gamma)?,
+            device,
+            nb,
+            qb,
+            db,
+        })
+    }
+
+    /// Decision values for `q` query rows (q x d), batched through the
+    /// query bucket in slices.
+    pub fn run(&self, queries: &[f32], q: usize, d: usize) -> Result<Vec<f32>> {
+        assert_eq!(queries.len(), q * d);
+        let mut out = Vec::with_capacity(q);
+        let mut start = 0usize;
+        while start < q {
+            let take = (q - start).min(self.qb);
+            let slice = &queries[start * d..(start + take) * d];
+            let qp = pad::pad_rows(slice, take, d, self.qb, self.db);
+            let q_b = self.device.upload(&qp, &[self.qb, self.db])?;
+            let (a, y, m) = &self.w_state;
+            let res = single_output(
+                self.exe.execute_b(&[
+                    &self.x_buf,
+                    &q_b,
+                    a,
+                    y,
+                    m,
+                    &self.bias_buf,
+                    &self.gamma_buf,
+                ])?,
+                "predict",
+            )?;
+            let dec = res.to_literal_sync()?.to_vec::<f32>()?;
+            out.extend_from_slice(&dec[..take]);
+            start += take;
+        }
+        Ok(out)
+    }
+}

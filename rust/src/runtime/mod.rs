@@ -1,0 +1,90 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from rust.
+//!
+//! This is the "device" side of the paper's host/device split. Python never
+//! runs here — `make artifacts` already lowered the L2/L1 graphs to
+//! `artifacts/*.hlo.txt`, and this module:
+//!
+//!  1. parses `manifest.json` (shape buckets, per-artifact signatures),
+//!  2. compiles each artifact on the PJRT CPU client *lazily* and caches
+//!     the loaded executable (compilation is ~10-100ms; the cache makes
+//!     repeat dispatch ~free),
+//!  3. exposes typed entry-point wrappers (`GramExe`, `SmoChunkExe`, ...)
+//!     that handle padding to the shape bucket, buffer upload, execution
+//!     via `execute_b` (device-buffer inputs — the literal-based `execute`
+//!     path in the `xla` crate leaks input device buffers and re-uploads
+//!     every call), and output decomposition.
+//!
+//! Device-residency: the Gram matrix — the big operand, up to 16 MiB at
+//! n=2048 — is produced by `gram_*` artifacts as a *non-tuple* output, so
+//! its `PjRtBuffer` feeds every subsequent `smo_chunk`/`gd_epochs` call
+//! without ever visiting the host (paper Fig 3's "kernel cached in device
+//! memory").
+
+pub mod buckets;
+pub mod exec;
+pub mod pad;
+pub mod registry;
+
+pub use buckets::Buckets;
+pub use exec::{GdBiasExe, GdEpochsExe, GdStepExe, GramExe, PredictExe, SmoChunkExe, SmoState};
+pub use registry::ArtifactRegistry;
+
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::error::{Error, Result};
+
+/// Shared PJRT CPU device handle.
+///
+/// One client per process: PJRT clients are heavyweight (thread pools,
+/// allocator arenas) and concurrent clients fight over the same cores.
+pub struct Device {
+    client: xla::PjRtClient,
+}
+
+// The PJRT CPU client is internally synchronized; the raw pointer wrapper
+// just isn't marked. We only ever use it behind Arc.
+unsafe impl Send for Device {}
+unsafe impl Sync for Device {}
+
+impl Device {
+    pub fn cpu() -> Result<Arc<Device>> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Arc::new(Device { client }))
+    }
+
+    /// Process-wide shared device (compiled executables keep it alive).
+    pub fn shared() -> Result<Arc<Device>> {
+        static SHARED: OnceLock<Mutex<Option<Arc<Device>>>> = OnceLock::new();
+        let slot = SHARED.get_or_init(|| Mutex::new(None));
+        let mut guard = slot.lock().map_err(|_| Error::Runtime("device lock poisoned".into()))?;
+        if let Some(d) = guard.as_ref() {
+            return Ok(Arc::clone(d));
+        }
+        let d = Device::cpu()?;
+        *guard = Some(Arc::clone(&d));
+        Ok(d)
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Upload an f32 slice as a device buffer with the given dims.
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload a rank-0 f32 scalar.
+    pub fn upload_scalar(&self, v: f32) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(&[v], &[], None)?)
+    }
+
+    /// Upload a rank-0 i32 scalar.
+    pub fn upload_scalar_i32(&self, v: i32) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(&[v], &[], None)?)
+    }
+}

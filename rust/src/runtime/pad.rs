@@ -1,0 +1,56 @@
+//! Padding of problems into shape buckets (+ validity masks).
+
+/// Pad row-major (n x d) features to (nb x db), zero-filling.
+pub fn pad_rows(x: &[f32], n: usize, d: usize, nb: usize, db: usize) -> Vec<f32> {
+    assert_eq!(x.len(), n * d);
+    assert!(nb >= n && db >= d);
+    let mut out = vec![0.0f32; nb * db];
+    for i in 0..n {
+        out[i * db..i * db + d].copy_from_slice(&x[i * d..(i + 1) * d]);
+    }
+    out
+}
+
+/// Pad a length-n vector to nb with `fill`.
+pub fn pad_vec(v: &[f32], nb: usize, fill: f32) -> Vec<f32> {
+    assert!(nb >= v.len());
+    let mut out = Vec::with_capacity(nb);
+    out.extend_from_slice(v);
+    out.resize(nb, fill);
+    out
+}
+
+/// Validity mask: 1.0 for the first n entries, 0.0 for padding.
+pub fn mask(n: usize, nb: usize) -> Vec<f32> {
+    assert!(nb >= n);
+    let mut m = vec![0.0f32; nb];
+    m[..n].fill(1.0);
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_rows_layout() {
+        let x = [1.0, 2.0, 3.0, 4.0]; // 2x2
+        let p = pad_rows(&x, 2, 2, 3, 4);
+        assert_eq!(p.len(), 12);
+        assert_eq!(&p[0..4], &[1.0, 2.0, 0.0, 0.0]);
+        assert_eq!(&p[4..8], &[3.0, 4.0, 0.0, 0.0]);
+        assert_eq!(&p[8..12], &[0.0; 4]);
+    }
+
+    #[test]
+    fn pad_rows_identity_when_exact() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(pad_rows(&x, 2, 2, 2, 2), x.to_vec());
+    }
+
+    #[test]
+    fn vec_and_mask() {
+        assert_eq!(pad_vec(&[1.0, 2.0], 4, -9.0), vec![1.0, 2.0, -9.0, -9.0]);
+        assert_eq!(mask(2, 4), vec![1.0, 1.0, 0.0, 0.0]);
+    }
+}

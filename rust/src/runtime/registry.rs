@@ -1,0 +1,233 @@
+//! Artifact registry: manifest parsing, lazy compilation, executable cache.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use super::{buckets::Buckets, Device};
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Expected argument signature of one artifact (from the manifest).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// Manifest entry for one artifact.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub file: String,
+    pub tuple_out: bool,
+    pub args: Vec<ArgSpec>,
+}
+
+/// Loads `artifacts/manifest.json`, compiles artifacts on first use and
+/// caches the loaded executables for the life of the registry.
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    device: Arc<Device>,
+    buckets: Buckets,
+    entries: HashMap<String, Entry>,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+// PjRtLoadedExecutable wraps a thread-safe PJRT object; the crate just
+// doesn't mark it. Guarded usage via Arc is sound (same argument as Device).
+unsafe impl Send for ArtifactRegistry {}
+unsafe impl Sync for ArtifactRegistry {}
+
+impl ArtifactRegistry {
+    /// Open a registry over an artifact directory (requires manifest.json —
+    /// run `make artifacts` first).
+    pub fn open(dir: impl AsRef<Path>, device: Arc<Device>) -> Result<ArtifactRegistry> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts`): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let json = Json::parse(&text)
+            .map_err(|e| Error::Artifact(format!("manifest parse: {e}")))?;
+
+        let list = |key: &str| -> Result<Vec<usize>> {
+            json.get(key)
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .ok_or_else(|| Error::Artifact(format!("manifest missing {key}")))
+        };
+        let buckets = Buckets::new(list("n_buckets")?, list("d_buckets")?, list("q_buckets")?);
+
+        let mut entries = HashMap::new();
+        let obj = json
+            .get("entries")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| Error::Artifact("manifest missing entries".into()))?;
+        for (name, e) in obj {
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Artifact(format!("{name}: missing file")))?
+                .to_string();
+            let tuple_out = e.get("tuple_out").and_then(Json::as_bool).unwrap_or(true);
+            let mut args = Vec::new();
+            for a in e.get("args").and_then(Json::as_arr).unwrap_or(&[]) {
+                args.push(ArgSpec {
+                    shape: a
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .map(|s| s.iter().filter_map(Json::as_usize).collect())
+                        .unwrap_or_default(),
+                    dtype: a
+                        .get("dtype")
+                        .and_then(Json::as_str)
+                        .unwrap_or("float32")
+                        .to_string(),
+                });
+            }
+            entries.insert(name.clone(), Entry { file, tuple_out, args });
+        }
+
+        Ok(ArtifactRegistry {
+            dir,
+            device,
+            buckets,
+            entries,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Open using the shared process device, resolving the artifact dir
+    /// from `$PARASVM_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<ArtifactRegistry> {
+        let dir = std::env::var("PARASVM_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        ArtifactRegistry::open(dir, Device::shared()?)
+    }
+
+    pub fn device(&self) -> &Arc<Device> {
+        &self.device
+    }
+
+    pub fn buckets(&self) -> &Buckets {
+        &self.buckets
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&Entry> {
+        self.entries.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Number of compiled-and-cached executables (perf introspection).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().map(|c| c.len()).unwrap_or(0)
+    }
+
+    /// Get (compiling and caching on first use) an executable by name.
+    pub fn load(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self
+            .cache
+            .lock()
+            .map_err(|_| Error::Runtime("cache lock poisoned".into()))?
+            .get(name)
+        {
+            return Ok(Arc::clone(exe));
+        }
+        let entry = self
+            .entries
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("unknown artifact {name}")))?;
+        let path = self.dir.join(&entry.file);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(self.device.client().compile(&comp)?);
+        self.cache
+            .lock()
+            .map_err(|_| Error::Runtime("cache lock poisoned".into()))?
+            .insert(name.to_string(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Pre-compile every artifact matching a substring (warm-up).
+    pub fn warm(&self, filter: &str) -> Result<usize> {
+        let names: Vec<String> = self
+            .entries
+            .keys()
+            .filter(|n| n.contains(filter))
+            .cloned()
+            .collect();
+        for n in &names {
+            self.load(n)?;
+        }
+        Ok(names.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Registry tests that need real artifacts live in rust/tests/ (they are
+    // integration-level); here we test manifest parsing against a synthetic
+    // manifest with no compilation.
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("parasvm_reg_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = tmpdir("ok");
+        write_manifest(
+            &dir,
+            r#"{"digest":"x","n_buckets":[128,512],"d_buckets":[16],"q_buckets":[256],
+                "entries":{"gram_n128_d16":{"file":"gram_n128_d16.hlo.txt","bytes":10,
+                "tuple_out":false,
+                "args":[{"shape":[128,16],"dtype":"float32"},{"shape":[],"dtype":"float32"}]}}}"#,
+        );
+        let reg = ArtifactRegistry::open(&dir, Device::shared().unwrap()).unwrap();
+        assert_eq!(reg.buckets().n, vec![128, 512]);
+        let e = reg.entry("gram_n128_d16").unwrap();
+        assert!(!e.tuple_out);
+        assert_eq!(e.args.len(), 2);
+        assert_eq!(e.args[0].shape, vec![128, 16]);
+        assert_eq!(reg.names(), vec!["gram_n128_d16"]);
+        assert_eq!(reg.compiled_count(), 0);
+        assert!(reg.load("nope").is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_friendly() {
+        let dir = tmpdir("none");
+        let err = ArtifactRegistry::open(dir.join("absent"), Device::shared().unwrap())
+            .err()
+            .unwrap();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn corrupt_manifest_rejected() {
+        let dir = tmpdir("bad");
+        write_manifest(&dir, "{not json");
+        assert!(ArtifactRegistry::open(&dir, Device::shared().unwrap()).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,90 @@
+//! Dynamic batching policy: flush on size or deadline, whichever first.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Size/deadline batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Flush when this many requests are pending.
+    pub max_batch: usize,
+    /// Flush this long after the first request arrived.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Collect one batch from `rx`.
+///
+/// Blocks for the first item; then drains until `max_batch` items are
+/// pending or `max_wait` has elapsed since the first item. Returns `None`
+/// when the channel is closed and empty (shutdown).
+pub fn collect_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + policy.max_wait;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[test]
+    fn flushes_on_size() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(1) };
+        let b = collect_batch(&rx, &policy).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        let b2 = collect_batch(&rx, &policy).unwrap();
+        assert_eq!(b2, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn flushes_on_deadline_with_partial_batch() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(1).unwrap();
+        let policy = BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(5) };
+        let t0 = Instant::now();
+        let b = collect_batch(&rx, &policy).unwrap();
+        assert_eq!(b, vec![1]);
+        assert!(t0.elapsed() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn returns_none_on_shutdown() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        drop(tx);
+        assert!(collect_batch(&rx, &BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn drains_after_sender_dropped() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(7).unwrap();
+        tx.send(8).unwrap();
+        drop(tx);
+        let policy = BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(50) };
+        assert_eq!(collect_batch(&rx, &policy).unwrap(), vec![7, 8]);
+        assert!(collect_batch(&rx, &policy).is_none());
+    }
+}

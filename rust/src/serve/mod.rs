@@ -1,0 +1,21 @@
+//! Classification serving: a dynamic-batching request loop over a trained
+//! OvO model.
+//!
+//! The paper stops at training; serving is the natural deployment story and
+//! exercises the same decision kernels. Architecture (vLLM-router-style,
+//! scaled to this problem):
+//!
+//!   clients -> mpsc queue -> batcher (size/deadline policy) -> executor
+//!          (one decision_batch per binary model over the whole batch,
+//!           vectorized through the backend) -> per-request votes -> reply
+//!
+//! Batching matters because OvO prediction is m(m-1)/2 kernel passes; doing
+//! them once per *batch* instead of once per request amortizes dispatch.
+
+pub mod batcher;
+pub mod server;
+pub mod types;
+
+pub use batcher::{collect_batch, BatchPolicy};
+pub use server::{Server, ServerStats};
+pub use types::{ClassifyRequest, ClassifyResponse};

@@ -1,0 +1,227 @@
+//! The serving loop: batcher + vectorized OvO executor on a worker thread.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::batcher::{collect_batch, BatchPolicy};
+use super::types::{ClassifyRequest, ClassifyResponse};
+use crate::error::{Error, Result};
+use crate::svm::multiclass::argmax_tiebreak;
+use crate::svm::OvoModel;
+
+type Job = (ClassifyRequest, Sender<ClassifyResponse>);
+
+/// Rolling serving statistics.
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    /// Sum of request latencies in nanoseconds.
+    lat_nanos: AtomicU64,
+}
+
+impl ServerStats {
+    pub fn mean_latency_secs(&self) -> f64 {
+        let n = self.requests.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.lat_nanos.load(Ordering::Relaxed) as f64 / 1e9 / n as f64
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+}
+
+/// A running classification server over one trained model.
+pub struct Server {
+    tx: Option<Sender<Job>>,
+    worker: Option<JoinHandle<()>>,
+    stats: Arc<ServerStats>,
+    d: usize,
+}
+
+impl Server {
+    /// Start the worker thread.
+    pub fn start(model: OvoModel, policy: BatchPolicy) -> Server {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let stats = Arc::new(ServerStats::default());
+        let stats2 = Arc::clone(&stats);
+        let d = model.d;
+        let worker = std::thread::Builder::new()
+            .name("parasvm-serve".into())
+            .spawn(move || {
+                while let Some(batch) = collect_batch(&rx, &policy) {
+                    serve_batch(&model, batch, &stats2);
+                }
+            })
+            .expect("spawn server thread");
+        Server { tx: Some(tx), worker: Some(worker), stats, d }
+    }
+
+    pub fn stats(&self) -> &Arc<ServerStats> {
+        &self.stats
+    }
+
+    /// Synchronous classify (enqueue + wait).
+    pub fn classify(&self, features: Vec<f32>) -> Result<ClassifyResponse> {
+        self.submit(features)?
+            .recv()
+            .map_err(|_| Error::Serve("server dropped response".into()))
+    }
+
+    /// Asynchronous classify: returns the response channel immediately.
+    pub fn submit(&self, features: Vec<f32>) -> Result<mpsc::Receiver<ClassifyResponse>> {
+        if features.len() != self.d {
+            return Err(Error::Serve(format!(
+                "feature dim {} != model dim {}",
+                features.len(),
+                self.d
+            )));
+        }
+        static NEXT_ID: AtomicU64 = AtomicU64::new(0);
+        let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("server running")
+            .send((ClassifyRequest::new(id, features), rtx))
+            .map_err(|_| Error::Serve("server shut down".into()))?;
+        Ok(rrx)
+    }
+
+    /// Graceful shutdown (drains the queue).
+    pub fn shutdown(mut self) {
+        self.tx.take();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Classify one batch: for each binary model, one vectorized decision pass
+/// over the whole batch; then per-request voting.
+fn serve_batch(model: &OvoModel, batch: Vec<Job>, stats: &ServerStats) {
+    let bsz = batch.len();
+    let d = model.d;
+    let mut features = Vec::with_capacity(bsz * d);
+    for (req, _) in &batch {
+        features.extend_from_slice(&req.features);
+    }
+
+    // Vectorized OvO: m(m-1)/2 batch passes instead of bsz * m(m-1)/2
+    // single-row passes.
+    let mut votes = vec![vec![0u32; model.n_classes]; bsz];
+    let mut margins = vec![vec![0.0f64; model.n_classes]; bsz];
+    for b in &model.binaries {
+        let dec = b.decision_batch(&features, bsz);
+        for (i, &v) in dec.iter().enumerate() {
+            let winner = if v > 0.0 { b.pos_class } else { b.neg_class };
+            votes[i][winner] += 1;
+            margins[i][winner] += v.abs() as f64;
+        }
+    }
+
+    // Count the batch before replying so stats are consistent the moment
+    // the last requester unblocks.
+    stats.batches.fetch_add(1, Ordering::Relaxed);
+    for (i, (req, rtx)) in batch.into_iter().enumerate() {
+        let class = argmax_tiebreak(&votes[i], &margins[i]);
+        let latency = req.enqueued.elapsed().as_secs_f64();
+        stats.requests.fetch_add(1, Ordering::Relaxed);
+        stats
+            .lat_nanos
+            .fetch_add((latency * 1e9) as u64, Ordering::Relaxed);
+        let _ = rtx.send(ClassifyResponse {
+            id: req.id,
+            class,
+            class_name: model.class_names.get(class).cloned().unwrap_or_default(),
+            votes: votes[i].clone(),
+            latency_secs: latency,
+            batch_size: bsz,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{NativeBackend, SvmBackend};
+    use crate::coordinator::{train_multiclass, TrainConfig};
+    use crate::data::iris;
+    use std::time::Duration;
+
+    fn iris_server(policy: BatchPolicy) -> (Server, crate::data::Dataset) {
+        let ds = iris::load();
+        let be: Arc<dyn SvmBackend> = Arc::new(NativeBackend::new());
+        let cfg = TrainConfig { workers: 2, ..Default::default() };
+        let (model, _) = train_multiclass(&ds, be, &cfg).unwrap();
+        (Server::start(model, policy), ds)
+    }
+
+    #[test]
+    fn classifies_training_rows() {
+        let (server, ds) = iris_server(BatchPolicy::default());
+        let mut correct = 0;
+        for i in (0..ds.n).step_by(5) {
+            let resp = server.classify(ds.row(i).to_vec()).unwrap();
+            if resp.class == ds.y[i] as usize {
+                correct += 1;
+            }
+            assert_eq!(resp.votes.iter().sum::<u32>(), 3); // 3 binaries voted
+        }
+        assert!(correct as f64 / 30.0 >= 0.9);
+        server.shutdown();
+    }
+
+    #[test]
+    fn batching_aggregates_concurrent_requests() {
+        let policy = BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(20) };
+        let (server, ds) = iris_server(policy);
+        // Fire 32 async requests, then collect: most should share a batch.
+        let rxs: Vec<_> = (0..32)
+            .map(|i| server.submit(ds.row(i * 4).to_vec()).unwrap())
+            .collect();
+        let resps: Vec<_> = rxs.into_iter().map(|r| r.recv().unwrap()).collect();
+        let max_batch = resps.iter().map(|r| r.batch_size).max().unwrap();
+        assert!(max_batch > 1, "no batching happened");
+        assert_eq!(server.stats().requests.load(Ordering::Relaxed), 32);
+        assert!(server.stats().mean_batch_size() > 1.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn wrong_dimension_rejected() {
+        let (server, _) = iris_server(BatchPolicy::default());
+        assert!(server.classify(vec![1.0, 2.0]).is_err());
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains() {
+        let (server, ds) = iris_server(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+        });
+        let rx = server.submit(ds.row(0).to_vec()).unwrap();
+        server.shutdown();
+        // The queued request is still answered.
+        assert!(rx.recv_timeout(Duration::from_secs(1)).is_ok());
+    }
+}

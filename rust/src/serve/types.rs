@@ -1,0 +1,32 @@
+//! Request/response types for the classification server.
+
+use std::time::Instant;
+
+/// A classification request (feature vector must match the model's d).
+#[derive(Debug, Clone)]
+pub struct ClassifyRequest {
+    pub id: u64,
+    pub features: Vec<f32>,
+    /// Enqueue timestamp (set by the client handle; used for latency).
+    pub enqueued: Instant,
+}
+
+impl ClassifyRequest {
+    pub fn new(id: u64, features: Vec<f32>) -> Self {
+        ClassifyRequest { id, features, enqueued: Instant::now() }
+    }
+}
+
+/// The server's answer.
+#[derive(Debug, Clone)]
+pub struct ClassifyResponse {
+    pub id: u64,
+    pub class: usize,
+    pub class_name: String,
+    /// OvO votes per class (diagnostics).
+    pub votes: Vec<u32>,
+    /// Queue + batch + compute latency.
+    pub latency_secs: f64,
+    /// Size of the batch this request rode in (batching introspection).
+    pub batch_size: usize,
+}

@@ -1,0 +1,110 @@
+//! Pure-rust kernel functions and Gram-matrix construction.
+//!
+//! This is the *native* (host/CPU-profile) mirror of the L1 Pallas kernel;
+//! numerics match the device path (same expanded-identity formulation) so
+//! models trained on either backend are interchangeable.
+
+/// Squared Euclidean distance between two rows.
+#[inline]
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        acc += d * d;
+    }
+    acc
+}
+
+/// RBF kernel value.
+#[inline]
+pub fn rbf(a: &[f32], b: &[f32], gamma: f32) -> f32 {
+    (-gamma * sq_dist(a, b)).exp()
+}
+
+/// Dense symmetric RBF Gram matrix over row-major `x` (n rows, d cols).
+///
+/// Uses the expanded identity ||x||^2 + ||z||^2 - 2 x.z (matching the
+/// Pallas kernel) and exploits symmetry — only the upper triangle is
+/// computed.
+pub fn rbf_gram(x: &[f32], n: usize, d: usize, gamma: f32) -> Vec<f32> {
+    assert_eq!(x.len(), n * d);
+    let norms: Vec<f32> = (0..n)
+        .map(|i| x[i * d..(i + 1) * d].iter().map(|v| v * v).sum())
+        .collect();
+    let mut k = vec![0.0f32; n * n];
+    for i in 0..n {
+        k[i * n + i] = 1.0;
+        let xi = &x[i * d..(i + 1) * d];
+        for j in (i + 1)..n {
+            let xj = &x[j * d..(j + 1) * d];
+            let mut dot = 0.0f32;
+            for t in 0..d {
+                dot += xi[t] * xj[t];
+            }
+            let d2 = (norms[i] + norms[j] - 2.0 * dot).max(0.0);
+            let v = (-gamma * d2).exp();
+            k[i * n + j] = v;
+            k[j * n + i] = v;
+        }
+    }
+    k
+}
+
+/// Rectangular RBF kernel block: rows of `q` (m x d) against rows of `x`
+/// (n x d), result row-major (m x n).
+pub fn rbf_cross(q: &[f32], m: usize, x: &[f32], n: usize, d: usize, gamma: f32) -> Vec<f32> {
+    assert_eq!(q.len(), m * d);
+    assert_eq!(x.len(), n * d);
+    let mut k = vec![0.0f32; m * n];
+    for i in 0..m {
+        let qi = &q[i * d..(i + 1) * d];
+        for j in 0..n {
+            k[i * n + j] = rbf(qi, &x[j * d..(j + 1) * d], gamma);
+        }
+    }
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rbf_identity_and_symmetry() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [0.5, -1.0, 2.0];
+        assert!((rbf(&a, &a, 0.7) - 1.0).abs() < 1e-7);
+        assert_eq!(rbf(&a, &b, 0.7), rbf(&b, &a, 0.7));
+        assert!(rbf(&a, &b, 0.7) < 1.0);
+    }
+
+    #[test]
+    fn gram_matches_pointwise() {
+        let x = [0.0f32, 0.0, 1.0, 0.0, 0.0, 2.0];
+        let k = rbf_gram(&x, 3, 2, 0.3);
+        for i in 0..3 {
+            for j in 0..3 {
+                let want = rbf(&x[i * 2..i * 2 + 2], &x[j * 2..j * 2 + 2], 0.3);
+                assert!((k[i * 3 + j] - want).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn cross_matches_gram_when_same_rows() {
+        let x = [0.1f32, 0.2, 0.9, -0.5, 0.3, 0.7, -0.2, 0.4];
+        let g = rbf_gram(&x, 4, 2, 1.1);
+        let c = rbf_cross(&x, 4, &x, 4, 2, 1.1);
+        for (a, b) in g.iter().zip(c.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn gamma_zero_gives_ones() {
+        let x = [1.0f32, 5.0, -3.0, 2.0];
+        let k = rbf_gram(&x, 2, 2, 0.0);
+        assert!(k.iter().all(|v| (*v - 1.0).abs() < 1e-7));
+    }
+}

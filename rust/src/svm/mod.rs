@@ -1,0 +1,79 @@
+//! SVM core: kernels, native solvers (SMO and fixed-step GD), model types
+//! and one-vs-one multi-class assembly.
+//!
+//! The native solvers serve three roles (DESIGN.md §2 S8):
+//!  1. reference oracle for the device solvers (tests cross-check duals);
+//!  2. the "CPU execution provider" in the Table VI portability experiment;
+//!  3. an artifact-free fallback so the coordinator works without `make
+//!     artifacts` (used widely by unit tests).
+
+pub mod gd;
+pub mod kernel;
+pub mod model;
+pub mod multiclass;
+pub mod persist;
+pub mod smo;
+pub mod tune;
+
+pub use model::{BinaryModel, TrainStats};
+pub use multiclass::OvoModel;
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::data::BinaryProblem;
+    use crate::util::rng::Rng;
+
+    /// Two Gaussian blobs separated along feature 0, labels +1/-1.
+    pub fn blobs(n_per: usize, d: usize, sep: f32, seed: u64) -> BinaryProblem {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::with_capacity(2 * n_per * d);
+        let mut y = Vec::with_capacity(2 * n_per);
+        for s in [1.0f32, -1.0] {
+            for _ in 0..n_per {
+                for t in 0..d {
+                    let center = if t == 0 { s * sep } else { 0.0 };
+                    x.push(center + rng.normal());
+                }
+                y.push(s);
+            }
+        }
+        BinaryProblem { x, y, d, pos_class: 0, neg_class: 1 }
+    }
+}
+
+/// Hyper-parameters shared by all solvers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SvmParams {
+    /// Box constraint C.
+    pub c: f32,
+    /// RBF kernel width gamma.
+    pub gamma: f32,
+    /// KKT tolerance tau (SMO convergence threshold).
+    pub tol: f32,
+    /// SMO iteration hard cap.
+    pub max_iter: usize,
+    /// GD: fixed number of optimizer steps (the TF-analog cost shape).
+    pub gd_epochs: usize,
+    /// GD: learning rate.
+    pub gd_lr: f32,
+    /// Simulated per-dispatch host overhead of the TF-1.8 session loop
+    /// (python `sess.run` + graph pruning + feed_dict marshalling),
+    /// applied once per GD step by the XLA backend's session-style solver.
+    /// 0 disables the model (pure XLA dispatch — the ablation). See
+    /// DESIGN.md §Substitutions.
+    pub session_overhead_secs: f64,
+}
+
+impl Default for SvmParams {
+    fn default() -> Self {
+        SvmParams {
+            c: 10.0,
+            gamma: 0.5,
+            tol: 1e-3,
+            max_iter: 200_000,
+            gd_epochs: 300, // the classic TF-cookbook SVM step count
+            gd_lr: 0.01,
+            session_overhead_secs: 0.0,
+        }
+    }
+}

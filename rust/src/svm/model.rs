@@ -1,0 +1,209 @@
+//! Trained binary SVM model (support vectors only) + training statistics.
+
+use crate::data::BinaryProblem;
+use crate::svm::kernel;
+
+/// A trained binary classifier in support-vector form.
+///
+/// Only rows with `alpha > sv_eps` are stored — for converged SMO models
+/// this is typically a small fraction of the training set, which is what
+/// makes serving cheap.
+#[derive(Debug, Clone)]
+pub struct BinaryModel {
+    /// Support vectors, row-major (n_sv x d).
+    pub sv: Vec<f32>,
+    /// Per-SV coefficient alpha_i * y_i.
+    pub coef: Vec<f32>,
+    pub d: usize,
+    pub bias: f32,
+    pub gamma: f32,
+    /// Classes this model discriminates (OvO bookkeeping).
+    pub pos_class: usize,
+    pub neg_class: usize,
+}
+
+/// Per-binary-problem training metrics (feed the paper tables).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TrainStats {
+    /// Solver iterations (SMO steps or GD epochs).
+    pub iters: usize,
+    pub converged: bool,
+    /// Seconds building the Gram matrix.
+    pub gram_secs: f64,
+    /// Seconds in the solver loop.
+    pub solve_secs: f64,
+    /// Device chunks dispatched (host<->device round trips, Fig 3).
+    pub chunks: usize,
+    pub n_sv: usize,
+}
+
+impl TrainStats {
+    pub fn total_secs(&self) -> f64 {
+        self.gram_secs + self.solve_secs
+    }
+}
+
+const SV_EPS: f32 = 1e-6;
+
+impl BinaryModel {
+    /// Build from a dense alpha vector over the training problem.
+    pub fn from_dense(prob: &BinaryProblem, alpha: &[f32], bias: f32, gamma: f32) -> Self {
+        assert_eq!(alpha.len(), prob.n());
+        let mut sv = Vec::new();
+        let mut coef = Vec::new();
+        for i in 0..prob.n() {
+            if alpha[i] > SV_EPS {
+                sv.extend_from_slice(prob.row(i));
+                coef.push(alpha[i] * prob.y[i]);
+            }
+        }
+        BinaryModel {
+            sv,
+            coef,
+            d: prob.d,
+            bias,
+            gamma,
+            pos_class: prob.pos_class,
+            neg_class: prob.neg_class,
+        }
+    }
+
+    pub fn n_sv(&self) -> usize {
+        self.coef.len()
+    }
+
+    /// Decision value for a single query row.
+    pub fn decision(&self, q: &[f32]) -> f32 {
+        debug_assert_eq!(q.len(), self.d);
+        let mut acc = self.bias;
+        for (i, &c) in self.coef.iter().enumerate() {
+            acc += c * kernel::rbf(&self.sv[i * self.d..(i + 1) * self.d], q, self.gamma);
+        }
+        acc
+    }
+
+    /// Predicted class id (OvO vote contribution).
+    pub fn predict_class(&self, q: &[f32]) -> usize {
+        if self.decision(q) > 0.0 {
+            self.pos_class
+        } else {
+            self.neg_class
+        }
+    }
+
+    /// Batch decision values — the serving hot path.
+    ///
+    /// Uses the expanded identity ||q-s||^2 = |q|^2 + |s|^2 - 2 q.s with
+    /// SV norms hoisted out of the batch loop, so the inner loop is a pure
+    /// dot product (one fused mul-add chain the compiler auto-vectorizes)
+    /// instead of the sub-square-accumulate pattern of the single-query
+    /// path. See EXPERIMENTS.md §Perf for the before/after.
+    pub fn decision_batch(&self, q: &[f32], m: usize) -> Vec<f32> {
+        assert_eq!(q.len(), m * self.d);
+        let d = self.d;
+        let n_sv = self.n_sv();
+        // Hoisted per-call: O(n_sv * d), amortized over the batch.
+        let sv_norms: Vec<f32> = (0..n_sv)
+            .map(|i| self.sv[i * d..(i + 1) * d].iter().map(|v| v * v).sum())
+            .collect();
+        let mut out = Vec::with_capacity(m);
+        for qi in 0..m {
+            let qrow = &q[qi * d..(qi + 1) * d];
+            let qn: f32 = qrow.iter().map(|v| v * v).sum();
+            let mut acc = self.bias;
+            for (i, &c) in self.coef.iter().enumerate() {
+                let srow = &self.sv[i * d..(i + 1) * d];
+                let mut dot = 0.0f32;
+                for t in 0..d {
+                    dot += qrow[t] * srow[t];
+                }
+                let d2 = (qn + sv_norms[i] - 2.0 * dot).max(0.0);
+                acc += c * (-self.gamma * d2).exp();
+            }
+            out.push(acc);
+        }
+        out
+    }
+
+    /// Reference batch path (per-row `decision`); kept for the perf
+    /// microbench baseline and as a cross-check oracle in tests.
+    pub fn decision_batch_naive(&self, q: &[f32], m: usize) -> Vec<f32> {
+        assert_eq!(q.len(), m * self.d);
+        (0..m).map(|i| self.decision(&q[i * self.d..(i + 1) * self.d])).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_model() -> BinaryModel {
+        // Two SVs at +-1 on the x axis with opposite signs: decision is
+        // positive near +1, negative near -1.
+        BinaryModel {
+            sv: vec![1.0, 0.0, -1.0, 0.0],
+            coef: vec![1.0, -1.0],
+            d: 2,
+            bias: 0.0,
+            gamma: 1.0,
+            pos_class: 3,
+            neg_class: 7,
+        }
+    }
+
+    #[test]
+    fn decision_sign_and_classes() {
+        let m = toy_model();
+        assert!(m.decision(&[0.9, 0.0]) > 0.0);
+        assert!(m.decision(&[-0.9, 0.0]) < 0.0);
+        assert_eq!(m.predict_class(&[0.9, 0.0]), 3);
+        assert_eq!(m.predict_class(&[-0.9, 0.0]), 7);
+    }
+
+    #[test]
+    fn from_dense_keeps_only_svs() {
+        let prob = BinaryProblem {
+            x: vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0],
+            y: vec![1.0, -1.0, 1.0],
+            d: 2,
+            pos_class: 0,
+            neg_class: 1,
+        };
+        let m = BinaryModel::from_dense(&prob, &[0.5, 0.0, 1e-9], 0.1, 0.5);
+        assert_eq!(m.n_sv(), 1);
+        assert_eq!(m.sv, vec![0.0, 0.0]);
+        assert_eq!(m.coef, vec![0.5]);
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let m = toy_model();
+        let q = vec![0.5, 0.2, -0.3, 0.8];
+        let batch = m.decision_batch(&q, 2);
+        assert!((batch[0] - m.decision(&q[0..2])).abs() < 1e-6);
+        assert!((batch[1] - m.decision(&q[2..4])).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fast_batch_matches_naive_on_random_model() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(17);
+        let d = 13;
+        let n_sv = 37;
+        let model = BinaryModel {
+            sv: (0..n_sv * d).map(|_| rng.normal()).collect(),
+            coef: (0..n_sv).map(|_| rng.normal()).collect(),
+            d,
+            bias: 0.3,
+            gamma: 0.7,
+            pos_class: 0,
+            neg_class: 1,
+        };
+        let q: Vec<f32> = (0..50 * d).map(|_| rng.normal()).collect();
+        let fast = model.decision_batch(&q, 50);
+        let naive = model.decision_batch_naive(&q, 50);
+        for (a, b) in fast.iter().zip(naive.iter()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+}

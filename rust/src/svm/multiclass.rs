@@ -1,0 +1,157 @@
+//! One-vs-one multi-class model (paper §III-A: "the one-against-one is the
+//! more suitable method for practical use"): m(m-1)/2 binary classifiers
+//! vote; ties break toward the smallest class id involved in the tie, then
+//! by accumulated decision magnitude — deterministic either way.
+
+use super::model::BinaryModel;
+
+/// One-vs-one ensemble over `n_classes`.
+#[derive(Debug, Clone)]
+pub struct OvoModel {
+    pub n_classes: usize,
+    pub d: usize,
+    /// m(m-1)/2 binary models, any order (each knows its class pair).
+    pub binaries: Vec<BinaryModel>,
+    pub class_names: Vec<String>,
+}
+
+impl OvoModel {
+    pub fn new(n_classes: usize, d: usize, binaries: Vec<BinaryModel>, class_names: Vec<String>) -> Self {
+        assert_eq!(binaries.len(), n_classes * (n_classes - 1) / 2, "need m(m-1)/2 binaries");
+        for b in &binaries {
+            assert!(b.pos_class < n_classes && b.neg_class < n_classes);
+            assert_eq!(b.d, d);
+        }
+        OvoModel { n_classes, d, binaries, class_names }
+    }
+
+    /// Vote-based prediction for one query row.
+    pub fn predict(&self, q: &[f32]) -> usize {
+        let (votes, margins) = self.vote(q);
+        argmax_tiebreak(&votes, &margins)
+    }
+
+    /// Raw votes + accumulated |decision| per class (exposed for tests and
+    /// for the serving layer, which batches decisions through the device).
+    pub fn vote(&self, q: &[f32]) -> (Vec<u32>, Vec<f64>) {
+        let mut votes = vec![0u32; self.n_classes];
+        let mut margins = vec![0.0f64; self.n_classes];
+        for b in &self.binaries {
+            let dec = b.decision(q);
+            let winner = if dec > 0.0 { b.pos_class } else { b.neg_class };
+            votes[winner] += 1;
+            margins[winner] += dec.abs() as f64;
+        }
+        (votes, margins)
+    }
+
+    /// Accuracy over a labelled row-major batch.
+    pub fn accuracy(&self, x: &[f32], y: &[i32]) -> f64 {
+        let n = y.len();
+        assert_eq!(x.len(), n * self.d);
+        let correct = (0..n)
+            .filter(|&i| self.predict(&x[i * self.d..(i + 1) * self.d]) == y[i] as usize)
+            .count();
+        correct as f64 / n.max(1) as f64
+    }
+
+    /// Total support vectors across binaries (model-size metric).
+    pub fn total_svs(&self) -> usize {
+        self.binaries.iter().map(|b| b.n_sv()).sum()
+    }
+}
+
+/// Deterministic argmax: most votes, then largest accumulated margin, then
+/// smallest class id.
+pub fn argmax_tiebreak(votes: &[u32], margins: &[f64]) -> usize {
+    let mut best = 0usize;
+    for c in 1..votes.len() {
+        let better = votes[c] > votes[best]
+            || (votes[c] == votes[best] && margins[c] > margins[best] + 1e-12);
+        if better {
+            best = c;
+        }
+    }
+    best
+}
+
+/// All one-vs-one pairs (a < b) in canonical order.
+pub fn ovo_pairs(n_classes: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::with_capacity(n_classes * (n_classes - 1) / 2);
+    for a in 0..n_classes {
+        for b in (a + 1)..n_classes {
+            out.push((a, b));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stump(pos: usize, neg: usize, dir: f32) -> BinaryModel {
+        // Linearizable RBF stump: one SV at +dir with positive coefficient
+        // -> decision > 0 for queries near +dir.
+        BinaryModel {
+            sv: vec![dir],
+            coef: vec![1.0],
+            d: 1,
+            bias: -0.5,
+            gamma: 1.0,
+            pos_class: pos,
+            neg_class: neg,
+        }
+    }
+
+    #[test]
+    fn pairs_canonical() {
+        assert_eq!(ovo_pairs(3), vec![(0, 1), (0, 2), (1, 2)]);
+        assert_eq!(ovo_pairs(9).len(), 36); // paper: 9 classes -> 36 problems
+        for (a, b) in ovo_pairs(9) {
+            assert!(a < b);
+        }
+    }
+
+    #[test]
+    fn voting_majority() {
+        // Class 0 beats 1 and 2; class 1 beats 2 -> query near all stump SVs
+        // votes (0:2, 1:1, 2:0).
+        let m = OvoModel::new(
+            3,
+            1,
+            vec![stump(0, 1, 0.0), stump(0, 2, 0.0), stump(1, 2, 0.0)],
+            vec!["a".into(), "b".into(), "c".into()],
+        );
+        assert_eq!(m.predict(&[0.0]), 0);
+        let (votes, _) = m.vote(&[0.0]);
+        assert_eq!(votes, vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn tie_breaks_deterministically() {
+        assert_eq!(argmax_tiebreak(&[1, 1, 1], &[0.1, 0.5, 0.2]), 1);
+        assert_eq!(argmax_tiebreak(&[1, 1], &[0.3, 0.3]), 0); // exact tie -> low id
+        assert_eq!(argmax_tiebreak(&[0, 2, 1], &[9.0, 0.0, 9.0]), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "m(m-1)/2")]
+    fn wrong_binary_count_rejected() {
+        OvoModel::new(3, 1, vec![stump(0, 1, 0.0)], vec!["a".into(), "b".into(), "c".into()]);
+    }
+
+    #[test]
+    fn accuracy_on_trivial_setup() {
+        let m = OvoModel::new(
+            2,
+            1,
+            vec![stump(0, 1, 1.0)], // positive near x=1
+            vec!["a".into(), "b".into()],
+        );
+        // query 1.0 -> class 0; query -5 -> class 1
+        let x = vec![1.0f32, -5.0];
+        let y = vec![0, 1];
+        assert_eq!(m.accuracy(&x, &y), 1.0);
+    }
+}

@@ -1,0 +1,181 @@
+//! Model persistence: OvO ensembles as JSON documents.
+//!
+//! Format (version-tagged so future layouts can migrate):
+//! ```json
+//! { "format": "parasvm-ovo-v1", "n_classes": 3, "d": 4,
+//!   "class_names": [...],
+//!   "binaries": [ { "pos": 0, "neg": 1, "bias": ..., "gamma": ...,
+//!                   "coef": [...], "sv": [...flat row-major...] } ] }
+//! ```
+
+use std::path::Path;
+
+use super::model::BinaryModel;
+use super::multiclass::OvoModel;
+use crate::error::{Error, Result};
+use crate::util::json::{self, Json};
+
+const FORMAT: &str = "parasvm-ovo-v1";
+
+fn model_to_json(m: &BinaryModel) -> Json {
+    json::obj(vec![
+        ("pos", json::num(m.pos_class as f64)),
+        ("neg", json::num(m.neg_class as f64)),
+        ("bias", json::num(m.bias as f64)),
+        ("gamma", json::num(m.gamma as f64)),
+        ("coef", json::arr(m.coef.iter().map(|&v| json::num(v as f64)).collect())),
+        ("sv", json::arr(m.sv.iter().map(|&v| json::num(v as f64)).collect())),
+    ])
+}
+
+fn model_from_json(j: &Json, d: usize) -> Result<BinaryModel> {
+    let err = |m: &str| Error::Data(format!("model json: {m}"));
+    let num = |k: &str| j.get(k).and_then(Json::as_f64).ok_or_else(|| err(k));
+    let arr = |k: &str| -> Result<Vec<f32>> {
+        Ok(j.get(k)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| err(k))?
+            .iter()
+            .filter_map(Json::as_f64)
+            .map(|v| v as f32)
+            .collect())
+    };
+    let coef = arr("coef")?;
+    let sv = arr("sv")?;
+    if sv.len() != coef.len() * d {
+        return Err(err("sv/coef length mismatch"));
+    }
+    Ok(BinaryModel {
+        sv,
+        coef,
+        d,
+        bias: num("bias")? as f32,
+        gamma: num("gamma")? as f32,
+        pos_class: num("pos")? as usize,
+        neg_class: num("neg")? as usize,
+    })
+}
+
+/// Serialize an ensemble to JSON text.
+pub fn to_json(model: &OvoModel) -> String {
+    json::obj(vec![
+        ("format", json::s(FORMAT)),
+        ("n_classes", json::num(model.n_classes as f64)),
+        ("d", json::num(model.d as f64)),
+        (
+            "class_names",
+            json::arr(model.class_names.iter().map(|n| json::s(n)).collect()),
+        ),
+        (
+            "binaries",
+            json::arr(model.binaries.iter().map(model_to_json).collect()),
+        ),
+    ])
+    .to_string_pretty()
+}
+
+/// Parse an ensemble from JSON text.
+pub fn from_json(text: &str) -> Result<OvoModel> {
+    let j = Json::parse(text).map_err(|e| Error::Data(format!("model json: {e}")))?;
+    let err = |m: &str| Error::Data(format!("model json: {m}"));
+    if j.get("format").and_then(Json::as_str) != Some(FORMAT) {
+        return Err(err("unknown or missing format tag"));
+    }
+    let n_classes = j.get("n_classes").and_then(Json::as_usize).ok_or_else(|| err("n_classes"))?;
+    let d = j.get("d").and_then(Json::as_usize).ok_or_else(|| err("d"))?;
+    let class_names: Vec<String> = j
+        .get("class_names")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| err("class_names"))?
+        .iter()
+        .filter_map(Json::as_str)
+        .map(String::from)
+        .collect();
+    let mut binaries = Vec::new();
+    for b in j.get("binaries").and_then(Json::as_arr).ok_or_else(|| err("binaries"))? {
+        binaries.push(model_from_json(b, d)?);
+    }
+    if binaries.len() != n_classes * (n_classes - 1) / 2 {
+        return Err(err("wrong binary count"));
+    }
+    Ok(OvoModel::new(n_classes, d, binaries, class_names))
+}
+
+pub fn save(model: &OvoModel, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    Ok(std::fs::write(path, to_json(model))?)
+}
+
+pub fn load(path: &Path) -> Result<OvoModel> {
+    from_json(&std::fs::read_to_string(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{NativeBackend, SvmBackend};
+    use crate::coordinator::{train_multiclass, TrainConfig};
+    use crate::data::iris;
+    use std::sync::Arc;
+
+    fn trained() -> OvoModel {
+        let ds = iris::load();
+        let be: Arc<dyn SvmBackend> = Arc::new(NativeBackend::new());
+        let (m, _) = train_multiclass(&ds, be, &TrainConfig { workers: 1, ..Default::default() })
+            .unwrap();
+        m
+    }
+
+    #[test]
+    fn roundtrip_preserves_predictions() {
+        let m = trained();
+        let back = from_json(&to_json(&m)).unwrap();
+        let ds = iris::load();
+        for i in (0..ds.n).step_by(3) {
+            assert_eq!(m.predict(ds.row(i)), back.predict(ds.row(i)), "row {i}");
+        }
+        assert_eq!(back.class_names, m.class_names);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let m = trained();
+        let path = std::env::temp_dir().join(format!("parasvm_model_{}.json", std::process::id()));
+        save(&m, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.binaries.len(), 3);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_documents() {
+        assert!(from_json("{}").is_err());
+        assert!(from_json("not json").is_err());
+        let mut doc = to_json(&trained());
+        doc = doc.replace("parasvm-ovo-v1", "parasvm-ovo-v9");
+        assert!(from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_sv_lengths() {
+        let m = trained();
+        let doc = to_json(&m);
+        // Corrupt: drop one sv value (breaks coef*d == sv.len()).
+        let j = crate::util::json::Json::parse(&doc).unwrap();
+        let mut obj = match j {
+            crate::util::json::Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        if let Some(crate::util::json::Json::Arr(bins)) = obj.get_mut("binaries") {
+            if let crate::util::json::Json::Obj(b0) = &mut bins[0] {
+                if let Some(crate::util::json::Json::Arr(sv)) = b0.get_mut("sv") {
+                    sv.pop();
+                }
+            }
+        }
+        let corrupted = crate::util::json::Json::Obj(obj).to_string_compact();
+        assert!(from_json(&corrupted).is_err());
+    }
+}

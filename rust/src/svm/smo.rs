@@ -1,0 +1,252 @@
+//! Native sequential SMO solver (Keerthi et al. dual-threshold variant).
+//!
+//! This is the paper's §III-A "sequential SVM" baseline *and* the oracle
+//! the device solver is validated against: the update rule is line-for-line
+//! the same as `python/compile/model.py::smo_chunk` (and ref.py's
+//! `smo_reference`), so duals agree to float tolerance.
+
+use super::model::{BinaryModel, TrainStats};
+use super::SvmParams;
+use crate::data::BinaryProblem;
+
+/// Outcome of a native SMO run over a precomputed Gram matrix.
+#[derive(Debug, Clone)]
+pub struct SmoSolution {
+    pub alpha: Vec<f32>,
+    pub bias: f32,
+    pub iters: usize,
+    pub b_up: f32,
+    pub b_low: f32,
+    pub converged: bool,
+}
+
+/// Solve the dual over a precomputed row-major Gram matrix `k` (n x n).
+///
+/// Internal state (alpha, f) is kept in f64: the f-vector receives one
+/// rank-2 update per iteration and f32 drift can stall convergence near the
+/// optimum (the device solver instead bounds drift through chunked host
+/// round trips with freshly-computed thresholds).
+pub fn solve_gram(k: &[f32], y: &[f32], p: &SvmParams) -> SmoSolution {
+    let n = y.len();
+    assert_eq!(k.len(), n * n);
+    let c = p.c as f64;
+    let tol = p.tol as f64;
+    let eps = 1e-10f64;
+
+    let yd: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+    let mut alpha = vec![0.0f64; n];
+    let mut f: Vec<f64> = yd.iter().map(|&v| -v).collect();
+
+    let mut iters = 0usize;
+    let (mut b_up, mut b_low) = (0.0f64, 0.0f64);
+    let mut converged = false;
+
+    while iters < p.max_iter {
+        // Select the extreme violating pair over the index sets.
+        let (mut i, mut j) = (usize::MAX, usize::MAX);
+        let (mut fi, mut fj) = (f64::INFINITY, f64::NEG_INFINITY);
+        for t in 0..n {
+            let yt = yd[t];
+            let at = alpha[t];
+            let in_up = (yt > 0.0 && at < c - eps) || (yt < 0.0 && at > eps);
+            let in_low = (yt > 0.0 && at > eps) || (yt < 0.0 && at < c - eps);
+            if in_up && f[t] < fi {
+                fi = f[t];
+                i = t;
+            }
+            if in_low && f[t] > fj {
+                fj = f[t];
+                j = t;
+            }
+        }
+        if i == usize::MAX || j == usize::MAX {
+            converged = true;
+            break;
+        }
+        b_up = fi;
+        b_low = fj;
+        if b_low <= b_up + 2.0 * tol {
+            converged = true;
+            break;
+        }
+
+        // Analytic two-variable step on (i=high, j=low).
+        let (yi, yj) = (yd[i], yd[j]);
+        let ki = &k[i * n..(i + 1) * n];
+        let kj = &k[j * n..(j + 1) * n];
+        let eta = ((ki[i] + kj[j] - 2.0 * ki[j]) as f64).max(1e-12);
+        let s = yi * yj;
+        let (ai, aj) = (alpha[i], alpha[j]);
+        let (lo, hi) = if s > 0.0 {
+            ((aj + ai - c).max(0.0), (aj + ai).min(c))
+        } else {
+            ((aj - ai).max(0.0), (c + aj - ai).min(c))
+        };
+        let aj_new = (aj + yj * (b_up - b_low) / eta).clamp(lo, hi);
+        let d_aj = aj_new - aj;
+        let d_ai = -s * d_aj;
+        alpha[j] = aj_new;
+        alpha[i] += d_ai;
+
+        // Rank-2 update of the optimality vector (the per-iteration hot loop).
+        let ci = d_ai * yi;
+        let cj = d_aj * yj;
+        for t in 0..n {
+            f[t] += ci * ki[t] as f64 + cj * kj[t] as f64;
+        }
+        iters += 1;
+    }
+
+    SmoSolution {
+        alpha: alpha.iter().map(|&a| a as f32).collect(),
+        bias: (-(b_up + b_low) / 2.0) as f32,
+        iters,
+        b_up: b_up as f32,
+        b_low: b_low as f32,
+        converged,
+    }
+}
+
+/// Train a binary model: build the Gram matrix natively, run SMO, collect
+/// support vectors.
+pub fn train(prob: &BinaryProblem, p: &SvmParams) -> (BinaryModel, TrainStats) {
+    let n = prob.n();
+    let t0 = std::time::Instant::now();
+    let k = super::kernel::rbf_gram(&prob.x, n, prob.d, p.gamma);
+    let gram_secs = t0.elapsed().as_secs_f64();
+
+    let t1 = std::time::Instant::now();
+    let sol = solve_gram(&k, &prob.y, p);
+    let solve_secs = t1.elapsed().as_secs_f64();
+
+    let model = BinaryModel::from_dense(prob, &sol.alpha, sol.bias, p.gamma);
+    let stats = TrainStats {
+        iters: sol.iters,
+        converged: sol.converged,
+        gram_secs,
+        solve_secs,
+        chunks: 1,
+        n_sv: model.n_sv(),
+    };
+    (model, stats)
+}
+
+/// Dual objective W(alpha) (diagnostics / tests).
+pub fn dual_objective(k: &[f32], y: &[f32], alpha: &[f32]) -> f64 {
+    let n = y.len();
+    let ay: Vec<f64> = (0..n).map(|i| (alpha[i] * y[i]) as f64).collect();
+    let mut quad = 0.0f64;
+    for i in 0..n {
+        let mut row = 0.0f64;
+        for j in 0..n {
+            row += k[i * n + j] as f64 * ay[j];
+        }
+        quad += ay[i] * row;
+    }
+    alpha.iter().map(|&a| a as f64).sum::<f64>() - 0.5 * quad
+}
+
+/// Max KKT violation of a dual solution (0 when optimal within tol).
+pub fn kkt_violation(k: &[f32], y: &[f32], alpha: &[f32], c: f32) -> f32 {
+    let n = y.len();
+    let eps = 1e-6f32;
+    let (mut b_up, mut b_low) = (f32::INFINITY, f32::NEG_INFINITY);
+    for i in 0..n {
+        let mut fi = -y[i];
+        for j in 0..n {
+            fi += alpha[j] * y[j] * k[i * n + j];
+        }
+        let in_up = (y[i] > 0.0 && alpha[i] < c - eps) || (y[i] < 0.0 && alpha[i] > eps);
+        let in_low = (y[i] > 0.0 && alpha[i] > eps) || (y[i] < 0.0 && alpha[i] < c - eps);
+        if in_up {
+            b_up = b_up.min(fi);
+        }
+        if in_low {
+            b_low = b_low.max(fi);
+        }
+    }
+    if b_up.is_finite() && b_low.is_finite() {
+        (b_low - b_up).max(0.0)
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::BinaryProblem;
+    use crate::svm::testutil::blobs;
+
+    #[test]
+    fn converges_on_separable_blobs() {
+        let prob = blobs(60, 4, 3.0, 7);
+        let p = SvmParams::default();
+        let (model, stats) = train(&prob, &p);
+        assert!(stats.converged);
+        assert!(stats.iters > 0);
+        // training accuracy
+        let mut correct = 0;
+        for i in 0..prob.n() {
+            let dec = model.decision(prob.row(i));
+            if (dec > 0.0) == (prob.y[i] > 0.0) {
+                correct += 1;
+            }
+        }
+        assert!(correct as f64 / prob.n() as f64 >= 0.95);
+    }
+
+    #[test]
+    fn kkt_satisfied_at_convergence() {
+        let prob = blobs(40, 6, 2.0, 3);
+        let p = SvmParams::default();
+        let n = prob.n();
+        let k = crate::svm::kernel::rbf_gram(&prob.x, n, prob.d, p.gamma);
+        let sol = solve_gram(&k, &prob.y, &p);
+        assert!(sol.converged);
+        assert!(kkt_violation(&k, &prob.y, &sol.alpha, p.c) <= 2.0 * p.tol + 1e-4);
+    }
+
+    #[test]
+    fn constraints_hold() {
+        let prob = blobs(30, 3, 1.0, 11); // overlapping -> some alphas at C
+        let p = SvmParams { c: 1.0, ..Default::default() };
+        let n = prob.n();
+        let k = crate::svm::kernel::rbf_gram(&prob.x, n, prob.d, p.gamma);
+        let sol = solve_gram(&k, &prob.y, &p);
+        let mut dot = 0.0f64;
+        for i in 0..n {
+            assert!(sol.alpha[i] >= -1e-6 && sol.alpha[i] <= p.c + 1e-6);
+            dot += (sol.alpha[i] * prob.y[i]) as f64;
+        }
+        assert!(dot.abs() < 1e-3, "sum alpha_i y_i = {dot}");
+    }
+
+    #[test]
+    fn iteration_cap_respected() {
+        let prob = blobs(50, 4, 0.1, 5); // hard problem
+        let p = SvmParams { max_iter: 10, ..Default::default() };
+        let n = prob.n();
+        let k = crate::svm::kernel::rbf_gram(&prob.x, n, prob.d, p.gamma);
+        let sol = solve_gram(&k, &prob.y, &p);
+        assert_eq!(sol.iters, 10);
+        assert!(!sol.converged);
+    }
+
+    #[test]
+    fn degenerate_single_class_converges_immediately() {
+        // All +1: I_low is empty at alpha=0 -> optimal by definition.
+        let prob = BinaryProblem {
+            x: vec![0.0, 1.0, 2.0, 3.0],
+            y: vec![1.0, 1.0],
+            d: 2,
+            pos_class: 0,
+            neg_class: 1,
+        };
+        let p = SvmParams::default();
+        let k = crate::svm::kernel::rbf_gram(&prob.x, 2, 2, p.gamma);
+        let sol = solve_gram(&k, &prob.y, &p);
+        assert!(sol.converged);
+        assert_eq!(sol.iters, 0);
+    }
+}

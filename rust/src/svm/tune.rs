@@ -1,0 +1,266 @@
+//! Model selection: k-fold cross-validated grid search over (C, gamma).
+//!
+//! The paper fixes its hyper-parameters implicitly; any real deployment of
+//! this stack needs to choose them. The grid is evaluated with the same
+//! backend abstraction as training, so the search runs on the device stack
+//! or natively, and the (embarrassingly parallel) fold×point evaluations
+//! are distributed over the simulated cluster like the OvO pairs.
+
+use std::sync::Arc;
+
+use super::multiclass::ovo_pairs;
+use super::{BinaryModel, SvmParams};
+use crate::backend::{Solver, SvmBackend};
+use crate::cluster::{CostModel, Universe};
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Search space (cross product).
+#[derive(Debug, Clone)]
+pub struct Grid {
+    pub c: Vec<f32>,
+    pub gamma: Vec<f32>,
+}
+
+impl Default for Grid {
+    fn default() -> Self {
+        // The classic libsvm coarse grid, trimmed.
+        Grid {
+            c: vec![0.1, 1.0, 10.0, 100.0],
+            gamma: vec![0.01, 0.1, 1.0, 10.0],
+        }
+    }
+}
+
+/// One evaluated grid point.
+#[derive(Debug, Clone)]
+pub struct GridPoint {
+    pub c: f32,
+    pub gamma: f32,
+    /// Mean validation accuracy over the k folds.
+    pub accuracy: f64,
+    pub folds: usize,
+}
+
+/// Result of a search.
+#[derive(Debug, Clone)]
+pub struct TuneReport {
+    pub points: Vec<GridPoint>,
+    pub best: GridPoint,
+    pub wall_secs: f64,
+}
+
+/// Stratified k-fold index assignment: fold id per row.
+pub fn kfold_assign(ds: &Dataset, k: usize, rng: &mut Rng) -> Vec<usize> {
+    assert!(k >= 2, "need k >= 2 folds");
+    let mut folds = vec![0usize; ds.n];
+    for c in 0..ds.n_classes {
+        let mut idx: Vec<usize> = (0..ds.n).filter(|&i| ds.y[i] == c as i32).collect();
+        let mut r = rng.split(c as u64);
+        r.shuffle(&mut idx);
+        for (pos, &i) in idx.iter().enumerate() {
+            folds[i] = pos % k;
+        }
+    }
+    folds
+}
+
+/// Train OvO on the in-fold rows and score accuracy on the held-out fold,
+/// sequentially on the calling rank (the unit of parallel work).
+fn score_point(
+    ds: &Dataset,
+    folds: &[usize],
+    fold: usize,
+    params: &SvmParams,
+    backend: &Arc<dyn SvmBackend>,
+    solver: Solver,
+) -> Result<(usize, usize)> {
+    let train_idx: Vec<usize> = (0..ds.n).filter(|&i| folds[i] != fold).collect();
+    let val_idx: Vec<usize> = (0..ds.n).filter(|&i| folds[i] == fold).collect();
+    if val_idx.is_empty() {
+        return Ok((0, 0));
+    }
+    let train = ds.select(&train_idx);
+
+    // Train the m(m-1)/2 binaries directly (no nested Universe — the
+    // cluster parallelism lives one level up, across grid points).
+    let mut binaries: Vec<BinaryModel> = Vec::new();
+    for (a, b) in ovo_pairs(train.n_classes) {
+        let prob = train.binary_pair(a, b);
+        if prob.n() == 0 || prob.y.iter().all(|&v| v > 0.0) || prob.y.iter().all(|&v| v < 0.0)
+        {
+            return Err(Error::Train(format!("fold {fold}: empty class in pair ({a},{b})")));
+        }
+        let (model, _) = backend.train_binary(&prob, params, solver)?;
+        binaries.push(model);
+    }
+    let model = super::OvoModel::new(
+        train.n_classes,
+        train.d,
+        binaries,
+        train.class_names.clone(),
+    );
+    let correct = val_idx
+        .iter()
+        .filter(|&&i| model.predict(ds.row(i)) == ds.y[i] as usize)
+        .count();
+    Ok((correct, val_idx.len()))
+}
+
+/// Grid search with stratified k-fold CV, distributed over `workers` ranks.
+///
+/// Work units are (grid point × fold); they are round-robined over the
+/// ranks and the per-unit (correct, total) counts gathered at rank 0.
+pub fn grid_search(
+    ds: &Dataset,
+    base: &SvmParams,
+    grid: &Grid,
+    k: usize,
+    workers: usize,
+    backend: Arc<dyn SvmBackend>,
+    solver: Solver,
+    seed: u64,
+) -> Result<TuneReport> {
+    let t0 = std::time::Instant::now();
+    let folds = kfold_assign(ds, k, &mut Rng::new(seed));
+    let mut units: Vec<(usize, usize)> = Vec::new(); // (grid index, fold)
+    let n_points = grid.c.len() * grid.gamma.len();
+    for gi in 0..n_points {
+        for f in 0..k {
+            units.push((gi, f));
+        }
+    }
+
+    let universe = Universe::new(workers, CostModel::gige10());
+    let ds2 = ds.clone();
+    let folds2 = folds.clone();
+    let grid2 = grid.clone();
+    let base2 = *base;
+    type UnitOut = Vec<(usize, usize, usize, usize)>; // (gi, fold, correct, total)
+    let per_rank: Vec<Result<UnitOut>> = universe.run(move |comm| {
+        let mut out = Vec::new();
+        for (u, &(gi, fold)) in units.iter().enumerate() {
+            if u % comm.size() != comm.rank() {
+                continue;
+            }
+            let mut p = base2;
+            p.c = grid2.c[gi / grid2.gamma.len()];
+            p.gamma = grid2.gamma[gi % grid2.gamma.len()];
+            let (correct, total) = score_point(&ds2, &folds2, fold, &p, &backend, solver)?;
+            out.push((gi, fold, correct, total));
+        }
+        Ok(out)
+    });
+
+    // Aggregate.
+    let mut correct = vec![0usize; n_points];
+    let mut total = vec![0usize; n_points];
+    let mut fold_count = vec![0usize; n_points];
+    for (rank, r) in per_rank.into_iter().enumerate() {
+        for (gi, _fold, c, t) in r.map_err(|e| Error::Train(format!("rank {rank}: {e}")))? {
+            correct[gi] += c;
+            total[gi] += t;
+            fold_count[gi] += 1;
+        }
+    }
+
+    let mut points = Vec::with_capacity(n_points);
+    for gi in 0..n_points {
+        points.push(GridPoint {
+            c: grid.c[gi / grid.gamma.len()],
+            gamma: grid.gamma[gi % grid.gamma.len()],
+            accuracy: if total[gi] > 0 {
+                correct[gi] as f64 / total[gi] as f64
+            } else {
+                0.0
+            },
+            folds: fold_count[gi],
+        });
+    }
+    // Best by accuracy; ties break toward smaller C then smaller gamma
+    // (prefer the simpler model), which the sort order encodes.
+    let best = points
+        .iter()
+        .max_by(|a, b| {
+            a.accuracy
+                .partial_cmp(&b.accuracy)
+                .unwrap()
+                .then(b.c.partial_cmp(&a.c).unwrap())
+                .then(b.gamma.partial_cmp(&a.gamma).unwrap())
+        })
+        .cloned()
+        .ok_or_else(|| Error::Train("empty grid".into()))?;
+
+    Ok(TuneReport { points, best, wall_secs: t0.elapsed().as_secs_f64() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::NativeBackend;
+    use crate::data::{iris, scale::Scaler};
+
+    fn scaled_iris() -> Dataset {
+        Scaler::fit_minmax(&iris::load()).apply(&iris::load())
+    }
+
+    #[test]
+    fn kfold_is_stratified_partition() {
+        let ds = scaled_iris();
+        let folds = kfold_assign(&ds, 5, &mut Rng::new(1));
+        assert_eq!(folds.len(), 150);
+        for f in 0..5 {
+            for c in 0..3 {
+                let count = (0..150)
+                    .filter(|&i| folds[i] == f && ds.y[i] == c as i32)
+                    .count();
+                assert_eq!(count, 10, "fold {f} class {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn grid_search_finds_a_good_point_on_iris() {
+        let ds = scaled_iris();
+        let grid = Grid { c: vec![1.0, 10.0], gamma: vec![0.1, 1.0] };
+        let backend: Arc<dyn SvmBackend> = Arc::new(NativeBackend::new());
+        let report = grid_search(
+            &ds,
+            &SvmParams::default(),
+            &grid,
+            3,
+            2,
+            backend,
+            Solver::Smo,
+            7,
+        )
+        .unwrap();
+        assert_eq!(report.points.len(), 4);
+        assert!(report.points.iter().all(|p| p.folds == 3));
+        assert!(report.best.accuracy >= 0.9, "best {:?}", report.best);
+    }
+
+    #[test]
+    fn worker_count_does_not_change_scores() {
+        let ds = scaled_iris();
+        let grid = Grid { c: vec![10.0], gamma: vec![0.5, 2.0] };
+        let backend: Arc<dyn SvmBackend> = Arc::new(NativeBackend::new());
+        let r1 = grid_search(&ds, &SvmParams::default(), &grid, 3, 1,
+                             Arc::clone(&backend), Solver::Smo, 3).unwrap();
+        let r4 = grid_search(&ds, &SvmParams::default(), &grid, 3, 4,
+                             backend, Solver::Smo, 3).unwrap();
+        for (a, b) in r1.points.iter().zip(r4.points.iter()) {
+            assert_eq!(a.accuracy, b.accuracy);
+        }
+    }
+
+    #[test]
+    fn needs_two_folds() {
+        let ds = scaled_iris();
+        let result = std::panic::catch_unwind(|| {
+            kfold_assign(&ds, 1, &mut Rng::new(0));
+        });
+        assert!(result.is_err());
+    }
+}

@@ -1,0 +1,165 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `parasvm <subcommand> [--flag] [--key value] [positional...]`.
+//! Long options only; `--key=value` and `--key value` both accepted.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args, String> {
+        Args::parse_with_flags(argv, &[])
+    }
+
+    /// `known_flags` are boolean options that never consume a value — this
+    /// resolves the `--verbose positional` ambiguity explicitly.
+    pub fn parse_with_flags(
+        argv: impl IntoIterator<Item = String>,
+        known_flags: &[&str],
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminates option parsing
+                    out.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.opts.insert(body.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else if a.starts_with('-') && a.len() > 1 {
+                return Err(format!("short options not supported: {a}"));
+            } else if out.subcommand.is_none() && out.positional.is_empty() && out.opts.is_empty()
+            {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String> {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("invalid value for --{key}: {v:?}")),
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        Ok(self.get(key)?.unwrap_or(default))
+    }
+
+    /// Error out on unknown options — catches typos like `--worker` vs `--workers`.
+    pub fn finish(&self) -> Result<(), String> {
+        let seen = self.consumed.borrow();
+        let unknown: Vec<String> = self
+            .opts
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !seen.contains(k))
+            .cloned()
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown option(s): --{}", unknown.join(", --")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_with_flags(s.split_whitespace().map(String::from), &["verbose", "fast"])
+            .unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("train --dataset pavia --workers 4 --verbose out.json");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.opt("dataset"), Some("pavia"));
+        assert_eq!(a.get_or::<usize>("workers", 1).unwrap(), 4);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["out.json"]);
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("bench --table=3 --samples=800");
+        assert_eq!(a.get_or::<u32>("table", 0).unwrap(), 3);
+        assert_eq!(a.get_or::<usize>("samples", 0).unwrap(), 800);
+    }
+
+    #[test]
+    fn flag_before_end() {
+        let a = parse("run --fast --n 3");
+        assert!(a.flag("fast"));
+        assert_eq!(a.get_or::<usize>("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = parse("train --dataest pavia");
+        let _ = a.opt("dataset");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn invalid_numeric_value() {
+        let a = parse("train --workers four");
+        assert!(a.get::<usize>("workers").is_err());
+    }
+
+    #[test]
+    fn short_options_rejected() {
+        assert!(Args::parse(vec!["-x".to_string()]).is_err());
+    }
+
+    #[test]
+    fn double_dash_passthrough() {
+        let a = parse("run -- --not-an-option");
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+}

@@ -1,0 +1,46 @@
+//! Small self-contained substrates (no external crates are available in the
+//! build environment beyond `xla`/`anyhow`/`thiserror`, so the usual
+//! ecosystem pieces — RNG, JSON, CLI parsing — are implemented here).
+
+pub mod args;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// Round `n` up to the next multiple of `m` (m > 0).
+pub fn round_up(n: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    n.div_ceil(m) * m
+}
+
+/// Human-readable duration (secs with ms precision, or µs for tiny values).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 128), 0);
+        assert_eq!(round_up(1, 128), 128);
+        assert_eq!(round_up(128, 128), 128);
+        assert_eq!(round_up(129, 128), 256);
+        assert_eq!(round_up(1600, 2048), 2048);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(1.5), "1.500s");
+        assert_eq!(fmt_secs(0.0025), "2.500ms");
+        assert_eq!(fmt_secs(12e-6), "12.0µs");
+    }
+}

@@ -1,0 +1,129 @@
+//! Minimal property-based testing harness (the offline stand-in for
+//! `proptest`, which is unavailable in this build environment — see
+//! DESIGN.md §Substitutions).
+//!
+//! A property is a closure over a seeded [`Rng`]; the runner executes it
+//! for `cases` derived seeds and, on panic, re-raises with the failing
+//! seed so the case can be replayed deterministically:
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries do not inherit the xla rpath flags)
+//! use parasvm::util::prop::{check, Config};
+//! check("sort is idempotent", Config::default(), |rng| {
+//!     let mut v: Vec<u32> = (0..rng.below(50)).map(|_| rng.next_u64() as u32).collect();
+//!     v.sort();
+//!     let w = { let mut w = v.clone(); w.sort(); w };
+//!     assert_eq!(v, w);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed (each case uses `base_seed + case index`).
+    pub base_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // PARASVM_PROP_SEED replays a specific failure.
+        let base_seed = std::env::var("PARASVM_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0x5EED);
+        Config { cases: 64, base_seed }
+    }
+}
+
+/// Run `property` for `cfg.cases` seeded cases; panics with the failing
+/// seed on the first violation.
+pub fn check(name: &str, cfg: Config, property: impl Fn(&mut Rng)) {
+    for case in 0..cfg.cases {
+        let seed = cfg.base_seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property {name:?} failed at case {case} \
+                 (replay with PARASVM_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+// -- common generators -------------------------------------------------------
+
+/// Uniform usize in [lo, hi] (inclusive).
+pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    debug_assert!(hi >= lo);
+    lo + rng.below(hi - lo + 1)
+}
+
+/// f32 in [lo, hi).
+pub fn f32_in(rng: &mut Rng, lo: f32, hi: f32) -> f32 {
+    lo + (hi - lo) * rng.f32()
+}
+
+/// Random normal feature matrix (n x d), row-major.
+pub fn matrix(rng: &mut Rng, n: usize, d: usize, scale: f32) -> Vec<f32> {
+    (0..n * d).map(|_| scale * rng.normal()).collect()
+}
+
+/// Random +-1 label vector with at least one of each sign (n >= 2).
+pub fn labels(rng: &mut Rng, n: usize) -> Vec<f32> {
+    assert!(n >= 2);
+    loop {
+        let y: Vec<f32> = (0..n)
+            .map(|_| if rng.f32() < 0.5 { 1.0 } else { -1.0 })
+            .collect();
+        if y.iter().any(|&v| v > 0.0) && y.iter().any(|&v| v < 0.0) {
+            return y;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", Config { cases: 16, base_seed: 1 }, |rng| {
+            let v = rng.below(10);
+            assert!(v < 10);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "PARASVM_PROP_SEED=")]
+    fn failing_property_reports_seed() {
+        check("always-false", Config { cases: 4, base_seed: 9 }, |_| {
+            panic!("nope");
+        });
+    }
+
+    #[test]
+    fn generators_in_range() {
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let v = usize_in(&mut rng, 5, 9);
+            assert!((5..=9).contains(&v));
+            let f = f32_in(&mut rng, -1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+        let y = labels(&mut rng, 4);
+        assert_eq!(y.len(), 4);
+        let m = matrix(&mut rng, 3, 2, 1.0);
+        assert_eq!(m.len(), 6);
+    }
+}

@@ -1,0 +1,83 @@
+//! CLI integration: drive the `parasvm` binary end to end as a user would.
+
+use std::process::Command;
+
+fn parasvm() -> Command {
+    let exe = env!("CARGO_BIN_EXE_parasvm");
+    let mut c = Command::new(exe);
+    c.current_dir(env!("CARGO_MANIFEST_DIR"));
+    c
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = parasvm().args(args).output().expect("spawn parasvm");
+    assert!(
+        out.status.success(),
+        "parasvm {args:?} failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let s = run_ok(&["help"]);
+    for sub in ["train", "eval", "serve", "bench", "datasets", "artifacts", "selfcheck"] {
+        assert!(s.contains(sub), "help missing {sub}");
+    }
+}
+
+#[test]
+fn datasets_prints_table1() {
+    let s = run_ok(&["datasets"]);
+    assert!(s.contains("iris") && s.contains("pavia") && s.contains("wdbc"));
+    assert!(s.contains("102")); // pavia bands
+}
+
+#[test]
+fn artifacts_lists_registry() {
+    let s = run_ok(&["artifacts"]);
+    assert!(s.contains("smo_chunk_n128"));
+    assert!(s.contains("buckets"));
+}
+
+#[test]
+fn train_native_iris() {
+    let s = run_ok(&[
+        "train", "--dataset", "iris", "--backend", "native", "--workers", "2",
+    ]);
+    assert!(s.contains("train accuracy"));
+    assert!(s.contains("pair (0,1)"));
+}
+
+#[test]
+fn eval_gives_test_accuracy() {
+    let s = run_ok(&[
+        "eval", "--dataset", "wdbc", "--backend", "native", "--per-class", "60",
+    ]);
+    assert!(s.contains("test  accuracy"));
+}
+
+#[test]
+fn unknown_flag_is_rejected() {
+    let out = parasvm()
+        .args(["train", "--dataest", "iris"])
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown option"), "{err}");
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let out = parasvm().args(["transmogrify"]).output().expect("spawn");
+    assert!(!out.status.success());
+}
+
+#[test]
+fn selfcheck_passes_against_artifacts() {
+    let s = run_ok(&["selfcheck"]);
+    assert!(s.contains("selfcheck OK"));
+}

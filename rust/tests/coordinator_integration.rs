@@ -1,0 +1,132 @@
+//! Integration: the full Fig-4 multiclass driver over the simulated
+//! cluster with the XLA backend (requires `make artifacts`).
+
+use std::sync::Arc;
+
+use parasvm::backend::{NativeBackend, Solver, SvmBackend, XlaBackend};
+use parasvm::cluster::CostModel;
+use parasvm::coordinator::{train_multiclass, Partition, TrainConfig};
+use parasvm::data::{self, scale::Scaler};
+use parasvm::harness::hyperparams_for;
+
+fn xla() -> Arc<dyn SvmBackend> {
+    std::env::set_var(
+        "PARASVM_ARTIFACTS",
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")),
+    );
+    Arc::new(XlaBackend::open_default().expect("artifacts (run `make artifacts`)"))
+}
+
+#[test]
+fn iris_multiclass_on_device_backend() {
+    let ds = data::by_name("iris", 42).unwrap();
+    let ds = Scaler::fit_minmax(&ds).apply(&ds);
+    let cfg = TrainConfig {
+        workers: 3,
+        solver: Solver::Smo,
+        params: hyperparams_for(&ds),
+        ..Default::default()
+    };
+    let (model, report) = train_multiclass(&ds, xla(), &cfg).unwrap();
+    assert_eq!(model.binaries.len(), 3);
+    assert!(model.accuracy(&ds.x, &ds.y) >= 0.95);
+    assert!(report.pairs.iter().all(|p| p.stats.converged));
+    // Device SMO must have dispatched at least one chunk per pair.
+    assert!(report.pairs.iter().all(|p| p.stats.chunks >= 1));
+}
+
+#[test]
+fn device_and_native_backends_agree_on_accuracy() {
+    let ds = data::by_name("wdbc", 42).unwrap();
+    let ds = Scaler::fit_minmax(&ds).apply(&ds);
+    let ds = data::per_class_subset(&ds, 80, &mut parasvm::util::rng::Rng::new(1));
+    let cfg = TrainConfig {
+        workers: 2,
+        solver: Solver::Smo,
+        params: hyperparams_for(&ds),
+        ..Default::default()
+    };
+    let (m_dev, _) = train_multiclass(&ds, xla(), &cfg).unwrap();
+    let (m_nat, _) =
+        train_multiclass(&ds, Arc::new(NativeBackend::new()), &cfg).unwrap();
+    let acc_dev = m_dev.accuracy(&ds.x, &ds.y);
+    let acc_nat = m_nat.accuracy(&ds.x, &ds.y);
+    assert!(acc_dev >= 0.9, "device acc {acc_dev}");
+    assert!((acc_dev - acc_nat).abs() <= 0.05, "dev {acc_dev} vs nat {acc_nat}");
+}
+
+#[test]
+fn pavia_nine_class_all_36_pairs() {
+    let (ds, params) = parasvm::harness::multiclass_workload(40, 7);
+    let cfg = TrainConfig {
+        workers: 4,
+        solver: Solver::Smo,
+        params,
+        partition: Partition::Block,
+        net: CostModel::gige10(),
+    };
+    let (model, report) = train_multiclass(&ds, xla(), &cfg).unwrap();
+    assert_eq!(model.binaries.len(), 36); // paper: 9 classes -> 36 problems
+    assert_eq!(report.pairs.len(), 36);
+    // Block partition (Fig 4): 9 pairs per rank.
+    for rank in 0..4 {
+        assert_eq!(report.pairs.iter().filter(|p| p.rank == rank).count(), 9);
+    }
+    assert!(model.accuracy(&ds.x, &ds.y) >= 0.8);
+    // Paper's overhead claim: wire time negligible vs training.
+    assert!(report.net_sim_secs < 0.1 * report.wall_secs);
+}
+
+#[test]
+fn partition_strategies_same_model_different_layout() {
+    let ds = data::by_name("iris", 1).unwrap();
+    let ds = Scaler::fit_minmax(&ds).apply(&ds);
+    let be: Arc<dyn SvmBackend> = Arc::new(NativeBackend::new());
+    let mut models = Vec::new();
+    for partition in [Partition::Block, Partition::RoundRobin, Partition::Lpt] {
+        let cfg = TrainConfig {
+            workers: 2,
+            solver: Solver::Smo,
+            params: hyperparams_for(&ds),
+            partition,
+            ..Default::default()
+        };
+        let (m, _) = train_multiclass(&ds, Arc::clone(&be), &cfg).unwrap();
+        models.push(m);
+    }
+    // Scheduling must not change the result, only the layout.
+    for m in &models[1..] {
+        for (a, b) in m.binaries.iter().zip(models[0].binaries.iter()) {
+            assert_eq!(a.coef, b.coef);
+            assert_eq!(a.bias, b.bias);
+        }
+    }
+}
+
+#[test]
+fn gd_session_multiclass_runs_and_is_slower() {
+    // Small per-class count: the GD side pays the TF session cost model.
+    let (ds, mut params) = parasvm::harness::multiclass_workload(10, 3);
+    params.gd_epochs = 20; // keep the test quick
+    let be = xla();
+    let smo_cfg = TrainConfig {
+        workers: 2,
+        solver: Solver::Smo,
+        params,
+        ..Default::default()
+    };
+    let gd_cfg = TrainConfig {
+        workers: 2,
+        solver: Solver::Gd,
+        params,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let (_, _) = train_multiclass(&ds, Arc::clone(&be), &smo_cfg).unwrap();
+    let smo_secs = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let (m_gd, _) = train_multiclass(&ds, be, &gd_cfg).unwrap();
+    let gd_secs = t1.elapsed().as_secs_f64();
+    assert_eq!(m_gd.binaries.len(), 36);
+    assert!(gd_secs > smo_secs, "session GD should be slower: {gd_secs} vs {smo_secs}");
+}

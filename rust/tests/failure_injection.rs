@@ -1,0 +1,115 @@
+//! Failure injection: the system must fail loudly and cleanly, never hang
+//! or silently corrupt, when ranks misbehave or inputs are malformed.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use parasvm::backend::{NativeBackend, SvmBackend};
+use parasvm::cluster::{CostModel, Universe};
+use parasvm::coordinator::{train_multiclass, wire, TrainConfig};
+use parasvm::data::Dataset;
+use parasvm::runtime::{ArtifactRegistry, Device};
+use parasvm::serve::{BatchPolicy, Server};
+
+#[test]
+fn recv_from_silent_rank_times_out_with_context() {
+    let out = Universe::new(2, CostModel::free()).run(|mut comm| {
+        if comm.rank() == 1 {
+            comm.set_recv_timeout(Duration::from_millis(100));
+            // Rank 0 never sends tag 9 — this must error, not hang.
+            let err = comm.recv(0, 9).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains("timeout"), "{msg}");
+            assert!(msg.contains("tag=9"), "{msg}");
+            true
+        } else {
+            false
+        }
+    });
+    assert!(out[1]);
+}
+
+#[test]
+fn send_after_receiver_exit_errors() {
+    let out = Universe::new(2, CostModel::free()).run(|comm| {
+        if comm.rank() == 0 {
+            // Give rank 1 time to return (dropping its inbox).
+            std::thread::sleep(Duration::from_millis(150));
+            comm.send_f32s(1, 0, &[1.0]).is_err()
+        } else {
+            true // exits immediately
+        }
+    });
+    assert!(out[0], "send to a hung-up rank must fail");
+}
+
+#[test]
+fn corrupt_model_gather_is_rejected_not_misread() {
+    // Flip a count field inside an encoded model frame: decode must error.
+    let m = parasvm::svm::BinaryModel {
+        sv: vec![1.0, 2.0],
+        coef: vec![0.5],
+        d: 2,
+        bias: 0.1,
+        gamma: 1.0,
+        pos_class: 0,
+        neg_class: 1,
+    };
+    let mut frame = wire::encode_model(&m).unwrap();
+    frame[3] = 99.0; // n_sv lies about the payload
+    assert!(wire::decode_model(&frame).is_err());
+    frame[3] = -1.0;
+    assert!(wire::decode_model(&frame).is_err());
+    frame[3] = 0.5; // non-integral count
+    assert!(wire::decode_model(&frame).is_err());
+}
+
+#[test]
+fn training_with_empty_class_fails_cleanly() {
+    // Class 1 exists in names but has no samples: the (0,1) pair is
+    // degenerate and training must return an error, not panic.
+    let ds = Dataset::new(
+        "degenerate",
+        vec![0.0, 1.0, 2.0, 3.0],
+        vec![0, 0],
+        2,
+        vec!["a".into(), "b".into()],
+    );
+    let be: Arc<dyn SvmBackend> = Arc::new(NativeBackend::new());
+    let cfg = TrainConfig { workers: 2, ..Default::default() };
+    // Either an explicit error or a (useless but well-formed) model is
+    // acceptable; a panic/hang is not. The call must return.
+    let _ = train_multiclass(&ds, be, &cfg);
+}
+
+#[test]
+fn registry_rejects_truncated_artifact_file() {
+    let dir = std::env::temp_dir().join(format!("parasvm_trunc_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"digest":"x","n_buckets":[128],"d_buckets":[16],"q_buckets":[256],
+            "entries":{"gram_n128_d16":{"file":"gram_n128_d16.hlo.txt","bytes":3,
+            "tuple_out":false,"args":[]}}}"#,
+    )
+    .unwrap();
+    std::fs::write(dir.join("gram_n128_d16.hlo.txt"), "HloModule garbage {").unwrap();
+    let reg = ArtifactRegistry::open(&dir, Device::shared().unwrap()).unwrap();
+    assert!(reg.load("gram_n128_d16").is_err(), "corrupt HLO must not compile");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn server_rejects_wrong_dims_without_poisoning_the_queue() {
+    let ds = parasvm::data::iris::load();
+    let ds = parasvm::data::scale::Scaler::fit_minmax(&ds).apply(&ds);
+    let be: Arc<dyn SvmBackend> = Arc::new(NativeBackend::new());
+    let cfg = TrainConfig { workers: 1, ..Default::default() };
+    let (model, _) = train_multiclass(&ds, be, &cfg).unwrap();
+    let server = Server::start(model, BatchPolicy::default());
+    assert!(server.classify(vec![1.0]).is_err());
+    // The server still works afterwards.
+    let ok = server.classify(ds.row(0).to_vec()).unwrap();
+    assert!(ok.class < 3);
+    server.shutdown();
+}

@@ -1,0 +1,78 @@
+//! Cross-language golden test: a closed-form dataset solved independently
+//! by the rust native SMO and (in python/tests/test_golden.py) by the
+//! numpy oracle must land on the same dual optimum. The golden constants
+//! below were produced by the python oracle; both suites assert against
+//! them, so any divergence between the two implementations breaks one of
+//! the two builds.
+//!
+//! Problem: x[i][j] = sin(0.7 i + 1.3 j), y[i] = sign(sin(2.1 i)),
+//! n=64, d=8, RBF gamma=0.5, C=10, tol=1e-3.
+
+use parasvm::data::BinaryProblem;
+use parasvm::svm::{kernel, smo, SvmParams};
+
+const N: usize = 64;
+const D: usize = 8;
+const GOLDEN_OBJ: f64 = 27.681971;
+const GOLDEN_BIAS: f64 = 0.427110;
+const GOLDEN_NSV: usize = 13;
+
+fn golden_problem() -> BinaryProblem {
+    let mut x = Vec::with_capacity(N * D);
+    let mut y = Vec::with_capacity(N);
+    for i in 0..N {
+        for j in 0..D {
+            x.push((0.7 * i as f64 + 1.3 * j as f64).sin() as f32);
+        }
+        y.push(if (2.1 * i as f64).sin() > 0.0 { 1.0 } else { -1.0 });
+    }
+    BinaryProblem { x, y, d: D, pos_class: 0, neg_class: 1 }
+}
+
+fn params() -> SvmParams {
+    SvmParams { c: 10.0, gamma: 0.5, tol: 1e-3, ..Default::default() }
+}
+
+#[test]
+fn native_smo_hits_python_golden_optimum() {
+    let prob = golden_problem();
+    let p = params();
+    let k = kernel::rbf_gram(&prob.x, N, D, p.gamma);
+    let sol = smo::solve_gram(&k, &prob.y, &p);
+    assert!(sol.converged);
+    let obj = smo::dual_objective(&k, &prob.y, &sol.alpha);
+    // The dual optimum is unique in objective value; different pair orders
+    // may take different paths but must land within tolerance.
+    assert!(
+        (obj - GOLDEN_OBJ).abs() < 0.02 * GOLDEN_OBJ,
+        "dual {obj} vs golden {GOLDEN_OBJ}"
+    );
+    assert!(
+        (sol.bias as f64 - GOLDEN_BIAS).abs() < 0.05,
+        "bias {} vs golden {GOLDEN_BIAS}",
+        sol.bias
+    );
+    let nsv = sol.alpha.iter().filter(|&&a| a > 1e-6).count();
+    assert!(
+        (nsv as i64 - GOLDEN_NSV as i64).abs() <= 2,
+        "nsv {nsv} vs golden {GOLDEN_NSV}"
+    );
+}
+
+#[test]
+fn label_formula_matches_python() {
+    let prob = golden_problem();
+    let pos = prob.y.iter().filter(|&&v| v > 0.0).count();
+    assert_eq!((pos, N - pos), (42, 22)); // exact split from the formula
+}
+
+#[test]
+fn gd_reaches_most_of_the_golden_dual() {
+    let prob = golden_problem();
+    let mut p = params();
+    p.gd_epochs = 2000;
+    p.gd_lr = 0.01;
+    let k = kernel::rbf_gram(&prob.x, N, D, p.gamma);
+    let sol = parasvm::svm::gd::solve_gram(&k, &prob.y, &p);
+    assert!(sol.objective >= 0.85 * GOLDEN_OBJ, "gd {} too low", sol.objective);
+}

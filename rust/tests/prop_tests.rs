@@ -1,0 +1,267 @@
+//! Property-based tests over coordinator, cluster, data and solver
+//! invariants (via the in-repo `util::prop` harness — the offline
+//! `proptest` substitute; replay failures with PARASVM_PROP_SEED=<seed>).
+
+use parasvm::cluster::{CostModel, Universe};
+use parasvm::coordinator::pairs::{assign, Partition};
+use parasvm::coordinator::wire;
+use parasvm::data::{scale::Scaler, split, Dataset};
+use parasvm::svm::multiclass::{argmax_tiebreak, ovo_pairs};
+use parasvm::svm::{kernel, smo, SvmParams};
+use parasvm::util::prop::{check, f32_in, labels, matrix, usize_in, Config};
+use parasvm::util::rng::Rng;
+
+fn cfg(cases: usize) -> Config {
+    Config { cases, ..Default::default() }
+}
+
+// ---------------------------------------------------------------------------
+// coordinator: pair scheduling
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_every_partition_is_an_exact_cover() {
+    check("partition exact cover", cfg(128), |rng| {
+        let classes = usize_in(rng, 2, 12);
+        let n_pairs = classes * (classes - 1) / 2;
+        let workers = usize_in(rng, 1, 9);
+        let strategy = [Partition::Block, Partition::RoundRobin, Partition::Lpt]
+            [rng.below(3)];
+        let costs: Vec<f64> = (0..n_pairs).map(|_| f32_in(rng, 0.1, 100.0) as f64).collect();
+        let a = assign(n_pairs, workers, strategy, |i| costs[i]);
+        assert_eq!(a.len(), workers);
+        let mut seen: Vec<usize> = a.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..n_pairs).collect::<Vec<_>>(), "{strategy:?}");
+    });
+}
+
+#[test]
+fn prop_lpt_makespan_never_worse_than_block() {
+    check("lpt <= block makespan", cfg(64), |rng| {
+        let n_pairs = usize_in(rng, 1, 45);
+        let workers = usize_in(rng, 1, 8);
+        let costs: Vec<f64> = (0..n_pairs).map(|_| f32_in(rng, 0.1, 50.0) as f64).collect();
+        let makespan = |a: &[Vec<usize>]| {
+            a.iter()
+                .map(|b| b.iter().map(|&i| costs[i]).sum::<f64>())
+                .fold(0.0f64, f64::max)
+        };
+        let block = makespan(&assign(n_pairs, workers, Partition::Block, |i| costs[i]));
+        let lpt = makespan(&assign(n_pairs, workers, Partition::Lpt, |i| costs[i]));
+        assert!(lpt <= block + 1e-9, "lpt {lpt} > block {block}");
+    });
+}
+
+#[test]
+fn prop_ovo_pairs_canonical() {
+    check("ovo pairs canonical", cfg(32), |rng| {
+        let m = usize_in(rng, 2, 20);
+        let pairs = ovo_pairs(m);
+        assert_eq!(pairs.len(), m * (m - 1) / 2);
+        for w in pairs.windows(2) {
+            assert!(w[0] < w[1], "not sorted");
+        }
+        for (a, b) in pairs {
+            assert!(a < b && b < m);
+        }
+    });
+}
+
+#[test]
+fn prop_vote_argmax_is_deterministic_and_maximal() {
+    check("vote argmax", cfg(128), |rng| {
+        let m = usize_in(rng, 1, 10);
+        let votes: Vec<u32> = (0..m).map(|_| rng.below(10) as u32).collect();
+        let margins: Vec<f64> = (0..m).map(|_| f32_in(rng, 0.0, 5.0) as f64).collect();
+        let w = argmax_tiebreak(&votes, &margins);
+        assert!(w < m);
+        assert!(votes.iter().all(|&v| v <= votes[w]));
+        assert_eq!(w, argmax_tiebreak(&votes, &margins)); // deterministic
+    });
+}
+
+// ---------------------------------------------------------------------------
+// coordinator: wire codec
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_wire_roundtrips_any_dataset() {
+    check("wire dataset roundtrip", cfg(64), |rng| {
+        let n = usize_in(rng, 1, 60);
+        let d = usize_in(rng, 1, 20);
+        let classes = usize_in(rng, 1, 6);
+        let x = matrix(rng, n, d, 3.0);
+        let y: Vec<i32> = (0..n).map(|_| rng.below(classes) as i32).collect();
+        let names = (0..classes).map(|c| format!("c{c}")).collect();
+        let ds = Dataset::new("p", x, y, d, names);
+        let back = wire::decode_dataset(&wire::encode_dataset(&ds).unwrap(), "p").unwrap();
+        assert_eq!(back.x, ds.x);
+        assert_eq!(back.y, ds.y);
+        assert_eq!((back.n, back.d), (ds.n, ds.d));
+    });
+}
+
+#[test]
+fn prop_wire_rejects_truncation() {
+    check("wire rejects truncation", cfg(64), |rng| {
+        let n = usize_in(rng, 2, 30);
+        let d = usize_in(rng, 1, 8);
+        let x = matrix(rng, n, d, 1.0);
+        let y: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+        let ds = Dataset::new("p", x, y, d, vec!["a".into(), "b".into()]);
+        let enc = wire::encode_dataset(&ds).unwrap();
+        let cut = usize_in(rng, 1, enc.len() - 1);
+        assert!(wire::decode_dataset(&enc[..cut], "p").is_err());
+    });
+}
+
+// ---------------------------------------------------------------------------
+// cluster: collectives
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_allreduce_equals_sequential_sum() {
+    check("allreduce == sum", cfg(24), |rng| {
+        let ranks = usize_in(rng, 1, 6);
+        let len = usize_in(rng, 1, 32);
+        let data: Vec<Vec<f32>> = (0..ranks)
+            .map(|_| (0..len).map(|_| f32_in(rng, -5.0, 5.0)).collect())
+            .collect();
+        let mut want = vec![0.0f32; len];
+        for row in &data {
+            for (w, v) in want.iter_mut().zip(row) {
+                *w += v;
+            }
+        }
+        let data2 = data.clone();
+        let out = Universe::new(ranks, CostModel::free()).run(move |mut c| {
+            c.allreduce_sum_f32s(&data2[c.rank()]).unwrap()
+        });
+        for got in out {
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_gather_preserves_every_rank_payload() {
+    check("gather preserves payloads", cfg(24), |rng| {
+        let ranks = usize_in(rng, 1, 6);
+        let lens: Vec<usize> = (0..ranks).map(|_| usize_in(rng, 0, 16)).collect();
+        let lens2 = lens.clone();
+        let out = Universe::new(ranks, CostModel::free()).run(move |mut c| {
+            let mine = vec![c.rank() as f32; lens2[c.rank()]];
+            c.gather_f32s(0, &mine).unwrap()
+        });
+        let root = out[0].as_ref().unwrap();
+        for (r, buf) in root.iter().enumerate() {
+            assert_eq!(buf.len(), lens[r]);
+            assert!(buf.iter().all(|&v| v == r as f32));
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// data: scaling + splitting
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_minmax_bounds_and_inverts_shift() {
+    check("minmax into [0,1]", cfg(64), |rng| {
+        let n = usize_in(rng, 2, 40);
+        let d = usize_in(rng, 1, 10);
+        let scale = f32_in(rng, 0.5, 50.0);
+        let x = matrix(rng, n, d, scale);
+        let y = vec![0i32; n];
+        let ds = Dataset::new("p", x, y, d, vec!["a".into()]);
+        let out = Scaler::fit_minmax(&ds).apply(&ds);
+        for v in &out.x {
+            assert!((-1e-5..=1.0 + 1e-5).contains(v), "{v}");
+        }
+    });
+}
+
+#[test]
+fn prop_split_disjoint_and_stratified() {
+    check("split disjoint", cfg(48), |rng| {
+        let classes = usize_in(rng, 1, 5);
+        let per = usize_in(rng, 2, 30);
+        let n = classes * per;
+        let x = matrix(rng, n, 3, 1.0);
+        let y: Vec<i32> = (0..n).map(|i| (i / per) as i32).collect();
+        let names = (0..classes).map(|c| format!("c{c}")).collect();
+        let ds = Dataset::new("p", x, y, 3, names);
+        let frac = f32_in(rng, 0.1, 0.9) as f64;
+        let (tr, te) = split::stratified(&ds, frac, &mut Rng::new(rng.next_u64()));
+        assert_eq!(tr.n + te.n, n);
+        for c in 0..classes {
+            assert!(tr.class_count(c) >= 1);
+            let total = tr.class_count(c) + te.class_count(c);
+            assert_eq!(total, per);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// solver invariants on random problems
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_smo_solution_satisfies_kkt_and_box() {
+    check("smo KKT + box", cfg(24), |rng| {
+        let n = usize_in(rng, 4, 60);
+        let d = usize_in(rng, 1, 8);
+        let x = matrix(rng, n, d, 1.0);
+        let y = labels(rng, n);
+        let p = SvmParams {
+            c: f32_in(rng, 0.5, 20.0),
+            gamma: f32_in(rng, 0.05, 2.0),
+            ..Default::default()
+        };
+        let k = kernel::rbf_gram(&x, n, d, p.gamma);
+        let sol = smo::solve_gram(&k, &y, &p);
+        assert!(sol.converged, "did not converge");
+        let mut dot = 0.0f64;
+        for i in 0..n {
+            assert!(sol.alpha[i] >= -1e-6 && sol.alpha[i] <= p.c + 1e-6);
+            dot += (sol.alpha[i] * y[i]) as f64;
+        }
+        assert!(dot.abs() < 1e-3 * p.c as f64 * n as f64);
+        assert!(smo::kkt_violation(&k, &y, &sol.alpha, p.c) <= 2.0 * p.tol + 1e-3);
+    });
+}
+
+#[test]
+fn prop_gram_is_psd_ish_and_bounded() {
+    check("gram bounded symmetric", cfg(48), |rng| {
+        let n = usize_in(rng, 2, 40);
+        let d = usize_in(rng, 1, 10);
+        let scale = f32_in(rng, 0.1, 5.0);
+        let x = matrix(rng, n, d, scale);
+        let gamma = f32_in(rng, 0.01, 3.0);
+        let k = kernel::rbf_gram(&x, n, d, gamma);
+        for i in 0..n {
+            assert!((k[i * n + i] - 1.0).abs() < 1e-6);
+            for j in 0..n {
+                let v = k[i * n + j];
+                assert!((0.0..=1.0 + 1e-6).contains(&v));
+                assert!((v - k[j * n + i]).abs() < 1e-6);
+            }
+        }
+        // Diagonal dominance of the quadratic form at e_i basis: x^T K x >= 0
+        // for a few random vectors (PSD spot check).
+        for _ in 0..3 {
+            let v: Vec<f64> = (0..n).map(|_| rng.normal() as f64).collect();
+            let mut quad = 0.0f64;
+            for i in 0..n {
+                for j in 0..n {
+                    quad += v[i] * v[j] * k[i * n + j] as f64;
+                }
+            }
+            assert!(quad >= -1e-3, "negative quadratic form {quad}");
+        }
+    });
+}

@@ -1,0 +1,197 @@
+//! Integration: real AOT artifacts loaded and executed through the PJRT
+//! runtime, cross-checked against the native rust oracle.
+//!
+//! Requires `make artifacts`. Tests locate the artifact dir relative to the
+//! crate root (CARGO_MANIFEST_DIR) and panic with a clear message if absent
+//! — `make test` always builds artifacts first.
+
+use std::sync::Arc;
+
+use parasvm::backend::{NativeBackend, Solver, SvmBackend, XlaBackend};
+use parasvm::data::BinaryProblem;
+use parasvm::runtime::{ArtifactRegistry, Device, GramExe, PredictExe, SmoChunkExe, SmoState};
+use parasvm::svm::{kernel, smo, SvmParams};
+use parasvm::util::rng::Rng;
+
+fn registry() -> Arc<ArtifactRegistry> {
+    let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+    assert!(
+        std::path::Path::new(&dir).join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` before `cargo test`"
+    );
+    Arc::new(ArtifactRegistry::open(&dir, Device::shared().expect("device")).expect("registry"))
+}
+
+fn blobs(n_per: usize, d: usize, sep: f32, seed: u64) -> BinaryProblem {
+    let mut rng = Rng::new(seed);
+    let mut x = Vec::with_capacity(2 * n_per * d);
+    let mut y = Vec::with_capacity(2 * n_per);
+    for s in [1.0f32, -1.0] {
+        for _ in 0..n_per {
+            for t in 0..d {
+                let center = if t == 0 { s * sep } else { 0.0 };
+                x.push(center + rng.normal());
+            }
+            y.push(s);
+        }
+    }
+    BinaryProblem { x, y, d, pos_class: 0, neg_class: 1 }
+}
+
+#[test]
+fn gram_artifact_matches_native_kernel() {
+    let reg = registry();
+    let prob = blobs(30, 7, 2.0, 1); // n=60 -> bucket 128, d=7 -> bucket 16
+    let gamma = 0.4f32;
+    let gram = GramExe::new(&reg, prob.n(), prob.d).expect("gram exe");
+    assert_eq!((gram.nb, gram.db), (128, 16));
+    let k_buf = gram.run(&prob.x, prob.n(), prob.d, gamma).expect("gram run");
+    let k_dev = k_buf
+        .to_literal_sync()
+        .expect("literal")
+        .to_vec::<f32>()
+        .expect("vec");
+    assert_eq!(k_dev.len(), 128 * 128);
+
+    let k_native = kernel::rbf_gram(&prob.x, prob.n(), prob.d, gamma);
+    for i in 0..prob.n() {
+        for j in 0..prob.n() {
+            let dev = k_dev[i * 128 + j];
+            let nat = k_native[i * prob.n() + j];
+            assert!(
+                (dev - nat).abs() < 1e-4,
+                "K[{i},{j}] device {dev} vs native {nat}"
+            );
+        }
+    }
+}
+
+#[test]
+fn device_smo_agrees_with_native_oracle() {
+    let reg = registry();
+    let prob = blobs(40, 5, 2.0, 7);
+    let p = SvmParams::default();
+
+    // Device path (Fig 3 loop).
+    let gram = GramExe::new(&reg, prob.n(), prob.d).unwrap();
+    let k_buf = gram.run(&prob.x, prob.n(), prob.d, p.gamma).unwrap();
+    let smo_exe = SmoChunkExe::new(&reg, &prob.y, p.c, p.tol).unwrap();
+    let mut state = SmoState::init(&prob.y, smo_exe.nb);
+    for _ in 0..100 {
+        smo_exe.run(&k_buf, &mut state, 256).unwrap();
+        if state.converged(p.tol) {
+            break;
+        }
+    }
+    assert!(state.converged(p.tol), "device SMO did not converge");
+    assert!(state.iters > 0);
+
+    // Native oracle on the same Gram.
+    let k = kernel::rbf_gram(&prob.x, prob.n(), prob.d, p.gamma);
+    let native = smo::solve_gram(&k, &prob.y, &p);
+    let w_dev = smo::dual_objective(&k, &prob.y, &state.alpha[..prob.n()]);
+    let w_nat = smo::dual_objective(&k, &prob.y, &native.alpha);
+    assert!(
+        (w_dev - w_nat).abs() <= 0.02 * w_nat.abs().max(1.0),
+        "dual mismatch: device {w_dev} vs native {w_nat}"
+    );
+    // Padding rows stayed inert.
+    assert!(state.alpha[prob.n()..].iter().all(|&a| a == 0.0));
+    // KKT holds for the device solution.
+    assert!(smo::kkt_violation(&k, &prob.y, &state.alpha[..prob.n()], p.c) <= 2.0 * p.tol + 1e-3);
+}
+
+#[test]
+fn xla_backend_smo_end_to_end() {
+    let reg = registry();
+    let be = XlaBackend::new(reg);
+    let prob = blobs(50, 6, 3.0, 3);
+    let p = SvmParams::default();
+    let (model, stats) = be.train_binary(&prob, &p, Solver::Smo).unwrap();
+    assert!(stats.converged);
+    assert!(stats.chunks >= 1);
+    assert!(model.n_sv() > 0);
+    let acc = (0..prob.n())
+        .filter(|&i| (model.decision(prob.row(i)) > 0.0) == (prob.y[i] > 0.0))
+        .count() as f64
+        / prob.n() as f64;
+    assert!(acc >= 0.95, "accuracy {acc}");
+}
+
+#[test]
+fn xla_backend_gd_matches_native_gd() {
+    let reg = registry();
+    let be = XlaBackend::new(reg);
+    let nat = NativeBackend::new();
+    let prob = blobs(40, 4, 2.5, 9);
+    let p = SvmParams { gd_epochs: 300, gd_lr: 0.01, ..Default::default() };
+
+    let (m_dev, s_dev) = be.train_binary(&prob, &p, Solver::Gd).unwrap();
+    let (m_nat, _) = nat.train_binary(&prob, &p, Solver::Gd).unwrap();
+    assert_eq!(s_dev.iters, 300);
+
+    // Same fixed-step algorithm -> decisions agree closely.
+    let mut max_diff = 0.0f32;
+    for i in 0..prob.n() {
+        let diff = (m_dev.decision(prob.row(i)) - m_nat.decision(prob.row(i))).abs();
+        max_diff = max_diff.max(diff);
+    }
+    assert!(max_diff < 0.05, "max decision diff {max_diff}");
+}
+
+#[test]
+fn predict_artifact_matches_model_decision() {
+    let reg = registry();
+    let be = XlaBackend::new(Arc::clone(&reg));
+    let prob = blobs(30, 5, 2.0, 11);
+    let p = SvmParams::default();
+    let (model, _) = be.train_binary(&prob, &p, Solver::Smo).unwrap();
+
+    // Dense alpha reconstruction for the predict artifact: use SV data.
+    let n_sv = model.n_sv();
+    let alphas: Vec<f32> = model.coef.iter().map(|c| c.abs()).collect();
+    let ys: Vec<f32> = model.coef.iter().map(|c| c.signum()).collect();
+    let pred = PredictExe::new(
+        &reg, &model.sv, &ys, &alphas, n_sv, model.d, model.bias, model.gamma,
+    )
+    .unwrap();
+
+    // 300 queries forces two bucket slices (qb = 256).
+    let mut rng = Rng::new(5);
+    let q = 300usize;
+    let queries: Vec<f32> = (0..q * prob.d).map(|_| rng.normal() * 2.0).collect();
+    let dec_dev = pred.run(&queries, q, prob.d).unwrap();
+    assert_eq!(dec_dev.len(), q);
+    for i in 0..q {
+        let dec_nat = model.decision(&queries[i * prob.d..(i + 1) * prob.d]);
+        assert!(
+            (dec_dev[i] - dec_nat).abs() < 1e-3,
+            "query {i}: device {} vs native {dec_nat}",
+            dec_dev[i]
+        );
+    }
+}
+
+#[test]
+fn registry_lists_and_warms() {
+    let reg = registry();
+    assert_eq!(reg.names().len(), 60);
+    assert_eq!(reg.compiled_count(), 0);
+    let warmed = reg.warm("smo_chunk_n128").unwrap();
+    assert_eq!(warmed, 1);
+    assert_eq!(reg.compiled_count(), 1);
+}
+
+#[test]
+fn chunk_budget_bounds_device_iterations() {
+    let reg = registry();
+    let prob = blobs(40, 4, 0.5, 13); // overlapping -> many iterations
+    let p = SvmParams::default();
+    let gram = GramExe::new(&reg, prob.n(), prob.d).unwrap();
+    let k_buf = gram.run(&prob.x, prob.n(), prob.d, p.gamma).unwrap();
+    let smo_exe = SmoChunkExe::new(&reg, &prob.y, p.c, p.tol).unwrap();
+    let mut state = SmoState::init(&prob.y, smo_exe.nb);
+    smo_exe.run(&k_buf, &mut state, 17).unwrap();
+    assert!(state.iters <= 17);
+    assert_eq!(state.chunks, 1);
+}
