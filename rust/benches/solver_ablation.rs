@@ -1,0 +1,49 @@
+//! Solver-engine ablation bench: dense vs cached vs cached+shrink vs
+//! parallel working-set SMO on the Pavia subset, plus sequential- vs
+//! concurrent-pair OvO multiclass on a 4-worker universe.
+//!
+//! Native-only — runs from a clean checkout, no `make artifacts` needed:
+//!
+//!     cargo bench --offline --bench solver_ablation
+//!     PARASVM_BENCH_QUICK=1 cargo bench --offline --bench solver_ablation
+//!
+//! Writes the rendered table to stdout, `results/solver_ablation.csv`, and
+//! the machine-readable baseline to `BENCH_solver.json` (repo root when run
+//! from the workspace root; override with PARASVM_BENCH_JSON).
+
+use parasvm::harness::run_solver_ablation;
+use parasvm::metrics::bench::BenchConfig;
+
+fn main() {
+    let quick = std::env::var("PARASVM_BENCH_QUICK").is_ok();
+    let cfg = BenchConfig {
+        warmup: 1,
+        min_samples: if quick { 2 } else { 3 },
+        max_samples: if quick { 3 } else { 5 },
+        cv_target: 0.15,
+    };
+    // Paper-scale subset by default, CI-scale under QUICK.
+    let (per_class, ovo_per_class) = if quick { (100, 30) } else { (400, 100) };
+
+    let (table, ablation) =
+        run_solver_ablation(per_class, ovo_per_class, &cfg, 42).expect("ablation");
+    println!("{}", table.render());
+    std::fs::create_dir_all("results").ok();
+    table
+        .save_csv(std::path::Path::new("results/solver_ablation.csv"))
+        .expect("write csv");
+
+    let json_path =
+        std::env::var("PARASVM_BENCH_JSON").unwrap_or_else(|_| "BENCH_solver.json".into());
+    std::fs::write(&json_path, ablation.to_json().to_string_pretty()).expect("write json");
+    println!("baseline written to {json_path}");
+
+    // The speedup story must at least not regress into the absurd: the
+    // parallel engine may not be slower than 2x dense on this workload.
+    let dense = ablation.engines[0].median_secs;
+    let par = ablation.engines.last().unwrap().median_secs;
+    assert!(
+        par < dense * 2.0,
+        "parallel engine pathologically slow: {par:.4}s vs dense {dense:.4}s"
+    );
+}

@@ -21,11 +21,16 @@ use crate::data::BinaryProblem;
 use crate::error::Result;
 use crate::svm::{BinaryModel, SvmParams, TrainStats};
 
-/// Which dual solver to run (the paper's two stacks + one ablation).
+/// Which dual solver to run (the paper's two stacks + ablations + the
+/// large-scale cached engine).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Solver {
     /// Chunked SMO — the MPI-CUDA stack's solver (early exit on KKT).
     Smo,
+    /// Working-set SMO with the LRU kernel-row cache, adaptive shrinking
+    /// and thread-parallel hot paths (`svm::solver`). Host-executed on
+    /// every backend; never materializes the full Gram matrix up front.
+    SmoCached,
     /// Fixed-step projected gradient, TF-1.8 session style: one device
     /// dispatch per step with the Gram recomputed in-graph from re-fed
     /// inputs — the paper's TensorFlow stack.
@@ -42,9 +47,12 @@ impl std::str::FromStr for Solver {
     fn from_str(s: &str) -> std::result::Result<Solver, String> {
         match s {
             "smo" | "cuda" => Ok(Solver::Smo),
+            "smo-cached" | "smocached" | "cached" => Ok(Solver::SmoCached),
             "gd" | "tf" | "tensorflow" => Ok(Solver::Gd),
             "gd-fused" | "gdfused" => Ok(Solver::GdFused),
-            other => Err(format!("unknown solver {other:?} (want smo|gd|gd-fused)")),
+            other => Err(format!(
+                "unknown solver {other:?} (want smo|smo-cached|gd|gd-fused)"
+            )),
         }
     }
 }

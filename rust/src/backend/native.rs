@@ -3,6 +3,7 @@
 use super::{Solver, SvmBackend};
 use crate::data::BinaryProblem;
 use crate::error::Result;
+use crate::svm::solver as dual;
 use crate::svm::{gd, smo, BinaryModel, SvmParams, TrainStats};
 
 /// Host CPU backend: scalar rust implementations of both solvers.
@@ -28,6 +29,7 @@ impl SvmBackend for NativeBackend {
     ) -> Result<(BinaryModel, TrainStats)> {
         Ok(match solver {
             Solver::Smo => smo::train(prob, params),
+            Solver::SmoCached => dual::train_cached(prob, params),
             // Natively there is no dispatch boundary, so session-style and
             // fused GD coincide: one in-process loop over a cached Gram.
             Solver::Gd | Solver::GdFused => gd::train(prob, params),
@@ -61,8 +63,28 @@ mod tests {
     fn solver_parse() {
         assert_eq!("smo".parse::<Solver>().unwrap(), Solver::Smo);
         assert_eq!("cuda".parse::<Solver>().unwrap(), Solver::Smo);
+        assert_eq!("smo-cached".parse::<Solver>().unwrap(), Solver::SmoCached);
+        assert_eq!("cached".parse::<Solver>().unwrap(), Solver::SmoCached);
         assert_eq!("tf".parse::<Solver>().unwrap(), Solver::Gd);
         assert!("mystery".parse::<Solver>().is_err());
+    }
+
+    #[test]
+    fn cached_solver_agrees_with_dense_smo() {
+        // At this size auto_engine routes SmoCached to the dense oracle;
+        // this test pins the enum routing (engine-vs-engine numerics are
+        // covered by the svm::solver test suites).
+        let prob = blobs(35, 4, 1.5, 6);
+        let be = NativeBackend::new();
+        let p = SvmParams::default();
+        let (m_dense, s_dense) = be.train_binary(&prob, &p, Solver::Smo).unwrap();
+        let (m_cached, s_cached) = be.train_binary(&prob, &p, Solver::SmoCached).unwrap();
+        assert!(s_dense.converged && s_cached.converged);
+        for i in 0..prob.n() {
+            let a = m_dense.decision(prob.row(i));
+            let b = m_cached.decision(prob.row(i));
+            assert!((a - b).abs() < 1e-3, "row {i}: {a} vs {b}");
+        }
     }
 
     #[test]

@@ -176,6 +176,11 @@ impl SvmBackend for XlaBackend {
     ) -> Result<(BinaryModel, TrainStats)> {
         match solver {
             Solver::Smo => self.train_smo(prob, params),
+            // The cached working-set engine is a host-side solver (its
+            // whole point is *not* materializing the Gram the device loop
+            // needs); on this backend it serves as the large-n fallback
+            // for problems past the device's n-bucket budget.
+            Solver::SmoCached => Ok(crate::svm::solver::train_cached(prob, params)),
             Solver::Gd => self.train_gd_session(prob, params),
             Solver::GdFused => self.train_gd_fused(prob, params),
         }

@@ -47,6 +47,8 @@ pub struct RunConfig {
     pub workers: usize,
     pub partition: Partition,
     pub params: SvmParams,
+    /// Concurrent binary problems per rank (0 = auto, 1 = sequential).
+    pub pair_threads: usize,
     /// Interconnect latency (seconds) and bandwidth (bytes/sec).
     pub net_latency: f64,
     pub net_bandwidth: f64,
@@ -64,6 +66,7 @@ impl Default for RunConfig {
             workers: 4,
             partition: Partition::Block,
             params: SvmParams::default(),
+            pair_threads: 1,
             net_latency: 50e-6,
             net_bandwidth: 1.25e9,
         }
@@ -78,6 +81,7 @@ impl RunConfig {
             params: self.params,
             partition: self.partition,
             net: CostModel { latency: self.net_latency, bandwidth: self.net_bandwidth },
+            pair_threads: self.pair_threads,
         }
     }
 
@@ -91,6 +95,8 @@ impl RunConfig {
         self.seed = args.get("seed").map_err(e)?.unwrap_or(self.seed);
         self.train_frac = args.get("train-frac").map_err(e)?.unwrap_or(self.train_frac);
         self.workers = args.get("workers").map_err(e)?.unwrap_or(self.workers);
+        self.pair_threads =
+            args.get("pair-threads").map_err(e)?.unwrap_or(self.pair_threads);
         if let Some(v) = args.opt("backend") {
             self.backend = v.parse().map_err(e)?;
         }
@@ -135,11 +141,13 @@ impl RunConfig {
                 "solver",
                 json::s(match self.solver {
                     Solver::Smo => "smo",
+                    Solver::SmoCached => "smo-cached",
                     Solver::Gd => "gd",
                     Solver::GdFused => "gd-fused",
                 }),
             ),
             ("workers", json::num(self.workers as f64)),
+            ("pair_threads", json::num(self.pair_threads as f64)),
             (
                 "partition",
                 json::s(match self.partition {
@@ -183,6 +191,9 @@ impl RunConfig {
         }
         if let Some(v) = gn("workers") {
             c.workers = v as usize;
+        }
+        if let Some(v) = gn("pair_threads") {
+            c.pair_threads = v as usize;
         }
         if let Some(v) = gs("partition") {
             c.partition = v.parse().map_err(Error::Config)?;

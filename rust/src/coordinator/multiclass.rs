@@ -35,6 +35,13 @@ pub struct TrainConfig {
     pub params: SvmParams,
     pub partition: Partition,
     pub net: CostModel,
+    /// Concurrent binary problems per rank: each rank trains its OvO share
+    /// on up to this many threads from the shared host pool instead of
+    /// sequentially. 0 = auto (available cores / ranks), 1 = the paper's
+    /// sequential-per-rank baseline. Model bytes and per-pair stats are
+    /// emitted in canonical pair order either way, so results are
+    /// bit-identical to the sequential schedule.
+    pub pair_threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -45,8 +52,19 @@ impl Default for TrainConfig {
             params: SvmParams::default(),
             partition: Partition::Block,
             net: CostModel::gige10(),
+            pair_threads: 1,
         }
     }
+}
+
+/// Resolve the per-rank pair concurrency: explicit value, or cores/ranks.
+fn resolve_pair_threads(requested: usize, ranks: usize, n_pairs: usize) -> usize {
+    let t = if requested == 0 {
+        (crate::svm::solver::parallel::auto_threads() / ranks.max(1)).max(1)
+    } else {
+        requested
+    };
+    t.min(n_pairs.max(1))
 }
 
 /// Per-pair outcome (classes, stats, owning rank).
@@ -133,19 +151,74 @@ pub fn train_multiclass(
             [comm.rank()]
         .clone();
 
-        // (3) train my share.
+        // (3) train my share — the rank's pairs run concurrently on the
+        // shared host pool (pair_threads strands), each strand walking a
+        // contiguous stripe of the assignment. Results land in assignment
+        // order, so the emitted frames match the sequential schedule.
         let busy = std::time::Instant::now();
-        let mut models = Vec::with_capacity(mine.len());
+        let probs: Vec<(usize, crate::data::BinaryProblem)> = mine
+            .iter()
+            .map(|&pi| {
+                let (a, b) = pairs[pi];
+                (pi, local_ds.binary_pair(a, b))
+            })
+            .collect();
+        let par = resolve_pair_threads(cfg2.pair_threads, comm.size(), probs.len());
+        type PairOut = Result<(crate::svm::BinaryModel, TrainStats)>;
+        let mut outs: Vec<Option<PairOut>> = (0..probs.len()).map(|_| None).collect();
+        // Fail fast like the old sequential `?` loop: the first error stops
+        // every strand from starting new pairs.
+        let abort = std::sync::atomic::AtomicBool::new(false);
+        let order = std::sync::atomic::Ordering::Relaxed;
+        if par <= 1 {
+            for (slot, (_, prob)) in outs.iter_mut().zip(probs.iter()) {
+                let r = backend.train_binary(prob, &cfg2.params, cfg2.solver);
+                let failed = r.is_err();
+                *slot = Some(r);
+                if failed {
+                    break;
+                }
+            }
+        } else {
+            let stripe = probs.len().div_ceil(par);
+            std::thread::scope(|s| {
+                let backend = &backend;
+                let cfg2 = &cfg2;
+                let probs = &probs;
+                let abort = &abort;
+                for (ci, chunk) in outs.chunks_mut(stripe).enumerate() {
+                    s.spawn(move || {
+                        for (off, slot) in chunk.iter_mut().enumerate() {
+                            if abort.load(order) {
+                                break;
+                            }
+                            let (_, prob) = &probs[ci * stripe + off];
+                            let r = backend.train_binary(prob, &cfg2.params, cfg2.solver);
+                            if r.is_err() {
+                                abort.store(true, order);
+                            }
+                            *slot = Some(r);
+                        }
+                    });
+                }
+            });
+        }
+        let mut models = Vec::with_capacity(probs.len());
         let mut stats_frame: Vec<f32> = Vec::new();
-        for &pi in &mine {
-            let (a, b) = pairs[pi];
-            let prob = local_ds.binary_pair(a, b);
-            let n_samples = prob.n();
-            let (model, st) = backend.train_binary(&prob, &cfg2.params, cfg2.solver)?;
+        // Surface the first strand error (scanning all slots: the failing
+        // pair may sit at any stripe offset; later slots are then None).
+        if let Some(pos) = outs.iter().position(|o| matches!(o, Some(Err(_)))) {
+            let Some(Some(Err(e))) = outs.into_iter().nth(pos) else { unreachable!() };
+            return Err(e);
+        }
+        for ((pi, prob), out) in probs.iter().zip(outs.into_iter()) {
+            let (model, st) = out.ok_or_else(|| {
+                Error::Train("pair result missing (training aborted)".into())
+            })??;
             // pair stats frame: [pair_idx, n, iters, converged, gram_s, solve_s, chunks, n_sv]
             stats_frame.extend_from_slice(&[
-                pi as f32,
-                n_samples as f32,
+                *pi as f32,
+                prob.n() as f32,
                 st.iters as f32,
                 if st.converged { 1.0 } else { 0.0 },
                 st.gram_secs as f32,
@@ -278,6 +351,37 @@ mod tests {
         assert!(r4.net_bytes > 0);
         assert!(r4.net_messages >= 6);
         assert!(r4.net_sim_secs > 0.0);
+    }
+
+    #[test]
+    fn parallel_pairs_give_identical_models_and_stats() {
+        let ds = iris::load();
+        let be = Arc::new(NativeBackend::new());
+        let seq = TrainConfig { workers: 2, pair_threads: 1, ..Default::default() };
+        let par = TrainConfig { workers: 2, pair_threads: 3, ..Default::default() };
+        let (m_seq, r_seq) = train_multiclass(&ds, be.clone(), &seq).unwrap();
+        let (m_par, r_par) = train_multiclass(&ds, be, &par).unwrap();
+        for (a, b) in m_seq.binaries.iter().zip(m_par.binaries.iter()) {
+            assert_eq!((a.pos_class, a.neg_class), (b.pos_class, b.neg_class));
+            assert_eq!(a.coef, b.coef);
+            assert_eq!(a.bias, b.bias);
+        }
+        // Per-pair stats preserved in canonical order under concurrency.
+        assert_eq!(r_seq.pairs.len(), r_par.pairs.len());
+        for (a, b) in r_seq.pairs.iter().zip(r_par.pairs.iter()) {
+            assert_eq!((a.pos_class, a.neg_class), (b.pos_class, b.neg_class));
+            assert_eq!(a.stats.iters, b.stats.iters);
+            assert_eq!(a.stats.n_sv, b.stats.n_sv);
+            assert_eq!(a.rank, b.rank);
+        }
+    }
+
+    #[test]
+    fn auto_pair_threads_resolves_sanely() {
+        assert_eq!(super::resolve_pair_threads(1, 4, 10), 1);
+        assert_eq!(super::resolve_pair_threads(8, 4, 3), 3); // capped by pairs
+        assert!(super::resolve_pair_threads(0, 1, 100) >= 1); // auto
+        assert_eq!(super::resolve_pair_threads(0, 4, 0), 1); // empty share
     }
 
     #[test]

@@ -1,33 +1,78 @@
 //! Library-wide error type.
+//!
+//! Hand-rolled Display/Error impls (no `thiserror` in the offline build
+//! environment — same policy as `util`'s RNG/JSON/CLI substrates).
+
+use std::fmt;
 
 pub type Result<T> = std::result::Result<T, Error>;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("data error: {0}")]
     Data(String),
-
-    #[error("config error: {0}")]
     Config(String),
-
-    #[error("runtime error: {0}")]
     Runtime(String),
-
-    #[error("artifact error: {0}")]
     Artifact(String),
-
-    #[error("cluster error: {0}")]
     Cluster(String),
-
-    #[error("training error: {0}")]
     Train(String),
-
-    #[error("serve error: {0}")]
     Serve(String),
+    Xla(xla::Error),
+    Io(std::io::Error),
+}
 
-    #[error(transparent)]
-    Xla(#[from] xla::Error),
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Cluster(m) => write!(f, "cluster error: {m}"),
+            Error::Train(m) => write!(f, "training error: {m}"),
+            Error::Serve(m) => write!(f, "serve error: {m}"),
+            // Transparent: the PJRT layer's message stands on its own.
+            Error::Xla(e) => write!(f, "{e}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Xla(e) => Some(e),
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Error {
+        Error::Xla(e)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::Io(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_match_variants() {
+        assert_eq!(Error::Data("x".into()).to_string(), "data error: x");
+        assert_eq!(Error::Train("y".into()).to_string(), "training error: y");
+        assert!(Error::Io(std::io::Error::other("z")).to_string().contains("z"));
+    }
+
+    #[test]
+    fn xla_errors_pass_through_transparently() {
+        let e = Error::from(xla::Error("boom".into()));
+        assert_eq!(e.to_string(), "xla stub: boom");
+    }
 }

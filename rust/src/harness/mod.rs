@@ -10,9 +10,11 @@
 //! measured-vs-paper shape comparisons side by side.
 
 pub mod paper;
+pub mod solver_ablation;
 pub mod tables;
 pub mod workloads;
 
+pub use solver_ablation::{run_solver_ablation, SolverAblation};
 pub use tables::{
     run_table3, run_table4, run_table5, run_table6, Table3Row, Table4Row, Table56Row,
 };

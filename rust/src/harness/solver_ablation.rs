@@ -1,0 +1,242 @@
+//! Solver-engine ablation: dense vs cached vs cached+shrink vs parallel,
+//! plus sequential- vs concurrent-pair OvO multiclass.
+//!
+//! Unlike the paper-table runners this workload is **native-only** (no AOT
+//! artifacts, no device), so it runs from a clean checkout and in CI — it
+//! is the reproducible speedup story for the `svm::solver` subsystem. The
+//! bench wrapper (`benches/solver_ablation.rs`) renders the table and
+//! writes the machine-readable `BENCH_solver.json` that later PRs diff
+//! against.
+
+use std::sync::Arc;
+
+use crate::backend::{NativeBackend, Solver, SvmBackend};
+use crate::coordinator::{train_multiclass, TrainConfig};
+use crate::error::Result;
+use crate::metrics::bench::{bench, BenchConfig};
+use crate::metrics::table::Table;
+use crate::svm::solver::{DenseSmo, DualSolver, EngineConfig, WorkingSetSmo};
+use crate::util::json::{self, Json};
+
+/// One engine row of the ablation.
+#[derive(Debug, Clone)]
+pub struct EngineRow {
+    pub engine: String,
+    pub median_secs: f64,
+    pub speedup_vs_dense: f64,
+    pub iters: usize,
+    pub cache_hit_rate: f64,
+    pub max_resident_rows: usize,
+    pub min_active: usize,
+}
+
+/// The OvO pair-concurrency comparison (4-worker universe).
+#[derive(Debug, Clone)]
+pub struct OvoRow {
+    pub label: String,
+    pub pair_threads: usize,
+    pub median_wall_secs: f64,
+    pub makespan_secs: f64,
+}
+
+/// Full ablation result.
+#[derive(Debug, Clone)]
+pub struct SolverAblation {
+    pub dataset: String,
+    pub n: usize,
+    pub d: usize,
+    pub engines: Vec<EngineRow>,
+    pub ovo: Vec<OvoRow>,
+}
+
+impl SolverAblation {
+    /// Machine-readable form for `BENCH_solver.json`.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("schema", json::s("parasvm-solver-ablation/v1")),
+            ("dataset", json::s(&self.dataset)),
+            ("n", json::num(self.n as f64)),
+            ("d", json::num(self.d as f64)),
+            (
+                "engines",
+                json::arr(
+                    self.engines
+                        .iter()
+                        .map(|r| {
+                            json::obj(vec![
+                                ("engine", json::s(&r.engine)),
+                                ("median_secs", json::num(r.median_secs)),
+                                ("speedup_vs_dense", json::num(r.speedup_vs_dense)),
+                                ("iters", json::num(r.iters as f64)),
+                                ("cache_hit_rate", json::num(r.cache_hit_rate)),
+                                (
+                                    "max_resident_rows",
+                                    json::num(r.max_resident_rows as f64),
+                                ),
+                                ("min_active", json::num(r.min_active as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "ovo_4_workers",
+                json::arr(
+                    self.ovo
+                        .iter()
+                        .map(|r| {
+                            json::obj(vec![
+                                ("label", json::s(&r.label)),
+                                ("pair_threads", json::num(r.pair_threads as f64)),
+                                ("median_wall_secs", json::num(r.median_wall_secs)),
+                                ("makespan_secs", json::num(r.makespan_secs)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// The engine lineup: name + factory (budget is rows, n/4 when capped).
+fn engines(n: usize) -> Vec<(&'static str, Box<dyn DualSolver>)> {
+    let budget = (n / 4).max(2);
+    vec![
+        ("dense", Box::new(DenseSmo { threads: 1 }) as Box<dyn DualSolver>),
+        (
+            "cached (n/4 rows)",
+            Box::new(WorkingSetSmo::new(EngineConfig::cached(budget))),
+        ),
+        (
+            "cached+shrink",
+            Box::new(WorkingSetSmo::new(EngineConfig::cached_shrink(budget))),
+        ),
+        (
+            "parallel (all cores)",
+            Box::new(WorkingSetSmo::new(EngineConfig::parallel(budget))),
+        ),
+    ]
+}
+
+/// Run the ablation on a Pavia binary subset (`per_class` rows per class)
+/// and a 9-class Pavia OvO workload on a 4-worker universe.
+pub fn run_solver_ablation(
+    per_class: usize,
+    ovo_per_class: usize,
+    cfg: &BenchConfig,
+    seed: u64,
+) -> Result<(Table, SolverAblation)> {
+    let w = super::binary_workload("pavia", per_class, seed);
+    let prob = w.problem();
+    let mut table = Table::new(
+        format!(
+            "Solver ablation — pavia binary {}x{} (dense vs cached vs shrink vs parallel)",
+            prob.n(),
+            prob.d
+        ),
+        &["engine", "median (s)", "vs dense", "iters", "hit rate", "resident", "active min"],
+    );
+
+    let mut rows: Vec<EngineRow> = Vec::new();
+    let mut dense_median = 0.0f64;
+    for (name, engine) in engines(prob.n()) {
+        let mut last = None;
+        let r = bench(name, cfg, || {
+            last = Some(engine.solve(&prob, &w.params));
+        });
+        let out = last.expect("bench ran at least once");
+        let median = r.summary.median;
+        if rows.is_empty() {
+            dense_median = median;
+        }
+        let row = EngineRow {
+            engine: name.to_string(),
+            median_secs: median,
+            speedup_vs_dense: if median > 0.0 { dense_median / median } else { 0.0 },
+            iters: out.solution.iters,
+            cache_hit_rate: out.cache.hit_rate(),
+            max_resident_rows: out.cache.max_resident,
+            min_active: out.shrink.min_active,
+        };
+        table.row(&[
+            row.engine.clone(),
+            format!("{:.4}", row.median_secs),
+            format!("{:.2}x", row.speedup_vs_dense),
+            row.iters.to_string(),
+            format!("{:.3}", row.cache_hit_rate),
+            row.max_resident_rows.to_string(),
+            row.min_active.to_string(),
+        ]);
+        rows.push(row);
+    }
+
+    // OvO: sequential pairs vs concurrent pairs on the same 4-rank world.
+    let (ds, params) = super::multiclass_workload(ovo_per_class, seed);
+    let be: Arc<dyn SvmBackend> = Arc::new(NativeBackend::new());
+    let mut ovo_rows = Vec::new();
+    for (label, pair_threads) in [("ovo sequential pairs", 1usize), ("ovo parallel pairs", 0)] {
+        let tc = TrainConfig {
+            workers: 4,
+            solver: Solver::Smo,
+            params,
+            pair_threads,
+            ..Default::default()
+        };
+        let mut last = None;
+        let r = bench(label, cfg, || {
+            let (_, rep) = train_multiclass(&ds, Arc::clone(&be), &tc).unwrap();
+            last = Some(rep);
+        });
+        let rep = last.expect("bench ran at least once");
+        let row = OvoRow {
+            label: label.to_string(),
+            pair_threads,
+            median_wall_secs: r.summary.median,
+            makespan_secs: rep.makespan_secs(),
+        };
+        table.row(&[
+            row.label.clone(),
+            format!("{:.4}", row.median_wall_secs),
+            String::new(),
+            String::new(),
+            String::new(),
+            String::new(),
+            format!("mk {:.4}s", row.makespan_secs),
+        ]);
+        ovo_rows.push(row);
+    }
+
+    let ablation = SolverAblation {
+        dataset: w.name.clone(),
+        n: prob.n(),
+        d: prob.d,
+        engines: rows,
+        ovo: ovo_rows,
+    };
+    Ok((table, ablation))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_ablation_runs_end_to_end() {
+        let cfg = BenchConfig { warmup: 0, min_samples: 1, max_samples: 1, cv_target: 1.0 };
+        let (table, ab) = run_solver_ablation(30, 8, &cfg, 3).unwrap();
+        assert_eq!(ab.engines.len(), 4);
+        assert_eq!(ab.ovo.len(), 2);
+        assert!((ab.engines[0].speedup_vs_dense - 1.0).abs() < 1e-9);
+        // Budgeted engines must never have materialized the full Gram.
+        for r in &ab.engines[1..] {
+            assert!(r.max_resident_rows < ab.n, "{}", r.engine);
+        }
+        let rendered = table.render();
+        assert!(rendered.contains("dense"));
+        assert!(rendered.contains("parallel"));
+        let j = ab.to_json();
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some("parasvm-solver-ablation/v1"));
+        assert_eq!(j.get("engines").and_then(Json::as_arr).unwrap().len(), 4);
+    }
+}

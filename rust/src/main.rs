@@ -63,8 +63,10 @@ fn print_help() {
          common options:\n\
            --dataset NAME     iris | wdbc | pavia (default iris)\n\
            --backend KIND     xla | native (default xla)\n\
-           --solver NAME      smo (CUDA-analog) | gd (TF-analog)\n\
+           --solver NAME      smo (CUDA-analog) | smo-cached (working-set +\n\
+                              LRU row cache + shrinking) | gd (TF-analog)\n\
            --workers N        simulated MPI ranks (default 4)\n\
+           --pair-threads N   concurrent OvO pairs per rank (0 auto, 1 seq)\n\
            --per-class N      subsample N points per class\n\
            --config FILE      load a JSON RunConfig (CLI flags override)\n\
            --seed N           dataset/run seed (default 42)\n\

@@ -67,10 +67,17 @@ pub fn solve_gram(k: &[f32], y: &[f32], p: &SvmParams) -> GdSolution {
 }
 
 /// Train a binary model with the GD solver (native Gram + native GD).
+///
+/// The Gram build goes through the solver subsystem's row path
+/// (bit-identical values to `kernel::rbf_gram`), serial per problem: the
+/// TF-analog is a sequential-baseline profile and the coordinator already
+/// parallelizes across OvO pairs. The fixed-step GD loop itself stays
+/// dense — its per-epoch full matvec touches every row every step, so a
+/// row cache below n would only thrash.
 pub fn train(prob: &BinaryProblem, p: &SvmParams) -> (BinaryModel, TrainStats) {
     let n = prob.n();
     let t0 = std::time::Instant::now();
-    let k = super::kernel::rbf_gram(&prob.x, n, prob.d, p.gamma);
+    let k = super::solver::parallel::rbf_gram_parallel(&prob.x, n, prob.d, p.gamma, 1);
     let gram_secs = t0.elapsed().as_secs_f64();
 
     let t1 = std::time::Instant::now();

@@ -53,14 +53,31 @@ pub fn rbf_gram(x: &[f32], n: usize, d: usize, gamma: f32) -> Vec<f32> {
 
 /// Rectangular RBF kernel block: rows of `q` (m x d) against rows of `x`
 /// (n x d), result row-major (m x n).
+///
+/// Uses the same expanded identity ||q||^2 + ||x||^2 - 2 q.x with
+/// precomputed norms and a `max(0.0)` clamp as [`rbf_gram`] and the Pallas
+/// device kernel — not the sub-square-accumulate [`rbf`] form — so
+/// serve-path decision values match the training-path numerics bitwise.
 pub fn rbf_cross(q: &[f32], m: usize, x: &[f32], n: usize, d: usize, gamma: f32) -> Vec<f32> {
     assert_eq!(q.len(), m * d);
     assert_eq!(x.len(), n * d);
+    let qn: Vec<f32> = (0..m)
+        .map(|i| q[i * d..(i + 1) * d].iter().map(|v| v * v).sum())
+        .collect();
+    let xn: Vec<f32> = (0..n)
+        .map(|j| x[j * d..(j + 1) * d].iter().map(|v| v * v).sum())
+        .collect();
     let mut k = vec![0.0f32; m * n];
     for i in 0..m {
         let qi = &q[i * d..(i + 1) * d];
         for j in 0..n {
-            k[i * n + j] = rbf(qi, &x[j * d..(j + 1) * d], gamma);
+            let xj = &x[j * d..(j + 1) * d];
+            let mut dot = 0.0f32;
+            for t in 0..d {
+                dot += qi[t] * xj[t];
+            }
+            let d2 = (qn[i] + xn[j] - 2.0 * dot).max(0.0);
+            k[i * n + j] = (-gamma * d2).exp();
         }
     }
     k
@@ -98,6 +115,18 @@ mod tests {
         let c = rbf_cross(&x, 4, &x, 4, 2, 1.1);
         for (a, b) in g.iter().zip(c.iter()) {
             assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn cross_is_bitwise_identical_to_gram_formulation() {
+        // Serve-path (cross) vs training-path (gram) numeric parity: same
+        // expanded identity, same accumulation order => identical bits.
+        let x = [0.13f32, -0.9, 2.4, 0.01, -1.7, 0.66, 0.0, 3.2, -2.1, 1.05];
+        let g = rbf_gram(&x, 5, 2, 0.37);
+        let c = rbf_cross(&x, 5, &x, 5, 2, 0.37);
+        for (a, b) in g.iter().zip(c.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

@@ -13,10 +13,12 @@ pub mod model;
 pub mod multiclass;
 pub mod persist;
 pub mod smo;
+pub mod solver;
 pub mod tune;
 
 pub use model::{BinaryModel, TrainStats};
 pub use multiclass::OvoModel;
+pub use solver::{DualSolver, EngineConfig, KernelSource};
 
 #[cfg(test)]
 pub(crate) mod testutil {

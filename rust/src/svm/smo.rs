@@ -107,28 +107,13 @@ pub fn solve_gram(k: &[f32], y: &[f32], p: &SvmParams) -> SmoSolution {
     }
 }
 
-/// Train a binary model: build the Gram matrix natively, run SMO, collect
-/// support vectors.
+/// Train a binary model with the dense oracle engine (Gram built natively
+/// — thread-parallel for large n, bit-identical either way — then the
+/// sequential SMO loop above). Routed through the [`super::solver`]
+/// subsystem like every other consumer; callers that want the cached or
+/// shrinking engines use `solver::train_with`/`train_cached` directly.
 pub fn train(prob: &BinaryProblem, p: &SvmParams) -> (BinaryModel, TrainStats) {
-    let n = prob.n();
-    let t0 = std::time::Instant::now();
-    let k = super::kernel::rbf_gram(&prob.x, n, prob.d, p.gamma);
-    let gram_secs = t0.elapsed().as_secs_f64();
-
-    let t1 = std::time::Instant::now();
-    let sol = solve_gram(&k, &prob.y, p);
-    let solve_secs = t1.elapsed().as_secs_f64();
-
-    let model = BinaryModel::from_dense(prob, &sol.alpha, sol.bias, p.gamma);
-    let stats = TrainStats {
-        iters: sol.iters,
-        converged: sol.converged,
-        gram_secs,
-        solve_secs,
-        chunks: 1,
-        n_sv: model.n_sv(),
-    };
-    (model, stats)
+    super::solver::train_with(&super::solver::DenseSmo::default(), prob, p)
 }
 
 /// Dual objective W(alpha) (diagnostics / tests).
@@ -147,6 +132,10 @@ pub fn dual_objective(k: &[f32], y: &[f32], alpha: &[f32]) -> f64 {
 }
 
 /// Max KKT violation of a dual solution (0 when optimal within tol).
+///
+/// Reads the dense Gram directly (no row copies); callers without a dense
+/// matrix use the row-on-demand twin
+/// [`super::solver::kkt_violation_source`].
 pub fn kkt_violation(k: &[f32], y: &[f32], alpha: &[f32], c: f32) -> f32 {
     let n = y.len();
     let eps = 1e-6f32;

@@ -1,0 +1,314 @@
+//! On-demand kernel-row sources with an LRU row cache.
+//!
+//! The legacy solver precomputed the full n×n Gram matrix before the first
+//! SMO step — O(n²) memory, which caps n at a few thousand rows. The cache
+//! inverts that: rows are computed lazily (O(n·d) each), held as shared
+//! `Arc<[f32]>` slabs under an LRU budget, and recomputed on eviction. SMO
+//! touches a small working set of rows (the in-progress support vectors)
+//! over and over, so hit rates stay high even at budgets far below n — the
+//! classic libsvm/ThunderSVM kernel-cache observation.
+//!
+//! Rows are bit-identical to the corresponding `kernel::rbf_gram` rows
+//! (same expanded-identity formulation via [`super::parallel::rbf_row_into`]),
+//! so a cached solve replays the dense solve exactly.
+
+use std::sync::Arc;
+
+use super::parallel;
+
+/// Cache/traffic counters for one solve (feeds the ablation tables).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// High-water mark of resident rows (≤ budget).
+    pub max_resident: usize,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// A provider of kernel matrix rows for the dual solvers.
+///
+/// `row(i)` returns the full i-th row of the (virtual) n×n kernel matrix.
+/// The `Arc` keeps a returned row alive across subsequent `row()` calls even
+/// if the cache evicts it, so a solver can hold K_i and K_j simultaneously.
+pub trait KernelSource {
+    /// Problem size (rows of the virtual kernel matrix).
+    fn n(&self) -> usize;
+
+    /// The i-th kernel row (length n).
+    fn row(&mut self, i: usize) -> Arc<[f32]>;
+
+    /// Cache counters (all-hits for dense sources).
+    fn stats(&self) -> CacheStats;
+}
+
+/// LRU row cache over the RBF kernel of a row-major dataset.
+pub struct KernelCache<'a> {
+    x: &'a [f32],
+    n: usize,
+    d: usize,
+    gamma: f32,
+    /// Precomputed squared row norms (the expanded-identity hoist).
+    norms: Vec<f32>,
+    /// Max resident rows; `>= n` disables eviction.
+    budget: usize,
+    /// Threads for computing a single missing row (1 = serial).
+    threads: usize,
+    slots: Vec<Option<Arc<[f32]>>>,
+    last_used: Vec<u64>,
+    resident: Vec<usize>,
+    tick: u64,
+    stats: CacheStats,
+}
+
+impl<'a> KernelCache<'a> {
+    /// `budget_rows = 0` means "unbounded" (every row cached after first
+    /// touch — the dense working set without the up-front O(n²) build).
+    pub fn new(
+        x: &'a [f32],
+        n: usize,
+        d: usize,
+        gamma: f32,
+        budget_rows: usize,
+        threads: usize,
+    ) -> KernelCache<'a> {
+        assert_eq!(x.len(), n * d);
+        let budget = if budget_rows == 0 { n } else { budget_rows.max(1) };
+        let norms = (0..n)
+            .map(|i| x[i * d..(i + 1) * d].iter().map(|v| v * v).sum())
+            .collect();
+        KernelCache {
+            x,
+            n,
+            d,
+            gamma,
+            norms,
+            budget,
+            threads: threads.max(1),
+            slots: vec![None; n],
+            last_used: vec![0; n],
+            resident: Vec::new(),
+            tick: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Rows currently materialized.
+    pub fn resident_rows(&self) -> usize {
+        self.resident.len()
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    fn evict_lru(&mut self) {
+        // O(resident) scan; resident ≤ budget and a miss already costs
+        // O(n·d) to recompute the row, so the scan never dominates.
+        let mut oldest_pos = 0usize;
+        let mut oldest_tick = u64::MAX;
+        for (pos, &r) in self.resident.iter().enumerate() {
+            if self.last_used[r] < oldest_tick {
+                oldest_tick = self.last_used[r];
+                oldest_pos = pos;
+            }
+        }
+        let victim = self.resident.swap_remove(oldest_pos);
+        self.slots[victim] = None;
+        self.stats.evictions += 1;
+    }
+}
+
+impl KernelSource for KernelCache<'_> {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn row(&mut self, i: usize) -> Arc<[f32]> {
+        self.tick += 1;
+        self.last_used[i] = self.tick;
+        if let Some(row) = &self.slots[i] {
+            self.stats.hits += 1;
+            return Arc::clone(row);
+        }
+        self.stats.misses += 1;
+        while self.resident.len() >= self.budget {
+            self.evict_lru();
+        }
+        let mut buf = vec![0.0f32; self.n];
+        parallel::rbf_row_into(
+            &mut buf,
+            self.x,
+            &self.norms,
+            i,
+            self.d,
+            self.gamma,
+            self.threads,
+        );
+        let row: Arc<[f32]> = buf.into();
+        self.slots[i] = Some(Arc::clone(&row));
+        self.resident.push(i);
+        self.stats.max_resident = self.stats.max_resident.max(self.resident.len());
+        row
+    }
+
+    fn stats(&self) -> CacheStats {
+        self.stats
+    }
+}
+
+/// Dense adapter: serves rows of an already-materialized Gram matrix.
+///
+/// Bridges the legacy `solve_gram(k, ...)` call sites (tests, KKT checks,
+/// the device path that downloads a Gram) onto the row-on-demand API.
+pub struct DenseSource {
+    rows: Vec<Arc<[f32]>>,
+    reads: u64,
+}
+
+impl DenseSource {
+    pub fn from_gram(k: &[f32], n: usize) -> DenseSource {
+        assert_eq!(k.len(), n * n);
+        DenseSource {
+            rows: (0..n).map(|i| Arc::from(&k[i * n..(i + 1) * n])).collect(),
+            reads: 0,
+        }
+    }
+}
+
+impl KernelSource for DenseSource {
+    fn n(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn row(&mut self, i: usize) -> Arc<[f32]> {
+        self.reads += 1;
+        Arc::clone(&self.rows[i])
+    }
+
+    fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.reads,
+            misses: 0,
+            evictions: 0,
+            max_resident: self.rows.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::svm::kernel;
+    use crate::util::rng::Rng;
+
+    fn random_x(n: usize, d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n * d).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn rows_match_dense_gram_bitwise() {
+        let (n, d, gamma) = (50, 6, 0.8);
+        let x = random_x(n, d, 1);
+        let dense = kernel::rbf_gram(&x, n, d, gamma);
+        let mut cache = KernelCache::new(&x, n, d, gamma, 0, 1);
+        for i in 0..n {
+            let row = cache.row(i);
+            for j in 0..n {
+                assert_eq!(row[j].to_bits(), dense[i * n + j].to_bits(), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let (n, d) = (20, 3);
+        let x = random_x(n, d, 2);
+        let mut cache = KernelCache::new(&x, n, d, 0.5, 0, 1);
+        let _ = cache.row(3);
+        let _ = cache.row(3);
+        let _ = cache.row(7);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 2, 0));
+        assert_eq!(cache.resident_rows(), 2);
+    }
+
+    #[test]
+    fn eviction_respects_budget_and_recomputes_correctly() {
+        let (n, d, gamma) = (32, 4, 1.3);
+        let x = random_x(n, d, 3);
+        let dense = kernel::rbf_gram(&x, n, d, gamma);
+        let budget = 5;
+        let mut cache = KernelCache::new(&x, n, d, gamma, budget, 1);
+        // Touch every row twice in a pattern that forces constant eviction.
+        for pass in 0..2 {
+            for i in 0..n {
+                let row = cache.row(i);
+                assert!(cache.resident_rows() <= budget, "pass {pass}");
+                for j in 0..n {
+                    assert_eq!(row[j].to_bits(), dense[i * n + j].to_bits());
+                }
+            }
+        }
+        let s = cache.stats();
+        assert!(s.evictions > 0, "budget < n must evict");
+        assert!(s.max_resident <= budget);
+        // Never materialized more than `budget` rows at once even though
+        // every row was served (the full-Gram-never-exists guarantee).
+        assert_eq!(s.hits + s.misses, 2 * n as u64);
+    }
+
+    #[test]
+    fn lru_keeps_hot_row() {
+        let (n, d) = (16, 2);
+        let x = random_x(n, d, 4);
+        let mut cache = KernelCache::new(&x, n, d, 0.7, 2, 1);
+        let _ = cache.row(0); // miss
+        let _ = cache.row(1); // miss
+        let _ = cache.row(0); // hit — row 0 now most recent
+        let _ = cache.row(2); // miss, evicts LRU row 1
+        let _ = cache.row(0); // must still be a hit
+        let s = cache.stats();
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.evictions, 1);
+    }
+
+    #[test]
+    fn held_row_survives_eviction() {
+        let (n, d) = (12, 2);
+        let x = random_x(n, d, 5);
+        let mut cache = KernelCache::new(&x, n, d, 0.9, 1, 1);
+        let row0 = cache.row(0);
+        let _ = cache.row(1); // evicts row 0 from the cache
+        // The Arc we hold is unaffected.
+        assert_eq!(row0.len(), n);
+        let row0_again = cache.row(0); // recomputed
+        for j in 0..n {
+            assert_eq!(row0[j].to_bits(), row0_again[j].to_bits());
+        }
+    }
+
+    #[test]
+    fn dense_source_serves_gram_rows() {
+        let (n, d) = (10, 3);
+        let x = random_x(n, d, 6);
+        let k = kernel::rbf_gram(&x, n, d, 0.4);
+        let mut src = DenseSource::from_gram(&k, n);
+        assert_eq!(src.n(), n);
+        let r = src.row(4);
+        assert_eq!(&r[..], &k[4 * n..5 * n]);
+        assert_eq!(src.stats().misses, 0);
+    }
+}

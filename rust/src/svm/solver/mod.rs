@@ -1,0 +1,317 @@
+//! The dual-solver subsystem: pluggable QP engines behind one trait.
+//!
+//! # Dense → cached: the data-flow inversion
+//!
+//! The original native solver (`svm::smo::solve_gram`) assumed the full
+//! n×n Gram matrix exists before the first iteration — O(n²) memory and an
+//! O(n²·d) up-front build, which caps training at a few thousand rows and
+//! wastes most of the matrix (SMO only ever touches the rows of its working
+//! set). This subsystem inverts that assumption: kernel rows are computed
+//! *on demand* behind the [`KernelSource`] trait, held under an LRU budget
+//! ([`cache::KernelCache`]), and the solver loop runs over a shrinking
+//! active set with thread-parallel scans and updates. The dense path
+//! remains available — both as the [`DenseSmo`] oracle engine and as the
+//! [`cache::DenseSource`] adapter for callers that already hold a Gram
+//! matrix (e.g. one downloaded from the device).
+//!
+//! # Engines and when each wins
+//!
+//! | engine                     | memory  | best for |
+//! |----------------------------|---------|----------|
+//! | `DenseSmo`                 | O(n²)   | n ≲ 2k: the build is cheap, every row access is a hit, and the iterate sequence is the cross-language oracle |
+//! | `WorkingSetSmo` (cached)   | O(b·n)  | n beyond the Gram budget: identical trajectory to dense (rows are bit-identical), pay only recompute on eviction |
+//! | `+ shrink`                 | O(b·n)  | many bound SVs (overlapping classes, small C): active set collapses, selection + f-update drop from O(n) to O(active) |
+//! | `+ threads` (parallel)     | O(b·n)  | large n on multi-core hosts: row eval, selection scan and f-update are data-parallel |
+//!
+//! Rule of thumb encoded in [`auto_engine`]: dense below
+//! [`DENSE_CUTOFF_ROWS`] rows, the full parallel cached engine above it.
+//!
+//! All engines return duals that agree with the sequential oracle within
+//! float tolerance (the unshrunk cached engine is bit-identical; shrinking
+//! re-verifies KKT on the full index set before it may stop), so backends
+//! can switch engines without perturbing model semantics.
+
+pub mod cache;
+pub mod parallel;
+pub mod shrink;
+pub mod working_set;
+
+pub use cache::{CacheStats, DenseSource, KernelCache, KernelSource};
+pub use shrink::{ActiveSet, ShrinkStats};
+pub use working_set::EngineConfig;
+
+use crate::data::BinaryProblem;
+use crate::svm::model::{BinaryModel, TrainStats};
+use crate::svm::smo::SmoSolution;
+use crate::svm::SvmParams;
+
+/// Everything a solve produces: duals plus engine-side observability.
+#[derive(Debug, Clone)]
+pub struct SolveOutcome {
+    pub solution: SmoSolution,
+    pub cache: CacheStats,
+    pub shrink: ShrinkStats,
+    /// Seconds spent materializing kernel values up front (0 for cached
+    /// engines — their kernel work happens inside `solve_secs`).
+    pub gram_secs: f64,
+    pub solve_secs: f64,
+}
+
+/// A dual QP engine: one strategy for working-set selection + kernel
+/// access. Implementations must be safe to call from multiple coordinator
+/// rank threads at once (`Send + Sync`; per-solve state lives on the
+/// stack).
+pub trait DualSolver: Send + Sync {
+    /// Engine name for reports/ablation rows ("dense", "cached", ...).
+    fn name(&self) -> &'static str;
+
+    /// Solve the dual for one binary problem.
+    fn solve(&self, prob: &BinaryProblem, p: &SvmParams) -> SolveOutcome;
+}
+
+/// The legacy dense engine: full Gram build, then the sequential full-scan
+/// oracle loop. Kept both as the fast path for small problems and as the
+/// bit-exact cross-language reference.
+///
+/// Defaults to a serial Gram build: `Solver::Smo` is the paper's
+/// *sequential* baseline, and under the coordinator's concurrent-pair
+/// schedule each rank strand training its own problem must not spawn an
+/// all-core team per pair. Parallelism is opt-in via `threads` (0 = all
+/// cores); the Gram values are bit-identical either way.
+#[derive(Debug, Clone, Copy)]
+pub struct DenseSmo {
+    /// Threads for the Gram build (0 = auto, 1 = serial).
+    pub threads: usize,
+}
+
+impl Default for DenseSmo {
+    fn default() -> Self {
+        DenseSmo { threads: 1 }
+    }
+}
+
+impl DualSolver for DenseSmo {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn solve(&self, prob: &BinaryProblem, p: &SvmParams) -> SolveOutcome {
+        let n = prob.n();
+        let t0 = std::time::Instant::now();
+        let threads = parallel::resolve_threads(self.threads);
+        let k = parallel::rbf_gram_parallel(&prob.x, n, prob.d, p.gamma, threads);
+        let gram_secs = t0.elapsed().as_secs_f64();
+
+        let t1 = std::time::Instant::now();
+        let solution = crate::svm::smo::solve_gram(&k, &prob.y, p);
+        let solve_secs = t1.elapsed().as_secs_f64();
+        SolveOutcome {
+            solution,
+            cache: CacheStats { hits: 0, misses: n as u64, evictions: 0, max_resident: n },
+            shrink: ShrinkStats { min_active: n, ..Default::default() },
+            gram_secs,
+            solve_secs,
+        }
+    }
+}
+
+/// The large-scale engine: working-set SMO over an LRU row cache with
+/// optional shrinking and thread parallelism (see [`working_set`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkingSetSmo {
+    pub cfg: EngineConfig,
+}
+
+impl WorkingSetSmo {
+    pub fn new(cfg: EngineConfig) -> WorkingSetSmo {
+        WorkingSetSmo { cfg }
+    }
+}
+
+impl DualSolver for WorkingSetSmo {
+    fn name(&self) -> &'static str {
+        match (self.cfg.shrink, self.cfg.threads != 1) {
+            (false, false) => "cached",
+            (true, false) => "cached+shrink",
+            (false, true) => "cached+par",
+            (true, true) => "cached+shrink+par",
+        }
+    }
+
+    fn solve(&self, prob: &BinaryProblem, p: &SvmParams) -> SolveOutcome {
+        let n = prob.n();
+        let row_threads = parallel::resolve_threads(self.cfg.threads);
+        let t0 = std::time::Instant::now();
+        let mut src = KernelCache::new(
+            &prob.x,
+            n,
+            prob.d,
+            p.gamma,
+            self.cfg.cache_rows,
+            row_threads,
+        );
+        let (solution, shrink) = working_set::solve(&mut src, &prob.y, p, &self.cfg);
+        let solve_secs = t0.elapsed().as_secs_f64();
+        SolveOutcome {
+            solution,
+            cache: src.stats(),
+            shrink,
+            gram_secs: 0.0,
+            solve_secs,
+        }
+    }
+}
+
+/// Above this many rows the dense O(n²) build stops being the right
+/// default and `auto_engine` switches to the cached/parallel engine.
+pub const DENSE_CUTOFF_ROWS: usize = 2048;
+
+/// Default cache budget for the auto engine, as a fraction of n (rows).
+const AUTO_CACHE_FRACTION: usize = 4; // n/4 rows resident
+
+/// Pick an engine for a problem size (the `Solver::SmoCached` policy):
+/// the bit-exact dense oracle below [`DENSE_CUTOFF_ROWS`] (the O(n²) build
+/// is cheap there and every access is a hit), the full parallel cached +
+/// shrinking engine with an n/4 row budget above it.
+pub fn auto_engine(n: usize) -> Box<dyn DualSolver> {
+    if n <= DENSE_CUTOFF_ROWS {
+        Box::new(DenseSmo::default())
+    } else {
+        Box::new(WorkingSetSmo::new(EngineConfig::parallel(
+            (n / AUTO_CACHE_FRACTION).max(DENSE_CUTOFF_ROWS),
+        )))
+    }
+}
+
+/// Train a binary model through any engine (the shared backend entry).
+pub fn train_with(engine: &dyn DualSolver, prob: &BinaryProblem, p: &SvmParams) -> (BinaryModel, TrainStats) {
+    let out = engine.solve(prob, p);
+    let model = BinaryModel::from_dense(prob, &out.solution.alpha, out.solution.bias, p.gamma);
+    let stats = TrainStats {
+        iters: out.solution.iters,
+        converged: out.solution.converged,
+        gram_secs: out.gram_secs,
+        solve_secs: out.solve_secs,
+        chunks: 1,
+        n_sv: model.n_sv(),
+    };
+    (model, stats)
+}
+
+/// Train with the auto-selected cached engine (`Solver::SmoCached`).
+pub fn train_cached(prob: &BinaryProblem, p: &SvmParams) -> (BinaryModel, TrainStats) {
+    train_with(auto_engine(prob.n()).as_ref(), prob, p)
+}
+
+/// Max KKT violation computed row-on-demand (0 when optimal within tol).
+/// The row-source twin of `svm::smo::kkt_violation`; with a budgeted cache
+/// it never materializes the full Gram matrix.
+pub fn kkt_violation_source(src: &mut dyn KernelSource, y: &[f32], alpha: &[f32], c: f32) -> f32 {
+    let n = y.len();
+    assert_eq!(src.n(), n);
+    let eps = 1e-6f32;
+    let (mut b_up, mut b_low) = (f32::INFINITY, f32::NEG_INFINITY);
+    for i in 0..n {
+        let row = src.row(i);
+        let mut fi = -y[i];
+        for j in 0..n {
+            fi += alpha[j] * y[j] * row[j];
+        }
+        let in_up = (y[i] > 0.0 && alpha[i] < c - eps) || (y[i] < 0.0 && alpha[i] > eps);
+        let in_low = (y[i] > 0.0 && alpha[i] > eps) || (y[i] < 0.0 && alpha[i] < c - eps);
+        if in_up {
+            b_up = b_up.min(fi);
+        }
+        if in_low {
+            b_low = b_low.max(fi);
+        }
+    }
+    if b_up.is_finite() && b_low.is_finite() {
+        (b_low - b_up).max(0.0)
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::svm::kernel;
+    use crate::svm::testutil::blobs;
+
+    #[test]
+    fn engines_agree_on_model_quality() {
+        let prob = blobs(40, 4, 2.0, 7);
+        let p = SvmParams::default();
+        let dense: Box<dyn DualSolver> = Box::new(DenseSmo { threads: 1 });
+        let cached: Box<dyn DualSolver> = Box::new(WorkingSetSmo::new(EngineConfig::cached(10)));
+        let shrunk: Box<dyn DualSolver> =
+            Box::new(WorkingSetSmo::new(EngineConfig::cached_shrink(10)));
+        let (m0, s0) = train_with(dense.as_ref(), &prob, &p);
+        for engine in [&cached, &shrunk] {
+            let (m, s) = train_with(engine.as_ref(), &prob, &p);
+            assert!(s.converged, "{}", engine.name());
+            assert_eq!(s0.converged, s.converged);
+            assert!(m.n_sv() > 0, "{}", engine.name());
+            for i in 0..prob.n() {
+                let a = m0.decision(prob.row(i));
+                let b = m.decision(prob.row(i));
+                assert!((a - b).abs() < 1e-3, "{}: {a} vs {b}", engine.name());
+            }
+        }
+    }
+
+    #[test]
+    fn train_cached_produces_working_classifier() {
+        let prob = blobs(50, 5, 2.5, 3);
+        let p = SvmParams::default();
+        let (model, stats) = train_cached(&prob, &p);
+        assert!(stats.converged);
+        let acc = (0..prob.n())
+            .filter(|&i| (model.decision(prob.row(i)) > 0.0) == (prob.y[i] > 0.0))
+            .count() as f64
+            / prob.n() as f64;
+        assert!(acc >= 0.95, "acc {acc}");
+    }
+
+    #[test]
+    fn cached_engine_has_no_upfront_gram_build() {
+        let prob = blobs(30, 4, 2.0, 5);
+        let engine = WorkingSetSmo::new(EngineConfig::cached(10));
+        let out = engine.solve(&prob, &SvmParams::default());
+        assert_eq!(out.gram_secs, 0.0, "cached engine must not pre-build the Gram");
+        assert!(out.cache.max_resident <= 10);
+    }
+
+    #[test]
+    fn auto_engine_switches_on_problem_size() {
+        // Small problems get the bit-exact dense oracle, large ones the
+        // budgeted parallel cached engine (see module docs).
+        assert_eq!(auto_engine(100).name(), "dense");
+        assert_eq!(auto_engine(DENSE_CUTOFF_ROWS).name(), "dense");
+        assert_eq!(auto_engine(100_000).name(), "cached+shrink+par");
+    }
+
+    #[test]
+    fn engine_names_reflect_config() {
+        assert_eq!(WorkingSetSmo::new(EngineConfig::cached(8)).name(), "cached");
+        assert_eq!(WorkingSetSmo::new(EngineConfig::cached_shrink(8)).name(), "cached+shrink");
+        let par_only = EngineConfig { threads: 4, ..EngineConfig::cached(8) };
+        assert_eq!(WorkingSetSmo::new(par_only).name(), "cached+par");
+        assert_eq!(WorkingSetSmo::new(EngineConfig::parallel(8)).name(), "cached+shrink+par");
+    }
+
+    #[test]
+    fn kkt_source_matches_dense_kkt() {
+        let prob = blobs(30, 3, 1.5, 9);
+        let p = SvmParams::default();
+        let n = prob.n();
+        let k = kernel::rbf_gram(&prob.x, n, prob.d, p.gamma);
+        let sol = crate::svm::smo::solve_gram(&k, &prob.y, &p);
+        let dense_v = crate::svm::smo::kkt_violation(&k, &prob.y, &sol.alpha, p.c);
+        let mut cache = KernelCache::new(&prob.x, n, prob.d, p.gamma, n / 3, 1);
+        let src_v = kkt_violation_source(&mut cache, &prob.y, &sol.alpha, p.c);
+        assert!((dense_v - src_v).abs() < 1e-5, "{dense_v} vs {src_v}");
+        assert!(cache.stats().max_resident <= n / 3);
+    }
+}

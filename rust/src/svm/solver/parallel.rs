@@ -1,0 +1,277 @@
+//! Thread-pool-parallel hot paths for the dual solvers.
+//!
+//! Scoped-thread data parallelism over the three O(n) / O(n·d) inner loops
+//! that dominate large-scale SMO (Narasimhan & Vishnu's "parallel adaptive
+//! shrinking" levers):
+//!
+//!  * kernel-row evaluation (one row of the RBF Gram matrix, O(n·d)),
+//!  * the rank-2 f-vector update after each analytic step (O(n)),
+//!  * the extreme-violating-pair scan (O(n) argmin/argmax reduction).
+//!
+//! Everything is `std::thread::scope` based — no external thread-pool crate
+//! exists in this build environment — and every helper degrades to the
+//! serial loop below a work threshold, so small problems (most unit tests,
+//! the Iris pairs) never pay spawn overhead. Reductions join their partials
+//! in chunk order, which keeps first-index-wins tie-breaking — and therefore
+//! the SMO iterate sequence — bit-identical to the serial scan.
+
+/// Threads to use when the caller asked for "auto" (0).
+pub fn auto_threads() -> usize {
+    std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+}
+
+/// Resolve a requested thread count: 0 = auto, otherwise as asked.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        auto_threads()
+    } else {
+        requested
+    }
+}
+
+/// Minimum elements per chunk before a loop is worth splitting; below
+/// 2×this the helpers run serial. Spawn+join costs ~10µs per thread, so a
+/// chunk must carry at least tens of thousands of flops to win.
+pub const MIN_CHUNK: usize = 4096;
+
+/// Apply `f(offset, chunk)` over disjoint mutable chunks of `data`, on up
+/// to `threads` scoped threads. `offset` is the chunk's start index in
+/// `data`. Serial when `threads <= 1` or `data` is below 2×`min_chunk`.
+pub fn par_apply_mut<T, F>(data: &mut [T], threads: usize, min_chunk: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    if threads <= 1 || n < 2 * min_chunk.max(1) {
+        f(0, data);
+        return;
+    }
+    let pieces = threads.min(n / min_chunk.max(1)).max(1);
+    let chunk = n.div_ceil(pieces);
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut offset = 0usize;
+        for piece in data.chunks_mut(chunk) {
+            let start = offset;
+            offset += piece.len();
+            s.spawn(move || f(start, piece));
+        }
+    });
+}
+
+/// Map each index sub-range of `0..n` through `map` on up to `threads`
+/// scoped threads and fold the partial results with `join` **in range
+/// order** (deterministic reductions). Returns `None` only when `n == 0`.
+pub fn par_map_reduce<R, M, J>(
+    n: usize,
+    threads: usize,
+    min_chunk: usize,
+    map: M,
+    join: J,
+) -> Option<R>
+where
+    R: Send,
+    M: Fn(std::ops::Range<usize>) -> R + Sync,
+    J: Fn(R, R) -> R,
+{
+    if n == 0 {
+        return None;
+    }
+    if threads <= 1 || n < 2 * min_chunk.max(1) {
+        return Some(map(0..n));
+    }
+    let pieces = threads.min(n / min_chunk.max(1)).max(1);
+    let chunk = n.div_ceil(pieces);
+    let partials: Vec<R> = std::thread::scope(|s| {
+        let map = &map;
+        let handles: Vec<_> = (0..pieces)
+            .filter_map(|t| {
+                let lo = t * chunk;
+                let hi = ((t + 1) * chunk).min(n);
+                if lo >= hi {
+                    return None;
+                }
+                Some(s.spawn(move || map(lo..hi)))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("parallel map worker panicked"))
+            .collect()
+    });
+    partials.into_iter().reduce(join)
+}
+
+/// One RBF kernel row `K[i][*]` with the expanded identity
+/// `|xi|² + |xj|² − 2·xi·xj` (same formulation and operation order as
+/// `kernel::rbf_gram`, so values are bit-identical to the dense matrix),
+/// row-parallel over `out`.
+pub fn rbf_row_into(
+    out: &mut [f32],
+    x: &[f32],
+    norms: &[f32],
+    i: usize,
+    d: usize,
+    gamma: f32,
+    threads: usize,
+) {
+    let n = out.len();
+    debug_assert_eq!(x.len(), n * d);
+    debug_assert_eq!(norms.len(), n);
+    let xi = &x[i * d..(i + 1) * d];
+    let ni = norms[i];
+    // Chunk threshold in row *elements*, scaled down by d so the per-chunk
+    // flop count (elements × d) stays comparable to the flat helpers.
+    let min_chunk = (MIN_CHUNK / d.max(1)).max(64);
+    par_apply_mut(out, threads, min_chunk, |start, piece| {
+        for (t, slot) in piece.iter_mut().enumerate() {
+            let j = start + t;
+            if j == i {
+                *slot = 1.0;
+                continue;
+            }
+            let xj = &x[j * d..(j + 1) * d];
+            let mut dot = 0.0f32;
+            for c in 0..d {
+                dot += xi[c] * xj[c];
+            }
+            let d2 = (ni + norms[j] - 2.0 * dot).max(0.0);
+            *slot = (-gamma * d2).exp();
+        }
+    });
+}
+
+/// Full dense RBF Gram matrix, rows distributed over scoped threads.
+/// Values are bit-identical to [`crate::svm::kernel::rbf_gram`] (same
+/// per-element expression and accumulation order), so dense consumers can
+/// switch to this without perturbing any golden numerics.
+pub fn rbf_gram_parallel(x: &[f32], n: usize, d: usize, gamma: f32, threads: usize) -> Vec<f32> {
+    assert_eq!(x.len(), n * d);
+    let norms: Vec<f32> = (0..n)
+        .map(|i| x[i * d..(i + 1) * d].iter().map(|v| v * v).sum())
+        .collect();
+    let mut k = vec![0.0f32; n * n];
+    let threads = threads.min(n);
+    if threads <= 1 || n * d < 2 * MIN_CHUNK {
+        for (i, row) in k.chunks_mut(n).enumerate() {
+            rbf_row_into(row, x, &norms, i, d, gamma, 1);
+        }
+        return k;
+    }
+    // Row-block decomposition: each worker fills a contiguous band of rows.
+    let rows_per = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let x = &x[..];
+        let norms = &norms[..];
+        let mut rest = k.as_mut_slice();
+        let mut row0 = 0usize;
+        while !rest.is_empty() {
+            let take_rows = rows_per.min(n - row0);
+            let (band, tail) = rest.split_at_mut(take_rows * n);
+            let start_row = row0;
+            s.spawn(move || {
+                for (r, row) in band.chunks_mut(n).enumerate() {
+                    rbf_row_into(row, x, norms, start_row + r, d, gamma, 1);
+                }
+            });
+            rest = tail;
+            row0 += take_rows;
+        }
+    });
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::svm::kernel;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn par_apply_matches_serial_increment() {
+        let n = 3 * MIN_CHUNK + 17;
+        let mut a: Vec<u64> = (0..n as u64).collect();
+        let mut b = a.clone();
+        par_apply_mut(&mut a, 4, MIN_CHUNK, |start, piece| {
+            for (t, v) in piece.iter_mut().enumerate() {
+                *v += (start + t) as u64;
+            }
+        });
+        for (i, v) in b.iter_mut().enumerate() {
+            *v += i as u64;
+        }
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn map_reduce_argmin_matches_serial() {
+        let mut rng = Rng::new(5);
+        let vals: Vec<f32> = (0..3 * MIN_CHUNK).map(|_| rng.normal()).collect();
+        let serial = vals
+            .iter()
+            .enumerate()
+            .fold((f32::INFINITY, usize::MAX), |acc, (i, &v)| {
+                if v < acc.0 {
+                    (v, i)
+                } else {
+                    acc
+                }
+            });
+        let par = par_map_reduce(
+            vals.len(),
+            4,
+            MIN_CHUNK / 4,
+            |r| {
+                let mut best = (f32::INFINITY, usize::MAX);
+                for i in r {
+                    if vals[i] < best.0 {
+                        best = (vals[i], i);
+                    }
+                }
+                best
+            },
+            |a, b| if b.0 < a.0 { b } else { a },
+        )
+        .unwrap();
+        assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn map_reduce_empty_is_none() {
+        assert!(par_map_reduce(0, 4, 1, |_| 0usize, |a, b| a + b).is_none());
+    }
+
+    #[test]
+    fn parallel_gram_bit_identical_to_dense() {
+        let mut rng = Rng::new(11);
+        let (n, d) = (120, 7);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+        let dense = kernel::rbf_gram(&x, n, d, 0.6);
+        for threads in [1, 4] {
+            let par = rbf_gram_parallel(&x, n, d, 0.6, threads);
+            assert_eq!(dense.len(), par.len());
+            for (a, b) in dense.iter().zip(par.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "gram values must be bit-identical");
+            }
+        }
+    }
+
+    #[test]
+    fn row_into_matches_gram_row() {
+        let mut rng = Rng::new(3);
+        let (n, d) = (40, 5);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+        let norms: Vec<f32> = (0..n)
+            .map(|i| x[i * d..(i + 1) * d].iter().map(|v| v * v).sum())
+            .collect();
+        let dense = kernel::rbf_gram(&x, n, d, 1.1);
+        let mut row = vec![0.0f32; n];
+        for i in [0, 7, n - 1] {
+            rbf_row_into(&mut row, &x, &norms, i, d, 1.1, 1);
+            for j in 0..n {
+                assert_eq!(row[j].to_bits(), dense[i * n + j].to_bits());
+            }
+        }
+    }
+}

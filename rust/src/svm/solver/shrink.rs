@@ -1,0 +1,154 @@
+//! Adaptive shrinking of the SMO active set.
+//!
+//! After enough iterations, most bound-clamped variables (alpha at 0 or C)
+//! never move again; scanning them every working-set selection and updating
+//! their f-entries every step is wasted O(n) work. Shrinking (Joachims '99,
+//! libsvm, and the "adaptive shrinking" of Narasimhan & Vishnu) removes
+//! such indices from the active set when their optimality value is strictly
+//! on the non-violating side of the current thresholds, and *verifies* the
+//! shortcut at convergence: when the shrunk problem looks optimal, the full
+//! set is reactivated, stale f-entries are reconstructed from the kernel
+//! rows of the support vectors, and optimization continues if any shrunk
+//! variable turns out to violate KKT after all. The final solution is
+//! therefore exactly as optimal as the unshrunk solver's, only cheaper.
+
+/// Bookkeeping for one solve.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShrinkStats {
+    /// Shrink passes that removed at least one index.
+    pub shrink_passes: usize,
+    /// Total index-removals across all passes.
+    pub shrunk_total: usize,
+    /// Full reactivations (convergence-check reconstructions).
+    pub unshrinks: usize,
+    /// Active-set low-water mark.
+    pub min_active: usize,
+}
+
+/// The active index set (dense index list + membership mask).
+pub struct ActiveSet {
+    /// Active indices in ascending order (selection/update iteration order —
+    /// keeping this sorted keeps f-updates cache-friendly and deterministic).
+    pub idx: Vec<usize>,
+    active: Vec<bool>,
+    pub stats: ShrinkStats,
+}
+
+impl ActiveSet {
+    pub fn full(n: usize) -> ActiveSet {
+        ActiveSet {
+            idx: (0..n).collect(),
+            active: vec![true; n],
+            stats: ShrinkStats { min_active: n, ..Default::default() },
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.idx.len() == self.active.len()
+    }
+
+    pub fn contains(&self, t: usize) -> bool {
+        self.active[t]
+    }
+
+    /// Remove every active index for which `should_shrink` holds; returns
+    /// how many were removed. Keeps at least two active indices (a working
+    /// pair must remain selectable).
+    pub fn shrink_by(&mut self, mut should_shrink: impl FnMut(usize) -> bool) -> usize {
+        let floor = 2usize;
+        if self.idx.len() <= floor {
+            return 0;
+        }
+        let (mut kept, mut dropped): (Vec<usize>, Vec<usize>) =
+            self.idx.iter().copied().partition(|&t| !should_shrink(t));
+        // Restore from the drop list if the floor would be violated.
+        while kept.len() < floor {
+            match dropped.pop() {
+                Some(t) => kept.push(t),
+                None => break,
+            }
+        }
+        kept.sort_unstable();
+        for &t in &dropped {
+            self.active[t] = false;
+        }
+        let removed = dropped.len();
+        self.idx = kept;
+        if removed > 0 {
+            self.stats.shrink_passes += 1;
+            self.stats.shrunk_total += removed;
+            self.stats.min_active = self.stats.min_active.min(self.idx.len());
+        }
+        removed
+    }
+
+    /// Reactivate everything; returns the indices that were inactive (whose
+    /// f-entries are stale and must be reconstructed by the caller).
+    pub fn unshrink(&mut self) -> Vec<usize> {
+        let stale: Vec<usize> = (0..self.active.len()).filter(|&t| !self.active[t]).collect();
+        if !stale.is_empty() {
+            for &t in &stale {
+                self.active[t] = true;
+            }
+            self.idx = (0..self.active.len()).collect();
+            self.stats.unshrinks += 1;
+        }
+        stale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_set_then_shrink_then_unshrink_roundtrip() {
+        let mut a = ActiveSet::full(10);
+        assert_eq!(a.len(), 10);
+        assert!(a.is_full());
+        let removed = a.shrink_by(|t| t % 2 == 0);
+        assert_eq!(removed, 5);
+        assert_eq!(a.idx, vec![1, 3, 5, 7, 9]);
+        assert!(!a.contains(0));
+        assert!(a.contains(1));
+        let stale = a.unshrink();
+        assert_eq!(stale, vec![0, 2, 4, 6, 8]);
+        assert!(a.is_full());
+        assert_eq!(a.stats.shrink_passes, 1);
+        assert_eq!(a.stats.shrunk_total, 5);
+        assert_eq!(a.stats.unshrinks, 1);
+    }
+
+    #[test]
+    fn never_shrinks_below_two() {
+        let mut a = ActiveSet::full(5);
+        let removed = a.shrink_by(|_| true);
+        assert!(a.len() >= 2, "active floor violated: {:?}", a.idx);
+        assert_eq!(removed, 5 - a.len());
+    }
+
+    #[test]
+    fn unshrink_on_full_set_is_noop() {
+        let mut a = ActiveSet::full(4);
+        assert!(a.unshrink().is_empty());
+        assert_eq!(a.stats.unshrinks, 0);
+    }
+
+    #[test]
+    fn min_active_tracks_low_water_mark() {
+        let mut a = ActiveSet::full(8);
+        a.shrink_by(|t| t >= 5);
+        assert_eq!(a.stats.min_active, 5);
+        a.unshrink();
+        a.shrink_by(|t| t >= 3);
+        assert_eq!(a.stats.min_active, 3);
+    }
+}

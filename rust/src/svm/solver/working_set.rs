@@ -1,0 +1,410 @@
+//! Working-set SMO over an on-demand kernel-row source.
+//!
+//! Same Keerthi dual-threshold algorithm — and the *same floating-point
+//! expressions in the same order* — as the legacy dense oracle
+//! (`svm::smo::solve_gram`), with three structural upgrades:
+//!
+//!  * kernel rows come from a [`KernelSource`] (LRU cache or dense adapter)
+//!    instead of a mandatory precomputed n×n Gram matrix;
+//!  * the selection scan and f-vector update run only over the *active*
+//!    set, which adaptive shrinking keeps small near the optimum;
+//!  * both O(n) inner loops go data-parallel over scoped threads when the
+//!    active set is large enough to amortize spawn cost.
+//!
+//! With shrinking disabled and a single thread the iterate sequence is
+//! bit-identical to the oracle; with shrinking the trajectory may differ
+//! but the returned duals satisfy the same KKT tolerance on the *full*
+//! problem, because apparent convergence of the shrunk problem triggers
+//! f-reconstruction and re-verification over all indices before the solver
+//! is allowed to stop.
+
+use super::cache::KernelSource;
+use super::parallel;
+use super::shrink::{ActiveSet, ShrinkStats};
+use crate::svm::smo::SmoSolution;
+use crate::svm::SvmParams;
+
+/// Tuning knobs for the working-set engine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EngineConfig {
+    /// LRU row-cache budget in rows; 0 = unbounded (cache every row).
+    pub cache_rows: usize,
+    /// Enable adaptive shrinking of bound-clamped indices.
+    pub shrink: bool,
+    /// Iterations between shrink passes (libsvm uses ~1000).
+    pub shrink_every: usize,
+    /// Threads for the selection/f-update/row hot paths: 1 = serial,
+    /// 0 = all available cores.
+    pub threads: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { cache_rows: 0, shrink: false, shrink_every: 1000, threads: 1 }
+    }
+}
+
+impl EngineConfig {
+    /// Row-on-demand with an LRU budget, otherwise oracle-faithful.
+    pub fn cached(cache_rows: usize) -> Self {
+        EngineConfig { cache_rows, ..Default::default() }
+    }
+
+    /// Cached + adaptive shrinking.
+    pub fn cached_shrink(cache_rows: usize) -> Self {
+        EngineConfig { cache_rows, shrink: true, ..Default::default() }
+    }
+
+    /// The full large-scale engine: cached, shrinking, all cores.
+    pub fn parallel(cache_rows: usize) -> Self {
+        EngineConfig { cache_rows, shrink: true, shrink_every: 1000, threads: 0 }
+    }
+}
+
+/// Extreme-violating-pair scan state (oracle-identical comparisons).
+#[derive(Clone, Copy)]
+struct Extremes {
+    fi: f64,
+    i: usize,
+    fj: f64,
+    j: usize,
+}
+
+impl Extremes {
+    fn empty() -> Extremes {
+        Extremes { fi: f64::INFINITY, i: usize::MAX, fj: f64::NEG_INFINITY, j: usize::MAX }
+    }
+
+    /// Join two partials from ascending index ranges; strict comparisons
+    /// keep first-index-wins ties, matching the serial scan.
+    fn join(a: Extremes, b: Extremes) -> Extremes {
+        Extremes {
+            fi: if b.fi < a.fi { b.fi } else { a.fi },
+            i: if b.fi < a.fi { b.i } else { a.i },
+            fj: if b.fj > a.fj { b.fj } else { a.fj },
+            j: if b.fj > a.fj { b.j } else { a.j },
+        }
+    }
+}
+
+/// Scan `active[lo..hi]` for the extreme pair (serial kernel of the scan).
+fn scan_range(
+    active: &[usize],
+    range: std::ops::Range<usize>,
+    f: &[f64],
+    alpha: &[f64],
+    yd: &[f64],
+    c: f64,
+    eps: f64,
+) -> Extremes {
+    let mut e = Extremes::empty();
+    for &t in &active[range] {
+        let yt = yd[t];
+        let at = alpha[t];
+        let in_up = (yt > 0.0 && at < c - eps) || (yt < 0.0 && at > eps);
+        let in_low = (yt > 0.0 && at > eps) || (yt < 0.0 && at < c - eps);
+        if in_up && f[t] < e.fi {
+            e.fi = f[t];
+            e.i = t;
+        }
+        if in_low && f[t] > e.fj {
+            e.fj = f[t];
+            e.j = t;
+        }
+    }
+    e
+}
+
+/// Solve the dual with the working-set engine. Returns the solution plus
+/// the shrink bookkeeping (cache counters live on `src`).
+pub fn solve(
+    src: &mut dyn KernelSource,
+    y: &[f32],
+    p: &SvmParams,
+    cfg: &EngineConfig,
+) -> (SmoSolution, ShrinkStats) {
+    let n = y.len();
+    assert_eq!(src.n(), n);
+    let c = p.c as f64;
+    let tol = p.tol as f64;
+    let eps = 1e-10f64;
+    let threads = parallel::resolve_threads(cfg.threads);
+
+    let yd: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+    let mut alpha = vec![0.0f64; n];
+    let mut f: Vec<f64> = yd.iter().map(|&v| -v).collect();
+    let mut active = ActiveSet::full(n);
+
+    let mut iters = 0usize;
+    let mut since_shrink = 0usize;
+    let (mut b_up, mut b_low) = (0.0f64, 0.0f64);
+    let mut converged = false;
+
+    while iters < p.max_iter {
+        // Select the extreme violating pair over the active set.
+        let e = parallel::par_map_reduce(
+            active.len(),
+            threads,
+            parallel::MIN_CHUNK,
+            |r| scan_range(&active.idx, r, &f, &alpha, &yd, c, eps),
+            Extremes::join,
+        )
+        .unwrap_or_else(Extremes::empty);
+
+        let optimal_here = e.i == usize::MAX || e.j == usize::MAX || {
+            b_up = e.fi;
+            b_low = e.fj;
+            b_low <= b_up + 2.0 * tol
+        };
+        if optimal_here {
+            if active.is_full() {
+                converged = true;
+                break;
+            }
+            // Apparent convergence of the shrunk problem: reactivate all,
+            // reconstruct the stale f-entries from the support-vector
+            // kernel rows, and let the full-set scan have the final word.
+            let stale = active.unshrink();
+            reconstruct_f(src, &yd, &alpha, &mut f, &stale, eps);
+            since_shrink = 0;
+            continue;
+        }
+        let (i, j) = (e.i, e.j);
+
+        // Analytic two-variable step on (i=high, j=low) — expression-for-
+        // expression the oracle's update (f32 kernel reads, f64 state).
+        let (yi, yj) = (yd[i], yd[j]);
+        let ki = src.row(i);
+        let kj = src.row(j);
+        let eta = ((ki[i] + kj[j] - 2.0 * ki[j]) as f64).max(1e-12);
+        let s = yi * yj;
+        let (ai, aj) = (alpha[i], alpha[j]);
+        let (lo, hi) = if s > 0.0 {
+            ((aj + ai - c).max(0.0), (aj + ai).min(c))
+        } else {
+            ((aj - ai).max(0.0), (c + aj - ai).min(c))
+        };
+        let aj_new = (aj + yj * (b_up - b_low) / eta).clamp(lo, hi);
+        let d_aj = aj_new - aj;
+        let d_ai = -s * d_aj;
+        alpha[j] = aj_new;
+        alpha[i] += d_ai;
+
+        // Rank-2 f update over the active set (the per-iteration hot loop).
+        let ci = d_ai * yi;
+        let cj = d_aj * yj;
+        if active.is_full() {
+            // Contiguous: safe to split f into disjoint mutable chunks.
+            let (ki, kj) = (&ki[..], &kj[..]);
+            parallel::par_apply_mut(&mut f, threads, parallel::MIN_CHUNK, |start, piece| {
+                for (off, ft) in piece.iter_mut().enumerate() {
+                    let t = start + off;
+                    *ft += ci * ki[t] as f64 + cj * kj[t] as f64;
+                }
+            });
+        } else {
+            // Shrunk: the scattered index list is already small.
+            for &t in &active.idx {
+                f[t] += ci * ki[t] as f64 + cj * kj[t] as f64;
+            }
+        }
+        iters += 1;
+        since_shrink += 1;
+
+        if cfg.shrink && since_shrink >= cfg.shrink_every.max(1) {
+            since_shrink = 0;
+            let (bu, bl) = (b_up, b_low);
+            active.shrink_by(|t| {
+                let at = alpha[t];
+                let yt = yd[t];
+                let bound = at <= eps || at >= c - eps;
+                if !bound {
+                    return false;
+                }
+                let in_up = (yt > 0.0 && at < c - eps) || (yt < 0.0 && at > eps);
+                let in_low = (yt > 0.0 && at > eps) || (yt < 0.0 && at < c - eps);
+                match (in_up, in_low) {
+                    // Only ever eligible as i, and f is above every
+                    // violating threshold: cannot be selected.
+                    (true, false) => f[t] > bl,
+                    // Mirror for the j side.
+                    (false, true) => f[t] < bu,
+                    _ => false,
+                }
+            });
+        }
+    }
+
+    // If the budget ran out while shrunk, alphas are still exact; only
+    // diagnostics depend on f, and the thresholds reflect the last scan.
+    let solution = SmoSolution {
+        alpha: alpha.iter().map(|&a| a as f32).collect(),
+        bias: (-(b_up + b_low) / 2.0) as f32,
+        iters,
+        b_up: b_up as f32,
+        b_low: b_low as f32,
+        converged,
+    };
+    (solution, active.stats)
+}
+
+/// Rebuild `f[t] = -y_t + Σ_j α_j y_j K(t,j)` for the stale indices using
+/// one kernel row per support vector (row-cache friendly: the SV rows are
+/// exactly the hot set).
+fn reconstruct_f(
+    src: &mut dyn KernelSource,
+    yd: &[f64],
+    alpha: &[f64],
+    f: &mut [f64],
+    stale: &[usize],
+    eps: f64,
+) {
+    if stale.is_empty() {
+        return;
+    }
+    for &t in stale {
+        f[t] = -yd[t];
+    }
+    for (j, &aj) in alpha.iter().enumerate() {
+        if aj <= eps {
+            continue;
+        }
+        let row = src.row(j);
+        let w = aj * yd[j];
+        for &t in stale {
+            f[t] += w * row[t] as f64;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::svm::kernel;
+    use crate::svm::smo;
+    use crate::svm::solver::cache::{DenseSource, KernelCache, KernelSource};
+    use crate::svm::testutil::blobs;
+
+    fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn cached_unshrunk_is_bit_identical_to_oracle() {
+        let prob = blobs(50, 5, 1.5, 21);
+        let p = SvmParams::default();
+        let n = prob.n();
+        let k = kernel::rbf_gram(&prob.x, n, prob.d, p.gamma);
+        let oracle = smo::solve_gram(&k, &prob.y, &p);
+
+        let mut cache = KernelCache::new(&prob.x, n, prob.d, p.gamma, 0, 1);
+        let (sol, _) = solve(&mut cache, &prob.y, &p, &EngineConfig::default());
+        assert_eq!(sol.iters, oracle.iters, "iterate sequences must match");
+        assert_eq!(sol.converged, oracle.converged);
+        for (a, b) in sol.alpha.iter().zip(oracle.alpha.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(sol.bias.to_bits(), oracle.bias.to_bits());
+    }
+
+    #[test]
+    fn dense_source_replays_oracle() {
+        let prob = blobs(30, 4, 2.0, 8);
+        let p = SvmParams::default();
+        let n = prob.n();
+        let k = kernel::rbf_gram(&prob.x, n, prob.d, p.gamma);
+        let oracle = smo::solve_gram(&k, &prob.y, &p);
+        let mut src = DenseSource::from_gram(&k, n);
+        let (sol, _) = solve(&mut src, &prob.y, &p, &EngineConfig::default());
+        assert_eq!(sol.iters, oracle.iters);
+        assert_eq!(max_abs_diff(&sol.alpha, &oracle.alpha), 0.0);
+    }
+
+    #[test]
+    fn tight_budget_matches_oracle_within_tolerance() {
+        let prob = blobs(40, 4, 1.0, 13); // overlapping: bound + free alphas
+        let p = SvmParams::default();
+        let n = prob.n();
+        let k = kernel::rbf_gram(&prob.x, n, prob.d, p.gamma);
+        let oracle = smo::solve_gram(&k, &prob.y, &p);
+
+        let budget = n / 4;
+        let mut cache = KernelCache::new(&prob.x, n, prob.d, p.gamma, budget, 1);
+        let (sol, _) = solve(&mut cache, &prob.y, &p, &EngineConfig::cached(budget));
+        assert!(sol.converged);
+        // Row values are identical whatever the budget, so even the
+        // trajectory is identical — eviction only costs recomputation.
+        assert!(max_abs_diff(&sol.alpha, &oracle.alpha) < 1e-4);
+        let s = cache.stats();
+        assert!(s.max_resident <= budget, "materialized beyond the budget");
+        assert!(s.evictions > 0);
+    }
+
+    #[test]
+    fn shrinking_reaches_the_same_optimum() {
+        let prob = blobs(60, 4, 0.8, 17); // hard enough to trigger shrinking
+        let p = SvmParams::default();
+        let n = prob.n();
+        let k = kernel::rbf_gram(&prob.x, n, prob.d, p.gamma);
+        let oracle = smo::solve_gram(&k, &prob.y, &p);
+
+        let cfg = EngineConfig { shrink: true, shrink_every: 50, ..Default::default() };
+        let mut cache = KernelCache::new(&prob.x, n, prob.d, p.gamma, 0, 1);
+        let (sol, _stats) = solve(&mut cache, &prob.y, &p, &cfg);
+        assert!(sol.converged);
+        // Shrinking may take a different path through a degenerate optimal
+        // face, so the comparison is optimality, not alpha identity: the
+        // dual objective must match the oracle's and KKT must hold on the
+        // FULL problem (the unshrink-and-verify guarantee).
+        let w_oracle = smo::dual_objective(&k, &prob.y, &oracle.alpha);
+        let w_shrunk = smo::dual_objective(&k, &prob.y, &sol.alpha);
+        assert!(
+            (w_shrunk - w_oracle).abs() <= 1e-4 * w_oracle.abs().max(1.0),
+            "objective {w_shrunk} vs oracle {w_oracle}"
+        );
+        assert!(smo::kkt_violation(&k, &prob.y, &sol.alpha, p.c) <= 2.0 * p.tol + 1e-4);
+        // Box + equality constraints hold.
+        let mut dot = 0.0f64;
+        for i in 0..n {
+            assert!(sol.alpha[i] >= -1e-6 && sol.alpha[i] <= p.c + 1e-6);
+            dot += (sol.alpha[i] * prob.y[i]) as f64;
+        }
+        assert!(dot.abs() < 1e-3);
+    }
+
+    #[test]
+    fn parallel_engine_matches_serial() {
+        let prob = blobs(80, 6, 1.2, 29);
+        let p = SvmParams::default();
+        let n = prob.n();
+        let mut c1 = KernelCache::new(&prob.x, n, prob.d, p.gamma, 0, 1);
+        let (serial, _) = solve(&mut c1, &prob.y, &p, &EngineConfig::default());
+        let cfg = EngineConfig { threads: 4, ..Default::default() };
+        let mut c4 = KernelCache::new(&prob.x, n, prob.d, p.gamma, 0, 4);
+        let (par, _) = solve(&mut c4, &prob.y, &p, &cfg);
+        assert_eq!(serial.iters, par.iters);
+        assert_eq!(max_abs_diff(&serial.alpha, &par.alpha), 0.0);
+    }
+
+    #[test]
+    fn degenerate_single_class_converges_immediately() {
+        let y = vec![1.0f32, 1.0];
+        let x = vec![0.0f32, 1.0, 2.0, 3.0];
+        let mut cache = KernelCache::new(&x, 2, 2, 0.5, 0, 1);
+        let (sol, _) = solve(&mut cache, &y, &SvmParams::default(), &EngineConfig::default());
+        assert!(sol.converged);
+        assert_eq!(sol.iters, 0);
+        // No violating pair was ever selected, so no kernel row was needed.
+        assert_eq!(cache.stats().misses, 0);
+    }
+
+    #[test]
+    fn iteration_cap_respected() {
+        let prob = blobs(50, 4, 0.1, 5);
+        let p = SvmParams { max_iter: 10, ..Default::default() };
+        let mut cache = KernelCache::new(&prob.x, prob.n(), prob.d, p.gamma, 0, 1);
+        let (sol, _) = solve(&mut cache, &prob.y, &p, &EngineConfig::default());
+        assert_eq!(sol.iters, 10);
+        assert!(!sol.converged);
+    }
+}

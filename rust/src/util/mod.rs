@@ -1,6 +1,6 @@
 //! Small self-contained substrates (no external crates are available in the
-//! build environment beyond `xla`/`anyhow`/`thiserror`, so the usual
-//! ecosystem pieces — RNG, JSON, CLI parsing — are implemented here).
+//! build environment beyond the vendored `xla` stub, so the usual ecosystem
+//! pieces — RNG, JSON, CLI parsing, error derive — are implemented here).
 
 pub mod args;
 pub mod json;

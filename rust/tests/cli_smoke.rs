@@ -9,6 +9,18 @@ fn parasvm() -> Command {
     c
 }
 
+/// Artifact-dependent CLI paths only run when `make artifacts` has been
+/// done; a clean checkout skips them (the binary itself must still work).
+fn have_artifacts() -> bool {
+    let ok = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists();
+    if !ok {
+        eprintln!("skipping: artifacts missing (run `make artifacts`)");
+    }
+    ok
+}
+
 fn run_ok(args: &[&str]) -> String {
     let out = parasvm().args(args).output().expect("spawn parasvm");
     assert!(
@@ -37,6 +49,9 @@ fn datasets_prints_table1() {
 
 #[test]
 fn artifacts_lists_registry() {
+    if !have_artifacts() {
+        return;
+    }
     let s = run_ok(&["artifacts"]);
     assert!(s.contains("smo_chunk_n128"));
     assert!(s.contains("buckets"));
@@ -78,6 +93,9 @@ fn unknown_subcommand_fails() {
 
 #[test]
 fn selfcheck_passes_against_artifacts() {
+    if !have_artifacts() {
+        return;
+    }
     let s = run_ok(&["selfcheck"]);
     assert!(s.contains("selfcheck OK"));
 }

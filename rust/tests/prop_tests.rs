@@ -7,6 +7,7 @@ use parasvm::coordinator::pairs::{assign, Partition};
 use parasvm::coordinator::wire;
 use parasvm::data::{scale::Scaler, split, Dataset};
 use parasvm::svm::multiclass::{argmax_tiebreak, ovo_pairs};
+use parasvm::svm::solver::{working_set, EngineConfig, KernelCache, KernelSource};
 use parasvm::svm::{kernel, smo, SvmParams};
 use parasvm::util::prop::{check, f32_in, labels, matrix, usize_in, Config};
 use parasvm::util::rng::Rng;
@@ -231,6 +232,97 @@ fn prop_smo_solution_satisfies_kkt_and_box() {
         }
         assert!(dot.abs() < 1e-3 * p.c as f64 * n as f64);
         assert!(smo::kkt_violation(&k, &y, &sol.alpha, p.c) <= 2.0 * p.tol + 1e-3);
+    });
+}
+
+#[test]
+fn prop_cached_and_shrunk_engines_match_dense_oracle() {
+    // The acceptance bar for the solver subsystem: on random problems the
+    // cached engine (with and without shrinking, serial and threaded)
+    // produces duals within 1e-4 of the sequential solve_gram oracle.
+    check("cached/shrunk duals == oracle", cfg(16), |rng| {
+        let n = usize_in(rng, 6, 60);
+        let d = usize_in(rng, 1, 8);
+        let x = matrix(rng, n, d, 1.0);
+        let y = labels(rng, n);
+        let p = SvmParams {
+            c: f32_in(rng, 0.5, 20.0),
+            gamma: f32_in(rng, 0.05, 2.0),
+            ..Default::default()
+        };
+        let k = kernel::rbf_gram(&x, n, d, p.gamma);
+        let oracle = smo::solve_gram(&k, &y, &p);
+
+        let budget = usize_in(rng, 2, n); // sometimes < n: force eviction
+        // Unshrunk (serial or threaded): the trajectory replays the oracle
+        // exactly whatever the budget, so duals match within 1e-4 (they are
+        // in fact bit-identical).
+        let exact_configs = [
+            EngineConfig::cached(budget),
+            EngineConfig { threads: usize_in(rng, 2, 4), ..EngineConfig::cached(budget) },
+        ];
+        for cfg in exact_configs {
+            let mut cache = KernelCache::new(&x, n, d, p.gamma, budget, 1);
+            let (sol, _) = working_set::solve(&mut cache, &y, &p, &cfg);
+            assert_eq!(sol.converged, oracle.converged, "{cfg:?}");
+            for (i, (a, b)) in sol.alpha.iter().zip(oracle.alpha.iter()).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-4,
+                    "{cfg:?}: alpha[{i}] {a} vs oracle {b} (n={n} budget={budget})"
+                );
+            }
+        }
+        // Shrinking may cross a degenerate optimal face on overlapping
+        // data, so its contract is optimality: same dual objective, KKT on
+        // the full problem, constraints intact.
+        let w_oracle = smo::dual_objective(&k, &y, &oracle.alpha);
+        let shrink_cfg = EngineConfig { shrink_every: 25, ..EngineConfig::cached_shrink(budget) };
+        let mut cache = KernelCache::new(&x, n, d, p.gamma, budget, 1);
+        let (sol, _) = working_set::solve(&mut cache, &y, &p, &shrink_cfg);
+        assert!(sol.converged);
+        let w = smo::dual_objective(&k, &y, &sol.alpha);
+        assert!(
+            (w - w_oracle).abs() <= 1e-4 * w_oracle.abs().max(1.0),
+            "objective {w} vs oracle {w_oracle} (n={n} budget={budget})"
+        );
+        assert!(smo::kkt_violation(&k, &y, &sol.alpha, p.c) <= 2.0 * p.tol + 1e-3);
+        let mut dot = 0.0f64;
+        for i in 0..n {
+            assert!(sol.alpha[i] >= -1e-6 && sol.alpha[i] <= p.c + 1e-6);
+            dot += (sol.alpha[i] * y[i]) as f64;
+        }
+        assert!(dot.abs() < 1e-3 * p.c as f64 * n as f64);
+    });
+}
+
+#[test]
+fn prop_budgeted_cache_never_materializes_full_gram() {
+    // Eviction correctness under a budget strictly below n: every row the
+    // solver sees is exact, residency never exceeds the budget, and the
+    // solve still lands on the oracle optimum.
+    check("cache budget respected", cfg(16), |rng| {
+        let n = usize_in(rng, 12, 48);
+        let d = usize_in(rng, 1, 6);
+        let x = matrix(rng, n, d, 1.0);
+        let y = labels(rng, n);
+        let p = SvmParams::default();
+        let budget = usize_in(rng, 2, (n / 2).max(3));
+        let mut cache = KernelCache::new(&x, n, d, p.gamma, budget, 1);
+        let (sol, _) = working_set::solve(&mut cache, &y, &p, &EngineConfig::cached(budget));
+        let s = cache.stats();
+        assert!(s.max_resident <= budget, "resident {} > budget {budget}", s.max_resident);
+        let k = kernel::rbf_gram(&x, n, d, p.gamma);
+        let oracle = smo::solve_gram(&k, &y, &p);
+        for (a, b) in sol.alpha.iter().zip(oracle.alpha.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        // Shrinking on top of the same budget must still end KKT-optimal.
+        let mut cache2 = KernelCache::new(&x, n, d, p.gamma, budget, 1);
+        let (sol2, _) =
+            working_set::solve(&mut cache2, &y, &p, &EngineConfig::cached_shrink(budget));
+        assert!(sol2.converged);
+        assert!(cache2.stats().max_resident <= budget);
+        assert!(smo::kkt_violation(&k, &y, &sol2.alpha, p.c) <= 2.0 * p.tol + 1e-3);
     });
 }
 

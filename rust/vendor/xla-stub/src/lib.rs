@@ -1,0 +1,168 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The build environment for this tree has no network access and no
+//! prebuilt PJRT plugin, so this crate mirrors exactly the API surface the
+//! `parasvm` runtime layer uses and fails *at execution time*, not compile
+//! time:
+//!
+//! * client construction, host-buffer upload and manifest/HLO file loading
+//!   succeed (they are pure host work), so registry parsing, bucket logic
+//!   and every error path stay testable;
+//! * `compile`/`execute_b`/`to_literal_sync` return [`Error::Unavailable`]
+//!   with a message pointing at the real bindings.
+//!
+//! To run the device backend for real, replace the `xla` path dependency in
+//! `rust/Cargo.toml` with the actual PJRT bindings (the method names below
+//! match) and rebuild with `make artifacts`.
+
+use std::fmt;
+
+/// Stub error: every device operation reports itself as unavailable.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} requires the real PJRT bindings (this build uses the offline \
+         xla stub; see rust/vendor/xla-stub)"
+    ))
+}
+
+/// Element types transferable to/from device buffers.
+pub trait ArrayElement: Copy {}
+impl ArrayElement for f32 {}
+impl ArrayElement for f64 {}
+impl ArrayElement for i32 {}
+impl ArrayElement for i64 {}
+
+/// Placeholder device handle (the real crate exposes per-device placement).
+#[derive(Debug, Clone, Copy)]
+pub struct PjRtDevice;
+
+/// Stub PJRT client: constructible, uploads succeed, compilation errors.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    pub fn buffer_from_host_buffer<T: ArrayElement>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer)
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compiling an HLO computation"))
+    }
+}
+
+/// Stub device buffer (holds no data — nothing can execute against it).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("downloading a device buffer"))
+    }
+}
+
+/// Stub compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("executing a compiled artifact"))
+    }
+}
+
+/// Stub host literal.
+#[derive(Debug)]
+pub struct Literal;
+
+impl Literal {
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("decomposing a literal"))
+    }
+
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        Err(unavailable("reading a literal"))
+    }
+
+    pub fn get_first_element<T: ArrayElement>(&self) -> Result<T> {
+        Err(unavailable("reading a literal scalar"))
+    }
+}
+
+/// Parsed HLO module (the stub only verifies the file is readable; the text
+/// is validated by the real compiler, which the stub does not have).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        std::fs::read_to_string(path)
+            .map(|_| HloModuleProto)
+            .map_err(|e| Error(format!("cannot read HLO text {path}: {e}")))
+    }
+}
+
+/// Stub computation wrapper.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_side_operations_succeed() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "stub-cpu");
+        let buf = client
+            .buffer_from_host_buffer(&[1.0f32, 2.0], &[2], None)
+            .unwrap();
+        assert!(buf.to_literal_sync().is_err());
+    }
+
+    #[test]
+    fn device_operations_report_unavailable() {
+        let client = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation;
+        let err = client.compile(&comp).unwrap_err();
+        assert!(err.to_string().contains("xla stub"));
+        let exe = PjRtLoadedExecutable;
+        assert!(exe.execute_b(&[]).is_err());
+    }
+
+    #[test]
+    fn hlo_from_missing_file_errors() {
+        assert!(HloModuleProto::from_text_file("/nonexistent/x.hlo.txt").is_err());
+    }
+}
