@@ -1,6 +1,8 @@
 //! Solver-engine ablation bench: dense vs cached vs cached+shrink vs
-//! parallel working-set SMO on the Pavia subset, plus sequential- vs
-//! concurrent-pair OvO multiclass on a 4-worker universe.
+//! parallel working-set SMO on the Pavia subset, the row-sharded
+//! distributed engine at 1/2/4 ranks vs the single-rank cached engine,
+//! plus sequential- vs concurrent-pair OvO multiclass on a 4-worker
+//! universe.
 //!
 //! Native-only — runs from a clean checkout, no `make artifacts` needed:
 //!

@@ -13,6 +13,51 @@ pub const TAG_SCATTER: u32 = 0xC000_0002;
 pub const TAG_GATHER: u32 = 0xC000_0003;
 pub const TAG_REDUCE: u32 = 0xC000_0004;
 pub const TAG_BARRIER: u32 = 0xC000_0005;
+pub const TAG_REDUCE_PAIR: u32 = 0xC000_0006;
+pub const TAG_ALLGATHER: u32 = 0xC000_0007;
+
+/// One rank's candidate in a MINLOC/MAXLOC-style reduction: a comparison
+/// `key`, the global `index` it belongs to (`u64::MAX` = "no candidate"),
+/// and an auxiliary `value` that rides along with the winner (e.g. the
+/// f-entry of the selected working-set index). f64 payloads travel as raw
+/// bit patterns, so the reduction is exact — no f32 rounding on the wire.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PairCandidate {
+    pub key: f64,
+    pub index: u64,
+    pub value: f64,
+}
+
+impl PairCandidate {
+    pub fn new(key: f64, index: u64, value: f64) -> PairCandidate {
+        PairCandidate { key, index, value }
+    }
+
+    /// The empty candidate for a max-reduction (never wins a strict join).
+    pub fn none_max() -> PairCandidate {
+        PairCandidate { key: f64::NEG_INFINITY, index: u64::MAX, value: 0.0 }
+    }
+
+    /// The empty candidate for a min-reduction.
+    pub fn none_min() -> PairCandidate {
+        PairCandidate { key: f64::INFINITY, index: u64::MAX, value: 0.0 }
+    }
+
+    fn to_words(self) -> [u64; 3] {
+        [self.key.to_bits(), self.index, self.value.to_bits()]
+    }
+
+    fn from_words(w: &[u64]) -> Result<PairCandidate> {
+        if w.len() != 3 {
+            return Err(Error::Cluster(format!("pair candidate frame len {}", w.len())));
+        }
+        Ok(PairCandidate {
+            key: f64::from_bits(w[0]),
+            index: w[1],
+            value: f64::from_bits(w[2]),
+        })
+    }
+}
 
 impl Comm {
     /// Broadcast `data` from `root` to every rank; returns the received
@@ -60,19 +105,7 @@ impl Comm {
     /// Gather per-rank buffers (possibly of different lengths) at `root`.
     /// Root receives `Some(vec_of_per_rank_buffers)`, others get `None`.
     pub fn gather_f32s(&mut self, root: usize, data: &[f32]) -> Result<Option<Vec<Vec<f32>>>> {
-        if self.rank() == root {
-            let mut out = vec![Vec::new(); self.size()];
-            out[root] = data.to_vec();
-            for src in 0..self.size() {
-                if src != root {
-                    out[src] = self.recv_f32s(src, TAG_GATHER)?;
-                }
-            }
-            Ok(Some(out))
-        } else {
-            self.send_f32s(root, TAG_GATHER, data)?;
-            Ok(None)
-        }
+        self.gather_at(root, data, TAG_GATHER)
     }
 
     /// All-reduce (element-wise sum): gather at rank 0, reduce, re-broadcast.
@@ -104,6 +137,159 @@ impl Comm {
         }
     }
 
+    /// MAXLOC-style all-reduce: every rank contributes one
+    /// [`PairCandidate`]; all ranks receive the candidate with the greatest
+    /// `key`. Candidates are joined **in rank order with a strict
+    /// comparison**, so ties go to the lowest rank — with contiguous
+    /// ascending row shards this reproduces the first-index-wins
+    /// tie-breaking of a serial ascending scan exactly.
+    pub fn allreduce_max_pair(&mut self, cand: PairCandidate) -> Result<PairCandidate> {
+        self.allreduce_pair(cand, |new, best| new.key > best.key)
+    }
+
+    /// MINLOC twin of [`Comm::allreduce_max_pair`] (smallest `key` wins,
+    /// lowest rank on ties).
+    pub fn allreduce_min_pair(&mut self, cand: PairCandidate) -> Result<PairCandidate> {
+        self.allreduce_pair(cand, |new, best| new.key < best.key)
+    }
+
+    fn allreduce_pair(
+        &mut self,
+        cand: PairCandidate,
+        better: impl Fn(&PairCandidate, &PairCandidate) -> bool,
+    ) -> Result<PairCandidate> {
+        if self.rank() == 0 {
+            let mut best = cand;
+            for src in 1..self.size() {
+                let got = PairCandidate::from_words(&self.recv_u64s(src, TAG_REDUCE_PAIR)?)?;
+                if better(&got, &best) {
+                    best = got;
+                }
+            }
+            let words = best.to_words();
+            for dst in 1..self.size() {
+                self.send_u64s(dst, TAG_REDUCE_PAIR, &words)?;
+            }
+            Ok(best)
+        } else {
+            self.send_u64s(0, TAG_REDUCE_PAIR, &cand.to_words())?;
+            PairCandidate::from_words(&self.recv_u64s(0, TAG_REDUCE_PAIR)?)
+        }
+    }
+
+    /// All-gather per-rank buffers (possibly of different lengths): every
+    /// rank receives all ranks' buffers ordered by rank. Root-relayed like
+    /// the other collectives: gather at rank 0, re-broadcast with a lengths
+    /// header.
+    pub fn allgather_f32s(&mut self, data: &[f32]) -> Result<Vec<Vec<f32>>> {
+        let gathered = self.gather_at(0, data, TAG_ALLGATHER)?;
+        let frame = if self.rank() == 0 {
+            let parts = gathered.unwrap();
+            let mut frame = Vec::with_capacity(1 + parts.len());
+            frame.push(parts.len() as f32);
+            for p in &parts {
+                if p.len() >= (1 << 24) {
+                    return Err(Error::Cluster(format!(
+                        "allgather buffer len {} too large for f32 wire count",
+                        p.len()
+                    )));
+                }
+                frame.push(p.len() as f32);
+            }
+            for p in &parts {
+                frame.extend_from_slice(p);
+            }
+            self.bcast_f32s(0, &frame)?
+        } else {
+            self.bcast_f32s(0, &[])?
+        };
+        // Decode [n_ranks, len_0.., payload_0..].
+        let ranks = frame.first().map(|&v| v as usize).unwrap_or(0);
+        if ranks != self.size() || frame.len() < 1 + ranks {
+            return Err(Error::Cluster("allgather frame header corrupt".into()));
+        }
+        let mut out = Vec::with_capacity(ranks);
+        let mut pos = 1 + ranks;
+        for r in 0..ranks {
+            let len = frame[1 + r] as usize;
+            let end = pos + len;
+            if end > frame.len() {
+                return Err(Error::Cluster("allgather frame truncated".into()));
+            }
+            out.push(frame[pos..end].to_vec());
+            pos = end;
+        }
+        if pos != frame.len() {
+            return Err(Error::Cluster("allgather frame has trailing data".into()));
+        }
+        Ok(out)
+    }
+
+    /// u64 twin of [`Comm::allgather_f32s`] — exact integers on the wire
+    /// (per-rank solver counters would silently round above 2^24 as f32).
+    pub fn allgather_u64s(&mut self, data: &[u64]) -> Result<Vec<Vec<u64>>> {
+        let frame = if self.rank() == 0 {
+            let mut parts = vec![Vec::new(); self.size()];
+            parts[0] = data.to_vec();
+            for src in 1..self.size() {
+                parts[src] = self.recv_u64s(src, TAG_ALLGATHER)?;
+            }
+            let mut frame = Vec::with_capacity(1 + parts.len());
+            frame.push(parts.len() as u64);
+            for p in &parts {
+                frame.push(p.len() as u64);
+            }
+            for p in &parts {
+                frame.extend_from_slice(p);
+            }
+            for dst in 1..self.size() {
+                self.send_u64s(dst, TAG_ALLGATHER, &frame)?;
+            }
+            frame
+        } else {
+            self.send_u64s(0, TAG_ALLGATHER, data)?;
+            self.recv_u64s(0, TAG_ALLGATHER)?
+        };
+        // Decode [n_ranks, len_0.., payload_0..].
+        let ranks = frame.first().copied().unwrap_or(0) as usize;
+        if ranks != self.size() || frame.len() < 1 + ranks {
+            return Err(Error::Cluster("allgather frame header corrupt".into()));
+        }
+        let mut out = Vec::with_capacity(ranks);
+        let mut pos = 1 + ranks;
+        for r in 0..ranks {
+            let len = frame[1 + r] as usize;
+            let end = pos + len;
+            if end > frame.len() {
+                return Err(Error::Cluster("allgather frame truncated".into()));
+            }
+            out.push(frame[pos..end].to_vec());
+            pos = end;
+        }
+        if pos != frame.len() {
+            return Err(Error::Cluster("allgather frame has trailing data".into()));
+        }
+        Ok(out)
+    }
+
+    /// Gather on an explicit tag (so collectives built on top of gather do
+    /// not collide with user-level [`Comm::gather_f32s`] traffic).
+    fn gather_at(&mut self, root: usize, data: &[f32], tag: u32) -> Result<Option<Vec<Vec<f32>>>> {
+        if self.rank() == root {
+            let mut out = vec![Vec::new(); self.size()];
+            out[root] = data.to_vec();
+            for src in 0..self.size() {
+                if src != root {
+                    out[src] = self.recv_f32s(src, tag)?;
+                }
+            }
+            Ok(Some(out))
+        } else {
+            self.send_f32s(root, tag, data)?;
+            Ok(None)
+        }
+    }
+
     /// Barrier: empty gather + empty bcast.
     pub fn barrier(&mut self) -> Result<()> {
         if self.rank() == 0 {
@@ -123,7 +309,119 @@ impl Comm {
 
 #[cfg(test)]
 mod tests {
+    use super::PairCandidate;
     use crate::cluster::{CostModel, Universe};
+
+    #[test]
+    fn max_pair_picks_global_argmax() {
+        let out = Universe::new(4, CostModel::free()).run(|mut c| {
+            // keys 0,10,20,30 at indices 100+rank; aux value = -key
+            let k = (c.rank() * 10) as f64;
+            let cand = PairCandidate::new(k, 100 + c.rank() as u64, -k);
+            c.allreduce_max_pair(cand).unwrap()
+        });
+        for v in out {
+            assert_eq!(v, PairCandidate::new(30.0, 103, -30.0));
+        }
+    }
+
+    #[test]
+    fn min_pair_picks_global_argmin() {
+        let out = Universe::new(3, CostModel::free()).run(|mut c| {
+            let k = (c.rank() as f64) - 1.0; // -1, 0, 1
+            c.allreduce_min_pair(PairCandidate::new(k, c.rank() as u64, 2.0 * k)).unwrap()
+        });
+        for v in out {
+            assert_eq!(v, PairCandidate::new(-1.0, 0, -2.0));
+        }
+    }
+
+    #[test]
+    fn pair_ties_go_to_lowest_rank() {
+        // Equal keys everywhere: the strict rank-order join must keep rank
+        // 0's candidate, matching a serial ascending scan's first-win.
+        let out = Universe::new(5, CostModel::free()).run(|mut c| {
+            let cand = PairCandidate::new(7.0, c.rank() as u64, c.rank() as f64);
+            c.allreduce_max_pair(cand).unwrap()
+        });
+        for v in out {
+            assert_eq!(v.index, 0);
+            assert_eq!(v.value, 0.0);
+        }
+    }
+
+    #[test]
+    fn pair_empty_candidates_never_win() {
+        let out = Universe::new(3, CostModel::free()).run(|mut c| {
+            let cand = if c.rank() == 1 {
+                PairCandidate::new(-5.0, 42, 9.0)
+            } else {
+                PairCandidate::none_max()
+            };
+            c.allreduce_max_pair(cand).unwrap()
+        });
+        for v in out {
+            assert_eq!((v.index, v.value), (42, 9.0));
+        }
+        // All empty: the reduction reports "no candidate" to everyone.
+        let out = Universe::new(3, CostModel::free())
+            .run(|mut c| c.allreduce_min_pair(PairCandidate::none_min()).unwrap());
+        for v in out {
+            assert_eq!(v.index, u64::MAX);
+        }
+    }
+
+    #[test]
+    fn pair_payload_is_bit_exact() {
+        // f64 keys/values must survive the wire without f32 rounding.
+        let key = 1.0 + 1e-12;
+        let out = Universe::new(2, CostModel::free()).run(move |mut c| {
+            let cand = PairCandidate::new(key * (1.0 + c.rank() as f64), c.rank() as u64, key);
+            c.allreduce_max_pair(cand).unwrap()
+        });
+        for v in out {
+            assert_eq!(v.key.to_bits(), (key * 2.0).to_bits());
+            assert_eq!(v.value.to_bits(), key.to_bits());
+        }
+    }
+
+    #[test]
+    fn allgather_delivers_all_ragged_buffers_everywhere() {
+        let out = Universe::new(4, CostModel::free()).run(|mut c| {
+            let mine = vec![c.rank() as f32; c.rank() + 1];
+            c.allgather_f32s(&mine).unwrap()
+        });
+        for per_rank in out {
+            assert_eq!(per_rank.len(), 4);
+            for (r, buf) in per_rank.iter().enumerate() {
+                assert_eq!(buf, &vec![r as f32; r + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_u64s_is_exact_beyond_f32_range() {
+        // Counters above 2^24 (where f32 integers stop being exact) and a
+        // full-range u64 must survive the wire bit-for-bit.
+        let big = [u64::MAX, (1u64 << 24) + 1, 0];
+        let out = Universe::new(3, CostModel::free()).run(move |mut c| {
+            let mine = [big[c.rank()], c.rank() as u64];
+            c.allgather_u64s(&mine).unwrap()
+        });
+        for per_rank in out {
+            assert_eq!(per_rank.len(), 3);
+            for (r, buf) in per_rank.iter().enumerate() {
+                assert_eq!(buf, &vec![big[r], r as u64]);
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_single_rank_is_identity() {
+        let out = Universe::new(1, CostModel::free())
+            .run(|mut c| c.allgather_f32s(&[1.5, -2.0]).unwrap());
+        assert_eq!(out[0], vec![vec![1.5, -2.0]]);
+    }
 
     #[test]
     fn bcast_reaches_all_ranks() {

@@ -10,14 +10,17 @@
 //!
 //! The API mirrors the MPI subset the paper's Fig 4 pseudocode needs:
 //! point-to-point `send`/`recv`, and the collectives `bcast`, `scatter`,
-//! `gather`, `allreduce`, `barrier` — all implemented over p2p exactly as a
-//! simple MPI layer would.
+//! `gather`, `allgather`, `allreduce` (sum and MINLOC/MAXLOC candidate
+//! reductions — the working-set selection primitive of the distributed
+//! solver), `barrier` — all implemented over p2p exactly as a simple MPI
+//! layer would.
 
 pub mod collectives;
 pub mod comm;
 pub mod costmodel;
 pub mod universe;
 
+pub use collectives::PairCandidate;
 pub use comm::Comm;
 pub use costmodel::{CostModel, NetStats};
 pub use universe::Universe;

@@ -49,6 +49,9 @@ pub struct RunConfig {
     pub params: SvmParams,
     /// Concurrent binary problems per rank (0 = auto, 1 = sequential).
     pub pair_threads: usize,
+    /// Ranks cooperating on each pair's QP (1 = off; >1 row-shards every
+    /// binary solve across a sub-universe of this many ranks).
+    pub solver_ranks: usize,
     /// Interconnect latency (seconds) and bandwidth (bytes/sec).
     pub net_latency: f64,
     pub net_bandwidth: f64,
@@ -67,6 +70,7 @@ impl Default for RunConfig {
             partition: Partition::Block,
             params: SvmParams::default(),
             pair_threads: 1,
+            solver_ranks: 1,
             net_latency: 50e-6,
             net_bandwidth: 1.25e9,
         }
@@ -82,12 +86,13 @@ impl RunConfig {
             partition: self.partition,
             net: CostModel { latency: self.net_latency, bandwidth: self.net_bandwidth },
             pair_threads: self.pair_threads,
+            solver_ranks: self.solver_ranks,
         }
     }
 
     /// Apply CLI overrides (each flag optional).
     pub fn apply_args(&mut self, args: &Args) -> Result<()> {
-        let e = |m: String| Error::Config(m);
+        let e = Error::Config;
         if let Some(v) = args.opt("dataset") {
             self.dataset = v.to_string();
         }
@@ -97,6 +102,8 @@ impl RunConfig {
         self.workers = args.get("workers").map_err(e)?.unwrap_or(self.workers);
         self.pair_threads =
             args.get("pair-threads").map_err(e)?.unwrap_or(self.pair_threads);
+        self.solver_ranks =
+            args.get("solver-ranks").map_err(e)?.unwrap_or(self.solver_ranks);
         if let Some(v) = args.opt("backend") {
             self.backend = v.parse().map_err(e)?;
         }
@@ -117,6 +124,9 @@ impl RunConfig {
             args.get("net-bandwidth").map_err(e)?.unwrap_or(self.net_bandwidth);
         if self.workers == 0 {
             return Err(Error::Config("workers must be > 0".into()));
+        }
+        if self.solver_ranks == 0 {
+            return Err(Error::Config("solver-ranks must be > 0".into()));
         }
         if !(0.0..=1.0).contains(&self.train_frac) {
             return Err(Error::Config("train-frac must be in [0,1]".into()));
@@ -148,6 +158,7 @@ impl RunConfig {
             ),
             ("workers", json::num(self.workers as f64)),
             ("pair_threads", json::num(self.pair_threads as f64)),
+            ("solver_ranks", json::num(self.solver_ranks as f64)),
             (
                 "partition",
                 json::s(match self.partition {
@@ -195,6 +206,9 @@ impl RunConfig {
         if let Some(v) = gn("pair_threads") {
             c.pair_threads = v as usize;
         }
+        if let Some(v) = gn("solver_ranks") {
+            c.solver_ranks = v as usize;
+        }
         if let Some(v) = gs("partition") {
             c.partition = v.parse().map_err(Error::Config)?;
         }
@@ -238,14 +252,35 @@ mod tests {
     use super::*;
 
     #[test]
-    fn json_roundtrip() {
+    fn solver_ranks_plumbing() {
+        // CLI override, JSON roundtrip and validation for the second axis.
+        let args = Args::parse(
+            "train --solver-ranks 4".split_whitespace().map(String::from),
+        )
+        .unwrap();
         let mut c = RunConfig::default();
-        c.dataset = "pavia".into();
-        c.workers = 8;
-        c.solver = Solver::Gd;
-        c.backend = BackendKind::Native;
-        c.partition = Partition::Lpt;
-        c.params.gamma = 0.125;
+        assert_eq!(c.solver_ranks, 1);
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.solver_ranks, 4);
+        assert_eq!(c.train_config().solver_ranks, 4);
+        let back = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.solver_ranks, 4);
+        let bad =
+            Args::parse("x --solver-ranks 0".split_whitespace().map(String::from)).unwrap();
+        assert!(RunConfig::default().apply_args(&bad).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = RunConfig {
+            dataset: "pavia".into(),
+            workers: 8,
+            solver: Solver::Gd,
+            backend: BackendKind::Native,
+            partition: Partition::Lpt,
+            params: SvmParams { gamma: 0.125, ..Default::default() },
+            ..Default::default()
+        };
         let back = RunConfig::from_json(&c.to_json()).unwrap();
         assert_eq!(back.dataset, "pavia");
         assert_eq!(back.workers, 8);
@@ -285,8 +320,7 @@ mod tests {
 
     #[test]
     fn train_config_mapping() {
-        let mut c = RunConfig::default();
-        c.net_latency = 1e-3;
+        let c = RunConfig { net_latency: 1e-3, ..Default::default() };
         let tc = c.train_config();
         assert_eq!(tc.workers, c.workers);
         assert_eq!(tc.net.latency, 1e-3);

@@ -42,6 +42,13 @@ pub struct TrainConfig {
     /// emitted in canonical pair order either way, so results are
     /// bit-identical to the sequential schedule.
     pub pair_threads: usize,
+    /// Second parallelism axis, orthogonal to `pair_threads`: ranks
+    /// cooperating on *each* pair's QP. 1 = off (the backend's solver
+    /// trains each pair alone); above 1 every binary problem is row-sharded
+    /// across a sub-universe of this many ranks
+    /// ([`crate::svm::solver::DistributedSmo`], host-executed, unshrunk
+    /// WSS1 — so models stay bit-identical to the single-rank baseline).
+    pub solver_ranks: usize,
 }
 
 impl Default for TrainConfig {
@@ -53,14 +60,44 @@ impl Default for TrainConfig {
             partition: Partition::Block,
             net: CostModel::gige10(),
             pair_threads: 1,
+            solver_ranks: 1,
         }
     }
 }
 
-/// Resolve the per-rank pair concurrency: explicit value, or cores/ranks.
-fn resolve_pair_threads(requested: usize, ranks: usize, n_pairs: usize) -> usize {
+/// Train one binary problem under the configured second parallelism axis:
+/// `solver_ranks <= 1` routes to the backend's solver as before; above
+/// that, the pair's SMO QP is row-sharded across a sub-universe of
+/// `solver_ranks` cooperating ranks (MPI communicator-split style), which
+/// composes with the per-rank `pair_threads` schedule. Only SMO-family
+/// solvers have a row-sharded form — [`train_multiclass`] rejects other
+/// combinations up front rather than silently substituting an algorithm.
+fn train_pair(
+    backend: &dyn SvmBackend,
+    cfg: &TrainConfig,
+    prob: &crate::data::BinaryProblem,
+) -> Result<(crate::svm::BinaryModel, TrainStats)> {
+    if cfg.solver_ranks > 1 {
+        let engine =
+            crate::svm::solver::DistributedSmo::auto(cfg.solver_ranks, prob.n(), cfg.net);
+        Ok(crate::svm::solver::train_with(&engine, prob, &cfg.params))
+    } else {
+        backend.train_binary(prob, &cfg.params, cfg.solver)
+    }
+}
+
+/// Resolve the per-rank pair concurrency: explicit value, or auto = cores
+/// divided by the *total* thread demand per pair (worker ranks × solver
+/// sub-ranks), so the two axes compose without oversubscribing the host.
+fn resolve_pair_threads(
+    requested: usize,
+    ranks: usize,
+    solver_ranks: usize,
+    n_pairs: usize,
+) -> usize {
     let t = if requested == 0 {
-        (crate::svm::solver::parallel::auto_threads() / ranks.max(1)).max(1)
+        (crate::svm::solver::parallel::auto_threads() / (ranks.max(1) * solver_ranks.max(1)))
+            .max(1)
     } else {
         requested
     };
@@ -125,6 +162,13 @@ pub fn train_multiclass(
     if ds.n_classes < 2 {
         return Err(Error::Train("need at least 2 classes".into()));
     }
+    if cfg.solver_ranks > 1 && !matches!(cfg.solver, Solver::Smo | Solver::SmoCached) {
+        return Err(Error::Train(format!(
+            "solver-ranks {} requires an SMO-family solver (smo|smo-cached); {:?} has no \
+             row-sharded form",
+            cfg.solver_ranks, cfg.solver
+        )));
+    }
     let universe = Universe::new(cfg.workers, cfg.net);
     let stats = universe.stats();
     let t0 = std::time::Instant::now();
@@ -163,7 +207,8 @@ pub fn train_multiclass(
                 (pi, local_ds.binary_pair(a, b))
             })
             .collect();
-        let par = resolve_pair_threads(cfg2.pair_threads, comm.size(), probs.len());
+        let par =
+            resolve_pair_threads(cfg2.pair_threads, comm.size(), cfg2.solver_ranks, probs.len());
         type PairOut = Result<(crate::svm::BinaryModel, TrainStats)>;
         let mut outs: Vec<Option<PairOut>> = (0..probs.len()).map(|_| None).collect();
         // Fail fast like the old sequential `?` loop: the first error stops
@@ -172,7 +217,7 @@ pub fn train_multiclass(
         let order = std::sync::atomic::Ordering::Relaxed;
         if par <= 1 {
             for (slot, (_, prob)) in outs.iter_mut().zip(probs.iter()) {
-                let r = backend.train_binary(prob, &cfg2.params, cfg2.solver);
+                let r = train_pair(backend.as_ref(), &cfg2, prob);
                 let failed = r.is_err();
                 *slot = Some(r);
                 if failed {
@@ -193,7 +238,7 @@ pub fn train_multiclass(
                                 break;
                             }
                             let (_, prob) = &probs[ci * stripe + off];
-                            let r = backend.train_binary(prob, &cfg2.params, cfg2.solver);
+                            let r = train_pair(backend.as_ref(), cfg2, prob);
                             if r.is_err() {
                                 abort.store(true, order);
                             }
@@ -377,11 +422,51 @@ mod tests {
     }
 
     #[test]
+    fn solver_ranks_axis_gives_bit_identical_models() {
+        // The row-sharded engine (unshrunk WSS1) replays the dense oracle
+        // exactly, so turning the second axis on must not perturb a single
+        // coefficient — and it composes with concurrent pairs.
+        let ds = iris::load();
+        let be = Arc::new(NativeBackend::new());
+        let base = quick_cfg(2);
+        let sharded = TrainConfig { solver_ranks: 3, ..quick_cfg(2) };
+        let both = TrainConfig { solver_ranks: 3, pair_threads: 2, ..quick_cfg(2) };
+        let (m0, _) = train_multiclass(&ds, be.clone(), &base).unwrap();
+        for cfg in [&sharded, &both] {
+            let (m, r) = train_multiclass(&ds, be.clone(), cfg).unwrap();
+            assert_eq!(m0.binaries.len(), m.binaries.len());
+            for (a, b) in m0.binaries.iter().zip(m.binaries.iter()) {
+                assert_eq!((a.pos_class, a.neg_class), (b.pos_class, b.neg_class));
+                assert_eq!(a.coef, b.coef);
+                assert_eq!(a.bias, b.bias);
+            }
+            for p in &r.pairs {
+                assert!(p.stats.converged);
+            }
+        }
+    }
+
+    #[test]
     fn auto_pair_threads_resolves_sanely() {
-        assert_eq!(super::resolve_pair_threads(1, 4, 10), 1);
-        assert_eq!(super::resolve_pair_threads(8, 4, 3), 3); // capped by pairs
-        assert!(super::resolve_pair_threads(0, 1, 100) >= 1); // auto
-        assert_eq!(super::resolve_pair_threads(0, 4, 0), 1); // empty share
+        assert_eq!(super::resolve_pair_threads(1, 4, 1, 10), 1);
+        assert_eq!(super::resolve_pair_threads(8, 4, 1, 3), 3); // capped by pairs
+        assert!(super::resolve_pair_threads(0, 1, 1, 100) >= 1); // auto
+        assert_eq!(super::resolve_pair_threads(0, 4, 1, 0), 1); // empty share
+        // The second axis divides the auto budget: R sub-ranks per pair
+        // leave at most cores/(workers*R) concurrent pairs per worker.
+        let cores = crate::svm::solver::parallel::auto_threads();
+        let with_subranks = super::resolve_pair_threads(0, 2, 4, 100);
+        assert!(with_subranks <= (cores / 8).max(1));
+    }
+
+    #[test]
+    fn solver_ranks_rejects_non_smo_solvers() {
+        // No silent algorithm substitution: GD has no row-sharded form.
+        let ds = iris::load();
+        let be = Arc::new(NativeBackend::new());
+        let cfg = TrainConfig { solver: Solver::Gd, solver_ranks: 2, ..quick_cfg(2) };
+        let err = train_multiclass(&ds, be, &cfg).unwrap_err();
+        assert!(err.to_string().contains("solver-ranks"), "{err}");
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Solver-engine ablation: dense vs cached vs cached+shrink vs parallel,
-//! plus sequential- vs concurrent-pair OvO multiclass.
+//! the row-sharded distributed engine at 1/2/4 ranks vs the single-rank
+//! cached engine, plus sequential- vs concurrent-pair OvO multiclass.
 //!
 //! Unlike the paper-table runners this workload is **native-only** (no AOT
 //! artifacts, no device), so it runs from a clean checkout and in CI — it
@@ -11,11 +12,12 @@
 use std::sync::Arc;
 
 use crate::backend::{NativeBackend, Solver, SvmBackend};
+use crate::cluster::CostModel;
 use crate::coordinator::{train_multiclass, TrainConfig};
 use crate::error::Result;
 use crate::metrics::bench::{bench, BenchConfig};
 use crate::metrics::table::Table;
-use crate::svm::solver::{DenseSmo, DualSolver, EngineConfig, WorkingSetSmo};
+use crate::svm::solver::{DenseSmo, DistributedSmo, DualSolver, EngineConfig, WorkingSetSmo};
 use crate::util::json::{self, Json};
 
 /// One engine row of the ablation.
@@ -28,6 +30,20 @@ pub struct EngineRow {
     pub cache_hit_rate: f64,
     pub max_resident_rows: usize,
     pub min_active: usize,
+}
+
+/// One row of the distributed 1/2/4-rank sweep (vs the single-rank cached
+/// engine on the same budget).
+#[derive(Debug, Clone)]
+pub struct DistRow {
+    pub ranks: usize,
+    pub median_secs: f64,
+    /// Speedup against the single-rank cached engine row.
+    pub speedup_vs_single: f64,
+    pub iters: usize,
+    pub net_messages: u64,
+    pub net_bytes: u64,
+    pub net_sim_secs: f64,
 }
 
 /// The OvO pair-concurrency comparison (4-worker universe).
@@ -46,6 +62,7 @@ pub struct SolverAblation {
     pub n: usize,
     pub d: usize,
     pub engines: Vec<EngineRow>,
+    pub distributed: Vec<DistRow>,
     pub ovo: Vec<OvoRow>,
 }
 
@@ -53,7 +70,7 @@ impl SolverAblation {
     /// Machine-readable form for `BENCH_solver.json`.
     pub fn to_json(&self) -> Json {
         json::obj(vec![
-            ("schema", json::s("parasvm-solver-ablation/v1")),
+            ("schema", json::s("parasvm-solver-ablation/v2")),
             ("dataset", json::s(&self.dataset)),
             ("n", json::num(self.n as f64)),
             ("d", json::num(self.d as f64)),
@@ -74,6 +91,25 @@ impl SolverAblation {
                                     json::num(r.max_resident_rows as f64),
                                 ),
                                 ("min_active", json::num(r.min_active as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "distributed",
+                json::arr(
+                    self.distributed
+                        .iter()
+                        .map(|r| {
+                            json::obj(vec![
+                                ("ranks", json::num(r.ranks as f64)),
+                                ("median_secs", json::num(r.median_secs)),
+                                ("speedup_vs_single", json::num(r.speedup_vs_single)),
+                                ("iters", json::num(r.iters as f64)),
+                                ("net_messages", json::num(r.net_messages as f64)),
+                                ("net_bytes", json::num(r.net_bytes as f64)),
+                                ("net_sim_secs", json::num(r.net_sim_secs)),
                             ])
                         })
                         .collect(),
@@ -171,6 +207,45 @@ pub fn run_solver_ablation(
         rows.push(row);
     }
 
+    // Distributed row-sharded engine at 1/2/4 ranks vs the single-rank
+    // cached engine (same total budget, split across the rank shards).
+    let single_cached_median = rows[1].median_secs;
+    let budget = (prob.n() / 4).max(2);
+    let mut dist_rows: Vec<DistRow> = Vec::new();
+    for ranks in [1usize, 2, 4] {
+        let engine = DistributedSmo::new(
+            ranks,
+            EngineConfig::cached((budget / ranks).max(2)),
+            CostModel::gige10(),
+        );
+        let label = format!("distributed ({ranks} rank{})", if ranks == 1 { "" } else { "s" });
+        let mut last = None;
+        let r = bench(&label, cfg, || {
+            last = Some(engine.solve(&prob, &w.params));
+        });
+        let out = last.expect("bench ran at least once");
+        let median = r.summary.median;
+        let row = DistRow {
+            ranks,
+            median_secs: median,
+            speedup_vs_single: if median > 0.0 { single_cached_median / median } else { 0.0 },
+            iters: out.solution.iters,
+            net_messages: out.net.messages,
+            net_bytes: out.net.bytes,
+            net_sim_secs: out.net.sim_secs,
+        };
+        table.row(&[
+            label,
+            format!("{:.4}", row.median_secs),
+            format!("{:.2}x cached", row.speedup_vs_single),
+            row.iters.to_string(),
+            String::new(),
+            String::new(),
+            format!("{} msg / {} B", row.net_messages, row.net_bytes),
+        ]);
+        dist_rows.push(row);
+    }
+
     // OvO: sequential pairs vs concurrent pairs on the same 4-rank world.
     let (ds, params) = super::multiclass_workload(ovo_per_class, seed);
     let be: Arc<dyn SvmBackend> = Arc::new(NativeBackend::new());
@@ -212,6 +287,7 @@ pub fn run_solver_ablation(
         n: prob.n(),
         d: prob.d,
         engines: rows,
+        distributed: dist_rows,
         ovo: ovo_rows,
     };
     Ok((table, ablation))
@@ -226,17 +302,31 @@ mod tests {
         let cfg = BenchConfig { warmup: 0, min_samples: 1, max_samples: 1, cv_target: 1.0 };
         let (table, ab) = run_solver_ablation(30, 8, &cfg, 3).unwrap();
         assert_eq!(ab.engines.len(), 4);
+        assert_eq!(ab.distributed.len(), 3);
         assert_eq!(ab.ovo.len(), 2);
         assert!((ab.engines[0].speedup_vs_dense - 1.0).abs() < 1e-9);
         // Budgeted engines must never have materialized the full Gram.
         for r in &ab.engines[1..] {
             assert!(r.max_resident_rows < ab.n, "{}", r.engine);
         }
+        // The distributed sweep is 1/2/4 ranks; every rank count replays
+        // the same unshrunk trajectory, so iteration counts agree, and
+        // only multi-rank rows move candidate bytes over the wire.
+        assert_eq!(
+            ab.distributed.iter().map(|r| r.ranks).collect::<Vec<_>>(),
+            vec![1, 2, 4]
+        );
+        for r in &ab.distributed {
+            assert_eq!(r.iters, ab.distributed[0].iters, "{} ranks", r.ranks);
+            assert_eq!(r.ranks > 1, r.net_bytes > 0, "{} ranks", r.ranks);
+        }
         let rendered = table.render();
         assert!(rendered.contains("dense"));
         assert!(rendered.contains("parallel"));
+        assert!(rendered.contains("distributed (4 ranks)"));
         let j = ab.to_json();
-        assert_eq!(j.get("schema").and_then(Json::as_str), Some("parasvm-solver-ablation/v1"));
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some("parasvm-solver-ablation/v2"));
         assert_eq!(j.get("engines").and_then(Json::as_arr).unwrap().len(), 4);
+        assert_eq!(j.get("distributed").and_then(Json::as_arr).unwrap().len(), 3);
     }
 }

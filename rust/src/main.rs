@@ -67,6 +67,8 @@ fn print_help() {
                               LRU row cache + shrinking) | gd (TF-analog)\n\
            --workers N        simulated MPI ranks (default 4)\n\
            --pair-threads N   concurrent OvO pairs per rank (0 auto, 1 seq)\n\
+           --solver-ranks N   ranks co-solving each pair's QP via the\n\
+                              row-sharded distributed SMO (default 1 = off)\n\
            --per-class N      subsample N points per class\n\
            --config FILE      load a JSON RunConfig (CLI flags override)\n\
            --seed N           dataset/run seed (default 42)\n\

@@ -18,7 +18,7 @@ pub mod tune;
 
 pub use model::{BinaryModel, TrainStats};
 pub use multiclass::OvoModel;
-pub use solver::{DualSolver, EngineConfig, KernelSource};
+pub use solver::{DistributedSmo, DualSolver, EngineConfig, KernelSource, Selection};
 
 #[cfg(test)]
 pub(crate) mod testutil {

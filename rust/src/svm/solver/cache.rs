@@ -15,6 +15,7 @@
 use std::sync::Arc;
 
 use super::parallel;
+use super::slice::RowSlice;
 
 /// Cache/traffic counters for one solve (feeds the ablation tables).
 #[derive(Debug, Clone, Copy, Default)]
@@ -39,14 +40,18 @@ impl CacheStats {
 
 /// A provider of kernel matrix rows for the dual solvers.
 ///
-/// `row(i)` returns the full i-th row of the (virtual) n×n kernel matrix.
-/// The `Arc` keeps a returned row alive across subsequent `row()` calls even
-/// if the cache evicts it, so a solver can hold K_i and K_j simultaneously.
+/// `row(i)` returns the i-th row of the (virtual) n×n kernel matrix —
+/// full width for single-host sources; a cache built with
+/// [`KernelCache::new_slice`] serves its configured column window instead
+/// (the distributed engine's per-rank shard). The `Arc` keeps a returned
+/// row alive across subsequent `row()` calls even if the cache evicts it,
+/// so a solver can hold K_i and K_j simultaneously.
 pub trait KernelSource {
     /// Problem size (rows of the virtual kernel matrix).
     fn n(&self) -> usize;
 
-    /// The i-th kernel row (length n).
+    /// The i-th kernel row (length n for full-width sources, the column
+    /// window's length for sliced caches).
     fn row(&mut self, i: usize) -> Arc<[f32]>;
 
     /// Cache counters (all-hits for dense sources).
@@ -61,6 +66,9 @@ pub struct KernelCache<'a> {
     gamma: f32,
     /// Precomputed squared row norms (the expanded-identity hoist).
     norms: Vec<f32>,
+    /// Column window served by `row()`: the full `[0, n)` for single-host
+    /// engines, one rank's shard for the distributed engine.
+    cols: RowSlice,
     /// Max resident rows; `>= n` disables eviction.
     budget: usize,
     /// Threads for computing a single missing row (1 = serial).
@@ -83,7 +91,25 @@ impl<'a> KernelCache<'a> {
         budget_rows: usize,
         threads: usize,
     ) -> KernelCache<'a> {
+        KernelCache::new_slice(x, n, d, gamma, RowSlice::full(n), budget_rows, threads)
+    }
+
+    /// A cache whose rows are restricted to the column window `cols`: row
+    /// `i` has length `cols.len()` and entry `t` holds `K(i, cols.lo + t)`
+    /// — the per-rank kernel shard of the distributed engine. Any global
+    /// row index `i < n` may be requested; values are bit-identical to the
+    /// matching window of the full row.
+    pub fn new_slice(
+        x: &'a [f32],
+        n: usize,
+        d: usize,
+        gamma: f32,
+        cols: RowSlice,
+        budget_rows: usize,
+        threads: usize,
+    ) -> KernelCache<'a> {
         assert_eq!(x.len(), n * d);
+        assert!(cols.hi <= n, "column window [{}, {}) exceeds n={n}", cols.lo, cols.hi);
         let budget = if budget_rows == 0 { n } else { budget_rows.max(1) };
         let norms = (0..n)
             .map(|i| x[i * d..(i + 1) * d].iter().map(|v| v * v).sum())
@@ -94,6 +120,7 @@ impl<'a> KernelCache<'a> {
             d,
             gamma,
             norms,
+            cols,
             budget,
             threads: threads.max(1),
             slots: vec![None; n],
@@ -111,6 +138,18 @@ impl<'a> KernelCache<'a> {
 
     pub fn budget(&self) -> usize {
         self.budget
+    }
+
+    /// The column window served by `row()`.
+    pub fn cols(&self) -> RowSlice {
+        self.cols
+    }
+
+    /// The precomputed squared row norms (full length n) — shared with
+    /// callers that evaluate scalar kernel entries via
+    /// [`super::parallel::rbf_entry`], so the O(n·d) norm pass runs once.
+    pub fn norms(&self) -> &[f32] {
+        &self.norms
     }
 
     fn evict_lru(&mut self) {
@@ -146,14 +185,15 @@ impl KernelSource for KernelCache<'_> {
         while self.resident.len() >= self.budget {
             self.evict_lru();
         }
-        let mut buf = vec![0.0f32; self.n];
-        parallel::rbf_row_into(
+        let mut buf = vec![0.0f32; self.cols.len()];
+        parallel::rbf_row_slice_into(
             &mut buf,
             self.x,
             &self.norms,
             i,
             self.d,
             self.gamma,
+            self.cols.lo,
             self.threads,
         );
         let row: Arc<[f32]> = buf.into();
@@ -298,6 +338,30 @@ mod tests {
         for j in 0..n {
             assert_eq!(row0[j].to_bits(), row0_again[j].to_bits());
         }
+    }
+
+    #[test]
+    fn sliced_cache_serves_column_windows_bitwise() {
+        let (n, d, gamma) = (24, 3, 0.6);
+        let x = random_x(n, d, 9);
+        let dense = kernel::rbf_gram(&x, n, d, gamma);
+        let cols = crate::svm::solver::slice::RowSlice::new(7, 19);
+        let mut cache = KernelCache::new_slice(&x, n, d, gamma, cols, 4, 1);
+        assert_eq!(cache.cols(), cols);
+        // Any global row, including ones outside the window, serves the
+        // window's slice of that row.
+        for i in [0, 8, 18, n - 1] {
+            let row = cache.row(i);
+            assert_eq!(row.len(), cols.len());
+            for (t, v) in row.iter().enumerate() {
+                assert_eq!(v.to_bits(), dense[i * n + cols.lo + t].to_bits(), "({i},{t})");
+            }
+        }
+        assert!(cache.stats().max_resident <= 4);
+        // Empty window: rows are empty but the cache still functions.
+        let empty = crate::svm::solver::slice::RowSlice::new(5, 5);
+        let mut ec = KernelCache::new_slice(&x, n, d, gamma, empty, 0, 1);
+        assert_eq!(ec.row(3).len(), 0);
     }
 
     #[test]

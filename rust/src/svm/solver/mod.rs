@@ -14,36 +14,72 @@
 //! [`cache::DenseSource`] adapter for callers that already hold a Gram
 //! matrix (e.g. one downloaded from the device).
 //!
+//! # Cached → distributed: the second inversion
+//!
+//! The cached engine still assumes *one* host owns the whole optimality
+//! vector and every kernel row. [`DistributedSmo`] removes that assumption
+//! too: the QP's rows are sharded contiguously across simulated MPI ranks
+//! ([`slice::RowSlice::partition`]), each rank keeps only its f-slice, its
+//! shrink set and an LRU cache of *column windows* of kernel rows
+//! ([`cache::KernelCache::new_slice`]), and working-set selection becomes
+//! a MINLOC/MAXLOC all-reduce of per-rank candidates. Per-rank memory and
+//! per-iteration work drop from O(n) to O(n/R); only O(1) candidate words
+//! cross the interconnect per iteration. Same guarantee ladder as the
+//! first inversion: with shrinking off the R-rank trajectory is
+//! bit-identical to `WorkingSetSmo` (and hence the oracle); with shrinking
+//! on it passes the same full-set KKT verification.
+//!
 //! # Engines and when each wins
 //!
-//! | engine                     | memory  | best for |
-//! |----------------------------|---------|----------|
-//! | `DenseSmo`                 | O(n²)   | n ≲ 2k: the build is cheap, every row access is a hit, and the iterate sequence is the cross-language oracle |
-//! | `WorkingSetSmo` (cached)   | O(b·n)  | n beyond the Gram budget: identical trajectory to dense (rows are bit-identical), pay only recompute on eviction |
-//! | `+ shrink`                 | O(b·n)  | many bound SVs (overlapping classes, small C): active set collapses, selection + f-update drop from O(n) to O(active) |
-//! | `+ threads` (parallel)     | O(b·n)  | large n on multi-core hosts: row eval, selection scan and f-update are data-parallel |
+//! | engine                     | memory    | best for |
+//! |----------------------------|-----------|----------|
+//! | `DenseSmo`                 | O(n²)     | n ≲ 2k: the build is cheap, every row access is a hit, and the iterate sequence is the cross-language oracle |
+//! | `WorkingSetSmo` (cached)   | O(b·n)    | n beyond the Gram budget: identical trajectory to dense (rows are bit-identical), pay only recompute on eviction |
+//! | `+ shrink`                 | O(b·n)    | many bound SVs (overlapping classes, small C): active set collapses, selection + f-update drop from O(n) to O(active) |
+//! | `+ threads` (parallel)     | O(b·n)    | large n on multi-core hosts: row eval, selection scan and f-update are data-parallel |
+//! | `+ wss2` (second-order)    | O(b·n)    | ill-conditioned problems: one extra row read per selection buys fewer iterations |
+//! | `DistributedSmo`           | O(b·n/R)  | n beyond one node's memory/compute: R ranks co-solve one QP, per-rank state is a row shard, selection is an all-reduce |
 //!
 //! Rule of thumb encoded in [`auto_engine`]: dense below
 //! [`DENSE_CUTOFF_ROWS`] rows, the full parallel cached engine above it.
+//! The distributed engine is opt-in (`--solver-ranks R` on the CLI — it
+//! composes with the coordinator's per-pair axis, R ranks *inside* each
+//! pair), and wins when a single QP outgrows one node or when OvO pairs
+//! are too few to occupy the cluster.
 //!
 //! All engines return duals that agree with the sequential oracle within
-//! float tolerance (the unshrunk cached engine is bit-identical; shrinking
-//! re-verifies KKT on the full index set before it may stop), so backends
-//! can switch engines without perturbing model semantics.
+//! float tolerance (the unshrunk cached and distributed engines are
+//! bit-identical; shrinking re-verifies KKT on the full index set before
+//! it may stop), so backends can switch engines without perturbing model
+//! semantics.
 
 pub mod cache;
+pub mod distributed;
 pub mod parallel;
 pub mod shrink;
+pub mod slice;
 pub mod working_set;
 
 pub use cache::{CacheStats, DenseSource, KernelCache, KernelSource};
+pub use distributed::DistributedSmo;
 pub use shrink::{ActiveSet, ShrinkStats};
-pub use working_set::EngineConfig;
+pub use slice::RowSlice;
+pub use working_set::{EngineConfig, Selection};
 
 use crate::data::BinaryProblem;
 use crate::svm::model::{BinaryModel, TrainStats};
 use crate::svm::smo::SmoSolution;
 use crate::svm::SvmParams;
+
+/// Interconnect traffic of one solve (zero for single-host engines; the
+/// distributed engine reports its collectives' accounting here).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NetTraffic {
+    pub messages: u64,
+    pub bytes: u64,
+    /// Simulated wire seconds under the engine's cost model.
+    pub sim_secs: f64,
+}
 
 /// Everything a solve produces: duals plus engine-side observability.
 #[derive(Debug, Clone)]
@@ -55,6 +91,8 @@ pub struct SolveOutcome {
     /// engines — their kernel work happens inside `solve_secs`).
     pub gram_secs: f64,
     pub solve_secs: f64,
+    /// Interconnect accounting (distributed engine only).
+    pub net: NetTraffic,
 }
 
 /// A dual QP engine: one strategy for working-set selection + kernel
@@ -111,6 +149,7 @@ impl DualSolver for DenseSmo {
             shrink: ShrinkStats { min_active: n, ..Default::default() },
             gram_secs,
             solve_secs,
+            net: NetTraffic::default(),
         }
     }
 }
@@ -130,11 +169,15 @@ impl WorkingSetSmo {
 
 impl DualSolver for WorkingSetSmo {
     fn name(&self) -> &'static str {
-        match (self.cfg.shrink, self.cfg.threads != 1) {
-            (false, false) => "cached",
-            (true, false) => "cached+shrink",
-            (false, true) => "cached+par",
-            (true, true) => "cached+shrink+par",
+        match (self.cfg.selection, self.cfg.shrink, self.cfg.threads != 1) {
+            (Selection::Wss1, false, false) => "cached",
+            (Selection::Wss1, true, false) => "cached+shrink",
+            (Selection::Wss1, false, true) => "cached+par",
+            (Selection::Wss1, true, true) => "cached+shrink+par",
+            (Selection::Wss2, false, false) => "cached+wss2",
+            (Selection::Wss2, true, false) => "cached+shrink+wss2",
+            (Selection::Wss2, false, true) => "cached+par+wss2",
+            (Selection::Wss2, true, true) => "cached+shrink+par+wss2",
         }
     }
 
@@ -158,6 +201,7 @@ impl DualSolver for WorkingSetSmo {
             shrink,
             gram_secs: 0.0,
             solve_secs,
+            net: NetTraffic::default(),
         }
     }
 }
@@ -299,6 +343,23 @@ mod tests {
         let par_only = EngineConfig { threads: 4, ..EngineConfig::cached(8) };
         assert_eq!(WorkingSetSmo::new(par_only).name(), "cached+par");
         assert_eq!(WorkingSetSmo::new(EngineConfig::parallel(8)).name(), "cached+shrink+par");
+        assert_eq!(WorkingSetSmo::new(EngineConfig::wss2(8)).name(), "cached+wss2");
+        let wss2_full = EngineConfig { selection: Selection::Wss2, ..EngineConfig::parallel(8) };
+        assert_eq!(WorkingSetSmo::new(wss2_full).name(), "cached+shrink+par+wss2");
+    }
+
+    #[test]
+    fn wss2_engine_matches_dense_decisions() {
+        let prob = blobs(40, 4, 1.8, 15);
+        let p = SvmParams::default();
+        let (m0, _) = train_with(&DenseSmo { threads: 1 }, &prob, &p);
+        let (m2, s2) = train_with(&WorkingSetSmo::new(EngineConfig::wss2(10)), &prob, &p);
+        assert!(s2.converged);
+        for i in 0..prob.n() {
+            let a = m0.decision(prob.row(i));
+            let b = m2.decision(prob.row(i));
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
     }
 
     #[test]

@@ -15,6 +15,8 @@
 //! in chunk order, which keeps first-index-wins tie-breaking — and therefore
 //! the SMO iterate sequence — bit-identical to the serial scan.
 
+use super::slice::RowSlice;
+
 /// Threads to use when the caller asked for "auto" (0).
 pub fn auto_threads() -> usize {
     std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
@@ -82,17 +84,18 @@ where
         return Some(map(0..n));
     }
     let pieces = threads.min(n / min_chunk.max(1)).max(1);
-    let chunk = n.div_ceil(pieces);
+    // The same contiguous-ascending shard abstraction the distributed
+    // engine uses for ranks; join order below preserves first-index-wins.
+    let shards = RowSlice::partition(n, pieces);
     let partials: Vec<R> = std::thread::scope(|s| {
         let map = &map;
-        let handles: Vec<_> = (0..pieces)
-            .filter_map(|t| {
-                let lo = t * chunk;
-                let hi = ((t + 1) * chunk).min(n);
-                if lo >= hi {
+        let handles: Vec<_> = shards
+            .into_iter()
+            .filter_map(|sh| {
+                if sh.is_empty() {
                     return None;
                 }
-                Some(s.spawn(move || map(lo..hi)))
+                Some(s.spawn(move || map(sh.lo..sh.hi)))
             })
             .collect();
         handles
@@ -103,8 +106,27 @@ where
     partials.into_iter().reduce(join)
 }
 
-/// One RBF kernel row `K[i][*]` with the expanded identity
-/// `|xi|² + |xj|² − 2·xi·xj` (same formulation and operation order as
+/// One scalar RBF kernel entry `K(i, j)` with the expanded identity
+/// `|xi|² + |xj|² − 2·xi·xj` — the *single* definition of a kernel value
+/// in this subsystem (rows, slices and the distributed engine's
+/// pair-coupling term all go through it), expression-for-expression the
+/// `kernel::rbf_gram` element so every access path is bit-identical.
+#[inline]
+pub fn rbf_entry(x: &[f32], norms: &[f32], i: usize, j: usize, d: usize, gamma: f32) -> f32 {
+    if j == i {
+        return 1.0;
+    }
+    let xi = &x[i * d..(i + 1) * d];
+    let xj = &x[j * d..(j + 1) * d];
+    let mut dot = 0.0f32;
+    for c in 0..d {
+        dot += xi[c] * xj[c];
+    }
+    let d2 = (norms[i] + norms[j] - 2.0 * dot).max(0.0);
+    (-gamma * d2).exp()
+}
+
+/// One RBF kernel row `K[i][*]` (same formulation and operation order as
 /// `kernel::rbf_gram`, so values are bit-identical to the dense matrix),
 /// row-parallel over `out`.
 pub fn rbf_row_into(
@@ -116,28 +138,33 @@ pub fn rbf_row_into(
     gamma: f32,
     threads: usize,
 ) {
-    let n = out.len();
-    debug_assert_eq!(x.len(), n * d);
-    debug_assert_eq!(norms.len(), n);
-    let xi = &x[i * d..(i + 1) * d];
-    let ni = norms[i];
+    debug_assert_eq!(x.len(), out.len() * d);
+    debug_assert_eq!(norms.len(), out.len());
+    rbf_row_slice_into(out, x, norms, i, d, gamma, 0, threads);
+}
+
+/// The column-window variant of [`rbf_row_into`]: fills `out[t]` with
+/// `K(i, col_lo + t)` — a rank's shard of row `i`. Values are bit-identical
+/// to the corresponding window of the full row (the distributed engine's
+/// reproducibility guarantee rests on this).
+#[allow(clippy::too_many_arguments)]
+pub fn rbf_row_slice_into(
+    out: &mut [f32],
+    x: &[f32],
+    norms: &[f32],
+    i: usize,
+    d: usize,
+    gamma: f32,
+    col_lo: usize,
+    threads: usize,
+) {
+    debug_assert!(col_lo + out.len() <= norms.len());
     // Chunk threshold in row *elements*, scaled down by d so the per-chunk
     // flop count (elements × d) stays comparable to the flat helpers.
     let min_chunk = (MIN_CHUNK / d.max(1)).max(64);
     par_apply_mut(out, threads, min_chunk, |start, piece| {
         for (t, slot) in piece.iter_mut().enumerate() {
-            let j = start + t;
-            if j == i {
-                *slot = 1.0;
-                continue;
-            }
-            let xj = &x[j * d..(j + 1) * d];
-            let mut dot = 0.0f32;
-            for c in 0..d {
-                dot += xi[c] * xj[c];
-            }
-            let d2 = (ni + norms[j] - 2.0 * dot).max(0.0);
-            *slot = (-gamma * d2).exp();
+            *slot = rbf_entry(x, norms, i, col_lo + start + t, d, gamma);
         }
     });
 }
@@ -253,6 +280,32 @@ mod tests {
             assert_eq!(dense.len(), par.len());
             for (a, b) in dense.iter().zip(par.iter()) {
                 assert_eq!(a.to_bits(), b.to_bits(), "gram values must be bit-identical");
+            }
+        }
+    }
+
+    #[test]
+    fn entry_and_slice_rows_match_gram_bitwise() {
+        let mut rng = Rng::new(17);
+        let (n, d, gamma) = (30, 4, 0.9);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+        let norms: Vec<f32> = (0..n)
+            .map(|i| x[i * d..(i + 1) * d].iter().map(|v| v * v).sum())
+            .collect();
+        let dense = kernel::rbf_gram(&x, n, d, gamma);
+        for i in [0, 9, n - 1] {
+            for j in 0..n {
+                let e = rbf_entry(&x, &norms, i, j, d, gamma);
+                assert_eq!(e.to_bits(), dense[i * n + j].to_bits(), "({i},{j})");
+            }
+            // Every column window of the row, including one containing the
+            // diagonal, must be the matching window of the full row.
+            for (lo, hi) in [(0usize, n), (5, 20), (i.saturating_sub(2), (i + 3).min(n))] {
+                let mut slice = vec![0.0f32; hi - lo];
+                rbf_row_slice_into(&mut slice, &x, &norms, i, d, gamma, lo, 1);
+                for (t, v) in slice.iter().enumerate() {
+                    assert_eq!(v.to_bits(), dense[i * n + lo + t].to_bits());
+                }
             }
         }
     }

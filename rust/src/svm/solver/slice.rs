@@ -1,0 +1,131 @@
+//! Contiguous row shards: the one partitioning abstraction every solver
+//! layer shares.
+//!
+//! A [`RowSlice`] is a half-open `[lo, hi)` window into the problem's row
+//! index space. The same `partition` is used by:
+//!
+//!  * the thread-parallel hot paths ([`super::parallel::par_map_reduce`]) to
+//!    split scans across cores inside one host,
+//!  * the distributed engine ([`super::distributed`]) to assign each
+//!    simulated MPI rank its row shard of the QP (per-rank f-slice and
+//!    kernel-column window),
+//!  * [`super::cache::KernelCache`] to restrict served kernel rows to a
+//!    rank's column window.
+//!
+//! Keeping shards contiguous and ascending is load-bearing: joined in
+//! shard order with strict comparisons, per-shard argmin/argmax partials
+//! reproduce a serial ascending scan's first-index-wins tie-breaking — the
+//! property that makes both the threaded and the distributed selection
+//! bit-identical to the sequential oracle.
+
+/// A half-open contiguous window `[lo, hi)` of global row indices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RowSlice {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl RowSlice {
+    pub fn new(lo: usize, hi: usize) -> RowSlice {
+        assert!(lo <= hi, "RowSlice bounds reversed: [{lo}, {hi})");
+        RowSlice { lo, hi }
+    }
+
+    /// The whole index space `[0, n)`.
+    pub fn full(n: usize) -> RowSlice {
+        RowSlice { lo: 0, hi: n }
+    }
+
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lo == self.hi
+    }
+
+    pub fn contains(&self, global: usize) -> bool {
+        (self.lo..self.hi).contains(&global)
+    }
+
+    /// Local offset -> global index.
+    pub fn global(&self, local: usize) -> usize {
+        debug_assert!(local < self.len());
+        self.lo + local
+    }
+
+    /// Global index -> local offset (caller must check [`Self::contains`]).
+    pub fn local(&self, global: usize) -> usize {
+        debug_assert!(self.contains(global));
+        global - self.lo
+    }
+
+    /// Split `[0, n)` into `parts` contiguous ascending slices, as evenly
+    /// as possible (the first `n % parts` slices get one extra row). Empty
+    /// slices are allowed when `parts > n` — a rank with no rows still
+    /// participates in every collective.
+    pub fn partition(n: usize, parts: usize) -> Vec<RowSlice> {
+        assert!(parts > 0, "partition needs at least one part");
+        let base = n / parts;
+        let extra = n % parts;
+        let mut out = Vec::with_capacity(parts);
+        let mut lo = 0usize;
+        for r in 0..parts {
+            let len = base + usize::from(r < extra);
+            out.push(RowSlice { lo, hi: lo + len });
+            lo += len;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_is_an_exact_ascending_cover() {
+        for n in [0usize, 1, 7, 16, 100] {
+            for parts in [1usize, 2, 3, 5, 8] {
+                let slices = RowSlice::partition(n, parts);
+                assert_eq!(slices.len(), parts);
+                assert_eq!(slices[0].lo, 0);
+                assert_eq!(slices[parts - 1].hi, n);
+                for w in slices.windows(2) {
+                    assert_eq!(w[0].hi, w[1].lo, "n={n} parts={parts}");
+                }
+                let total: usize = slices.iter().map(RowSlice::len).sum();
+                assert_eq!(total, n);
+                // Near-even: lengths differ by at most one.
+                let lens: Vec<usize> = slices.iter().map(RowSlice::len).collect();
+                let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                assert!(hi - lo <= 1, "n={n} parts={parts} lens={lens:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn more_parts_than_rows_yields_empty_tails() {
+        let slices = RowSlice::partition(3, 5);
+        assert_eq!(slices.iter().filter(|s| !s.is_empty()).count(), 3);
+        assert!(slices[3].is_empty() && slices[4].is_empty());
+    }
+
+    #[test]
+    fn local_global_roundtrip() {
+        let s = RowSlice::new(10, 25);
+        assert_eq!(s.len(), 15);
+        assert!(s.contains(10) && s.contains(24) && !s.contains(25));
+        assert_eq!(s.global(0), 10);
+        assert_eq!(s.local(24), 14);
+        assert_eq!(s.local(s.global(7)), 7);
+    }
+
+    #[test]
+    fn full_covers_everything() {
+        let s = RowSlice::full(9);
+        assert_eq!((s.lo, s.hi), (0, 9));
+        assert!(!s.is_empty());
+        assert!(RowSlice::full(0).is_empty());
+    }
+}

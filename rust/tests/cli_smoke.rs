@@ -67,6 +67,30 @@ fn train_native_iris() {
 }
 
 #[test]
+fn train_with_solver_ranks_axis() {
+    // The second parallelism axis: each pair's QP row-sharded across 3
+    // cooperating ranks. Must train end to end and stay accurate (the
+    // unshrunk distributed engine is bit-identical to the baseline).
+    let s = run_ok(&[
+        "train", "--dataset", "iris", "--backend", "native", "--workers", "2",
+        "--solver-ranks", "3",
+    ]);
+    assert!(s.contains("train accuracy"));
+    assert!(s.contains("pair (0,1)"));
+}
+
+#[test]
+fn solver_ranks_zero_rejected() {
+    let out = parasvm()
+        .args(["train", "--dataset", "iris", "--backend", "native", "--solver-ranks", "0"])
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("solver-ranks"), "{err}");
+}
+
+#[test]
 fn eval_gives_test_accuracy() {
     let s = run_ok(&[
         "eval", "--dataset", "wdbc", "--backend", "native", "--per-class", "60",

@@ -71,6 +71,7 @@ fn pavia_nine_class_all_36_pairs() {
         partition: Partition::Block,
         net: CostModel::gige10(),
         pair_threads: 1,
+        solver_ranks: 1,
     };
     let Some(be) = xla() else { return };
     let (model, report) = train_multiclass(&ds, be, &cfg).unwrap();

@@ -2,12 +2,15 @@
 //! invariants (via the in-repo `util::prop` harness — the offline
 //! `proptest` substitute; replay failures with PARASVM_PROP_SEED=<seed>).
 
-use parasvm::cluster::{CostModel, Universe};
+use parasvm::cluster::{CostModel, PairCandidate, Universe};
 use parasvm::coordinator::pairs::{assign, Partition};
 use parasvm::coordinator::wire;
-use parasvm::data::{scale::Scaler, split, Dataset};
+use parasvm::data::{scale::Scaler, split, BinaryProblem, Dataset};
 use parasvm::svm::multiclass::{argmax_tiebreak, ovo_pairs};
-use parasvm::svm::solver::{working_set, EngineConfig, KernelCache, KernelSource};
+use parasvm::svm::solver::{
+    working_set, DistributedSmo, DualSolver, EngineConfig, KernelCache, KernelSource,
+    WorkingSetSmo,
+};
 use parasvm::svm::{kernel, smo, SvmParams};
 use parasvm::util::prop::{check, f32_in, labels, matrix, usize_in, Config};
 use parasvm::util::rng::Rng;
@@ -162,6 +165,120 @@ fn prop_gather_preserves_every_rank_payload() {
             assert_eq!(buf.len(), lens[r]);
             assert!(buf.iter().all(|&v| v == r as f32));
         }
+    });
+}
+
+#[test]
+fn prop_pair_reductions_match_a_serial_rank_order_fold() {
+    // allreduce_min_pair / allreduce_max_pair must agree exactly (keys,
+    // indices, aux values — all bit-exact) with a single-rank reference:
+    // a strict fold over the candidates in rank order. Keys are drawn from
+    // a small set so ties are common, exercising first-rank-wins.
+    check("minloc/maxloc == serial fold", cfg(24), |rng| {
+        let ranks = usize_in(rng, 1, 6);
+        // Some ranks are empty-handed (None); keys from a small set so
+        // ties are common, exercising first-rank-wins.
+        let cands: Vec<Option<(f64, u64, f64)>> = (0..ranks)
+            .map(|r| {
+                if usize_in(rng, 0, 4) == 0 {
+                    None
+                } else {
+                    let key = (usize_in(rng, 0, 3) as f64) - 1.0;
+                    Some((key, 100 + r as u64, f32_in(rng, -10.0, 10.0) as f64))
+                }
+            })
+            .collect();
+        let mut want_max = PairCandidate::none_max();
+        let mut want_min = PairCandidate::none_min();
+        for &(k, i, v) in cands.iter().flatten() {
+            if k > want_max.key {
+                want_max = PairCandidate::new(k, i, v);
+            }
+            if k < want_min.key {
+                want_min = PairCandidate::new(k, i, v);
+            }
+        }
+        let cands2 = cands.clone();
+        let out = Universe::new(ranks, CostModel::free()).run(move |mut c| {
+            let mine = cands2[c.rank()];
+            let for_max = match mine {
+                Some((k, i, v)) => PairCandidate::new(k, i, v),
+                None => PairCandidate::none_max(),
+            };
+            let for_min = match mine {
+                Some((k, i, v)) => PairCandidate::new(k, i, v),
+                None => PairCandidate::none_min(),
+            };
+            let mx = c.allreduce_max_pair(for_max).unwrap();
+            let mn = c.allreduce_min_pair(for_min).unwrap();
+            (mx, mn)
+        });
+        for (mx, mn) in out {
+            assert_eq!(mx, want_max, "max reduction diverged from serial fold");
+            assert_eq!(mn, want_min, "min reduction diverged from serial fold");
+        }
+    });
+}
+
+#[test]
+fn prop_allgather_delivers_every_payload_to_every_rank() {
+    check("allgather == per-rank payloads", cfg(24), |rng| {
+        let ranks = usize_in(rng, 1, 6);
+        let bufs: Vec<Vec<f32>> = (0..ranks)
+            .map(|_| {
+                let len = usize_in(rng, 0, 20); // ragged, sometimes empty
+                (0..len).map(|_| f32_in(rng, -3.0, 3.0)).collect()
+            })
+            .collect();
+        let bufs2 = bufs.clone();
+        let out = Universe::new(ranks, CostModel::free())
+            .run(move |mut c| c.allgather_f32s(&bufs2[c.rank()]).unwrap());
+        for got in out {
+            assert_eq!(got, bufs, "every rank must see all payloads in rank order");
+        }
+    });
+}
+
+#[test]
+fn prop_distributed_engine_replays_the_single_rank_trajectory() {
+    // The tentpole invariant on random problems: for any rank count, the
+    // unshrunk row-sharded engine is bit-identical to the single-rank
+    // working-set engine (which is itself bit-identical to the oracle).
+    check("distributed == single-rank", cfg(8), |rng| {
+        let n = usize_in(rng, 6, 40);
+        let d = usize_in(rng, 1, 6);
+        let prob = BinaryProblem {
+            x: matrix(rng, n, d, 1.0),
+            y: labels(rng, n),
+            d,
+            pos_class: 0,
+            neg_class: 1,
+        };
+        let p = SvmParams {
+            c: f32_in(rng, 0.5, 20.0),
+            gamma: f32_in(rng, 0.05, 2.0),
+            ..Default::default()
+        };
+        let budget = usize_in(rng, 0, 8); // 0 = unbounded, small = evicting
+        let single = WorkingSetSmo::new(EngineConfig::cached(budget)).solve(&prob, &p);
+        let ranks = usize_in(rng, 2, 6);
+        let dist =
+            DistributedSmo::new(ranks, EngineConfig::cached(budget), CostModel::free());
+        let out = dist.solve(&prob, &p);
+        assert_eq!(
+            out.solution.iters, single.solution.iters,
+            "n={n} ranks={ranks} budget={budget}"
+        );
+        for (t, (a, b)) in out
+            .solution
+            .alpha
+            .iter()
+            .zip(single.solution.alpha.iter())
+            .enumerate()
+        {
+            assert_eq!(a.to_bits(), b.to_bits(), "alpha[{t}] (n={n} ranks={ranks})");
+        }
+        assert_eq!(out.solution.bias.to_bits(), single.solution.bias.to_bits());
     });
 }
 
