@@ -69,7 +69,7 @@ fn main() -> parasvm::Result<()> {
     }
 
     if tables.contains(&4) {
-        let (t, rows) = harness::run_table4(&be, &sweep, workers, &cfg, seed)?;
+        let (t, rows) = harness::run_table4(&be, &sweep, workers, 1, &cfg, seed)?;
         println!("{}", t.render());
         t.save_csv(&out.join("table4.csv"))?;
 

@@ -117,7 +117,12 @@ fn ablation_c_partition(be: &Arc<XlaBackend>, cfg: &BenchConfig, quick: bool) {
     let per_class = if quick { 100 } else { 200 };
     let (ds, mut params) = multiclass_workload(per_class, 42);
     params.session_overhead_secs = 0.0;
-    let one = BenchConfig { warmup: 1, min_samples: cfg.min_samples, max_samples: cfg.max_samples, cv_target: cfg.cv_target };
+    let one = BenchConfig {
+        warmup: 1,
+        min_samples: cfg.min_samples,
+        max_samples: cfg.max_samples,
+        cv_target: cfg.cv_target,
+    };
     for (name, strategy) in [
         ("block (paper Fig 4)", Partition::Block),
         ("round-robin", Partition::RoundRobin),

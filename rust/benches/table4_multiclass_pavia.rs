@@ -16,10 +16,15 @@ use parasvm::metrics::bench::BenchConfig;
 
 fn main() {
     let quick = std::env::var("PARASVM_BENCH_QUICK").is_ok();
-    let cfg = BenchConfig { warmup: 0, min_samples: 1, max_samples: if quick { 1 } else { 2 }, cv_target: 0.5 };
+    let cfg = BenchConfig {
+        warmup: 0,
+        min_samples: 1,
+        max_samples: if quick { 1 } else { 2 },
+        cv_target: 0.5,
+    };
     let sweep: &[usize] = if quick { &[200, 400] } else { &[200, 400, 600, 800] };
     let be = Arc::new(XlaBackend::open_default().expect("artifacts (make artifacts)"));
-    let (table, rows) = run_table4(&be, sweep, 4, &cfg, 42).expect("table4");
+    let (table, rows) = run_table4(&be, sweep, 4, 1, &cfg, 42).expect("table4");
     println!("{}", table.render());
     table
         .save_csv(std::path::Path::new("results/table4.csv"))

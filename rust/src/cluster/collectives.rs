@@ -77,7 +77,12 @@ impl Comm {
 
     /// Scatter equal-length chunks of `data` (root only) to all ranks.
     /// `data.len()` must be `size * chunk`.
-    pub fn scatter_f32s(&mut self, root: usize, data: Option<&[f32]>, chunk: usize) -> Result<Vec<f32>> {
+    pub fn scatter_f32s(
+        &mut self,
+        root: usize,
+        data: Option<&[f32]>,
+        chunk: usize,
+    ) -> Result<Vec<f32>> {
         if self.rank() == root {
             let data = data.ok_or_else(|| Error::Cluster("root must provide data".into()))?;
             if data.len() != self.size() * chunk {
@@ -493,6 +498,54 @@ mod tests {
                 c.scatter_f32s(0, None, 2).unwrap();
             }
         });
+    }
+
+    #[test]
+    fn split_groups_preserve_pair_tie_breaking() {
+        // Equal keys inside each split group: the strict rank-order join
+        // must pick the lowest *sub*-rank, which with `key = parent rank`
+        // is the lowest parent rank of the group — the same contiguous
+        // first-index-wins order the distributed solver relies on.
+        let out = Universe::new(4, CostModel::free()).run(|mut c| {
+            let mut sub = c.split(c.rank() / 2, c.rank()).unwrap();
+            let cand = PairCandidate::new(1.0, c.rank() as u64, c.rank() as f64);
+            sub.allreduce_max_pair(cand).unwrap()
+        });
+        assert_eq!(out[0].index, 0);
+        assert_eq!(out[1].index, 0);
+        assert_eq!(out[2].index, 2);
+        assert_eq!(out[3].index, 2);
+    }
+
+    #[test]
+    fn split_reversed_keys_flip_tie_winner() {
+        // The split key really orders the group: reversed keys make the
+        // highest parent rank sub-rank 0, so it now wins every tie.
+        let out = Universe::new(4, CostModel::free()).run(|mut c| {
+            let mut sub = c.split(0, c.size() - c.rank()).unwrap();
+            let cand = PairCandidate::new(7.0, c.rank() as u64, 0.0);
+            sub.allreduce_min_pair(cand).unwrap()
+        });
+        for v in out {
+            assert_eq!(v.index, 3);
+        }
+    }
+
+    #[test]
+    fn collectives_work_on_derived_comms() {
+        let out = Universe::new(4, CostModel::free()).run(|mut c| {
+            let mut sub = c.split(c.rank() % 2, c.rank()).unwrap();
+            sub.barrier().unwrap();
+            let sum = sub.allreduce_sum_f32s(&[c.rank() as f32]).unwrap()[0];
+            let gathered = sub.allgather_f32s(&[c.rank() as f32]).unwrap();
+            (sum, gathered)
+        });
+        // Even group {0,2} sums to 2, odd group {1,3} to 4; allgather
+        // returns the group's payloads in sub-rank order.
+        assert_eq!(out[0].0, 2.0);
+        assert_eq!(out[1].0, 4.0);
+        assert_eq!(out[0].1, vec![vec![0.0], vec![2.0]]);
+        assert_eq!(out[3].1, vec![vec![1.0], vec![3.0]]);
     }
 
     #[test]

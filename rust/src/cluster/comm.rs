@@ -1,58 +1,199 @@
-//! Point-to-point communicator (rank handle).
+//! Communicators: rank handles over the shared world mesh.
 //!
-//! Each rank owns an mpsc receiver; senders to every rank are shared.
-//! Messages carry (src, tag, payload). `recv` matches on (src, tag) and
-//! buffers out-of-order arrivals locally, like an MPI unexpected-message
-//! queue.
+//! Each OS thread (rank) owns one mailbox — an mpsc receiver plus an
+//! unexpected-message queue, like MPI's — and a view of the world-wide
+//! sender mesh. A [`Comm`] is a *view* over that machinery: the world
+//! communicator covers every rank, and [`Comm::split`] derives
+//! MPI_Comm_split-style sub-communicators that re-use the parent's mesh
+//! and mailbox instead of building a disjoint channel fabric. Messages
+//! carry `(src, context, tag)`; the context id namespaces each
+//! communicator's traffic so a rank can hold the world comm and any number
+//! of derived comms on the same mailbox without cross-talk. `recv` matches
+//! on `(src, context, tag)` and buffers out-of-order arrivals locally.
+//!
+//! Every communicator also carries its *level*'s interconnect pricing: a
+//! [`CostModel`] and the [`NetStats`] it accounts into. A derived
+//! communicator may inherit its parent's level ([`Comm::split`]) or be
+//! pinned to a different one ([`Comm::split_with`] — e.g. a fast
+//! intra-node link for solver sub-worlds under a slow inter-node worker
+//! world), which is what makes per-level overhead accounting possible.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use super::costmodel::{CostModel, NetStats};
 use crate::error::{Error, Result};
 
-/// Message envelope on the simulated wire.
+/// Message envelope on the simulated wire. `src` is a world-mesh index;
+/// `ctx` is the sending communicator's context id.
 #[derive(Debug)]
 pub struct Envelope {
     pub src: usize,
+    pub ctx: u32,
     pub tag: u32,
     pub payload: Vec<u8>,
 }
 
-/// Per-rank communicator handle.
-pub struct Comm {
-    rank: usize,
-    size: usize,
-    senders: Vec<Sender<Envelope>>,
-    inbox: Receiver<Envelope>,
-    /// Unexpected-message queue (arrived before being asked for).
+/// One rank-thread's receive side: the mpsc inbox plus the
+/// unexpected-message queue. Shared (via `Arc<Mutex<_>>`) between the
+/// world communicator and every communicator split from it on this rank —
+/// a rank is single-threaded SPMD, so the lock is never contended; it only
+/// makes the sharing `Send`.
+pub(super) struct Mailbox {
+    rx: Receiver<Envelope>,
     pending: VecDeque<Envelope>,
+}
+
+impl Mailbox {
+    pub(super) fn new(rx: Receiver<Envelope>) -> Mailbox {
+        Mailbox { rx, pending: VecDeque::new() }
+    }
+}
+
+/// Wire-free rendezvous for [`Comm::split`]: every rank of the parent
+/// publishes its `(color, key)` and waits until the whole parent world has
+/// done the same. This is control-plane setup (MPI pays it during
+/// communicator construction, before any priced traffic), so it rides the
+/// universe's shared memory and never touches the cost models.
+#[derive(Default)]
+pub(super) struct SplitBoard {
+    slots: Mutex<HashMap<(u32, u32), SplitSlot>>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct SplitSlot {
+    /// parent rank -> (color, key)
+    entries: BTreeMap<usize, (u64, u64)>,
+    reads: usize,
+}
+
+impl SplitBoard {
+    /// Publish `(color, key)` under `(parent ctx, split seq)` and block
+    /// until all `size` parent ranks have published; returns the full
+    /// table ordered by parent rank. The slot is freed once every rank has
+    /// read it. Times out (instead of deadlocking) if a peer never joins
+    /// the collective.
+    fn exchange(
+        &self,
+        slot: (u32, u32),
+        size: usize,
+        rank: usize,
+        color: u64,
+        key: u64,
+        timeout: Duration,
+    ) -> Result<Vec<(usize, u64, u64)>> {
+        let deadline = Instant::now() + timeout;
+        let mut slots = self.slots.lock().expect("split board poisoned");
+        slots.entry(slot).or_default().entries.insert(rank, (color, key));
+        self.cv.notify_all();
+        loop {
+            {
+                let s = slots.get_mut(&slot).expect("split slot vanished");
+                if s.entries.len() == size {
+                    let table: Vec<(usize, u64, u64)> =
+                        s.entries.iter().map(|(&r, &(c, k))| (r, c, k)).collect();
+                    s.reads += 1;
+                    if s.reads == size {
+                        slots.remove(&slot);
+                    }
+                    self.cv.notify_all();
+                    return Ok(table);
+                }
+            }
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                // Withdraw our entry so a late-arriving peer cannot
+                // "complete" the split with a member that already gave up —
+                // it will time out (fail fast) against the missing entry
+                // instead. The last withdrawer frees the slot. Like MPI, a
+                // failed collective leaves the communicator unusable for
+                // further splits (retries would desynchronize sequence
+                // numbers across ranks).
+                if let Some(s) = slots.get_mut(&slot) {
+                    s.entries.remove(&rank);
+                    if s.entries.is_empty() {
+                        slots.remove(&slot);
+                    }
+                }
+                return Err(Error::Cluster(format!(
+                    "rank {rank}: timeout in Comm::split (a peer never joined the collective)"
+                )));
+            }
+            slots = self
+                .cv
+                .wait_timeout(slots, remaining)
+                .expect("split board poisoned")
+                .0;
+        }
+    }
+}
+
+/// Deterministic child context id: every member of a split group computes
+/// the same value locally (split is collective, so all members share the
+/// parent context and split sequence number), and sibling color groups get
+/// distinct ids so their own nested collectives never share a board slot.
+/// The color's two 32-bit halves are mixed in separate rounds (a plain
+/// xor-fold would give colors like `0` and `0x1_0000_0001` the same id).
+fn derive_ctx(parent: u32, seq: u32, color: u64) -> u32 {
+    const P: u32 = 0x0100_0193; // FNV-1a prime
+    let mut h = 0x811C_9DC5u32 ^ parent;
+    h = h.wrapping_mul(P) ^ seq;
+    h = h.wrapping_mul(P) ^ (color as u32);
+    h = h.wrapping_mul(P) ^ ((color >> 32) as u32);
+    // Never collide with the world context (0).
+    h.wrapping_mul(P) | 1
+}
+
+/// Per-rank communicator handle (world or derived).
+pub struct Comm {
+    /// My rank *within this communicator*.
+    rank: usize,
+    /// This communicator's size.
+    size: usize,
+    /// Context id namespacing this communicator's traffic.
+    ctx: u32,
+    /// Communicator rank -> world-mesh index.
+    group: Arc<Vec<usize>>,
+    /// My world-mesh index (`group[rank]`, cached).
+    world_rank: usize,
+    senders: Arc<Vec<Sender<Envelope>>>,
+    mailbox: Arc<Mutex<Mailbox>>,
     stats: Arc<NetStats>,
     model: CostModel,
     recv_timeout: Duration,
+    /// Collective split counter (derives deterministic child contexts).
+    splits: u32,
+    board: Arc<SplitBoard>,
 }
 
 impl Comm {
+    /// World communicator for one rank (built by `Universe::run`).
     #[allow(clippy::too_many_arguments)]
-    pub(super) fn new(
+    pub(super) fn root(
         rank: usize,
         size: usize,
-        senders: Vec<Sender<Envelope>>,
+        senders: Arc<Vec<Sender<Envelope>>>,
         inbox: Receiver<Envelope>,
         stats: Arc<NetStats>,
         model: CostModel,
+        board: Arc<SplitBoard>,
     ) -> Comm {
         Comm {
             rank,
             size,
+            ctx: 0,
+            group: Arc::new((0..size).collect()),
+            world_rank: rank,
             senders,
-            inbox,
-            pending: VecDeque::new(),
+            mailbox: Arc::new(Mutex::new(Mailbox::new(inbox))),
             stats,
             model,
             recv_timeout: Duration::from_secs(30),
+            splits: 0,
+            board,
         }
     }
 
@@ -72,46 +213,121 @@ impl Comm {
         self.model
     }
 
-    /// Override the receive timeout (default 30s). Failure-injection tests
+    /// Override the receive timeout (default 30s). Derived communicators
+    /// inherit the parent's value at split time. Failure-injection tests
     /// use short timeouts to exercise the deadlock-detection path.
     pub fn set_recv_timeout(&mut self, timeout: Duration) {
         self.recv_timeout = timeout;
     }
 
-    /// Send raw bytes to `dst` with a tag. Self-sends are allowed (loopback)
-    /// and accounted at zero cost.
+    /// MPI_Comm_split: collectively derive a sub-communicator from this
+    /// one. Every rank of the parent must call this the same number of
+    /// times in the same order (standard MPI collective semantics). Ranks
+    /// passing the same `color` form one group; within a group, ranks are
+    /// ordered by `(key, parent rank)` — so `key = parent rank` (or any
+    /// constant) preserves the parent's rank order, which in turn
+    /// preserves the rank-order tie-breaking of the pair reductions.
+    ///
+    /// The child re-uses the parent's mesh and mailbox (no new channels)
+    /// under a fresh context id, and inherits the parent's cost model and
+    /// stats — same interconnect level. Use [`Comm::split_with`] to pin
+    /// the child to a different level.
+    pub fn split(&mut self, color: usize, key: usize) -> Result<Comm> {
+        let (model, stats) = (self.model, Arc::clone(&self.stats));
+        self.split_with(color, key, model, stats)
+    }
+
+    /// [`Comm::split`] with an explicit interconnect level for the child:
+    /// its traffic is priced by `model` and accounted into `stats` (e.g. a
+    /// solver sub-world on the fast intra-node link while the parent
+    /// worker world stays on the inter-node link).
+    pub fn split_with(
+        &mut self,
+        color: usize,
+        key: usize,
+        model: CostModel,
+        stats: Arc<NetStats>,
+    ) -> Result<Comm> {
+        self.splits += 1;
+        let table = self.board.exchange(
+            (self.ctx, self.splits),
+            self.size,
+            self.rank,
+            color as u64,
+            key as u64,
+            self.recv_timeout,
+        )?;
+        let mut members: Vec<(u64, usize)> = table
+            .iter()
+            .filter(|&&(_, c, _)| c == color as u64)
+            .map(|&(r, _, k)| (k, r))
+            .collect();
+        members.sort_unstable(); // by (key, parent rank)
+        let sub_rank = members
+            .iter()
+            .position(|&(_, r)| r == self.rank)
+            .expect("own rank missing from its split group");
+        let group: Vec<usize> = members.iter().map(|&(_, r)| self.group[r]).collect();
+        Ok(Comm {
+            rank: sub_rank,
+            size: members.len(),
+            ctx: derive_ctx(self.ctx, self.splits, color as u64),
+            group: Arc::new(group),
+            world_rank: self.world_rank,
+            senders: Arc::clone(&self.senders),
+            mailbox: Arc::clone(&self.mailbox),
+            stats,
+            model,
+            recv_timeout: self.recv_timeout,
+            splits: 0,
+            board: Arc::clone(&self.board),
+        })
+    }
+
+    /// Send raw bytes to `dst` (a rank of *this* communicator) with a tag.
+    /// Self-sends are allowed (loopback) and accounted at zero cost.
     pub fn send(&self, dst: usize, tag: u32, payload: Vec<u8>) -> Result<()> {
         if dst >= self.size {
             return Err(Error::Cluster(format!("send to invalid rank {dst}")));
         }
-        if dst != self.rank {
+        let world_dst = self.group[dst];
+        if world_dst != self.world_rank {
             self.stats.record(payload.len(), &self.model);
         }
-        self.senders[dst]
-            .send(Envelope { src: self.rank, tag, payload })
+        self.senders[world_dst]
+            .send(Envelope { src: self.world_rank, ctx: self.ctx, tag, payload })
             .map_err(|_| Error::Cluster(format!("rank {dst} hung up")))
     }
 
-    /// Receive the next message matching (src, tag), buffering others.
+    /// Receive the next message matching (src, tag) on this communicator,
+    /// buffering others (including other communicators' traffic).
     pub fn recv(&mut self, src: usize, tag: u32) -> Result<Vec<u8>> {
-        // Check the unexpected-message queue first.
-        if let Some(pos) = self.pending.iter().position(|e| e.src == src && e.tag == tag) {
-            return Ok(self.pending.remove(pos).unwrap().payload);
+        if src >= self.size {
+            return Err(Error::Cluster(format!("recv from invalid rank {src}")));
         }
+        let world_src = self.group[src];
+        let mut mb = self.mailbox.lock().expect("mailbox poisoned");
+        // Check the unexpected-message queue first.
+        if let Some(pos) = mb
+            .pending
+            .iter()
+            .position(|e| e.src == world_src && e.ctx == self.ctx && e.tag == tag)
+        {
+            return Ok(mb.pending.remove(pos).unwrap().payload);
+        }
+        let deadline = Instant::now() + self.recv_timeout;
         loop {
-            let env = self
-                .inbox
-                .recv_timeout(self.recv_timeout)
-                .map_err(|_| {
-                    Error::Cluster(format!(
-                        "rank {}: timeout waiting for (src={src}, tag={tag})",
-                        self.rank
-                    ))
-                })?;
-            if env.src == src && env.tag == tag {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            let env = mb.rx.recv_timeout(remaining).map_err(|_| {
+                Error::Cluster(format!(
+                    "rank {}: timeout waiting for (src={src}, tag={tag})",
+                    self.rank
+                ))
+            })?;
+            if env.src == world_src && env.ctx == self.ctx && env.tag == tag {
                 return Ok(env.payload);
             }
-            self.pending.push_back(env);
+            mb.pending.push_back(env);
         }
     }
 
@@ -235,5 +451,133 @@ mod tests {
         let data = vec![1.5f32, -2.25, 0.0, f32::MAX];
         assert_eq!(bytes_to_f32s(&f32s_to_bytes(&data)).unwrap(), data);
         assert!(bytes_to_f32s(&[1, 2, 3]).is_err());
+    }
+
+    // ---- split ----
+
+    #[test]
+    fn split_halves_route_within_their_group() {
+        // 4 ranks -> two disjoint pairs; each pair exchanges privately
+        // using *sub*-ranks (0 and 1 in every group).
+        let out = Universe::new(4, CostModel::free()).run(|mut comm| {
+            let color = comm.rank() / 2;
+            let mut sub = comm.split(color, comm.rank()).unwrap();
+            assert_eq!(sub.size(), 2);
+            if sub.rank() == 0 {
+                sub.send_f32s(1, 5, &[comm.rank() as f32]).unwrap();
+                -1.0
+            } else {
+                sub.recv_f32s(0, 5).unwrap()[0]
+            }
+        });
+        // Rank 1 hears from rank 0; rank 3 hears from rank 2.
+        assert_eq!(out[1], 0.0);
+        assert_eq!(out[3], 2.0);
+    }
+
+    #[test]
+    fn split_key_reorders_sub_ranks() {
+        // Reversed keys invert the rank order inside the group.
+        let out = Universe::new(3, CostModel::free()).run(|mut comm| {
+            let sub = comm.split(0, comm.size() - comm.rank()).unwrap();
+            (comm.rank(), sub.rank())
+        });
+        assert_eq!(out, vec![(0, 2), (1, 1), (2, 0)]);
+    }
+
+    #[test]
+    fn split_ties_on_key_preserve_parent_order() {
+        let out = Universe::new(4, CostModel::free()).run(|mut comm| {
+            let sub = comm.split(comm.rank() % 2, 0).unwrap();
+            (comm.rank(), sub.rank(), sub.size())
+        });
+        // Even parents 0,2 -> sub-ranks 0,1; odd parents 1,3 -> 0,1.
+        assert_eq!(out, vec![(0, 0, 2), (1, 0, 2), (2, 1, 2), (3, 1, 2)]);
+    }
+
+    #[test]
+    fn parent_and_child_traffic_do_not_cross() {
+        // Same (src, tag) on parent and child contexts: each recv must get
+        // its own communicator's message even when the other arrives first.
+        let out = Universe::new(2, CostModel::free()).run(|mut comm| {
+            let mut sub = comm.split(0, comm.rank()).unwrap();
+            if comm.rank() == 0 {
+                sub.send_f32s(1, 7, &[111.0]).unwrap();
+                comm.send_f32s(1, 7, &[222.0]).unwrap();
+                vec![]
+            } else {
+                // Parent first: the child message (already queued) must be
+                // buffered past it, then found by the child recv.
+                let parent = comm.recv_f32s(0, 7).unwrap();
+                let child = sub.recv_f32s(0, 7).unwrap();
+                vec![parent[0], child[0]]
+            }
+        });
+        assert_eq!(out[1], vec![222.0, 111.0]);
+    }
+
+    #[test]
+    fn split_with_accounts_to_its_own_level() {
+        let u = Universe::new(2, CostModel::gige10());
+        let world_stats = u.stats();
+        let intra_stats = NetStats::new();
+        let intra_probe = Arc::clone(&intra_stats);
+        u.run(move |mut comm| {
+            let mut sub = comm
+                .split_with(0, comm.rank(), CostModel::free(), Arc::clone(&intra_probe))
+                .unwrap();
+            if sub.rank() == 0 {
+                sub.send_f32s(1, 1, &[0.0; 10]).unwrap();
+            } else {
+                sub.recv_f32s(0, 1).unwrap();
+            }
+        });
+        assert_eq!(world_stats.bytes(), 0, "world level must not see sub traffic");
+        assert_eq!(intra_stats.bytes(), 40);
+        assert_eq!(intra_stats.messages(), 1);
+    }
+
+    #[test]
+    fn nested_split_of_a_split_works() {
+        let out = Universe::new(4, CostModel::free()).run(|mut comm| {
+            let mut half = comm.split(comm.rank() / 2, comm.rank()).unwrap();
+            let solo = half.split(half.rank(), 0).unwrap();
+            (half.size(), solo.size(), solo.rank())
+        });
+        for v in out {
+            assert_eq!(v, (2, 1, 0));
+        }
+    }
+
+    #[test]
+    fn derived_contexts_are_distinct() {
+        assert_ne!(derive_ctx(0, 1, 0), derive_ctx(0, 1, 1));
+        assert_ne!(derive_ctx(0, 1, 0), derive_ctx(0, 2, 0));
+        assert_ne!(derive_ctx(0, 1, 0), 0, "never the world context");
+        let child = derive_ctx(0, 1, 3);
+        assert_ne!(derive_ctx(child, 1, 0), derive_ctx(0, 1, 0));
+        // The color halves are mixed in separate rounds: a symmetric
+        // xor-fold would collide these two.
+        assert_ne!(derive_ctx(0, 1, 0), derive_ctx(0, 1, 0x1_0000_0001));
+        assert_ne!(derive_ctx(0, 1, 1), derive_ctx(0, 1, 1 << 32));
+    }
+
+    #[test]
+    fn timed_out_split_withdraws_its_entry() {
+        // Rank 0 gives up on a split; rank 1 arrives later and must NOT
+        // see a completed collective containing the dead member — it
+        // times out too (fail fast) instead of stalling in a sub-world
+        // with a ghost rank.
+        let out = Universe::new(2, CostModel::free()).run(|mut comm| {
+            if comm.rank() == 0 {
+                comm.set_recv_timeout(std::time::Duration::from_millis(50));
+                comm.split(0, 0).is_err()
+            } else {
+                std::thread::sleep(std::time::Duration::from_millis(150));
+                comm.set_recv_timeout(std::time::Duration::from_millis(50));
+                comm.split(0, 0).is_err()
+            }
+        });
+        assert!(out[0] && out[1], "both ranks must observe the failed split");
     }
 }

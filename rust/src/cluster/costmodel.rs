@@ -26,14 +26,49 @@ impl CostModel {
         CostModel { latency: 50e-6, bandwidth: 1.25e9 }
     }
 
-    /// Zero-cost interconnect (shared-memory ranks).
+    /// Zero-cost interconnect (co-located ranks, no wire at all).
     pub fn free() -> Self {
         CostModel { latency: 0.0, bandwidth: f64::INFINITY }
+    }
+
+    /// Intra-node link (shared memory / PCIe-class): ~1µs latency,
+    /// 12 GB/s — the fast level solver sub-worlds live on, the way each
+    /// node's GPUs sit behind the host bus in the paper's MPI-CUDA rig.
+    pub fn shm() -> Self {
+        CostModel { latency: 1e-6, bandwidth: 1.2e10 }
     }
 
     /// Simulated seconds for one message of `bytes`.
     pub fn transfer_secs(&self, bytes: usize) -> f64 {
         self.latency + bytes as f64 / self.bandwidth
+    }
+}
+
+/// CLI form: a preset name (`free` | `shm` | `gige10`) or explicit
+/// `latency:bandwidth` in seconds and bytes/sec (e.g. `50e-6:1.25e9`).
+impl std::str::FromStr for CostModel {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<CostModel, String> {
+        match s {
+            "free" => return Ok(CostModel::free()),
+            "shm" => return Ok(CostModel::shm()),
+            "gige10" => return Ok(CostModel::gige10()),
+            _ => {}
+        }
+        let (lat, bw) = s.split_once(':').ok_or_else(|| {
+            format!("bad cost model {s:?} (want free|shm|gige10 or LATENCY:BANDWIDTH)")
+        })?;
+        let latency: f64 = lat
+            .parse()
+            .map_err(|_| format!("bad latency in cost model {s:?}"))?;
+        let bandwidth: f64 = bw
+            .parse()
+            .map_err(|_| format!("bad bandwidth in cost model {s:?}"))?;
+        if latency < 0.0 || bandwidth <= 0.0 {
+            return Err(format!("cost model {s:?} must have latency >= 0, bandwidth > 0"));
+        }
+        Ok(CostModel { latency, bandwidth })
     }
 }
 
@@ -88,6 +123,19 @@ mod tests {
     fn free_model_is_free() {
         let m = CostModel::free();
         assert_eq!(m.transfer_secs(1 << 30), 0.0);
+    }
+
+    #[test]
+    fn cost_model_parses_presets_and_pairs() {
+        assert_eq!("free".parse::<CostModel>().unwrap(), CostModel::free());
+        assert_eq!("shm".parse::<CostModel>().unwrap(), CostModel::shm());
+        assert_eq!("gige10".parse::<CostModel>().unwrap(), CostModel::gige10());
+        let m: CostModel = "50e-6:1.25e9".parse().unwrap();
+        assert_eq!(m, CostModel::gige10());
+        assert!("banana".parse::<CostModel>().is_err());
+        assert!("1e-6".parse::<CostModel>().is_err());
+        assert!("-1:5".parse::<CostModel>().is_err());
+        assert!("0:0".parse::<CostModel>().is_err());
     }
 
     #[test]

@@ -9,18 +9,57 @@
 //! discussion, EXPERIMENTS.md).
 //!
 //! The API mirrors the MPI subset the paper's Fig 4 pseudocode needs:
-//! point-to-point `send`/`recv`, and the collectives `bcast`, `scatter`,
-//! `gather`, `allgather`, `allreduce` (sum and MINLOC/MAXLOC candidate
-//! reductions — the working-set selection primitive of the distributed
-//! solver), `barrier` — all implemented over p2p exactly as a simple MPI
-//! layer would.
+//! point-to-point `send`/`recv`, communicator derivation
+//! (`MPI_Comm_split` → [`Comm::split`]), and the collectives `bcast`,
+//! `scatter`, `gather`, `allgather`, `allreduce` (sum and MINLOC/MAXLOC
+//! candidate reductions — the working-set selection primitive of the
+//! distributed solver), `barrier` — all implemented over p2p exactly as a
+//! simple MPI layer would, and all operating on any communicator, world
+//! or derived.
+//!
+//! # Flat → hierarchical: the communicator migration
+//!
+//! Through PR 2 the cluster was a flat [`Universe`]: one rank mesh, one
+//! [`CostModel`], one world-wide [`NetStats`]. Nesting (a distributed QP
+//! inside a worker rank) was simulated by *spawning* a second, unrelated
+//! universe — which silently shared the host and priced node-local solver
+//! chatter like cluster ethernet, making a Table-IV-style overhead split
+//! impossible. The hierarchy is now first-class:
+//!
+//! * [`Topology`] declares the machine's levels (outermost first, e.g.
+//!   `inter` workers × `intra` solver ranks), each level carrying its own
+//!   cost model and its own traffic ledger;
+//! * [`Topology::universe`] spawns *one* world of `total_ranks()` threads
+//!   wired to the outermost level;
+//! * inside the SPMD body, [`Comm::split`] / [`Comm::split_with`] derive
+//!   sub-communicators MPI_Comm_split-style — same mesh and mailbox, a
+//!   fresh context id, ranks regrouped by `(color, key)` — instead of
+//!   building disjoint channel fabrics. `split_with` pins the child to a
+//!   different level (model + ledger), which is how intra-node traffic is
+//!   priced and measured apart from inter-node traffic;
+//! * [`Topology::net`] snapshots the ledgers as a [`NetReport`] whose
+//!   roll-up equals what the old flat accounting would have recorded —
+//!   the invariant the property tests pin down.
+//!
+//! **Split vs spawn:** derive with `split` whenever the sub-world's ranks
+//! already exist in the parent world (the coordinator's solver sub-worlds
+//! — communication patterns, ordering guarantees and accounting all stay
+//! inside one machine model). Spawn a fresh `Universe` only for a
+//! genuinely separate machine: a standalone engine run, a test fixture,
+//! or a world whose lifetime outlives any parent SPMD body.
+//! Rank-order guarantees survive both: a split group is ordered by
+//! `(key, parent rank)`, so `key = parent rank` (or a constant) keeps the
+//! contiguous ascending order that makes the MINLOC/MAXLOC reductions'
+//! tie-breaking bit-identical to a serial ascending scan.
 
 pub mod collectives;
 pub mod comm;
 pub mod costmodel;
+pub mod topology;
 pub mod universe;
 
 pub use collectives::PairCandidate;
 pub use comm::Comm;
 pub use costmodel::{CostModel, NetStats};
+pub use topology::{Level, LevelNet, NetReport, Topology, LEVEL_INTER, LEVEL_INTRA};
 pub use universe::Universe;

@@ -1,0 +1,240 @@
+//! Topology: the level structure of the simulated machine, with one cost
+//! model and one traffic ledger per level.
+//!
+//! The paper's hybrid rig is a two-level machine — MPICH ranks across
+//! nodes, CUDA parallelism inside each node — and its Table IV overhead
+//! story only splits cleanly if the two links are priced and measured
+//! separately. A [`Topology`] captures exactly that: an ordered list of
+//! [`Level`]s (outermost first, e.g. `inter` = worker world over cluster
+//! ethernet, `intra` = solver sub-worlds over the node-local bus), each
+//! with its own [`CostModel`] and [`NetStats`]. [`Topology::universe`]
+//! spawns the world (total ranks = product of level sizes) wired to the
+//! outermost level; the SPMD body then derives the inner levels with
+//! [`super::Comm::split_with`], handing each derived communicator its
+//! level's model and ledger.
+//!
+//! [`Topology::net`] snapshots the per-level ledgers as a [`NetReport`] —
+//! the structured per-level/rolled-up view every report above the cluster
+//! layer (solver outcomes, multiclass reports, bench rows) now carries.
+
+use std::sync::Arc;
+
+use super::costmodel::{CostModel, NetStats};
+use super::universe::Universe;
+
+/// Canonical name of the outer (cross-node) level.
+pub const LEVEL_INTER: &str = "inter";
+/// Canonical name of the inner (node-local solver sub-world) level.
+pub const LEVEL_INTRA: &str = "intra";
+
+/// One level of the machine: how many ranks it multiplies into the world
+/// and how its link is priced.
+#[derive(Debug, Clone)]
+pub struct Level {
+    pub name: String,
+    pub ranks: usize,
+    pub cost: CostModel,
+}
+
+/// The level structure of a run (outermost level first).
+#[derive(Clone)]
+pub struct Topology {
+    levels: Vec<Level>,
+    stats: Vec<Arc<NetStats>>,
+}
+
+impl Topology {
+    pub fn new(levels: Vec<Level>) -> Topology {
+        assert!(!levels.is_empty(), "topology needs at least one level");
+        assert!(
+            levels.iter().all(|l| l.ranks > 0),
+            "every topology level needs at least one rank"
+        );
+        let stats = levels.iter().map(|_| NetStats::new()).collect();
+        Topology { levels, stats }
+    }
+
+    /// One named level (a standalone sub-world, e.g. the distributed
+    /// engine solving outside any worker hierarchy).
+    pub fn single(name: &str, ranks: usize, cost: CostModel) -> Topology {
+        Topology::new(vec![Level { name: name.into(), ranks, cost }])
+    }
+
+    /// The flat PR-2-style world: one `inter` level of `ranks` workers.
+    pub fn flat(ranks: usize, cost: CostModel) -> Topology {
+        Topology::single(LEVEL_INTER, ranks, cost)
+    }
+
+    /// The paper's two-level machine: `workers` nodes on the `inter` link,
+    /// each carrying a `solver_ranks`-wide sub-world on the `intra` link.
+    pub fn two_level(
+        workers: usize,
+        inter: CostModel,
+        solver_ranks: usize,
+        intra: CostModel,
+    ) -> Topology {
+        Topology::new(vec![
+            Level { name: LEVEL_INTER.into(), ranks: workers, cost: inter },
+            Level { name: LEVEL_INTRA.into(), ranks: solver_ranks, cost: intra },
+        ])
+    }
+
+    pub fn levels(&self) -> &[Level] {
+        &self.levels
+    }
+
+    /// Total world size: the product of the level sizes.
+    pub fn total_ranks(&self) -> usize {
+        self.levels.iter().map(|l| l.ranks).product()
+    }
+
+    /// The traffic ledger of level `i` (0 = outermost). Hand this to
+    /// [`super::Comm::split_with`] so a derived communicator accounts
+    /// into its level.
+    pub fn level_stats(&self, i: usize) -> Arc<NetStats> {
+        Arc::clone(&self.stats[i])
+    }
+
+    /// Spawn the world: `total_ranks()` rank threads whose world
+    /// communicator is priced and accounted at the outermost level.
+    pub fn universe(&self) -> Universe {
+        Universe::with_stats(self.total_ranks(), self.levels[0].cost, self.level_stats(0))
+    }
+
+    /// Snapshot every level's ledger.
+    pub fn net(&self) -> NetReport {
+        NetReport {
+            levels: self
+                .levels
+                .iter()
+                .zip(self.stats.iter())
+                .map(|(l, s)| LevelNet::snapshot(&l.name, s))
+                .collect(),
+        }
+    }
+}
+
+/// One level's traffic totals at a point in time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LevelNet {
+    pub level: String,
+    pub messages: u64,
+    pub bytes: u64,
+    /// Simulated wire seconds under the level's cost model.
+    pub sim_secs: f64,
+}
+
+impl LevelNet {
+    pub fn snapshot(name: &str, stats: &NetStats) -> LevelNet {
+        LevelNet {
+            level: name.into(),
+            messages: stats.messages(),
+            bytes: stats.bytes(),
+            sim_secs: stats.sim_secs(),
+        }
+    }
+}
+
+/// Interconnect traffic split by topology level, with roll-up accessors.
+/// The invariant every consumer relies on (and the property tests pin
+/// down): the roll-up equals what one flat world-wide [`NetStats`] would
+/// have recorded for the same message stream.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct NetReport {
+    pub levels: Vec<LevelNet>,
+}
+
+impl NetReport {
+    /// No traffic at all (single-host engines).
+    pub fn none() -> NetReport {
+        NetReport::default()
+    }
+
+    pub fn level(&self, name: &str) -> Option<&LevelNet> {
+        self.levels.iter().find(|l| l.level == name)
+    }
+
+    /// Rolled-up message count across levels.
+    pub fn messages(&self) -> u64 {
+        self.levels.iter().map(|l| l.messages).sum()
+    }
+
+    /// Rolled-up bytes across levels.
+    pub fn bytes(&self) -> u64 {
+        self.levels.iter().map(|l| l.bytes).sum()
+    }
+
+    /// Rolled-up simulated wire seconds across levels.
+    pub fn sim_secs(&self) -> f64 {
+        self.levels.iter().map(|l| l.sim_secs).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_level_shape() {
+        let t = Topology::two_level(3, CostModel::gige10(), 2, CostModel::shm());
+        assert_eq!(t.total_ranks(), 6);
+        assert_eq!(t.levels().len(), 2);
+        assert_eq!(t.levels()[0].name, LEVEL_INTER);
+        assert_eq!(t.levels()[1].name, LEVEL_INTRA);
+        assert_eq!(t.universe().size(), 6);
+        let net = t.net();
+        assert_eq!(net.levels.len(), 2);
+        assert_eq!(net.bytes(), 0);
+    }
+
+    #[test]
+    fn flat_is_a_single_inter_level() {
+        let t = Topology::flat(4, CostModel::free());
+        assert_eq!(t.total_ranks(), 4);
+        assert_eq!(t.levels()[0].name, LEVEL_INTER);
+        assert!(t.net().level(LEVEL_INTRA).is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_rank_level_rejected() {
+        Topology::two_level(2, CostModel::free(), 0, CostModel::free());
+    }
+
+    #[test]
+    fn per_level_ledgers_roll_up_to_flat_totals() {
+        // Recording a message stream split across levels must total
+        // exactly what one flat ledger records for the same stream.
+        let t = Topology::two_level(2, CostModel::gige10(), 2, CostModel::shm());
+        let flat = NetStats::new();
+        let sizes = [10usize, 400, 3, 77, 1024, 0];
+        for (i, &b) in sizes.iter().enumerate() {
+            let lvl = i % 2;
+            t.level_stats(lvl).record(b, &t.levels()[lvl].cost);
+            flat.record(b, &t.levels()[lvl].cost);
+        }
+        let net = t.net();
+        assert_eq!(net.messages(), flat.messages());
+        assert_eq!(net.bytes(), flat.bytes());
+        assert!((net.sim_secs() - flat.sim_secs()).abs() < 1e-12);
+        // And the split is genuinely per level.
+        assert_eq!(net.level(LEVEL_INTER).unwrap().messages, 3);
+        assert_eq!(net.level(LEVEL_INTRA).unwrap().messages, 3);
+    }
+
+    #[test]
+    fn universe_traffic_lands_in_level_zero() {
+        let t = Topology::two_level(2, CostModel::gige10(), 1, CostModel::shm());
+        t.universe().run(|mut comm| {
+            if comm.rank() == 0 {
+                comm.send_f32s(1, 0, &[1.0, 2.0]).unwrap();
+            } else {
+                comm.recv_f32s(0, 0).unwrap();
+            }
+        });
+        let net = t.net();
+        assert_eq!(net.level(LEVEL_INTER).unwrap().bytes, 8);
+        assert_eq!(net.level(LEVEL_INTRA).unwrap().bytes, 0);
+        assert_eq!(net.bytes(), 8);
+    }
+}

@@ -1,10 +1,18 @@
 //! Universe: spawn P ranks as threads and run an SPMD closure on each
 //! (the `mpiexec -n P` of the simulated cluster).
+//!
+//! The universe owns the world-level interconnect accounting; sub-worlds
+//! are *not* new universes but communicators derived inside the SPMD body
+//! via [`Comm::split`] / [`Comm::split_with`] (see [`super::topology`] for
+//! the level bookkeeping). `Universe::new` keeps the historical flat
+//! behaviour — a fresh world-level [`NetStats`]; `Universe::with_stats`
+//! wires the world to an externally owned level (what
+//! [`super::Topology::universe`] does).
 
 use std::sync::mpsc;
 use std::sync::Arc;
 
-use super::comm::{Comm, Envelope};
+use super::comm::{Comm, Envelope, SplitBoard};
 use super::costmodel::{CostModel, NetStats};
 
 /// A P-rank SPMD world.
@@ -16,15 +24,22 @@ pub struct Universe {
 
 impl Universe {
     pub fn new(size: usize, model: CostModel) -> Universe {
+        Universe::with_stats(size, model, NetStats::new())
+    }
+
+    /// A world whose traffic accounts into an externally owned level
+    /// (e.g. the first level of a [`super::Topology`]).
+    pub fn with_stats(size: usize, model: CostModel, stats: Arc<NetStats>) -> Universe {
         assert!(size > 0, "universe needs at least one rank");
-        Universe { size, model, stats: NetStats::new() }
+        Universe { size, model, stats }
     }
 
     pub fn size(&self) -> usize {
         self.size
     }
 
-    /// Shared byte/time accounting for the whole world.
+    /// Shared byte/time accounting for the world level. Traffic on
+    /// communicators split onto other levels lands in *their* stats.
     pub fn stats(&self) -> Arc<NetStats> {
         Arc::clone(&self.stats)
     }
@@ -36,7 +51,9 @@ impl Universe {
         T: Send + 'static,
         F: Fn(Comm) -> T + Send + Sync + 'static,
     {
-        // Build the all-to-all channel mesh.
+        // One shared sender mesh + per-rank inboxes; derived communicators
+        // re-use this fabric under fresh context ids instead of building
+        // their own.
         let mut senders = Vec::with_capacity(self.size);
         let mut inboxes = Vec::with_capacity(self.size);
         for _ in 0..self.size {
@@ -44,17 +61,20 @@ impl Universe {
             senders.push(tx);
             inboxes.push(rx);
         }
+        let senders = Arc::new(senders);
+        let board = Arc::new(SplitBoard::default());
 
         let f = Arc::new(f);
         let mut handles = Vec::with_capacity(self.size);
         for (rank, inbox) in inboxes.into_iter().enumerate() {
-            let comm = Comm::new(
+            let comm = Comm::root(
                 rank,
                 self.size,
-                senders.clone(),
+                Arc::clone(&senders),
                 inbox,
                 Arc::clone(&self.stats),
                 self.model,
+                Arc::clone(&board),
             );
             let f = Arc::clone(&f);
             handles.push(
@@ -64,8 +84,9 @@ impl Universe {
                     .expect("spawn rank thread"),
             );
         }
-        // Drop our copies of the senders so rank hangups are detectable.
+        // Drop the setup copies so only live ranks keep the fabric alive.
         drop(senders);
+        drop(board);
 
         handles
             .into_iter()
@@ -115,5 +136,20 @@ mod tests {
                 panic!("boom");
             }
         });
+    }
+
+    #[test]
+    fn external_stats_see_world_traffic() {
+        let level = NetStats::new();
+        let u = Universe::with_stats(2, CostModel::gige10(), Arc::clone(&level));
+        u.run(|mut comm| {
+            if comm.rank() == 0 {
+                comm.send_f32s(1, 0, &[0.0; 8]).unwrap();
+            } else {
+                comm.recv_f32s(0, 0).unwrap();
+            }
+        });
+        assert_eq!(level.bytes(), 32);
+        assert_eq!(level.messages(), 1);
     }
 }

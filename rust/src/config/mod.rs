@@ -50,11 +50,17 @@ pub struct RunConfig {
     /// Concurrent binary problems per rank (0 = auto, 1 = sequential).
     pub pair_threads: usize,
     /// Ranks cooperating on each pair's QP (1 = off; >1 row-shards every
-    /// binary solve across a sub-universe of this many ranks).
+    /// binary solve across a sub-communicator of this many ranks inside
+    /// each worker — the topology's `intra` level).
     pub solver_ranks: usize,
-    /// Interconnect latency (seconds) and bandwidth (bytes/sec).
+    /// Inter-node link: latency (seconds) and bandwidth (bytes/sec) of
+    /// the worker world (`--net-inter`, or the legacy `--net-latency` /
+    /// `--net-bandwidth` pair).
     pub net_latency: f64,
     pub net_bandwidth: f64,
+    /// Intra-node link: the solver sub-worlds' level (`--net-intra`).
+    pub intra_latency: f64,
+    pub intra_bandwidth: f64,
 }
 
 impl Default for RunConfig {
@@ -73,6 +79,8 @@ impl Default for RunConfig {
             solver_ranks: 1,
             net_latency: 50e-6,
             net_bandwidth: 1.25e9,
+            intra_latency: CostModel::shm().latency,
+            intra_bandwidth: CostModel::shm().bandwidth,
         }
     }
 }
@@ -85,6 +93,10 @@ impl RunConfig {
             params: self.params,
             partition: self.partition,
             net: CostModel { latency: self.net_latency, bandwidth: self.net_bandwidth },
+            intra_net: CostModel {
+                latency: self.intra_latency,
+                bandwidth: self.intra_bandwidth,
+            },
             pair_threads: self.pair_threads,
             solver_ranks: self.solver_ranks,
         }
@@ -122,6 +134,26 @@ impl RunConfig {
         self.net_latency = args.get("net-latency").map_err(e)?.unwrap_or(self.net_latency);
         self.net_bandwidth =
             args.get("net-bandwidth").map_err(e)?.unwrap_or(self.net_bandwidth);
+        // Whole-level cost models: a preset (free|shm|gige10) or LAT:BW.
+        if let Some(v) = args.opt("net-inter") {
+            // Reject mixing with the legacy piecewise flags rather than
+            // letting one silently override the other.
+            if args.opt("net-latency").is_some() || args.opt("net-bandwidth").is_some() {
+                return Err(Error::Config(
+                    "--net-inter conflicts with --net-latency/--net-bandwidth; \
+                     pick one form"
+                        .into(),
+                ));
+            }
+            let m: CostModel = v.parse().map_err(e)?;
+            self.net_latency = m.latency;
+            self.net_bandwidth = m.bandwidth;
+        }
+        if let Some(v) = args.opt("net-intra") {
+            let m: CostModel = v.parse().map_err(e)?;
+            self.intra_latency = m.latency;
+            self.intra_bandwidth = m.bandwidth;
+        }
         if self.workers == 0 {
             return Err(Error::Config("workers must be > 0".into()));
         }
@@ -175,6 +207,25 @@ impl RunConfig {
             ("gd_lr", json::num(self.params.gd_lr as f64)),
             ("net_latency", json::num(self.net_latency)),
             ("net_bandwidth", json::num(self.net_bandwidth)),
+            (
+                "topology",
+                json::obj(vec![
+                    (
+                        "inter",
+                        json::obj(vec![
+                            ("latency", json::num(self.net_latency)),
+                            ("bandwidth", json::num(self.net_bandwidth)),
+                        ]),
+                    ),
+                    (
+                        "intra",
+                        json::obj(vec![
+                            ("latency", json::num(self.intra_latency)),
+                            ("bandwidth", json::num(self.intra_bandwidth)),
+                        ]),
+                    ),
+                ]),
+            ),
         ])
     }
 
@@ -236,6 +287,25 @@ impl RunConfig {
         if let Some(v) = gn("net_bandwidth") {
             c.net_bandwidth = v;
         }
+        // Per-level topology block (overrides the legacy flat keys).
+        if let Some(t) = j.get("topology") {
+            if let Some(l) = t.get("inter") {
+                if let Some(v) = l.get("latency").and_then(Json::as_f64) {
+                    c.net_latency = v;
+                }
+                if let Some(v) = l.get("bandwidth").and_then(Json::as_f64) {
+                    c.net_bandwidth = v;
+                }
+            }
+            if let Some(l) = t.get("intra") {
+                if let Some(v) = l.get("latency").and_then(Json::as_f64) {
+                    c.intra_latency = v;
+                }
+                if let Some(v) = l.get("bandwidth").and_then(Json::as_f64) {
+                    c.intra_bandwidth = v;
+                }
+            }
+        }
         Ok(c)
     }
 
@@ -268,6 +338,49 @@ mod tests {
         let bad =
             Args::parse("x --solver-ranks 0".split_whitespace().map(String::from)).unwrap();
         assert!(RunConfig::default().apply_args(&bad).is_err());
+    }
+
+    #[test]
+    fn topology_cost_model_plumbing() {
+        // --net-inter/--net-intra accept presets or LAT:BW pairs, flow
+        // into the TrainConfig levels, and survive the JSON roundtrip via
+        // the topology block.
+        let args = Args::parse(
+            "train --net-inter 1e-4:1e9 --net-intra shm --solver-ranks 2"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let mut c = RunConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.net_latency, 1e-4);
+        assert_eq!(c.net_bandwidth, 1e9);
+        assert_eq!(c.intra_latency, CostModel::shm().latency);
+        let tc = c.train_config();
+        assert_eq!(tc.net, CostModel { latency: 1e-4, bandwidth: 1e9 });
+        assert_eq!(tc.intra_net, CostModel::shm());
+        assert_eq!(tc.topology().levels().len(), 2);
+        assert_eq!(tc.topology().total_ranks(), c.workers * 2);
+        let back = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.net_latency, 1e-4);
+        assert_eq!(back.intra_latency, c.intra_latency);
+        assert_eq!(back.intra_bandwidth, c.intra_bandwidth);
+        // Bad models are rejected with a config error.
+        let bad = Args::parse(
+            "train --net-intra banana".split_whitespace().map(String::from),
+        )
+        .unwrap();
+        assert!(RunConfig::default().apply_args(&bad).is_err());
+        // Mixing the whole-level flag with the legacy piecewise pair is a
+        // conflict, not a silent override.
+        let mixed = Args::parse(
+            "train --net-inter free --net-latency 5e-5"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let err = RunConfig::default().apply_args(&mixed).unwrap_err();
+        assert!(err.to_string().contains("conflicts"), "{err}");
     }
 
     #[test]

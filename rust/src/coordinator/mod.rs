@@ -7,7 +7,11 @@
 //!   the training set over the simulated interconnect, every rank trains
 //!   its share of the m(m-1)/2 binary problems on its backend (each binary
 //!   problem internally runs the Fig 3 host/device chunk loop), and rank 0
-//!   gathers the models into an [`crate::svm::OvoModel`].
+//!   gathers the models into an [`crate::svm::OvoModel`]. With
+//!   `solver_ranks > 1` the cluster is the paper's two-level machine
+//!   ([`crate::cluster::Topology`]): each worker's pairs are co-solved by
+//!   a solver sub-communicator split from the world, and the report
+//!   splits interconnect overhead by level (inter vs intra — Table IV).
 //! * [`wire`] — compact f32 wire codec for datasets and models so the
 //!   cost model sees realistic byte counts.
 

@@ -2,29 +2,57 @@
 //!
 //! Rank 0 (leader) holds the dataset. Execution:
 //!
-//!  1. leader encodes the training set and **broadcasts** it (the paper's
-//!     only pre-training communication);
+//!  1. leader encodes the training set and **broadcasts** it over the
+//!     worker-leads communicator (the paper's only pre-training
+//!     communication);
 //!  2. every rank derives the canonical pair list and its partition
 //!     (`N = C/P` block split by default, Fig 4 step 3);
-//!  3. each rank trains its binary problems on its backend — every problem
-//!     internally runs the Fig 3 chunked host/device SMO loop (or the
-//!     fixed-step GD graph for the TF-analog stack);
+//!  3. each worker trains its binary problems — every problem internally
+//!     runs the Fig 3 chunked host/device SMO loop (or the fixed-step GD
+//!     graph for the TF-analog stack);
 //!  4. workers send their models to the leader (**gather**, the paper's
 //!     only post-training communication) which assembles the OvO ensemble.
 //!
-//! The returned report carries per-rank compute seconds, per-pair stats and
-//! the interconnect's byte/simulated-time accounting, which feeds the
-//! Table IV overhead discussion in EXPERIMENTS.md.
+//! # The two-level machine
+//!
+//! The cluster is a [`Topology`], not a flat universe. With
+//! `solver_ranks == 1` the world is the flat PR-2 machine: one `inter`
+//! level of `workers` ranks, each rank training whole pairs (optionally
+//! `pair_threads` at a time on host threads). With `solver_ranks = R > 1`
+//! the world is `workers × R` ranks: every world rank derives, via
+//! [`crate::cluster::Comm::split_with`],
+//!
+//!  * its **intra** communicator (color = worker): the R-rank solver
+//!    sub-world that co-solves each of the worker's pairs through
+//!    [`crate::svm::solver::distributed::solve_on`], priced by the fast
+//!    intra-node link and accounted into the `intra` ledger;
+//!  * its **peer** communicator (color = slot): slot-0 ranks form the
+//!    worker-leads world that carries the dataset broadcast and the model
+//!    gather on the slow inter-node link (`inter` ledger) — exactly the
+//!    PR-2 world when R == 1.
+//!
+//! A worker's R ranks are one MPI group, so its pairs train sequentially
+//! over the intra communicator (`pair_threads` applies to the flat path;
+//! the leftover core budget instead feeds each rank's row-evaluation
+//! threads). Models are bit-identical across every (workers,
+//! solver_ranks, pair_threads) combination — the unshrunk distributed
+//! engine replays the single-rank trajectory exactly.
+//!
+//! The returned report carries per-worker compute seconds, per-pair stats
+//! and the interconnect's per-level byte/simulated-time accounting
+//! ([`MulticlassReport::net`]), which is what splits the Table IV
+//! overhead discussion into its inter- and intra-node parts.
 
 use std::sync::Arc;
 
 use super::pairs::{assign, size_cost, Partition};
 use super::wire;
 use crate::backend::{Solver, SvmBackend};
-use crate::cluster::{CostModel, Universe};
+use crate::cluster::{CostModel, NetReport, Topology};
 use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::svm::multiclass::ovo_pairs;
+use crate::svm::solver::model_from_outcome;
 use crate::svm::{OvoModel, SvmParams, TrainStats};
 
 /// Multiclass training configuration.
@@ -34,18 +62,24 @@ pub struct TrainConfig {
     pub solver: Solver,
     pub params: SvmParams,
     pub partition: Partition,
+    /// Inter-node link: the worker world (dataset bcast, model gather).
     pub net: CostModel,
-    /// Concurrent binary problems per rank: each rank trains its OvO share
-    /// on up to this many threads from the shared host pool instead of
-    /// sequentially. 0 = auto (available cores / ranks), 1 = the paper's
-    /// sequential-per-rank baseline. Model bytes and per-pair stats are
-    /// emitted in canonical pair order either way, so results are
-    /// bit-identical to the sequential schedule.
+    /// Intra-node link: the solver sub-worlds under each worker
+    /// (per-iteration candidate collectives when `solver_ranks > 1`).
+    pub intra_net: CostModel,
+    /// Concurrent binary problems per rank (flat path only): each rank
+    /// trains its OvO share on up to this many threads from the shared
+    /// host pool instead of sequentially. 0 = auto (available cores /
+    /// topology ranks), 1 = the paper's sequential-per-rank baseline.
+    /// Model bytes and per-pair stats are emitted in canonical pair order
+    /// either way, so results are bit-identical to the sequential
+    /// schedule. Ignored when `solver_ranks > 1` — the worker's solver
+    /// group co-solves its pairs one at a time, as a real MPI group would.
     pub pair_threads: usize,
-    /// Second parallelism axis, orthogonal to `pair_threads`: ranks
-    /// cooperating on *each* pair's QP. 1 = off (the backend's solver
-    /// trains each pair alone); above 1 every binary problem is row-sharded
-    /// across a sub-universe of this many ranks
+    /// Second parallelism axis: ranks cooperating on *each* pair's QP.
+    /// 1 = off (the backend's solver trains each pair alone); above 1 the
+    /// world becomes `workers × solver_ranks` and every binary problem is
+    /// row-sharded across the worker's intra communicator
     /// ([`crate::svm::solver::DistributedSmo`], host-executed, unshrunk
     /// WSS1 — so models stay bit-identical to the single-rank baseline).
     pub solver_ranks: usize,
@@ -59,52 +93,40 @@ impl Default for TrainConfig {
             params: SvmParams::default(),
             partition: Partition::Block,
             net: CostModel::gige10(),
+            intra_net: CostModel::shm(),
             pair_threads: 1,
             solver_ranks: 1,
         }
     }
 }
 
-/// Train one binary problem under the configured second parallelism axis:
-/// `solver_ranks <= 1` routes to the backend's solver as before; above
-/// that, the pair's SMO QP is row-sharded across a sub-universe of
-/// `solver_ranks` cooperating ranks (MPI communicator-split style), which
-/// composes with the per-rank `pair_threads` schedule. Only SMO-family
-/// solvers have a row-sharded form — [`train_multiclass`] rejects other
-/// combinations up front rather than silently substituting an algorithm.
-fn train_pair(
-    backend: &dyn SvmBackend,
-    cfg: &TrainConfig,
-    prob: &crate::data::BinaryProblem,
-) -> Result<(crate::svm::BinaryModel, TrainStats)> {
-    if cfg.solver_ranks > 1 {
-        let engine =
-            crate::svm::solver::DistributedSmo::auto(cfg.solver_ranks, prob.n(), cfg.net);
-        Ok(crate::svm::solver::train_with(&engine, prob, &cfg.params))
-    } else {
-        backend.train_binary(prob, &cfg.params, cfg.solver)
+impl TrainConfig {
+    /// The machine this configuration trains on: flat when the second
+    /// axis is off, the paper's two-level `workers × solver_ranks`
+    /// hierarchy when it is on.
+    pub fn topology(&self) -> Topology {
+        if self.solver_ranks > 1 {
+            Topology::two_level(self.workers, self.net, self.solver_ranks, self.intra_net)
+        } else {
+            Topology::flat(self.workers, self.net)
+        }
     }
 }
 
-/// Resolve the per-rank pair concurrency: explicit value, or auto = cores
-/// divided by the *total* thread demand per pair (worker ranks × solver
-/// sub-ranks), so the two axes compose without oversubscribing the host.
-fn resolve_pair_threads(
-    requested: usize,
-    ranks: usize,
-    solver_ranks: usize,
-    n_pairs: usize,
-) -> usize {
+/// Resolve the per-rank pair concurrency for the flat path: explicit
+/// value, or auto = available cores divided by the number of rank threads
+/// the topology actually spawns — so neither axis under- nor
+/// over-subscribes the host.
+fn resolve_pair_threads(requested: usize, topology_ranks: usize, n_pairs: usize) -> usize {
     let t = if requested == 0 {
-        (crate::svm::solver::parallel::auto_threads() / (ranks.max(1) * solver_ranks.max(1)))
-            .max(1)
+        (crate::svm::solver::parallel::auto_threads() / topology_ranks.max(1)).max(1)
     } else {
         requested
     };
     t.min(n_pairs.max(1))
 }
 
-/// Per-pair outcome (classes, stats, owning rank).
+/// Per-pair outcome (classes, stats, owning worker).
 #[derive(Debug, Clone)]
 pub struct PairReport {
     pub pos_class: usize,
@@ -118,10 +140,14 @@ pub struct PairReport {
 #[derive(Debug, Clone)]
 pub struct MulticlassReport {
     pub wall_secs: f64,
-    /// Per-rank busy seconds (compute only).
+    /// Per-worker busy seconds (compute only; the lead rank's clock when
+    /// the worker is a solver group).
     pub rank_secs: Vec<f64>,
     pub pairs: Vec<PairReport>,
-    /// Interconnect accounting.
+    /// Interconnect accounting split by topology level (`inter` workers,
+    /// `intra` solver sub-worlds). The Table-IV overhead split.
+    pub net: NetReport,
+    /// Roll-ups of [`MulticlassReport::net`] across levels.
     pub net_messages: u64,
     pub net_bytes: u64,
     pub net_sim_secs: f64,
@@ -129,12 +155,12 @@ pub struct MulticlassReport {
 }
 
 impl MulticlassReport {
-    /// Slowest rank (the multiclass makespan the paper measures).
+    /// Slowest worker (the multiclass makespan the paper measures).
     pub fn makespan_secs(&self) -> f64 {
         self.rank_secs.iter().copied().fold(0.0, f64::max)
     }
 
-    /// Load imbalance: makespan / mean rank time.
+    /// Load imbalance: makespan / mean worker time.
     pub fn imbalance(&self) -> f64 {
         let mean = self.rank_secs.iter().sum::<f64>() / self.rank_secs.len().max(1) as f64;
         if mean > 0.0 {
@@ -169,36 +195,64 @@ pub fn train_multiclass(
             cfg.solver_ranks, cfg.solver
         )));
     }
-    let universe = Universe::new(cfg.workers, cfg.net);
-    let stats = universe.stats();
+    let topo = cfg.topology();
+    let universe = topo.universe();
     let t0 = std::time::Instant::now();
 
-    let ds_frame = wire::encode_dataset(ds)?;
+    let ds_frame = Arc::new(wire::encode_dataset(ds)?);
     let n_classes = ds.n_classes;
     let cfg2 = cfg.clone();
+    let r = cfg.solver_ranks.max(1);
+    let w_total = cfg.workers;
+    let total_ranks = topo.total_ranks();
+    let inter_stats = topo.level_stats(0);
+    let intra_stats = topo.level_stats(topo.levels().len() - 1);
+    // The leftover core budget feeds each rank's row-evaluation threads on
+    // the hierarchical path (thread count never changes the numbers).
+    let engine_threads =
+        (crate::svm::solver::parallel::auto_threads() / total_ranks.max(1)).max(1);
 
-    // SPMD worker body. Rank 0 doubles as the leader.
+    // SPMD body for every world rank. Slot-0 ranks are worker leads; world
+    // rank 0 doubles as the leader.
     type RankOut = (Vec<f32>, f64, Vec<f32>); // (models frame, busy secs, pair stats frame)
     let results: Vec<Result<RankOut>> = universe.run(move |mut comm| -> Result<RankOut> {
-        // (1) dataset broadcast — the only pre-training traffic.
-        let frame = if comm.rank() == 0 {
-            comm.bcast_f32s(0, &ds_frame)?
-        } else {
-            comm.bcast_f32s(0, &[])?
-        };
-        let local_ds = wire::decode_dataset(&frame, "bcast")?;
+        let worker = comm.rank() / r;
+        let slot = comm.rank() % r;
 
-        // (2) canonical pair list + partition (identical on every rank).
+        // Derive the per-level communicators (collective over the world).
+        let mut intra =
+            comm.split_with(worker, slot, cfg2.intra_net, Arc::clone(&intra_stats))?;
+        let mut peers = comm.split_with(slot, worker, cfg2.net, Arc::clone(&inter_stats))?;
+
+        // (1) dataset broadcast over the worker-leads communicator — the
+        // only pre-training inter-node traffic (peer rank == worker index,
+        // so root 0 is the leader). Non-lead solver ranks read the
+        // replicated frame in-process: their node already holds the data
+        // once the lead has it, exactly as PR 2's per-solve Arc replication
+        // assumed.
+        let lead_frame;
+        let frame: &[f32] = if slot == 0 {
+            lead_frame = peers.bcast_f32s(0, &ds_frame)?;
+            &lead_frame
+        } else {
+            &ds_frame
+        };
+        let local_ds = wire::decode_dataset(frame, "bcast")?;
+
+        // (2) canonical pair list + partition over *workers* (identical on
+        // every rank).
         let pairs = ovo_pairs(n_classes);
         let counts: Vec<usize> = (0..n_classes).map(|c| local_ds.class_count(c)).collect();
-        let mine = assign(pairs.len(), comm.size(), cfg2.partition, size_cost(&counts))
-            [comm.rank()]
-        .clone();
+        let mine =
+            assign(pairs.len(), w_total, cfg2.partition, size_cost(&counts))[worker].clone();
 
-        // (3) train my share — the rank's pairs run concurrently on the
-        // shared host pool (pair_threads strands), each strand walking a
-        // contiguous stripe of the assignment. Results land in assignment
-        // order, so the emitted frames match the sequential schedule.
+        // (3) train my worker's share. Flat path: the pairs run
+        // concurrently on the shared host pool (pair_threads strands),
+        // each strand walking a contiguous stripe of the assignment.
+        // Hierarchical path: the worker's solver group co-solves each pair
+        // sequentially over the intra communicator. Results land in
+        // assignment order either way, so the emitted frames match the
+        // sequential schedule.
         let busy = std::time::Instant::now();
         let probs: Vec<(usize, crate::data::BinaryProblem)> = mine
             .iter()
@@ -207,8 +261,11 @@ pub fn train_multiclass(
                 (pi, local_ds.binary_pair(a, b))
             })
             .collect();
-        let par =
-            resolve_pair_threads(cfg2.pair_threads, comm.size(), cfg2.solver_ranks, probs.len());
+        let par = if r > 1 {
+            1
+        } else {
+            resolve_pair_threads(cfg2.pair_threads, total_ranks, probs.len())
+        };
         type PairOut = Result<(crate::svm::BinaryModel, TrainStats)>;
         let mut outs: Vec<Option<PairOut>> = (0..probs.len()).map(|_| None).collect();
         // Fail fast like the old sequential `?` loop: the first error stops
@@ -216,10 +273,23 @@ pub fn train_multiclass(
         let abort = std::sync::atomic::AtomicBool::new(false);
         let order = std::sync::atomic::Ordering::Relaxed;
         if par <= 1 {
-            for (slot, (_, prob)) in outs.iter_mut().zip(probs.iter()) {
-                let r = train_pair(backend.as_ref(), &cfg2, prob);
-                let failed = r.is_err();
-                *slot = Some(r);
+            for (slot_out, (_, prob)) in outs.iter_mut().zip(probs.iter()) {
+                let out = if r > 1 {
+                    let engine =
+                        crate::svm::solver::DistributedSmo::auto(r, prob.n(), cfg2.intra_net)
+                            .with_threads(engine_threads);
+                    crate::svm::solver::distributed::solve_on(
+                        &mut intra,
+                        prob,
+                        &cfg2.params,
+                        &engine.cfg,
+                    )
+                    .map(|o| model_from_outcome(prob, &o, &cfg2.params))
+                } else {
+                    backend.train_binary(prob, &cfg2.params, cfg2.solver)
+                };
+                let failed = out.is_err();
+                *slot_out = Some(out);
                 if failed {
                     break;
                 }
@@ -233,29 +303,36 @@ pub fn train_multiclass(
                 let abort = &abort;
                 for (ci, chunk) in outs.chunks_mut(stripe).enumerate() {
                     s.spawn(move || {
-                        for (off, slot) in chunk.iter_mut().enumerate() {
+                        for (off, slot_out) in chunk.iter_mut().enumerate() {
                             if abort.load(order) {
                                 break;
                             }
                             let (_, prob) = &probs[ci * stripe + off];
-                            let r = train_pair(backend.as_ref(), cfg2, prob);
-                            if r.is_err() {
+                            let out = backend.train_binary(prob, &cfg2.params, cfg2.solver);
+                            if out.is_err() {
                                 abort.store(true, order);
                             }
-                            *slot = Some(r);
+                            *slot_out = Some(out);
                         }
                     });
                 }
             });
         }
-        let mut models = Vec::with_capacity(probs.len());
-        let mut stats_frame: Vec<f32> = Vec::new();
-        // Surface the first strand error (scanning all slots: the failing
-        // pair may sit at any stripe offset; later slots are then None).
+        // Surface the first strand error on every rank (scanning all
+        // slots: the failing pair may sit at any stripe offset; later
+        // slots are then None).
         if let Some(pos) = outs.iter().position(|o| matches!(o, Some(Err(_)))) {
             let Some(Some(Err(e))) = outs.into_iter().nth(pos) else { unreachable!() };
             return Err(e);
         }
+        let busy_secs = busy.elapsed().as_secs_f64();
+        if slot != 0 {
+            // Non-lead solver ranks hold replicated results; only the lead
+            // speaks for the worker.
+            return Ok((Vec::new(), busy_secs, Vec::new()));
+        }
+        let mut models = Vec::with_capacity(probs.len());
+        let mut stats_frame: Vec<f32> = Vec::new();
         for ((pi, prob), out) in probs.iter().zip(outs.into_iter()) {
             let (model, st) = out.ok_or_else(|| {
                 Error::Train("pair result missing (training aborted)".into())
@@ -273,22 +350,27 @@ pub fn train_multiclass(
             ]);
             models.push(model);
         }
-        let busy_secs = busy.elapsed().as_secs_f64();
 
-        // (4) gather models at the leader — the only post-training traffic.
+        // (4) gather models at the leader — the only post-training
+        // traffic. Frames travel by thread join (in-process); the transfer
+        // is accounted below on the leads' inter-node level.
         let models_frame = wire::encode_models(&models)?;
         Ok((models_frame, busy_secs, stats_frame))
     });
 
-    // Collect rank results (fail if any rank failed).
-    let mut frames = Vec::with_capacity(cfg.workers);
-    let mut rank_secs = Vec::with_capacity(cfg.workers);
-    let mut stat_frames = Vec::with_capacity(cfg.workers);
-    for (rank, r) in results.into_iter().enumerate() {
-        let (mf, bs, sf) = r.map_err(|e| Error::Train(format!("rank {rank}: {e}")))?;
-        // Account the gather explicitly (worker frames -> leader).
-        if rank != 0 {
-            stats.record(mf.len() * 4 + sf.len() * 4, &cfg.net);
+    // Collect per-worker results from the lead ranks (fail if any world
+    // rank failed) and account the gather on the inter level.
+    let gather_stats = topo.level_stats(0);
+    let mut frames = Vec::with_capacity(w_total);
+    let mut rank_secs = Vec::with_capacity(w_total);
+    let mut stat_frames = Vec::with_capacity(w_total);
+    for (world_rank, res) in results.into_iter().enumerate() {
+        let (mf, bs, sf) = res.map_err(|e| Error::Train(format!("rank {world_rank}: {e}")))?;
+        if world_rank % r != 0 {
+            continue;
+        }
+        if world_rank != 0 {
+            gather_stats.record(mf.len() * 4 + sf.len() * 4, &cfg.net);
         }
         frames.push(mf);
         rank_secs.push(bs);
@@ -299,14 +381,14 @@ pub fn train_multiclass(
     let pairs = ovo_pairs(ds.n_classes);
     let mut binaries = Vec::with_capacity(pairs.len());
     let mut pair_reports = Vec::with_capacity(pairs.len());
-    for (rank, (mf, sf)) in frames.iter().zip(stat_frames.iter()).enumerate() {
+    for (worker, (mf, sf)) in frames.iter().zip(stat_frames.iter()).enumerate() {
         let models = wire::decode_models(mf)?;
         for (k, model) in models.into_iter().enumerate() {
             let s = &sf[k * 8..(k + 1) * 8];
             pair_reports.push(PairReport {
                 pos_class: model.pos_class,
                 neg_class: model.neg_class,
-                rank,
+                rank: worker,
                 n_samples: s[1] as usize,
                 stats: TrainStats {
                     iters: s[2] as usize,
@@ -332,13 +414,15 @@ pub fn train_multiclass(
     }
 
     let model = OvoModel::new(ds.n_classes, ds.d, binaries, ds.class_names.clone());
+    let net = topo.net();
     let report = MulticlassReport {
         wall_secs: t0.elapsed().as_secs_f64(),
         rank_secs,
         pairs: pair_reports,
-        net_messages: stats.messages(),
-        net_bytes: stats.bytes(),
-        net_sim_secs: stats.sim_secs(),
+        net_messages: net.messages(),
+        net_bytes: net.bytes(),
+        net_sim_secs: net.sim_secs(),
+        net,
         workers: cfg.workers,
     };
     Ok((model, report))
@@ -348,6 +432,7 @@ pub fn train_multiclass(
 mod tests {
     use super::*;
     use crate::backend::NativeBackend;
+    use crate::cluster::{LEVEL_INTER, LEVEL_INTRA};
     use crate::data::iris;
 
     fn quick_cfg(workers: usize) -> TrainConfig {
@@ -363,7 +448,7 @@ mod tests {
         assert_eq!(report.pairs.len(), 3);
         // Iris is easy: training accuracy must be high.
         assert!(model.accuracy(&ds.x, &ds.y) >= 0.95);
-        // Every pair converged and is owned by some rank < 3.
+        // Every pair converged and is owned by some worker < 3.
         for p in &report.pairs {
             assert!(p.stats.converged);
             assert!(p.rank < 3);
@@ -396,6 +481,9 @@ mod tests {
         assert!(r4.net_bytes > 0);
         assert!(r4.net_messages >= 6);
         assert!(r4.net_sim_secs > 0.0);
+        // Flat runs are single-level: everything is inter-node traffic.
+        assert_eq!(r4.net.levels.len(), 1);
+        assert_eq!(r4.net.level(LEVEL_INTER).unwrap().bytes, r4.net_bytes);
     }
 
     #[test]
@@ -425,7 +513,8 @@ mod tests {
     fn solver_ranks_axis_gives_bit_identical_models() {
         // The row-sharded engine (unshrunk WSS1) replays the dense oracle
         // exactly, so turning the second axis on must not perturb a single
-        // coefficient — and it composes with concurrent pairs.
+        // coefficient — and pair_threads must stay inert on the
+        // hierarchical path.
         let ds = iris::load();
         let be = Arc::new(NativeBackend::new());
         let base = quick_cfg(2);
@@ -447,16 +536,51 @@ mod tests {
     }
 
     #[test]
+    fn hierarchical_run_splits_traffic_by_level() {
+        // W=2 x R=2: the report must carry both levels, the solver
+        // chatter must land on intra, the bcast/gather on inter, and the
+        // roll-up must equal the level sum.
+        let ds = iris::load();
+        let be = Arc::new(NativeBackend::new());
+        let flat = quick_cfg(2);
+        let hier = TrainConfig { solver_ranks: 2, ..quick_cfg(2) };
+        let (_, r_flat) = train_multiclass(&ds, be.clone(), &flat).unwrap();
+        let (_, r_hier) = train_multiclass(&ds, be, &hier).unwrap();
+        assert_eq!(r_hier.net.levels.len(), 2);
+        let inter = r_hier.net.level(LEVEL_INTER).unwrap();
+        let intra = r_hier.net.level(LEVEL_INTRA).unwrap();
+        // The inter level still carries exactly the flat world's traffic:
+        // same dataset bcast to the same worker leads, same model gather
+        // (models are bit-identical, hence byte-identical frames).
+        assert_eq!(inter.bytes, r_flat.net_bytes);
+        assert_eq!(inter.messages, r_flat.net_messages);
+        // The solver sub-worlds really crossed their own wire.
+        assert!(intra.bytes > 0);
+        assert!(intra.messages > 0);
+        // Roll-up = level sum.
+        assert_eq!(r_hier.net_bytes, inter.bytes + intra.bytes);
+        assert_eq!(r_hier.net_messages, inter.messages + intra.messages);
+        assert!(
+            (r_hier.net_sim_secs - (inter.sim_secs + intra.sim_secs)).abs() < 1e-12
+        );
+    }
+
+    #[test]
     fn auto_pair_threads_resolves_sanely() {
-        assert_eq!(super::resolve_pair_threads(1, 4, 1, 10), 1);
-        assert_eq!(super::resolve_pair_threads(8, 4, 1, 3), 3); // capped by pairs
-        assert!(super::resolve_pair_threads(0, 1, 1, 100) >= 1); // auto
-        assert_eq!(super::resolve_pair_threads(0, 4, 1, 0), 1); // empty share
-        // The second axis divides the auto budget: R sub-ranks per pair
-        // leave at most cores/(workers*R) concurrent pairs per worker.
+        assert_eq!(super::resolve_pair_threads(1, 4, 10), 1);
+        assert_eq!(super::resolve_pair_threads(8, 4, 3), 3); // capped by pairs
+        assert!(super::resolve_pair_threads(0, 1, 100) >= 1); // auto
+        assert_eq!(super::resolve_pair_threads(0, 4, 0), 1); // empty share
+        // Auto divides the host budget by the ranks the topology actually
+        // spawns — a flat 2-worker run divides by 2, not by 2 x
+        // solver_ranks (single-axis runs no longer under-subscribe).
         let cores = crate::svm::solver::parallel::auto_threads();
-        let with_subranks = super::resolve_pair_threads(0, 2, 4, 100);
-        assert!(with_subranks <= (cores / 8).max(1));
+        assert_eq!(
+            super::resolve_pair_threads(0, 2, 1000),
+            (cores / 2).max(1)
+        );
+        // An 8-rank hierarchy leaves at most cores/8 strands.
+        assert!(super::resolve_pair_threads(0, 8, 1000) <= (cores / 8).max(1));
     }
 
     #[test]
@@ -485,5 +609,18 @@ mod tests {
         assert!(r.makespan_secs() <= r.wall_secs + 1e-3);
         assert!(r.imbalance() >= 1.0);
         assert!(r.total_iters() > 0);
+    }
+
+    #[test]
+    fn hierarchical_report_has_one_entry_per_worker() {
+        let ds = iris::load();
+        let be = Arc::new(NativeBackend::new());
+        let cfg = TrainConfig { solver_ranks: 2, ..quick_cfg(3) };
+        let (_, r) = train_multiclass(&ds, be, &cfg).unwrap();
+        assert_eq!(r.rank_secs.len(), 3, "one busy clock per worker, not per world rank");
+        assert_eq!(r.workers, 3);
+        for p in &r.pairs {
+            assert!(p.rank < 3);
+        }
     }
 }

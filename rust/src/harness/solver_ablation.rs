@@ -1,18 +1,21 @@
 //! Solver-engine ablation: dense vs cached vs cached+shrink vs parallel,
 //! the row-sharded distributed engine at 1/2/4 ranks vs the single-rank
-//! cached engine, plus sequential- vs concurrent-pair OvO multiclass.
+//! cached engine, sequential- vs concurrent-pair OvO multiclass, plus a
+//! hierarchical 2-workers x 2-solver-ranks run with distinct inter/intra
+//! cost models reporting the per-level overhead split.
 //!
 //! Unlike the paper-table runners this workload is **native-only** (no AOT
 //! artifacts, no device), so it runs from a clean checkout and in CI — it
 //! is the reproducible speedup story for the `svm::solver` subsystem. The
 //! bench wrapper (`benches/solver_ablation.rs`) renders the table and
-//! writes the machine-readable `BENCH_solver.json` that later PRs diff
-//! against.
+//! writes the machine-readable `BENCH_solver.json` (schema v3: per-level
+//! `net_levels` on distributed rows and the `hierarchical` section) that
+//! later PRs diff against.
 
 use std::sync::Arc;
 
 use crate::backend::{NativeBackend, Solver, SvmBackend};
-use crate::cluster::CostModel;
+use crate::cluster::{CostModel, LevelNet};
 use crate::coordinator::{train_multiclass, TrainConfig};
 use crate::error::Result;
 use crate::metrics::bench::{bench, BenchConfig};
@@ -33,7 +36,9 @@ pub struct EngineRow {
 }
 
 /// One row of the distributed 1/2/4-rank sweep (vs the single-rank cached
-/// engine on the same budget).
+/// engine on the same budget). `net_*` are the roll-ups; `net_levels`
+/// splits them by topology level (a standalone solve is one `intra`
+/// level).
 #[derive(Debug, Clone)]
 pub struct DistRow {
     pub ranks: usize,
@@ -44,6 +49,7 @@ pub struct DistRow {
     pub net_messages: u64,
     pub net_bytes: u64,
     pub net_sim_secs: f64,
+    pub net_levels: Vec<LevelNet>,
 }
 
 /// The OvO pair-concurrency comparison (4-worker universe).
@@ -55,6 +61,16 @@ pub struct OvoRow {
     pub makespan_secs: f64,
 }
 
+/// The hierarchical composition: workers x solver_ranks through the
+/// split-based topology, inter and intra links priced separately.
+#[derive(Debug, Clone)]
+pub struct HierRow {
+    pub workers: usize,
+    pub solver_ranks: usize,
+    pub median_wall_secs: f64,
+    pub net_levels: Vec<LevelNet>,
+}
+
 /// Full ablation result.
 #[derive(Debug, Clone)]
 pub struct SolverAblation {
@@ -64,13 +80,30 @@ pub struct SolverAblation {
     pub engines: Vec<EngineRow>,
     pub distributed: Vec<DistRow>,
     pub ovo: Vec<OvoRow>,
+    pub hierarchical: Vec<HierRow>,
+}
+
+fn levels_json(levels: &[LevelNet]) -> Json {
+    json::arr(
+        levels
+            .iter()
+            .map(|l| {
+                json::obj(vec![
+                    ("level", json::s(&l.level)),
+                    ("messages", json::num(l.messages as f64)),
+                    ("bytes", json::num(l.bytes as f64)),
+                    ("sim_secs", json::num(l.sim_secs)),
+                ])
+            })
+            .collect(),
+    )
 }
 
 impl SolverAblation {
     /// Machine-readable form for `BENCH_solver.json`.
     pub fn to_json(&self) -> Json {
         json::obj(vec![
-            ("schema", json::s("parasvm-solver-ablation/v2")),
+            ("schema", json::s("parasvm-solver-ablation/v3")),
             ("dataset", json::s(&self.dataset)),
             ("n", json::num(self.n as f64)),
             ("d", json::num(self.d as f64)),
@@ -110,6 +143,23 @@ impl SolverAblation {
                                 ("net_messages", json::num(r.net_messages as f64)),
                                 ("net_bytes", json::num(r.net_bytes as f64)),
                                 ("net_sim_secs", json::num(r.net_sim_secs)),
+                                ("net_levels", levels_json(&r.net_levels)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "hierarchical",
+                json::arr(
+                    self.hierarchical
+                        .iter()
+                        .map(|r| {
+                            json::obj(vec![
+                                ("workers", json::num(r.workers as f64)),
+                                ("solver_ranks", json::num(r.solver_ranks as f64)),
+                                ("median_wall_secs", json::num(r.median_wall_secs)),
+                                ("net_levels", levels_json(&r.net_levels)),
                             ])
                         })
                         .collect(),
@@ -230,9 +280,10 @@ pub fn run_solver_ablation(
             median_secs: median,
             speedup_vs_single: if median > 0.0 { single_cached_median / median } else { 0.0 },
             iters: out.solution.iters,
-            net_messages: out.net.messages,
-            net_bytes: out.net.bytes,
-            net_sim_secs: out.net.sim_secs,
+            net_messages: out.net.messages(),
+            net_bytes: out.net.bytes(),
+            net_sim_secs: out.net.sim_secs(),
+            net_levels: out.net.levels.clone(),
         };
         table.row(&[
             label,
@@ -282,6 +333,47 @@ pub fn run_solver_ablation(
         ovo_rows.push(row);
     }
 
+    // Hierarchical composition: 2 workers x 2 solver ranks through the
+    // split-based topology, slow inter link + fast intra link — the
+    // Table-IV overhead split in miniature.
+    let hier_cfg = TrainConfig {
+        workers: 2,
+        solver: Solver::Smo,
+        params,
+        solver_ranks: 2,
+        net: CostModel::gige10(),
+        intra_net: CostModel::shm(),
+        ..Default::default()
+    };
+    let mut hier_last = None;
+    let hier_bench = bench("ovo hierarchical 2x2", cfg, || {
+        let (_, rep) = train_multiclass(&ds, Arc::clone(&be), &hier_cfg).unwrap();
+        hier_last = Some(rep);
+    });
+    let hier_rep = hier_last.expect("bench ran at least once");
+    let hier_row = HierRow {
+        workers: 2,
+        solver_ranks: 2,
+        median_wall_secs: hier_bench.summary.median,
+        net_levels: hier_rep.net.levels.clone(),
+    };
+    let level_cell = hier_rep
+        .net
+        .levels
+        .iter()
+        .map(|l| format!("{} {}B", l.level, l.bytes))
+        .collect::<Vec<_>>()
+        .join(" / ");
+    table.row(&[
+        "ovo hierarchical 2x2".into(),
+        format!("{:.4}", hier_row.median_wall_secs),
+        String::new(),
+        String::new(),
+        String::new(),
+        String::new(),
+        level_cell,
+    ]);
+
     let ablation = SolverAblation {
         dataset: w.name.clone(),
         n: prob.n(),
@@ -289,6 +381,7 @@ pub fn run_solver_ablation(
         engines: rows,
         distributed: dist_rows,
         ovo: ovo_rows,
+        hierarchical: vec![hier_row],
     };
     Ok((table, ablation))
 }
@@ -320,13 +413,32 @@ mod tests {
             assert_eq!(r.iters, ab.distributed[0].iters, "{} ranks", r.ranks);
             assert_eq!(r.ranks > 1, r.net_bytes > 0, "{} ranks", r.ranks);
         }
+        // Distributed rows carry the per-level split: one `intra` level
+        // whose totals equal the roll-up fields.
+        for r in &ab.distributed {
+            if r.ranks > 1 {
+                assert_eq!(r.net_levels.len(), 1, "{} ranks", r.ranks);
+                assert_eq!(r.net_levels[0].level, "intra");
+                assert_eq!(r.net_levels[0].bytes, r.net_bytes);
+            }
+        }
+        // The hierarchical 2x2 row splits traffic across both levels.
+        assert_eq!(ab.hierarchical.len(), 1);
+        let h = &ab.hierarchical[0];
+        assert_eq!((h.workers, h.solver_ranks), (2, 2));
+        assert_eq!(h.net_levels.len(), 2);
+        let by_name = |n: &str| h.net_levels.iter().find(|l| l.level == n).unwrap();
+        assert!(by_name("inter").bytes > 0, "bcast/gather must cross the inter link");
+        assert!(by_name("intra").bytes > 0, "solver chatter must cross the intra link");
         let rendered = table.render();
         assert!(rendered.contains("dense"));
         assert!(rendered.contains("parallel"));
         assert!(rendered.contains("distributed (4 ranks)"));
+        assert!(rendered.contains("hierarchical 2x2"));
         let j = ab.to_json();
-        assert_eq!(j.get("schema").and_then(Json::as_str), Some("parasvm-solver-ablation/v2"));
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some("parasvm-solver-ablation/v3"));
         assert_eq!(j.get("engines").and_then(Json::as_arr).unwrap().len(), 4);
         assert_eq!(j.get("distributed").and_then(Json::as_arr).unwrap().len(), 3);
+        assert_eq!(j.get("hierarchical").and_then(Json::as_arr).unwrap().len(), 1);
     }
 }

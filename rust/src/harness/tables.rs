@@ -73,7 +73,9 @@ pub fn run_table3(
     Ok((table, rows))
 }
 
-/// One Table IV / Fig 7 row.
+/// One Table IV / Fig 7 row, with the overhead split by topology level
+/// (`inter` = worker world, `intra` = solver sub-worlds; intra is zero
+/// when `solver_ranks == 1`).
 #[derive(Debug, Clone)]
 pub struct Table4Row {
     pub per_class: usize,
@@ -82,21 +84,37 @@ pub struct Table4Row {
     pub speedup: f64,
     pub net_bytes: u64,
     pub net_sim_secs: f64,
+    pub inter_bytes: u64,
+    pub intra_bytes: u64,
+    pub inter_sim_secs: f64,
+    pub intra_sim_secs: f64,
 }
 
 /// Table IV: 9-class Pavia. "MPI-CUDA" = device SMO across P simulated
 /// ranks; "Multi-Tensorflow" = device GD run sequentially (the paper's
-/// multiple-sessions-one-GPU setup).
+/// multiple-sessions-one-GPU setup). `solver_ranks > 1` nests the
+/// row-sharded solver under each worker and splits the reported overhead
+/// into its inter- and intra-node parts.
 pub fn run_table4(
     be: &Arc<XlaBackend>,
     sweep: &[usize],
     workers: usize,
+    solver_ranks: usize,
     cfg: &BenchConfig,
     seed: u64,
 ) -> Result<(Table, Vec<Table4Row>)> {
     let mut table = Table::new(
-        format!("Table IV — multiclass training time, Pavia 9-class (P={workers})"),
-        &["#samples/#classes", "MPI-SMO (s)", "Multi-GD (s)", "speedup", "paper", "net KiB"],
+        format!(
+            "Table IV — multiclass training time, Pavia 9-class (P={workers}, R={solver_ranks})"
+        ),
+        &[
+            "#samples/#classes",
+            "MPI-SMO (s)",
+            "Multi-GD (s)",
+            "speedup",
+            "paper",
+            "net KiB (inter+intra)",
+        ],
     );
     let mut rows = Vec::new();
     for (i, &per_class) in sweep.iter().enumerate() {
@@ -107,14 +125,15 @@ pub fn run_table4(
             solver: Solver::Smo,
             params,
             partition: Partition::Block,
+            solver_ranks: solver_ranks.max(1),
             ..Default::default()
         };
 
         let backend: Arc<dyn SvmBackend> = Arc::clone(be) as Arc<dyn SvmBackend>;
-        let mut net = (0u64, 0.0f64);
+        let mut net = crate::cluster::NetReport::none();
         let mpi = time_train(&format!("mpi-smo-{per_class}"), cfg, || {
             let (_, r) = train_multiclass(&ds, Arc::clone(&backend), &smo_cfg).unwrap();
-            net = (r.net_bytes, r.net_sim_secs);
+            net = r.net;
         });
 
         // Multi-TF = 36 strictly sequential, independent sessions. Every
@@ -131,13 +150,20 @@ pub fn run_table4(
         });
         let multi_tf_secs = tf_pair.summary.median * n_pairs as f64;
 
+        let level = |name: &str| net.level(name).cloned();
+        let inter = level(crate::cluster::LEVEL_INTER);
+        let intra = level(crate::cluster::LEVEL_INTRA);
         let row = Table4Row {
             per_class,
             mpi_cuda_secs: mpi.summary.median,
             multi_tf_secs,
             speedup: multi_tf_secs / mpi.summary.median,
-            net_bytes: net.0,
-            net_sim_secs: net.1,
+            net_bytes: net.bytes(),
+            net_sim_secs: net.sim_secs(),
+            inter_bytes: inter.as_ref().map_or(0, |l| l.bytes),
+            intra_bytes: intra.as_ref().map_or(0, |l| l.bytes),
+            inter_sim_secs: inter.as_ref().map_or(0.0, |l| l.sim_secs),
+            intra_sim_secs: intra.as_ref().map_or(0.0, |l| l.sim_secs),
         };
         let paper_row = paper::TABLE4.get(i).filter(|p| p.0 == per_class);
         table.row(&[
@@ -148,7 +174,11 @@ pub fn run_table4(
             paper_row
                 .map(|p| format!("{:.1}x", p.3))
                 .unwrap_or_else(|| "-".into()),
-            format!("{:.1}", row.net_bytes as f64 / 1024.0),
+            format!(
+                "{:.1}+{:.1}",
+                row.inter_bytes as f64 / 1024.0,
+                row.intra_bytes as f64 / 1024.0
+            ),
         ]);
         rows.push(row);
     }

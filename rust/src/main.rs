@@ -68,7 +68,13 @@ fn print_help() {
            --workers N        simulated MPI ranks (default 4)\n\
            --pair-threads N   concurrent OvO pairs per rank (0 auto, 1 seq)\n\
            --solver-ranks N   ranks co-solving each pair's QP via the\n\
-                              row-sharded distributed SMO (default 1 = off)\n\
+                              row-sharded distributed SMO (default 1 = off;\n\
+                              >1 makes the cluster a two-level topology of\n\
+                              workers x solver-ranks)\n\
+           --net-inter M      inter-node link: free|shm|gige10 or LAT:BW\n\
+                              (seconds : bytes/sec; default gige10)\n\
+           --net-intra M      intra-node link for solver sub-worlds\n\
+                              (default shm = 1e-6:1.2e10)\n\
            --per-class N      subsample N points per class\n\
            --config FILE      load a JSON RunConfig (CLI flags override)\n\
            --seed N           dataset/run seed (default 42)\n\
@@ -161,6 +167,15 @@ fn cmd_train(args: &Args, eval: bool) -> Result<()> {
         report.net_bytes,
         fmt_secs(report.net_sim_secs)
     );
+    for l in &report.net.levels {
+        println!(
+            "  level {:<5} {} msgs, {} bytes, wire {}",
+            l.level,
+            l.messages,
+            l.bytes,
+            fmt_secs(l.sim_secs)
+        );
+    }
     for p in &report.pairs {
         println!(
             "  pair ({},{}) rank {} n={} iters={} chunks={} sv={} {}",
@@ -235,6 +250,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let quick = args.flag("quick");
     let out_dir = args.opt("out").unwrap_or("results").to_string();
     let workers: usize = args.get("workers").map_err(parasvm::Error::Config)?.unwrap_or(4);
+    let solver_ranks: usize = args
+        .get("solver-ranks")
+        .map_err(parasvm::Error::Config)?
+        .unwrap_or(1);
     let seed: u64 = args.get("seed").map_err(parasvm::Error::Config)?.unwrap_or(42);
     args.finish().map_err(parasvm::Error::Config)?;
 
@@ -256,7 +275,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             t.save_csv(&out.join("table3.csv"))?;
         }
         4 => {
-            let (t, _) = harness::run_table4(&be, &sweep, workers, &cfg, seed)?;
+            let (t, _) = harness::run_table4(&be, &sweep, workers, solver_ranks, &cfg, seed)?;
             println!("{}", t.render());
             t.save_csv(&out.join("table4.csv"))?;
         }

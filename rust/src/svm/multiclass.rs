@@ -16,7 +16,12 @@ pub struct OvoModel {
 }
 
 impl OvoModel {
-    pub fn new(n_classes: usize, d: usize, binaries: Vec<BinaryModel>, class_names: Vec<String>) -> Self {
+    pub fn new(
+        n_classes: usize,
+        d: usize,
+        binaries: Vec<BinaryModel>,
+        class_names: Vec<String>,
+    ) -> Self {
         assert_eq!(binaries.len(), n_classes * (n_classes - 1) / 2, "need m(m-1)/2 binaries");
         for b in &binaries {
             assert!(b.pos_class < n_classes && b.neg_class < n_classes);

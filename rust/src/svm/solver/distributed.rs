@@ -33,6 +33,17 @@
 //! The paper's MPI-CUDA analogy: ranks are MPICH processes, the per-rank
 //! caches are each GPU's kernel-tile memory, and the per-iteration
 //! all-reduce is the `MPI_Allreduce(MINLOC)` of distributed SMO codes.
+//!
+//! Two entry points, one SPMD body:
+//!
+//! * [`solve_on`] — the hierarchical entry: call collectively from every
+//!   rank of **any** communicator (typically one derived from a worker
+//!   world with [`crate::cluster::Comm::split_with`], pinned to the
+//!   `intra` level). Traffic lands in the communicator's own level
+//!   ledger; the returned outcome is identical on every rank.
+//! * [`DistributedSmo::solve`] — the standalone [`DualSolver`] entry: it
+//!   spawns a private single-level `intra` [`Topology`] world and reports
+//!   that level in [`SolveOutcome::net`].
 
 use std::sync::Arc;
 
@@ -41,8 +52,8 @@ use super::parallel;
 use super::shrink::{ActiveSet, ShrinkStats};
 use super::slice::RowSlice;
 use super::working_set::{in_low, in_up, wss2_gain, EngineConfig, Extremes, Selection};
-use super::{DualSolver, NetTraffic, SolveOutcome};
-use crate::cluster::{Comm, CostModel, PairCandidate, Universe};
+use super::{DualSolver, NetReport, SolveOutcome};
+use crate::cluster::{Comm, CostModel, PairCandidate, Topology, LEVEL_INTRA};
 use crate::data::BinaryProblem;
 use crate::error::Result;
 use crate::svm::smo::SmoSolution;
@@ -51,7 +62,8 @@ use crate::svm::SvmParams;
 /// The row-sharded cooperative engine: `ranks` simulated MPI ranks solve
 /// one binary QP together. `cfg` applies per rank (cache budget rows,
 /// shrinking, per-rank threads, selection rule); `net` prices the
-/// per-iteration collectives in the returned [`NetTraffic`].
+/// per-iteration collectives of a standalone solve, reported as the
+/// `intra` level of [`SolveOutcome::net`].
 #[derive(Debug, Clone, Copy)]
 pub struct DistributedSmo {
     pub ranks: usize,
@@ -71,6 +83,15 @@ impl DistributedSmo {
         let ranks = ranks.max(1);
         let per_rank_budget = (n / 4 / ranks).max(8);
         DistributedSmo::new(ranks, EngineConfig::cached(per_rank_budget), net)
+    }
+
+    /// Per-rank hot-path threads (row evaluation). Thread count never
+    /// changes the numbers — rows are bit-identical either way — so the
+    /// coordinator sets this to its leftover core budget
+    /// (cores / topology ranks) without perturbing models.
+    pub fn with_threads(mut self, threads: usize) -> DistributedSmo {
+        self.cfg.threads = threads;
+        self
     }
 }
 
@@ -96,36 +117,52 @@ impl DualSolver for DistributedSmo {
     }
 
     fn solve(&self, prob: &BinaryProblem, p: &SvmParams) -> SolveOutcome {
-        let universe = Universe::new(self.ranks, self.net);
-        let stats = universe.stats();
+        // A standalone solve is its own single-level machine: one `intra`
+        // sub-world. (Hierarchical runs call `solve_on` on a communicator
+        // split from the worker world instead of spawning here.)
+        let topo = Topology::single(LEVEL_INTRA, self.ranks, self.net);
+        let universe = topo.universe();
         // Replicated dataset, as after the coordinator's bcast: ranks are
         // in-process threads, so replication is one shared Arc.
-        let x: Arc<Vec<f32>> = Arc::new(prob.x.clone());
-        let y: Arc<Vec<f32>> = Arc::new(prob.y.clone());
-        let d = prob.d;
+        let prob: Arc<BinaryProblem> = Arc::new(prob.clone());
         let (params, cfg) = (*p, self.cfg);
 
         let t0 = std::time::Instant::now();
         let mut outs = universe.run(move |mut comm| {
-            solve_rank(&mut comm, &x, &y, d, &params, &cfg)
+            solve_on(&mut comm, &prob, &params, &cfg)
                 .unwrap_or_else(|e| panic!("distributed solve: {e}"))
         });
         let solve_secs = t0.elapsed().as_secs_f64();
 
-        let out = outs.swap_remove(0);
-        SolveOutcome {
-            solution: out.sol,
-            cache: out.cache,
-            shrink: out.shrink,
-            gram_secs: 0.0,
-            solve_secs,
-            net: NetTraffic {
-                messages: stats.messages(),
-                bytes: stats.bytes(),
-                sim_secs: stats.sim_secs(),
-            },
-        }
+        let mut out = outs.swap_remove(0);
+        out.solve_secs = solve_secs;
+        out.net = topo.net();
+        out
     }
+}
+
+/// The collective hierarchical entry: every rank of `comm` calls this with
+/// the same (replicated) problem and config; the cooperative solve's
+/// per-iteration collectives run on `comm` and account into *its* level.
+/// Returns an identical [`SolveOutcome`] on every rank (solution and
+/// world-wide counters are exchanged; `net` is left empty — the
+/// communicator's topology owns the traffic ledgers).
+pub fn solve_on(
+    comm: &mut Comm,
+    prob: &BinaryProblem,
+    p: &SvmParams,
+    cfg: &EngineConfig,
+) -> Result<SolveOutcome> {
+    let t0 = std::time::Instant::now();
+    let out = solve_rank(comm, &prob.x, &prob.y, prob.d, p, cfg)?;
+    Ok(SolveOutcome {
+        solution: out.sol,
+        cache: out.cache,
+        shrink: out.shrink,
+        gram_secs: 0.0,
+        solve_secs: t0.elapsed().as_secs_f64(),
+        net: NetReport::none(),
+    })
 }
 
 /// Encode a candidate index for the wire (`usize::MAX` = "none").
@@ -459,16 +496,62 @@ mod tests {
         let p = SvmParams::default();
         let solo = DistributedSmo::new(1, EngineConfig::cached(0), CostModel::gige10());
         let out1 = solo.solve(&prob, &p);
-        assert_eq!(out1.net.bytes, 0, "single rank must be loopback-free");
+        assert_eq!(out1.net.bytes(), 0, "single rank must be loopback-free");
         let quad = DistributedSmo::new(4, EngineConfig::cached(0), CostModel::gige10());
         let out4 = quad.solve(&prob, &p);
-        assert!(out4.net.messages > 0);
-        assert!(out4.net.bytes > 0);
-        assert!(out4.net.sim_secs > 0.0);
+        assert!(out4.net.messages() > 0);
+        assert!(out4.net.bytes() > 0);
+        assert!(out4.net.sim_secs() > 0.0);
+        // A standalone solve is a single-level `intra` machine, and the
+        // roll-up equals that one level.
+        let intra = out4.net.level(LEVEL_INTRA).expect("intra level");
+        assert_eq!(out4.net.levels.len(), 1);
+        assert_eq!(intra.bytes, out4.net.bytes());
         // Per-iteration traffic is O(1) candidates, not O(n) rows: even a
         // generous bound per (iteration × rank) message stays tiny.
-        let per_msg = out4.net.bytes as f64 / out4.net.messages as f64;
+        let per_msg = out4.net.bytes() as f64 / out4.net.messages() as f64;
         assert!(per_msg < 256.0, "candidate frames should be O(1): {per_msg}B/msg");
+    }
+
+    #[test]
+    fn solve_on_a_split_subcommunicator_matches_standalone() {
+        use crate::cluster::{NetStats, Universe};
+        // 4-rank world -> two 2-rank sub-worlds derived by split, each
+        // co-solving the same QP on the fast intra level. Both must replay
+        // the single-rank trajectory bitwise, and their candidate traffic
+        // must land in the intra ledger, not the world's.
+        let prob = blobs(30, 4, 1.3, 17);
+        let p = SvmParams::default();
+        let single = WorkingSetSmo::new(EngineConfig::cached(0)).solve(&prob, &p);
+        let prob2 = Arc::new(prob.clone());
+        let world = Universe::new(4, CostModel::gige10());
+        let world_stats = world.stats();
+        let intra_stats = NetStats::new();
+        let probe = Arc::clone(&intra_stats);
+        let outs = world.run(move |mut comm| {
+            let mut sub = comm
+                .split_with(comm.rank() / 2, comm.rank(), CostModel::shm(), Arc::clone(&probe))
+                .unwrap();
+            solve_on(&mut sub, &prob2, &SvmParams::default(), &EngineConfig::cached(0))
+                .unwrap()
+        });
+        for out in &outs {
+            assert_bitwise_equal(&out.solution, &single.solution, "split sub-world");
+        }
+        assert!(intra_stats.bytes() > 0, "sub-world traffic lands in its level");
+        assert_eq!(world_stats.bytes(), 0, "the worker level saw none of it");
+    }
+
+    #[test]
+    fn row_threads_do_not_perturb_the_trajectory() {
+        let prob = blobs(30, 4, 1.2, 23);
+        let p = SvmParams::default();
+        let base =
+            DistributedSmo::new(2, EngineConfig::cached(0), CostModel::free()).solve(&prob, &p);
+        let threaded = DistributedSmo::new(2, EngineConfig::cached(0), CostModel::free())
+            .with_threads(4)
+            .solve(&prob, &p);
+        assert_bitwise_equal(&threaded.solution, &base.solution, "row threads");
     }
 
     #[test]

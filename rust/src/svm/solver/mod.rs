@@ -47,6 +47,29 @@
 //! pair), and wins when a single QP outgrows one node or when OvO pairs
 //! are too few to occupy the cluster.
 //!
+//! # Distributed → hierarchical: split, don't spawn
+//!
+//! Through PR 2, [`DistributedSmo::solve`] *spawned* a private, unrelated
+//! universe per solve — fine standalone, but nested under a worker rank it
+//! hid the cluster's level structure: node-local candidate chatter was
+//! priced like cluster ethernet and lumped into one flat ledger. The
+//! engine's SPMD body is now exposed as [`distributed::solve_on`], which
+//! runs on **any communicator** — in the coordinator's hierarchical world,
+//! a sub-communicator derived from the worker world with
+//! [`crate::cluster::Comm::split_with`], pinned to the fast `intra` level.
+//! The rule of thumb from the cluster docs applies here too: *split* when
+//! the solver ranks already exist in a parent world (hierarchical runs),
+//! *spawn* only for a standalone solve (`DistributedSmo::solve` still does,
+//! via a single-level [`crate::cluster::Topology`]). Either way the
+//! trajectory is the same — a communicator is a communicator — so the
+//! bit-identity guarantee below is unchanged.
+//!
+//! [`SolveOutcome::net`] is accordingly a per-level
+//! [`crate::cluster::NetReport`]: standalone solves report one `intra`
+//! level; hierarchical runs report nothing per solve (the topology's
+//! ledgers accumulate across solves and the coordinator reports the
+//! split), and single-host engines report no levels at all.
+//!
 //! All engines return duals that agree with the sequential oracle within
 //! float tolerance (the unshrunk cached and distributed engines are
 //! bit-identical; shrinking re-verifies KKT on the full index set before
@@ -66,20 +89,12 @@ pub use shrink::{ActiveSet, ShrinkStats};
 pub use slice::RowSlice;
 pub use working_set::{EngineConfig, Selection};
 
+pub use crate::cluster::{LevelNet, NetReport};
+
 use crate::data::BinaryProblem;
 use crate::svm::model::{BinaryModel, TrainStats};
 use crate::svm::smo::SmoSolution;
 use crate::svm::SvmParams;
-
-/// Interconnect traffic of one solve (zero for single-host engines; the
-/// distributed engine reports its collectives' accounting here).
-#[derive(Debug, Clone, Copy, Default)]
-pub struct NetTraffic {
-    pub messages: u64,
-    pub bytes: u64,
-    /// Simulated wire seconds under the engine's cost model.
-    pub sim_secs: f64,
-}
 
 /// Everything a solve produces: duals plus engine-side observability.
 #[derive(Debug, Clone)]
@@ -91,8 +106,11 @@ pub struct SolveOutcome {
     /// engines — their kernel work happens inside `solve_secs`).
     pub gram_secs: f64,
     pub solve_secs: f64,
-    /// Interconnect accounting (distributed engine only).
-    pub net: NetTraffic,
+    /// Interconnect accounting split by topology level (empty for
+    /// single-host engines; one `intra` level for standalone distributed
+    /// solves; empty for hierarchical `solve_on` runs, whose traffic
+    /// accumulates in the owning topology's ledgers).
+    pub net: NetReport,
 }
 
 /// A dual QP engine: one strategy for working-set selection + kernel
@@ -149,7 +167,7 @@ impl DualSolver for DenseSmo {
             shrink: ShrinkStats { min_active: n, ..Default::default() },
             gram_secs,
             solve_secs,
-            net: NetTraffic::default(),
+            net: NetReport::none(),
         }
     }
 }
@@ -201,7 +219,7 @@ impl DualSolver for WorkingSetSmo {
             shrink,
             gram_secs: 0.0,
             solve_secs,
-            net: NetTraffic::default(),
+            net: NetReport::none(),
         }
     }
 }
@@ -227,9 +245,15 @@ pub fn auto_engine(n: usize) -> Box<dyn DualSolver> {
     }
 }
 
-/// Train a binary model through any engine (the shared backend entry).
-pub fn train_with(engine: &dyn DualSolver, prob: &BinaryProblem, p: &SvmParams) -> (BinaryModel, TrainStats) {
-    let out = engine.solve(prob, p);
+/// Turn a solve outcome into the backend-facing (model, stats) pair.
+/// Shared by [`train_with`] and the coordinator's hierarchical path
+/// (which drives [`distributed::solve_on`] directly on a derived
+/// communicator and converts each rank's outcome itself).
+pub fn model_from_outcome(
+    prob: &BinaryProblem,
+    out: &SolveOutcome,
+    p: &SvmParams,
+) -> (BinaryModel, TrainStats) {
     let model = BinaryModel::from_dense(prob, &out.solution.alpha, out.solution.bias, p.gamma);
     let stats = TrainStats {
         iters: out.solution.iters,
@@ -240,6 +264,16 @@ pub fn train_with(engine: &dyn DualSolver, prob: &BinaryProblem, p: &SvmParams) 
         n_sv: model.n_sv(),
     };
     (model, stats)
+}
+
+/// Train a binary model through any engine (the shared backend entry).
+pub fn train_with(
+    engine: &dyn DualSolver,
+    prob: &BinaryProblem,
+    p: &SvmParams,
+) -> (BinaryModel, TrainStats) {
+    let out = engine.solve(prob, p);
+    model_from_outcome(prob, &out, p)
 }
 
 /// Train with the auto-selected cached engine (`Solver::SmoCached`).

@@ -80,6 +80,31 @@ fn train_with_solver_ranks_axis() {
 }
 
 #[test]
+fn train_hierarchical_topology_with_split_cost_models() {
+    // workers x solver-ranks through the split-based topology, with
+    // distinct inter/intra links: the run must train end to end and the
+    // report must print both levels' traffic.
+    let s = run_ok(&[
+        "train", "--dataset", "iris", "--backend", "native", "--workers", "2",
+        "--solver-ranks", "2", "--net-inter", "50e-6:1.25e9", "--net-intra", "1e-6:1.2e10",
+    ]);
+    assert!(s.contains("train accuracy"));
+    assert!(s.contains("level inter"), "missing inter level line:\n{s}");
+    assert!(s.contains("level intra"), "missing intra level line:\n{s}");
+}
+
+#[test]
+fn bad_cost_model_rejected() {
+    let out = parasvm()
+        .args(["train", "--dataset", "iris", "--backend", "native", "--net-intra", "banana"])
+        .output()
+        .expect("spawn");
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("cost model"), "{err}");
+}
+
+#[test]
 fn solver_ranks_zero_rejected() {
     let out = parasvm()
         .args(["train", "--dataset", "iris", "--backend", "native", "--solver-ranks", "0"])

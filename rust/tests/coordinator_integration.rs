@@ -72,6 +72,7 @@ fn pavia_nine_class_all_36_pairs() {
         net: CostModel::gige10(),
         pair_threads: 1,
         solver_ranks: 1,
+        ..Default::default()
     };
     let Some(be) = xla() else { return };
     let (model, report) = train_multiclass(&ds, be, &cfg).unwrap();

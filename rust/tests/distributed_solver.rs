@@ -3,12 +3,18 @@
 //! the single-rank `WorkingSetSmo` iterate sequence *exactly* (same
 //! selected pairs, hence same iteration count and bit-identical duals) on
 //! iris and wdbc; with shrinking on it matches the single-rank dual
-//! objective within 1e-4.
+//! objective within 1e-4. The hierarchical acceptance test pins the
+//! split-based topology: a workers x solver_ranks run is bit-identical to
+//! the flat path while its traffic splits cleanly by level.
 
-use parasvm::cluster::CostModel;
+use std::sync::Arc;
+
+use parasvm::backend::NativeBackend;
+use parasvm::cluster::{CostModel, LEVEL_INTER, LEVEL_INTRA};
+use parasvm::coordinator::{train_multiclass, TrainConfig};
 use parasvm::harness::binary_workload;
 use parasvm::svm::solver::{DistributedSmo, DualSolver, EngineConfig, WorkingSetSmo};
-use parasvm::svm::{kernel, smo};
+use parasvm::svm::{kernel, smo, SvmParams};
 
 const WORKLOADS: [(&str, usize); 2] = [("iris", 40), ("wdbc", 100)];
 
@@ -43,11 +49,11 @@ fn four_ranks_replay_the_single_rank_iterates_exactly() {
         // Cooperative solve really crossed the wire, and cheaply: O(1)
         // candidate words per iteration (plus one final counter exchange),
         // never kernel rows.
-        assert!(out.net.messages > 0, "{name}");
+        assert!(out.net.messages() > 0, "{name}");
         assert!(
-            out.net.bytes < (out.solution.iters as u64 + 8) * 4 * 128,
+            out.net.bytes() < (out.solution.iters as u64 + 8) * 4 * 128,
             "{name}: traffic should be candidates, not rows ({} B)",
-            out.net.bytes
+            out.net.bytes()
         );
     }
 }
@@ -93,10 +99,68 @@ fn rank_sweep_is_consistent_on_iris() {
         let out = dist.solve(&prob, &w.params);
         assert!(out.solution.converged, "{ranks} ranks");
         iters.push(out.solution.iters);
-        bytes.push(out.net.bytes);
+        bytes.push(out.net.bytes());
     }
     assert_eq!(iters[0], iters[1]);
     assert_eq!(iters[1], iters[2]);
     assert_eq!(bytes[0], 0, "single rank is loopback-only");
     assert!(bytes[1] > 0 && bytes[2] > bytes[1]);
+}
+
+#[test]
+fn hierarchical_topology_is_bit_identical_with_a_clean_level_split() {
+    // The PR-3 acceptance criterion. With shrinking off, a workers=2,
+    // solver_ranks=2 run through the split-based topology must produce
+    // bit-identical models to the flat PR-2 path (whose Solver::Smo *is*
+    // the single-rank dense oracle), while the report splits traffic into
+    // the inter level (exactly the flat run's bcast + gather) and the
+    // intra level (exactly the per-solve traffic the flat accounting used
+    // to charge to throwaway private universes), summing to the old flat
+    // total.
+    let ds = parasvm::data::iris::load();
+    let be = Arc::new(NativeBackend::new());
+    let flat = TrainConfig { workers: 2, ..Default::default() };
+    let hier = TrainConfig {
+        workers: 2,
+        solver_ranks: 2,
+        net: CostModel::gige10(),
+        intra_net: CostModel::shm(),
+        ..Default::default()
+    };
+    let (m_flat, r_flat) = train_multiclass(&ds, be.clone(), &flat).unwrap();
+    let (m_hier, r_hier) = train_multiclass(&ds, be, &hier).unwrap();
+
+    // (a) bit-identical models across the two code paths.
+    assert_eq!(m_flat.binaries.len(), m_hier.binaries.len());
+    for (a, b) in m_flat.binaries.iter().zip(m_hier.binaries.iter()) {
+        assert_eq!((a.pos_class, a.neg_class), (b.pos_class, b.neg_class));
+        assert_eq!(a.coef, b.coef, "pair ({},{})", a.pos_class, a.neg_class);
+        assert_eq!(a.bias.to_bits(), b.bias.to_bits());
+    }
+
+    // (b) the inter level carries exactly the flat run's traffic (same
+    // bcast to the same worker leads; bit-identical models mean
+    // byte-identical gather frames).
+    let inter = r_hier.net.level(LEVEL_INTER).expect("inter level");
+    let intra = r_hier.net.level(LEVEL_INTRA).expect("intra level");
+    assert_eq!(inter.bytes, r_flat.net_bytes);
+    assert_eq!(inter.messages, r_flat.net_messages);
+
+    // (c) the intra level carries exactly what PR 2's flat accounting
+    // charged per solve: the sum over every pair of a standalone 2-rank
+    // cooperative solve under the coordinator's auto engine config.
+    let (mut expect_bytes, mut expect_msgs) = (0u64, 0u64);
+    for (a, b) in [(0usize, 1usize), (0, 2), (1, 2)] {
+        let prob = ds.binary_pair(a, b);
+        let engine = DistributedSmo::auto(2, prob.n(), CostModel::shm());
+        let out = engine.solve(&prob, &SvmParams::default());
+        expect_bytes += out.net.bytes();
+        expect_msgs += out.net.messages();
+    }
+    assert_eq!(intra.bytes, expect_bytes);
+    assert_eq!(intra.messages, expect_msgs);
+
+    // (d) per-level stats roll up to the flat total.
+    assert_eq!(r_hier.net_bytes, inter.bytes + intra.bytes);
+    assert_eq!(r_hier.net_messages, inter.messages + intra.messages);
 }

@@ -30,6 +30,50 @@ fn recv_from_silent_rank_times_out_with_context() {
 }
 
 #[test]
+fn sub_communicator_timeout_aborts_without_deadlocking_the_parent_world() {
+    // A 2x2 hierarchy: one solver sub-world stalls (its peer never sends).
+    // The stalled rank must get a timeout error — and the sibling
+    // sub-world and the world itself must complete normally; a stuck
+    // sub-communicator may never wedge ranks outside its group.
+    let out = Universe::new(4, CostModel::free()).run(|mut comm| {
+        let rank = comm.rank();
+        let mut sub = comm.split(rank / 2, rank).unwrap();
+        if rank == 1 {
+            sub.set_recv_timeout(Duration::from_millis(100));
+            // Sub-rank 0 (world rank 0) never sends tag 9.
+            let err = sub.recv(0, 9).unwrap_err();
+            assert!(err.to_string().contains("timeout"), "{err}");
+            "timed-out"
+        } else if rank >= 2 {
+            // The sibling sub-world keeps collectively working.
+            let v = sub.allreduce_sum_f32s(&[rank as f32]).unwrap()[0];
+            assert_eq!(v, 5.0);
+            "ok"
+        } else {
+            "idle"
+        }
+    });
+    assert_eq!(out, vec!["idle", "timed-out", "ok", "ok"]);
+}
+
+#[test]
+fn split_with_a_missing_peer_times_out_cleanly() {
+    // Comm::split is collective; if a peer never joins, the waiting rank
+    // must get an error after its timeout instead of hanging forever.
+    let out = Universe::new(2, CostModel::free()).run(|mut comm| {
+        if comm.rank() == 0 {
+            comm.set_recv_timeout(Duration::from_millis(100));
+            let err = comm.split(0, 0).unwrap_err();
+            assert!(err.to_string().contains("split"), "{err}");
+            true
+        } else {
+            true // never calls split
+        }
+    });
+    assert!(out[0]);
+}
+
+#[test]
 fn send_after_receiver_exit_errors() {
     let out = Universe::new(2, CostModel::free()).run(|comm| {
         if comm.rank() == 0 {

@@ -2,7 +2,7 @@
 //! invariants (via the in-repo `util::prop` harness — the offline
 //! `proptest` substitute; replay failures with PARASVM_PROP_SEED=<seed>).
 
-use parasvm::cluster::{CostModel, PairCandidate, Universe};
+use parasvm::cluster::{CostModel, LevelNet, NetReport, NetStats, PairCandidate, Universe};
 use parasvm::coordinator::pairs::{assign, Partition};
 use parasvm::coordinator::wire;
 use parasvm::data::{scale::Scaler, split, BinaryProblem, Dataset};
@@ -236,6 +236,78 @@ fn prop_allgather_delivers_every_payload_to_every_rank() {
         for got in out {
             assert_eq!(got, bufs, "every rank must see all payloads in rank order");
         }
+    });
+}
+
+#[test]
+fn prop_split_pair_reductions_match_per_group_serial_folds() {
+    // MPI_Comm_split must preserve the pair reductions' rank-order
+    // tie-breaking: with `key = parent rank`, each color group's
+    // allreduce_max_pair equals a strict serial fold over that group's
+    // candidates in parent-rank order (first-rank-wins on ties). Keys are
+    // drawn from a small set so ties are common.
+    check("split reductions == per-group folds", cfg(24), |rng| {
+        let ranks = usize_in(rng, 2, 8);
+        let n_colors = usize_in(rng, 1, 3);
+        let colors: Vec<usize> = (0..ranks).map(|_| usize_in(rng, 0, n_colors - 1)).collect();
+        let keys: Vec<f64> = (0..ranks).map(|_| usize_in(rng, 0, 2) as f64).collect();
+        let mut want = vec![PairCandidate::none_max(); n_colors];
+        for r in 0..ranks {
+            let cand = PairCandidate::new(keys[r], r as u64, -(r as f64));
+            if cand.key > want[colors[r]].key {
+                want[colors[r]] = cand;
+            }
+        }
+        let colors2 = colors.clone();
+        let out = Universe::new(ranks, CostModel::free()).run(move |mut c| {
+            let r = c.rank();
+            let mut sub = c.split(colors2[r], r).unwrap();
+            sub.allreduce_max_pair(PairCandidate::new(keys[r], r as u64, -(r as f64)))
+                .unwrap()
+        });
+        for (r, got) in out.into_iter().enumerate() {
+            assert_eq!(got, want[colors[r]], "rank {r} color {}", colors[r]);
+        }
+    });
+}
+
+#[test]
+fn prop_per_level_ledgers_roll_up_to_the_flat_total() {
+    // Recording any message stream split across per-level ledgers must
+    // total exactly what one flat world-wide ledger records for the same
+    // stream — the invariant that makes the hierarchical accounting a
+    // refinement (not a change) of the old flat numbers.
+    check("per-level rollup == flat total", cfg(64), |rng| {
+        let n_levels = usize_in(rng, 1, 4);
+        let models: Vec<CostModel> = (0..n_levels)
+            .map(|_| CostModel {
+                latency: f32_in(rng, 0.0, 1e-3) as f64,
+                bandwidth: f32_in(rng, 1.0, 1e6) as f64,
+            })
+            .collect();
+        let ledgers: Vec<_> = (0..n_levels).map(|_| NetStats::new()).collect();
+        let flat = NetStats::new();
+        for _ in 0..usize_in(rng, 0, 64) {
+            let lvl = usize_in(rng, 0, n_levels - 1);
+            let bytes = usize_in(rng, 0, 1 << 16);
+            ledgers[lvl].record(bytes, &models[lvl]);
+            flat.record(bytes, &models[lvl]);
+        }
+        let report = NetReport {
+            levels: ledgers
+                .iter()
+                .enumerate()
+                .map(|(i, s)| LevelNet::snapshot(&format!("l{i}"), s))
+                .collect(),
+        };
+        assert_eq!(report.messages(), flat.messages());
+        assert_eq!(report.bytes(), flat.bytes());
+        assert!(
+            (report.sim_secs() - flat.sim_secs()).abs() <= 1e-9 * flat.sim_secs().max(1.0),
+            "{} vs {}",
+            report.sim_secs(),
+            flat.sim_secs()
+        );
     });
 }
 
