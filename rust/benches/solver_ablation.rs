@@ -1,8 +1,9 @@
-//! Solver-engine ablation bench: dense vs cached vs cached+shrink vs
-//! parallel working-set SMO on the Pavia subset, the row-sharded
-//! distributed engine at 1/2/4 ranks vs the single-rank cached engine,
-//! plus sequential- vs concurrent-pair OvO multiclass on a 4-worker
-//! universe.
+//! Solver-engine ablation bench: dense vs the cached engine's three
+//! row-evaluation paths (scalar vs panel vs panel+fused-update) vs
+//! cached+shrink vs parallel working-set SMO on the Pavia subset, the
+//! row-sharded distributed engine at 1/2/4 ranks vs the single-rank
+//! cached engine, plus sequential- vs concurrent-pair OvO multiclass on a
+//! 4-worker universe.
 //!
 //! Native-only — runs from a clean checkout, no `make artifacts` needed:
 //!
@@ -12,16 +13,25 @@
 //! Writes the rendered table to stdout, `results/solver_ablation.csv`, and
 //! the machine-readable baseline to `BENCH_solver.json` (repo root when run
 //! from the workspace root; override with PARASVM_BENCH_JSON).
+//!
+//! Doubles as the CI perf gate for the panel kernel engine: the run
+//! FAILS if the panel+fused row path is more than 10% slower than the
+//! scalar baseline (they solve the identical trajectory, so any slowdown
+//! is a pure micro-kernel regression).
 
-use parasvm::harness::run_solver_ablation;
+use parasvm::harness::{run_solver_ablation, LABEL_PANEL_FUSED, LABEL_SCALAR_ROWS};
 use parasvm::metrics::bench::BenchConfig;
 
 fn main() {
     let quick = std::env::var("PARASVM_BENCH_QUICK").is_ok();
+    // QUICK keeps the small workload but takes enough samples (3-5) for
+    // the median to be stable: the panel perf gate below hard-fails on a
+    // >10% regression, so a 2-sample median on a noisy shared runner
+    // would turn the gate into a coin flip.
     let cfg = BenchConfig {
         warmup: 1,
-        min_samples: if quick { 2 } else { 3 },
-        max_samples: if quick { 3 } else { 5 },
+        min_samples: 3,
+        max_samples: 5,
         cv_target: 0.15,
     };
     // Paper-scale subset by default, CI-scale under QUICK.
@@ -47,5 +57,25 @@ fn main() {
     assert!(
         par < dense * 2.0,
         "parallel engine pathologically slow: {par:.4}s vs dense {dense:.4}s"
+    );
+
+    // Panel-vs-scalar regression guard (the CI perf gate): identical
+    // trajectories, so the fused panel path losing to the scalar loop by
+    // more than measurement noise means the micro-kernel regressed.
+    let median_of = |label: &str| {
+        ablation
+            .engines
+            .iter()
+            .find(|r| r.engine == label)
+            .unwrap_or_else(|| panic!("ablation lineup is missing the {label:?} row"))
+            .median_secs
+    };
+    let scalar = median_of(LABEL_SCALAR_ROWS);
+    let fused = median_of(LABEL_PANEL_FUSED);
+    let ratio = ablation.panel_speedup_vs_scalar.unwrap_or(0.0);
+    println!("panel+fused speedup vs scalar rows: {ratio:.2}x");
+    assert!(
+        fused <= scalar * 1.10,
+        "panel engine regressed: panel+fused {fused:.4}s vs scalar {scalar:.4}s (>10% slower)"
     );
 }

@@ -6,7 +6,10 @@ use crate::error::Result;
 use crate::svm::solver as dual;
 use crate::svm::{gd, smo, BinaryModel, SvmParams, TrainStats};
 
-/// Host CPU backend: scalar rust implementations of both solvers.
+/// Host CPU backend: pure-rust implementations of both solvers. Kernel
+/// evaluation — the dense oracle's Gram build and the cached engines' row
+/// fills alike — runs through the packed panel engine
+/// ([`crate::svm::solver::panel`]), bit-identical to the scalar reference.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct NativeBackend;
 

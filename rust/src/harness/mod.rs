@@ -14,7 +14,10 @@ pub mod solver_ablation;
 pub mod tables;
 pub mod workloads;
 
-pub use solver_ablation::{run_solver_ablation, DistRow, HierRow, SolverAblation};
+pub use solver_ablation::{
+    run_solver_ablation, DistRow, HierRow, SolverAblation, LABEL_PANEL_FUSED, LABEL_PANEL_ROWS,
+    LABEL_SCALAR_ROWS,
+};
 pub use tables::{
     run_table3, run_table4, run_table5, run_table6, Table3Row, Table4Row, Table56Row,
 };

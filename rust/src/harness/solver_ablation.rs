@@ -1,16 +1,20 @@
-//! Solver-engine ablation: dense vs cached vs cached+shrink vs parallel,
-//! the row-sharded distributed engine at 1/2/4 ranks vs the single-rank
-//! cached engine, sequential- vs concurrent-pair OvO multiclass, plus a
-//! hierarchical 2-workers x 2-solver-ranks run with distinct inter/intra
-//! cost models reporting the per-level overhead split.
+//! Solver-engine ablation: dense vs the cached engine's three
+//! row-evaluation paths (scalar vs panel vs panel+fused-update) vs
+//! cached+shrink vs parallel, the row-sharded distributed engine at 1/2/4
+//! ranks vs the single-rank cached engine, sequential- vs concurrent-pair
+//! OvO multiclass, plus a hierarchical 2-workers x 2-solver-ranks run
+//! with distinct inter/intra cost models reporting the per-level overhead
+//! split.
 //!
 //! Unlike the paper-table runners this workload is **native-only** (no AOT
 //! artifacts, no device), so it runs from a clean checkout and in CI — it
 //! is the reproducible speedup story for the `svm::solver` subsystem. The
-//! bench wrapper (`benches/solver_ablation.rs`) renders the table and
-//! writes the machine-readable `BENCH_solver.json` (schema v3: per-level
-//! `net_levels` on distributed rows and the `hierarchical` section) that
-//! later PRs diff against.
+//! bench wrapper (`benches/solver_ablation.rs`) renders the table, writes
+//! the machine-readable `BENCH_solver.json` (schema v4: the panel
+//! row-eval rows + `panel_speedup_vs_scalar`, per-level `net_levels` on
+//! distributed rows and the `hierarchical` section) that later PRs diff
+//! against, and enforces the panel-vs-scalar regression guard CI runs on
+//! every push.
 
 use std::sync::Arc;
 
@@ -20,7 +24,9 @@ use crate::coordinator::{train_multiclass, TrainConfig};
 use crate::error::Result;
 use crate::metrics::bench::{bench, BenchConfig};
 use crate::metrics::table::Table;
-use crate::svm::solver::{DenseSmo, DistributedSmo, DualSolver, EngineConfig, WorkingSetSmo};
+use crate::svm::solver::{
+    DenseSmo, DistributedSmo, DualSolver, EngineConfig, RowEval, WorkingSetSmo,
+};
 use crate::util::json::{self, Json};
 
 /// One engine row of the ablation.
@@ -78,6 +84,10 @@ pub struct SolverAblation {
     pub n: usize,
     pub d: usize,
     pub engines: Vec<EngineRow>,
+    /// Median-time ratio scalar-row engine / panel+fused engine — the
+    /// headline number of the panel kernel engine, recorded so later PRs
+    /// (and the CI regression guard) can diff the perf trajectory.
+    pub panel_speedup_vs_scalar: Option<f64>,
     pub distributed: Vec<DistRow>,
     pub ovo: Vec<OvoRow>,
     pub hierarchical: Vec<HierRow>,
@@ -103,10 +113,14 @@ impl SolverAblation {
     /// Machine-readable form for `BENCH_solver.json`.
     pub fn to_json(&self) -> Json {
         json::obj(vec![
-            ("schema", json::s("parasvm-solver-ablation/v3")),
+            ("schema", json::s("parasvm-solver-ablation/v4")),
             ("dataset", json::s(&self.dataset)),
             ("n", json::num(self.n as f64)),
             ("d", json::num(self.d as f64)),
+            (
+                "panel_speedup_vs_scalar",
+                self.panel_speedup_vs_scalar.map_or(Json::Null, json::num),
+            ),
             (
                 "engines",
                 json::arr(
@@ -185,14 +199,36 @@ impl SolverAblation {
     }
 }
 
+/// Ablation label of the scalar-row baseline (the bench regression guard
+/// keys on these constants).
+pub const LABEL_SCALAR_ROWS: &str = "cached scalar rows (n/4)";
+/// Ablation label of the panel-evaluation engine (two-pass f-update).
+pub const LABEL_PANEL_ROWS: &str = "cached panel rows (n/4)";
+/// Ablation label of the panel engine with the fused pair/f-update sweep.
+pub const LABEL_PANEL_FUSED: &str = "cached panel+fused (n/4)";
+
 /// The engine lineup: name + factory (budget is rows, n/4 when capped).
+/// The three `cached` variants differ only in [`RowEval`] — same budget,
+/// same trajectory (values are bit-identical) — so their median split
+/// isolates the panel layout win from the fused-update win.
 fn engines(n: usize) -> Vec<(&'static str, Box<dyn DualSolver>)> {
     let budget = (n / 4).max(2);
     vec![
         ("dense", Box::new(DenseSmo { threads: 1 }) as Box<dyn DualSolver>),
         (
-            "cached (n/4 rows)",
-            Box::new(WorkingSetSmo::new(EngineConfig::cached(budget))),
+            LABEL_SCALAR_ROWS,
+            Box::new(WorkingSetSmo::new(EngineConfig::cached_eval(budget, RowEval::Scalar))),
+        ),
+        (
+            LABEL_PANEL_ROWS,
+            Box::new(WorkingSetSmo::new(EngineConfig::cached_eval(budget, RowEval::Panel))),
+        ),
+        (
+            LABEL_PANEL_FUSED,
+            Box::new(WorkingSetSmo::new(EngineConfig::cached_eval(
+                budget,
+                RowEval::PanelFused,
+            ))),
         ),
         (
             "cached+shrink",
@@ -217,7 +253,7 @@ pub fn run_solver_ablation(
     let prob = w.problem();
     let mut table = Table::new(
         format!(
-            "Solver ablation — pavia binary {}x{} (dense vs cached vs shrink vs parallel)",
+            "Solver ablation — pavia binary {}x{} (dense vs scalar/panel/fused vs shrink vs par)",
             prob.n(),
             prob.d
         ),
@@ -257,9 +293,24 @@ pub fn run_solver_ablation(
         rows.push(row);
     }
 
+    // The panel engine's headline ratio: scalar-row baseline vs the fully
+    // fused panel path (identical trajectories, so this is pure layout +
+    // fusion win).
+    let median_of = |label: &str| {
+        rows.iter()
+            .find(|r| r.engine == label)
+            .unwrap_or_else(|| panic!("ablation lineup is missing the {label:?} row"))
+            .median_secs
+    };
+    let scalar_median = median_of(LABEL_SCALAR_ROWS);
+    let fused_median = median_of(LABEL_PANEL_FUSED);
+    let panel_speedup_vs_scalar =
+        (fused_median > 0.0).then_some(scalar_median / fused_median);
+
     // Distributed row-sharded engine at 1/2/4 ranks vs the single-rank
-    // cached engine (same total budget, split across the rank shards).
-    let single_cached_median = rows[1].median_secs;
+    // cached engine on the same (panel-fused) row path and total budget,
+    // split across the rank shards.
+    let single_cached_median = median_of(LABEL_PANEL_FUSED);
     let budget = (prob.n() / 4).max(2);
     let mut dist_rows: Vec<DistRow> = Vec::new();
     for ranks in [1usize, 2, 4] {
@@ -379,6 +430,7 @@ pub fn run_solver_ablation(
         n: prob.n(),
         d: prob.d,
         engines: rows,
+        panel_speedup_vs_scalar,
         distributed: dist_rows,
         ovo: ovo_rows,
         hierarchical: vec![hier_row],
@@ -394,7 +446,7 @@ mod tests {
     fn tiny_ablation_runs_end_to_end() {
         let cfg = BenchConfig { warmup: 0, min_samples: 1, max_samples: 1, cv_target: 1.0 };
         let (table, ab) = run_solver_ablation(30, 8, &cfg, 3).unwrap();
-        assert_eq!(ab.engines.len(), 4);
+        assert_eq!(ab.engines.len(), 6);
         assert_eq!(ab.distributed.len(), 3);
         assert_eq!(ab.ovo.len(), 2);
         assert!((ab.engines[0].speedup_vs_dense - 1.0).abs() < 1e-9);
@@ -402,6 +454,14 @@ mod tests {
         for r in &ab.engines[1..] {
             assert!(r.max_resident_rows < ab.n, "{}", r.engine);
         }
+        // The three row-eval variants replay the identical trajectory —
+        // only the evaluation layout differs — so iteration counts match.
+        let by_label = |l: &str| ab.engines.iter().find(|r| r.engine == l).unwrap();
+        let scalar = by_label(LABEL_SCALAR_ROWS);
+        assert_eq!(by_label(LABEL_PANEL_ROWS).iters, scalar.iters);
+        assert_eq!(by_label(LABEL_PANEL_FUSED).iters, scalar.iters);
+        let ratio = ab.panel_speedup_vs_scalar.expect("panel ratio recorded");
+        assert!(ratio.is_finite() && ratio > 0.0);
         // The distributed sweep is 1/2/4 ranks; every rank count replays
         // the same unshrunk trajectory, so iteration counts agree, and
         // only multi-rank rows move candidate bytes over the wire.
@@ -433,11 +493,13 @@ mod tests {
         let rendered = table.render();
         assert!(rendered.contains("dense"));
         assert!(rendered.contains("parallel"));
+        assert!(rendered.contains("panel+fused"));
         assert!(rendered.contains("distributed (4 ranks)"));
         assert!(rendered.contains("hierarchical 2x2"));
         let j = ab.to_json();
-        assert_eq!(j.get("schema").and_then(Json::as_str), Some("parasvm-solver-ablation/v3"));
-        assert_eq!(j.get("engines").and_then(Json::as_arr).unwrap().len(), 4);
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some("parasvm-solver-ablation/v4"));
+        assert!(j.get("panel_speedup_vs_scalar").is_some());
+        assert_eq!(j.get("engines").and_then(Json::as_arr).unwrap().len(), 6);
         assert_eq!(j.get("distributed").and_then(Json::as_arr).unwrap().len(), 3);
         assert_eq!(j.get("hierarchical").and_then(Json::as_arr).unwrap().len(), 1);
     }

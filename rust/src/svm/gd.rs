@@ -68,7 +68,7 @@ pub fn solve_gram(k: &[f32], y: &[f32], p: &SvmParams) -> GdSolution {
 
 /// Train a binary model with the GD solver (native Gram + native GD).
 ///
-/// The Gram build goes through the solver subsystem's row path
+/// The Gram build goes through the solver subsystem's packed panel engine
 /// (bit-identical values to `kernel::rbf_gram`), serial per problem: the
 /// TF-analog is a sequential-baseline profile and the coordinator already
 /// parallelizes across OvO pairs. The fixed-step GD loop itself stays

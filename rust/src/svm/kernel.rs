@@ -58,16 +58,29 @@ pub fn rbf_gram(x: &[f32], n: usize, d: usize, gamma: f32) -> Vec<f32> {
 /// precomputed norms and a `max(0.0)` clamp as [`rbf_gram`] and the Pallas
 /// device kernel — not the sub-square-accumulate [`rbf`] form — so
 /// serve-path decision values match the training-path numerics bitwise.
+///
+/// Batches route through the packed panel engine
+/// ([`crate::svm::solver::panel::DatasetView`]): `x` is packed once, then
+/// query rows are evaluated four per blocked sweep. Single-query calls
+/// keep the direct scalar loop (packing O(n·d) to evaluate one O(n·d) row
+/// would double the work). Both paths produce identical bits — the panel
+/// lanes replay the scalar per-element expression and accumulation order
+/// exactly (no diagonal shortcut here: queries are arbitrary points).
 pub fn rbf_cross(q: &[f32], m: usize, x: &[f32], n: usize, d: usize, gamma: f32) -> Vec<f32> {
     assert_eq!(q.len(), m * d);
     assert_eq!(x.len(), n * d);
+    let mut k = vec![0.0f32; m * n];
+    if m > 1 {
+        let view = crate::svm::solver::panel::DatasetView::pack(x, n, d);
+        view.cross_into(q, m, gamma, &mut k);
+        return k;
+    }
     let qn: Vec<f32> = (0..m)
         .map(|i| q[i * d..(i + 1) * d].iter().map(|v| v * v).sum())
         .collect();
     let xn: Vec<f32> = (0..n)
         .map(|j| x[j * d..(j + 1) * d].iter().map(|v| v * v).sum())
         .collect();
-    let mut k = vec![0.0f32; m * n];
     for i in 0..m {
         let qi = &q[i * d..(i + 1) * d];
         for j in 0..n {

@@ -8,12 +8,23 @@
 //! over and over, so hit rates stay high even at budgets far below n — the
 //! classic libsvm/ThunderSVM kernel-cache observation.
 //!
-//! Rows are bit-identical to the corresponding `kernel::rbf_gram` rows
-//! (same expanded-identity formulation via [`super::parallel::rbf_row_into`]),
-//! so a cached solve replays the dense solve exactly.
+//! Missing rows are evaluated through the packed panel engine
+//! ([`super::panel::DatasetView`]) by default — blocked, SIMD-friendly
+//! multi-row sweeps — with the legacy per-entry scalar loop retained
+//! behind [`RowEval::Scalar`] as the reference path and ablation baseline.
+//! Either way, rows are bit-identical to the corresponding
+//! `kernel::rbf_gram` rows (same expanded-identity expression in the same
+//! order), so a cached solve replays the dense solve exactly.
+//!
+//! The working-pair entry points ([`KernelSource::pair`] /
+//! [`KernelSource::pair_update`]) let a solver fetch rows i and j as one
+//! panel fill — one sweep over the packed data instead of two independent
+//! cache fills — and optionally fold the SMO rank-2 f-update into that
+//! same sweep ([`RowEval::PanelFused`]).
 
 use std::sync::Arc;
 
+use super::panel::{DatasetView, RowEval};
 use super::parallel;
 use super::slice::RowSlice;
 
@@ -38,6 +49,21 @@ impl CacheStats {
     }
 }
 
+/// The rank-2 f-update `f[t] += ci·ki[t] + cj·kj[t]` over already-held
+/// rows — the two-pass form shared by the default [`KernelSource`]
+/// implementations and the shrunk/scattered solver paths. Chunk-parallel
+/// over `f`; per-element f64 adds are independent, so the result is
+/// bitwise the serial loop's.
+pub fn apply_rank2(ki: &[f32], kj: &[f32], ci: f64, cj: f64, f: &mut [f64], threads: usize) {
+    debug_assert!(ki.len() >= f.len() && kj.len() >= f.len());
+    parallel::par_apply_mut(f, threads, parallel::MIN_CHUNK, |start, piece| {
+        for (off, ft) in piece.iter_mut().enumerate() {
+            let t = start + off;
+            *ft += ci * ki[t] as f64 + cj * kj[t] as f64;
+        }
+    });
+}
+
 /// A provider of kernel matrix rows for the dual solvers.
 ///
 /// `row(i)` returns the i-th row of the (virtual) n×n kernel matrix —
@@ -54,25 +80,62 @@ pub trait KernelSource {
     /// window's length for sliced caches).
     fn row(&mut self, i: usize) -> Arc<[f32]>;
 
+    /// One kernel entry K(i, j) in the *full* index space (valid even
+    /// when `j` lies outside a sliced cache's window), without
+    /// materializing either row. Bit-identical to the value a full-width
+    /// `row(i)[j]` read would return. Does not touch the LRU state.
+    fn entry(&mut self, i: usize, j: usize) -> f32;
+
+    /// Diagonal entry K(i, i).
+    fn diag(&mut self, i: usize) -> f32 {
+        self.entry(i, i)
+    }
+
+    /// The working pair (rows i and j) as one fetch. Sources backed by
+    /// the panel engine fill both rows in a single sweep over the packed
+    /// data; the default is two independent `row()` calls. Values are
+    /// identical either way.
+    fn pair(&mut self, i: usize, j: usize) -> (Arc<[f32]>, Arc<[f32]>) {
+        (self.row(i), self.row(j))
+    }
+
+    /// Fetch the working pair *and* apply the SMO rank-2 update
+    /// `f[t] += ci·K(i,t) + cj·K(j,t)` over the row window (`f` must have
+    /// the row length). Panel-fused sources fold the update into the
+    /// evaluation sweep; the default fetches then makes a second pass.
+    /// The updated `f` is bitwise identical across implementations.
+    fn pair_update(
+        &mut self,
+        i: usize,
+        j: usize,
+        ci: f64,
+        cj: f64,
+        f: &mut [f64],
+        threads: usize,
+    ) -> (Arc<[f32]>, Arc<[f32]>) {
+        let (ki, kj) = self.pair(i, j);
+        apply_rank2(&ki, &kj, ci, cj, f, threads);
+        (ki, kj)
+    }
+
     /// Cache counters (all-hits for dense sources).
     fn stats(&self) -> CacheStats;
 }
 
 /// LRU row cache over the RBF kernel of a row-major dataset.
 pub struct KernelCache<'a> {
-    x: &'a [f32],
+    /// Packed panel layout + raw matrix + squared norms, built once per
+    /// cache (= once per solve) and shared by every row fill.
+    view: DatasetView<'a>,
     n: usize,
     d: usize,
     gamma: f32,
-    /// Precomputed squared row norms (the expanded-identity hoist).
-    norms: Vec<f32>,
-    /// Column window served by `row()`: the full `[0, n)` for single-host
-    /// engines, one rank's shard for the distributed engine.
-    cols: RowSlice,
     /// Max resident rows; `>= n` disables eviction.
     budget: usize,
     /// Threads for computing a single missing row (1 = serial).
     threads: usize,
+    /// How missing rows are evaluated (panel-fused by default).
+    eval: RowEval,
     slots: Vec<Option<Arc<[f32]>>>,
     last_used: Vec<u64>,
     resident: Vec<usize>,
@@ -98,7 +161,8 @@ impl<'a> KernelCache<'a> {
     /// `i` has length `cols.len()` and entry `t` holds `K(i, cols.lo + t)`
     /// — the per-rank kernel shard of the distributed engine. Any global
     /// row index `i < n` may be requested; values are bit-identical to the
-    /// matching window of the full row.
+    /// matching window of the full row. Only the panels covering `cols`
+    /// are packed, so per-rank packed memory is O(len·d), not O(n·d).
     pub fn new_slice(
         x: &'a [f32],
         n: usize,
@@ -111,24 +175,28 @@ impl<'a> KernelCache<'a> {
         assert_eq!(x.len(), n * d);
         assert!(cols.hi <= n, "column window [{}, {}) exceeds n={n}", cols.lo, cols.hi);
         let budget = if budget_rows == 0 { n } else { budget_rows.max(1) };
-        let norms = (0..n)
-            .map(|i| x[i * d..(i + 1) * d].iter().map(|v| v * v).sum())
-            .collect();
         KernelCache {
-            x,
+            view: DatasetView::pack_window(x, n, d, cols),
             n,
             d,
             gamma,
-            norms,
-            cols,
             budget,
             threads: threads.max(1),
+            eval: RowEval::default(),
             slots: vec![None; n],
             last_used: vec![0; n],
             resident: Vec::new(),
             tick: 0,
             stats: CacheStats::default(),
         }
+    }
+
+    /// Select the row-evaluation path (panel-fused by default; scalar is
+    /// the reference/ablation baseline). Values are bit-identical across
+    /// modes, so this knob is a pure performance choice.
+    pub fn with_eval(mut self, eval: RowEval) -> KernelCache<'a> {
+        self.eval = eval;
+        self
     }
 
     /// Rows currently materialized.
@@ -142,14 +210,19 @@ impl<'a> KernelCache<'a> {
 
     /// The column window served by `row()`.
     pub fn cols(&self) -> RowSlice {
-        self.cols
+        self.view.cols()
     }
 
     /// The precomputed squared row norms (full length n) — shared with
     /// callers that evaluate scalar kernel entries via
     /// [`super::parallel::rbf_entry`], so the O(n·d) norm pass runs once.
     pub fn norms(&self) -> &[f32] {
-        &self.norms
+        self.view.norms()
+    }
+
+    /// The active row-evaluation mode.
+    pub fn eval(&self) -> RowEval {
+        self.eval
     }
 
     fn evict_lru(&mut self) {
@@ -167,6 +240,48 @@ impl<'a> KernelCache<'a> {
         self.slots[victim] = None;
         self.stats.evictions += 1;
     }
+
+    /// Mark row `i` touched; returns the resident row on a hit.
+    fn touch(&mut self, i: usize) -> Option<Arc<[f32]>> {
+        self.tick += 1;
+        self.last_used[i] = self.tick;
+        if let Some(row) = &self.slots[i] {
+            self.stats.hits += 1;
+            return Some(Arc::clone(row));
+        }
+        self.stats.misses += 1;
+        None
+    }
+
+    /// Insert a freshly computed row, evicting down to the budget first.
+    fn insert(&mut self, i: usize, row: &Arc<[f32]>) {
+        while self.resident.len() >= self.budget {
+            self.evict_lru();
+        }
+        self.slots[i] = Some(Arc::clone(row));
+        self.resident.push(i);
+        self.stats.max_resident = self.stats.max_resident.max(self.resident.len());
+    }
+
+    /// Evaluate one missing row through the configured path.
+    fn fill_row(&self, i: usize) -> Arc<[f32]> {
+        let mut buf = vec![0.0f32; self.cols().len()];
+        if self.eval.uses_panels() {
+            self.view.row_into(i, self.gamma, &mut buf, self.threads);
+        } else {
+            parallel::rbf_row_slice_into(
+                &mut buf,
+                self.view.x(),
+                self.view.norms(),
+                i,
+                self.d,
+                self.gamma,
+                self.cols().lo,
+                self.threads,
+            );
+        }
+        buf.into()
+    }
 }
 
 impl KernelSource for KernelCache<'_> {
@@ -175,32 +290,102 @@ impl KernelSource for KernelCache<'_> {
     }
 
     fn row(&mut self, i: usize) -> Arc<[f32]> {
-        self.tick += 1;
-        self.last_used[i] = self.tick;
-        if let Some(row) = &self.slots[i] {
-            self.stats.hits += 1;
-            return Arc::clone(row);
+        if let Some(row) = self.touch(i) {
+            return row;
         }
-        self.stats.misses += 1;
-        while self.resident.len() >= self.budget {
-            self.evict_lru();
-        }
-        let mut buf = vec![0.0f32; self.cols.len()];
-        parallel::rbf_row_slice_into(
-            &mut buf,
-            self.x,
-            &self.norms,
-            i,
-            self.d,
-            self.gamma,
-            self.cols.lo,
-            self.threads,
-        );
-        let row: Arc<[f32]> = buf.into();
-        self.slots[i] = Some(Arc::clone(&row));
-        self.resident.push(i);
-        self.stats.max_resident = self.stats.max_resident.max(self.resident.len());
+        let row = self.fill_row(i);
+        self.insert(i, &row);
         row
+    }
+
+    /// One O(d) scalar entry from the shared norms — the same expression
+    /// (and therefore the same bits) as the panel and row paths, valid for
+    /// any `(i, j)` in the full index space even on sliced caches.
+    fn entry(&mut self, i: usize, j: usize) -> f32 {
+        parallel::rbf_entry(self.view.x(), self.view.norms(), i, j, self.d, self.gamma)
+    }
+
+    fn pair(&mut self, i: usize, j: usize) -> (Arc<[f32]>, Arc<[f32]>) {
+        let hit_i = self.touch(i);
+        let hit_j = if j == i { hit_i.clone() } else { self.touch(j) };
+        match (hit_i, hit_j) {
+            (Some(ri), Some(rj)) => (ri, rj),
+            (Some(ri), None) => {
+                let rj = self.fill_row(j);
+                self.insert(j, &rj);
+                (ri, rj)
+            }
+            (None, Some(rj)) => {
+                let ri = self.fill_row(i);
+                self.insert(i, &ri);
+                (ri, rj)
+            }
+            (None, None) => {
+                if !self.eval.uses_panels() || j == i {
+                    // Scalar mode (or a degenerate pair): two plain fills.
+                    let ri = self.fill_row(i);
+                    self.insert(i, &ri);
+                    let rj = if j == i { Arc::clone(&ri) } else { self.fill_row(j) };
+                    if j != i {
+                        self.insert(j, &rj);
+                    }
+                    return (ri, rj);
+                }
+                // The panel win: both rows in one sweep over the packed
+                // data instead of two independent cache fills.
+                let w = self.cols().len();
+                let (mut bi, mut bj) = (vec![0.0f32; w], vec![0.0f32; w]);
+                self.view.pair_into(i, j, self.gamma, &mut bi, &mut bj, self.threads);
+                let (ri, rj): (Arc<[f32]>, Arc<[f32]>) = (bi.into(), bj.into());
+                self.insert(i, &ri);
+                self.insert(j, &rj);
+                (ri, rj)
+            }
+        }
+    }
+
+    fn pair_update(
+        &mut self,
+        i: usize,
+        j: usize,
+        ci: f64,
+        cj: f64,
+        f: &mut [f64],
+        threads: usize,
+    ) -> (Arc<[f32]>, Arc<[f32]>) {
+        debug_assert_eq!(f.len(), self.cols().len());
+        if self.eval == RowEval::PanelFused && i != j {
+            let hit_i = self.touch(i);
+            let hit_j = self.touch(j);
+            if hit_i.is_none() && hit_j.is_none() {
+                // Fully fused: evaluate both rows AND apply the rank-2
+                // update in one sweep over the packed panels.
+                let w = self.cols().len();
+                let (mut bi, mut bj) = (vec![0.0f32; w], vec![0.0f32; w]);
+                self.view.pair_update_into(i, j, self.gamma, &mut bi, &mut bj, ci, cj, f, threads);
+                let (ri, rj): (Arc<[f32]>, Arc<[f32]>) = (bi.into(), bj.into());
+                self.insert(i, &ri);
+                self.insert(j, &rj);
+                return (ri, rj);
+            }
+            // Partial hit: finish the fetch (counting the touches already
+            // made above), then the two-pass update.
+            let ri = hit_i.unwrap_or_else(|| {
+                let r = self.fill_row(i);
+                self.insert(i, &r);
+                r
+            });
+            let rj = hit_j.unwrap_or_else(|| {
+                let r = self.fill_row(j);
+                self.insert(j, &r);
+                r
+            });
+            apply_rank2(&ri, &rj, ci, cj, f, threads);
+            return (ri, rj);
+        }
+        let (ri, rj) = self.pair(i, j);
+        apply_rank2(&ri, &rj, ci, cj, f, threads);
+        (ri, rj)
     }
 
     fn stats(&self) -> CacheStats {
@@ -237,6 +422,10 @@ impl KernelSource for DenseSource {
         Arc::clone(&self.rows[i])
     }
 
+    fn entry(&mut self, i: usize, j: usize) -> f32 {
+        self.rows[i][j]
+    }
+
     fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.reads,
@@ -263,11 +452,17 @@ mod tests {
         let (n, d, gamma) = (50, 6, 0.8);
         let x = random_x(n, d, 1);
         let dense = kernel::rbf_gram(&x, n, d, gamma);
-        let mut cache = KernelCache::new(&x, n, d, gamma, 0, 1);
-        for i in 0..n {
-            let row = cache.row(i);
-            for j in 0..n {
-                assert_eq!(row[j].to_bits(), dense[i * n + j].to_bits(), "({i},{j})");
+        for eval in [RowEval::Scalar, RowEval::Panel, RowEval::PanelFused] {
+            let mut cache = KernelCache::new(&x, n, d, gamma, 0, 1).with_eval(eval);
+            for i in 0..n {
+                let row = cache.row(i);
+                for j in 0..n {
+                    assert_eq!(
+                        row[j].to_bits(),
+                        dense[i * n + j].to_bits(),
+                        "({i},{j}) {eval:?}"
+                    );
+                }
             }
         }
     }
@@ -283,6 +478,64 @@ mod tests {
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.evictions), (1, 2, 0));
         assert_eq!(cache.resident_rows(), 2);
+    }
+
+    #[test]
+    fn pair_counts_both_rows_and_fills_in_one_sweep() {
+        let (n, d, gamma) = (24, 4, 0.7);
+        let x = random_x(n, d, 11);
+        let dense = kernel::rbf_gram(&x, n, d, gamma);
+        let mut cache = KernelCache::new(&x, n, d, gamma, 0, 1);
+        let (ri, rj) = cache.pair(2, 9);
+        for t in 0..n {
+            assert_eq!(ri[t].to_bits(), dense[2 * n + t].to_bits());
+            assert_eq!(rj[t].to_bits(), dense[9 * n + t].to_bits());
+        }
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (0, 2));
+        // Second fetch of the same pair: two hits, no new rows.
+        let _ = cache.pair(2, 9);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (2, 2));
+        assert_eq!(cache.resident_rows(), 2);
+        // Partial hit: one of each.
+        let _ = cache.pair(2, 15);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (3, 3));
+    }
+
+    #[test]
+    fn pair_update_fused_matches_two_pass_and_respects_budget() {
+        let (n, d, gamma) = (30, 5, 0.9);
+        let x = random_x(n, d, 12);
+        let (ci, cj) = (0.625f64, -0.125f64);
+        let mut f_fused = vec![0.25f64; n];
+        let mut f_two = vec![0.25f64; n];
+
+        let mut fused = KernelCache::new(&x, n, d, gamma, 1, 1); // budget 1 < pair
+        let (ri, rj) = fused.pair_update(4, 21, ci, cj, &mut f_fused, 1);
+        assert!(fused.stats().max_resident <= 1, "pair fill may not exceed the budget");
+
+        let mut scalar = KernelCache::new(&x, n, d, gamma, 0, 1).with_eval(RowEval::Scalar);
+        let (si, sj) = scalar.pair_update(4, 21, ci, cj, &mut f_two, 1);
+        for t in 0..n {
+            assert_eq!(ri[t].to_bits(), si[t].to_bits());
+            assert_eq!(rj[t].to_bits(), sj[t].to_bits());
+            assert_eq!(f_fused[t].to_bits(), f_two[t].to_bits(), "f[{t}]");
+        }
+    }
+
+    #[test]
+    fn entry_matches_row_reads_without_touching_lru() {
+        let (n, d, gamma) = (18, 3, 1.2);
+        let x = random_x(n, d, 13);
+        let mut cache = KernelCache::new(&x, n, d, gamma, 0, 1);
+        let e = cache.entry(3, 11);
+        let diag = cache.diag(5);
+        assert_eq!(cache.stats().hits + cache.stats().misses, 0, "entry is LRU-invisible");
+        let row = cache.row(3);
+        assert_eq!(e.to_bits(), row[11].to_bits());
+        assert_eq!(diag, 1.0);
     }
 
     #[test]
@@ -346,18 +599,20 @@ mod tests {
         let x = random_x(n, d, 9);
         let dense = kernel::rbf_gram(&x, n, d, gamma);
         let cols = crate::svm::solver::slice::RowSlice::new(7, 19);
-        let mut cache = KernelCache::new_slice(&x, n, d, gamma, cols, 4, 1);
-        assert_eq!(cache.cols(), cols);
-        // Any global row, including ones outside the window, serves the
-        // window's slice of that row.
-        for i in [0, 8, 18, n - 1] {
-            let row = cache.row(i);
-            assert_eq!(row.len(), cols.len());
-            for (t, v) in row.iter().enumerate() {
-                assert_eq!(v.to_bits(), dense[i * n + cols.lo + t].to_bits(), "({i},{t})");
+        for eval in [RowEval::Scalar, RowEval::PanelFused] {
+            let mut cache = KernelCache::new_slice(&x, n, d, gamma, cols, 4, 1).with_eval(eval);
+            assert_eq!(cache.cols(), cols);
+            // Any global row, including ones outside the window, serves
+            // the window's slice of that row.
+            for i in [0, 8, 18, n - 1] {
+                let row = cache.row(i);
+                assert_eq!(row.len(), cols.len());
+                for (t, v) in row.iter().enumerate() {
+                    assert_eq!(v.to_bits(), dense[i * n + cols.lo + t].to_bits(), "({i},{t})");
+                }
             }
+            assert!(cache.stats().max_resident <= 4);
         }
-        assert!(cache.stats().max_resident <= 4);
         // Empty window: rows are empty but the cache still functions.
         let empty = crate::svm::solver::slice::RowSlice::new(5, 5);
         let mut ec = KernelCache::new_slice(&x, n, d, gamma, empty, 0, 1);
@@ -373,6 +628,7 @@ mod tests {
         assert_eq!(src.n(), n);
         let r = src.row(4);
         assert_eq!(&r[..], &k[4 * n..5 * n]);
+        assert_eq!(src.entry(4, 7).to_bits(), k[4 * n + 7].to_bits());
         assert_eq!(src.stats().misses, 0);
     }
 }

@@ -16,12 +16,17 @@
 //!     working pair — joined in rank order, so tie-breaking matches the
 //!     serial ascending scan exactly;
 //!  3. every rank replays the same analytic two-variable step on its
-//!     replicated alpha (f64 thresholds travel as exact bit patterns, and
-//!     the pair-coupling kernel entry K(i,j) is recomputed locally from
-//!     the replicated dataset — bit-identical on every rank);
-//!  4. each rank updates its f-slice from its own LRU-cached **column
-//!     windows** of rows i and j ([`KernelCache::new_slice`]) — the only
-//!     O(n) work, now O(n/R) per rank.
+//!     replicated alpha (f64 thresholds travel as exact bit patterns).
+//!     Ranks whose column window covers i or j fetch their windows of
+//!     both rows first as **one fused panel fill** ([`KernelSource::pair`]
+//!     over the rank's packed shard) and read the pair-coupling entry
+//!     K(i,j) straight out of that panel; the remaining ranks pay one
+//!     O(d) scalar entry — the same bits either way;
+//!  4. each rank updates its f-slice ([`KernelCache::new_slice`]) — the
+//!     only O(n) work, now O(n/R) per rank — from the already-fetched
+//!     windows on covering ranks, or as a single fused
+//!     fetch-and-update panel sweep ([`KernelSource::pair_update`])
+//!     everywhere else.
 //!
 //! Per-rank state is the rank's f-slice, its kernel-row window cache and
 //! its own shrink set; only O(1) candidates cross the wire per iteration.
@@ -189,7 +194,8 @@ fn solve_rank(
     let tol = p.tol as f64;
     let eps = 1e-10f64;
     let threads = parallel::resolve_threads(cfg.threads);
-    let mut cache = KernelCache::new_slice(x, n, d, p.gamma, my, cfg.cache_rows, threads);
+    let mut cache = KernelCache::new_slice(x, n, d, p.gamma, my, cfg.cache_rows, threads)
+        .with_eval(cfg.row_eval);
 
     let yd: Vec<f64> = y.iter().map(|&v| v as f64).collect();
     // Replicated dual state, sharded optimality state.
@@ -277,12 +283,28 @@ fn solve_rank(
             }
         }
 
-        // (3) replicated analytic step — expression-for-expression the
-        // oracle's update. The RBF diagonal is exactly 1.0, and K(i,j) is
-        // recomputed locally from the replicated data (bit-identical to a
-        // cached row read), so no rank needs the other shards' rows.
+        // (3) the pair-coupling entry K(i,j), then the replicated
+        // analytic step — expression-for-expression the oracle's update.
+        // Ranks whose column window covers i or j fetch their windows of
+        // the pair rows FIRST (one fused panel sweep over the rank's
+        // packed shard) and *reuse* the fetched panel for K(i,j): the
+        // i-row read at column j, or symmetrically the j-row read at
+        // column i — K is symmetric bitwise because f32 `+`/`*` are
+        // commutative. Ranks covering neither index pay one O(d) scalar
+        // entry and defer their fetch to step (4), where it fuses with
+        // the f-update into a single sweep. Every path yields the same
+        // bits, so all ranks still take the same step in lockstep.
+        let covers = my.contains(gi) || my.contains(gj);
+        let mut pair = None;
+        let kij = if covers {
+            let (ri, rj) = cache.pair(gi, gj);
+            let k = if my.contains(gj) { ri[my.local(gj)] } else { rj[my.local(gi)] };
+            pair = Some((ri, rj));
+            k
+        } else {
+            parallel::rbf_entry(x, cache.norms(), gi, gj, d, p.gamma)
+        };
         let (yi, yj) = (yd[gi], yd[gj]);
-        let kij = parallel::rbf_entry(x, cache.norms(), gi, gj, d, p.gamma);
         let eta = ((1.0f32 + 1.0f32 - 2.0 * kij) as f64).max(1e-12);
         let s = yi * yj;
         let (ai, aj) = (alpha[gi], alpha[gj]);
@@ -297,17 +319,29 @@ fn solve_rank(
         alpha[gj] = aj_new;
         alpha[gi] += d_ai;
 
-        // (4) rank-2 update of my f-slice from my column windows of the
-        // selected rows (the per-iteration hot loop, O(n/R) per rank).
-        let ri = cache.row(gi);
-        let rj = cache.row(gj);
+        // (4) rank-2 update of my f-slice (the per-iteration hot loop,
+        // O(n/R) per rank): from the already-fetched windows on covering
+        // ranks, or as one fused fetch-and-update sweep elsewhere.
         let ci = d_ai * yi;
         let cj = d_aj * yj;
         if active.is_full() {
-            for (lt, ft) in f.iter_mut().enumerate() {
-                *ft += ci * ri[lt] as f64 + cj * rj[lt] as f64;
+            match pair {
+                Some((ri, rj)) => {
+                    for (lt, ft) in f.iter_mut().enumerate() {
+                        *ft += ci * ri[lt] as f64 + cj * rj[lt] as f64;
+                    }
+                }
+                // Off-window rank: the pair was never fetched, so the
+                // fetch and the update collapse into one panel sweep.
+                None => {
+                    let _ = cache.pair_update(gi, gj, ci, cj, &mut f, threads);
+                }
             }
         } else {
+            let (ri, rj) = match pair {
+                Some(p) => p,
+                None => cache.pair(gi, gj),
+            };
             for &lt in &active.idx {
                 f[lt] += ci * ri[lt] as f64 + cj * rj[lt] as f64;
             }

@@ -47,6 +47,41 @@
 //! pair), and wins when a single QP outgrows one node or when OvO pairs
 //! are too few to occupy the cluster.
 //!
+//! # Scalar → panel: the data-layout inversion
+//!
+//! Every engine above still *computed* each kernel row the same way the
+//! original dense build did: one scalar dot-product reduction per entry,
+//! striding row-major over the training matrix, then a second pass over
+//! the freshly fetched rows for the SMO rank-2 f-update. That micro-kernel
+//! dominates SMO wall time (Tyree et al., arXiv:1404.1066), and the fix is
+//! a *layout*, not an algorithm: [`panel::DatasetView`] packs the matrix
+//! once per solve into aligned, zero-padded, feature-major panels of
+//! [`panel::LANES`] training rows, so the inner loop carries `LANES`
+//! independent multiply-add chains over contiguous memory (the shape
+//! auto-vectorizers turn into SIMD) instead of one dependent chain. On top
+//! of that layout the engines got two fusions: the working pair (i, j) is
+//! fetched as **one** panel fill instead of two independent cache fills
+//! ([`cache::KernelSource::pair`]), and the f-update folds into the very
+//! sweep that materializes a freshly computed pair
+//! ([`cache::KernelSource::pair_update`], [`panel::RowEval::PanelFused`]).
+//!
+//! When the packed layout wins: any solve whose row fills dominate —
+//! cache-miss-heavy budgets, large d (pavia's d=102 gives ~d/LANES-wide
+//! SIMD headroom per lane), and the dense Gram build (four rows per
+//! sweep). Memory cost: one extra packed copy of (a rank's window of) the
+//! matrix, padded up to a multiple of `LANES` rows — `O(len·d)` per rank,
+//! ~`LANES·d` floats of padding worst-case. Why bit-identity holds: lanes
+//! vectorize across output *columns* while each lane accumulates its dot
+//! product in exactly the scalar order, padding lives only in the lane
+//! dimension (whole phantom rows, never partial sums), and rustc neither
+//! fuses `mul+add` nor reassociates f32 reductions — so every kernel value
+//! is the same f32 expression evaluated in the same order as
+//! [`parallel::rbf_entry`], and the unshrunk trajectories (single-rank
+//! *and* R-rank) replay the oracle bit-for-bit with panels on. The scalar
+//! path survives behind [`panel::RowEval::Scalar`] as the reference and
+//! the ablation baseline (`scalar` vs `panel` vs `panel+fused` rows in
+//! `BENCH_solver.json`).
+//!
 //! # Distributed → hierarchical: split, don't spawn
 //!
 //! Through PR 2, [`DistributedSmo::solve`] *spawned* a private, unrelated
@@ -78,6 +113,7 @@
 
 pub mod cache;
 pub mod distributed;
+pub mod panel;
 pub mod parallel;
 pub mod shrink;
 pub mod slice;
@@ -85,6 +121,7 @@ pub mod working_set;
 
 pub use cache::{CacheStats, DenseSource, KernelCache, KernelSource};
 pub use distributed::DistributedSmo;
+pub use panel::{DatasetView, RowEval};
 pub use shrink::{ActiveSet, ShrinkStats};
 pub use slice::RowSlice;
 pub use working_set::{EngineConfig, Selection};
@@ -210,7 +247,8 @@ impl DualSolver for WorkingSetSmo {
             p.gamma,
             self.cfg.cache_rows,
             row_threads,
-        );
+        )
+        .with_eval(self.cfg.row_eval);
         let (solution, shrink) = working_set::solve(&mut src, &prob.y, p, &self.cfg);
         let solve_secs = t0.elapsed().as_secs_f64();
         SolveOutcome {

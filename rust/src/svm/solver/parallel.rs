@@ -169,44 +169,16 @@ pub fn rbf_row_slice_into(
     });
 }
 
-/// Full dense RBF Gram matrix, rows distributed over scoped threads.
+/// Full dense RBF Gram matrix through the packed panel engine
+/// ([`super::panel::DatasetView::gram`]): the matrix is packed once, then
+/// each thread's row band is evaluated four rows per blocked sweep.
 /// Values are bit-identical to [`crate::svm::kernel::rbf_gram`] (same
-/// per-element expression and accumulation order), so dense consumers can
-/// switch to this without perturbing any golden numerics.
+/// per-element expression and accumulation order — see the panel module's
+/// bit-identity argument), so dense consumers switch layouts without
+/// perturbing any golden numerics.
 pub fn rbf_gram_parallel(x: &[f32], n: usize, d: usize, gamma: f32, threads: usize) -> Vec<f32> {
     assert_eq!(x.len(), n * d);
-    let norms: Vec<f32> = (0..n)
-        .map(|i| x[i * d..(i + 1) * d].iter().map(|v| v * v).sum())
-        .collect();
-    let mut k = vec![0.0f32; n * n];
-    let threads = threads.min(n);
-    if threads <= 1 || n * d < 2 * MIN_CHUNK {
-        for (i, row) in k.chunks_mut(n).enumerate() {
-            rbf_row_into(row, x, &norms, i, d, gamma, 1);
-        }
-        return k;
-    }
-    // Row-block decomposition: each worker fills a contiguous band of rows.
-    let rows_per = n.div_ceil(threads);
-    std::thread::scope(|s| {
-        let x = &x[..];
-        let norms = &norms[..];
-        let mut rest = k.as_mut_slice();
-        let mut row0 = 0usize;
-        while !rest.is_empty() {
-            let take_rows = rows_per.min(n - row0);
-            let (band, tail) = rest.split_at_mut(take_rows * n);
-            let start_row = row0;
-            s.spawn(move || {
-                for (r, row) in band.chunks_mut(n).enumerate() {
-                    rbf_row_into(row, x, norms, start_row + r, d, gamma, 1);
-                }
-            });
-            rest = tail;
-            row0 += take_rows;
-        }
-    });
-    k
+    super::panel::DatasetView::pack(x, n, d).gram(gamma, threads.max(1).min(n.max(1)))
 }
 
 #[cfg(test)]

@@ -26,6 +26,7 @@
 //! trajectories reproduce this engine's exactly.
 
 use super::cache::KernelSource;
+use super::panel::RowEval;
 use super::parallel;
 use super::shrink::{ActiveSet, ShrinkStats};
 use crate::svm::smo::SmoSolution;
@@ -60,6 +61,10 @@ pub struct EngineConfig {
     pub threads: usize,
     /// Working-set selection rule (WSS1 = the bit-exact oracle rule).
     pub selection: Selection,
+    /// Kernel-row evaluation path (panel-fused by default; the scalar
+    /// loop is the reference/ablation baseline). Values are bit-identical
+    /// across modes, so this is a pure performance knob.
+    pub row_eval: RowEval,
 }
 
 impl Default for EngineConfig {
@@ -70,6 +75,7 @@ impl Default for EngineConfig {
             shrink_every: 1000,
             threads: 1,
             selection: Selection::Wss1,
+            row_eval: RowEval::default(),
         }
     }
 }
@@ -93,6 +99,11 @@ impl EngineConfig {
     /// Cached + second-order selection.
     pub fn wss2(cache_rows: usize) -> Self {
         EngineConfig { cache_rows, selection: Selection::Wss2, ..Default::default() }
+    }
+
+    /// Cached with a specific row-evaluation path (ablation lineup).
+    pub fn cached_eval(cache_rows: usize, row_eval: RowEval) -> Self {
+        EngineConfig { cache_rows, row_eval, ..Default::default() }
     }
 }
 
@@ -285,8 +296,8 @@ pub fn solve(
         // chooses a different j. (b_low itself always stays the
         // max-violation threshold — it drives stopping and the bias.)
         let mut step_fj = b_low;
-        let ki = src.row(i);
         if cfg.selection == Selection::Wss2 {
+            let ki = src.row(i);
             if let Some((j2, fj2)) =
                 wss2_select(&active.idx, &f, &alpha, &yd, &ki, c, eps, b_up, threads)
             {
@@ -297,9 +308,14 @@ pub fn solve(
 
         // Analytic two-variable step on (i=high, j=low) — expression-for-
         // expression the oracle's update (f32 kernel reads, f64 state).
+        // The coupling entries come from `entry`/`diag` — bit-identical
+        // to the `ki[i] + kj[j] - 2·ki[j]` row reads they replace — so
+        // neither row has to be materialized before the step; both are
+        // then fetched as ONE pair panel fill, with the rank-2 update
+        // fused into the very sweep that computes them.
         let (yi, yj) = (yd[i], yd[j]);
-        let kj = src.row(j);
-        let eta = ((ki[i] + kj[j] - 2.0 * ki[j]) as f64).max(1e-12);
+        let kij = src.entry(i, j);
+        let eta = ((src.diag(i) + src.diag(j) - 2.0 * kij) as f64).max(1e-12);
         let s = yi * yj;
         let (ai, aj) = (alpha[i], alpha[j]);
         let (lo, hi) = if s > 0.0 {
@@ -313,20 +329,18 @@ pub fn solve(
         alpha[j] = aj_new;
         alpha[i] += d_ai;
 
-        // Rank-2 f update over the active set (the per-iteration hot loop).
+        // Rank-2 f update over the active set (the per-iteration hot
+        // loop), fused with the pair fetch on the full set.
         let ci = d_ai * yi;
         let cj = d_aj * yj;
         if active.is_full() {
-            // Contiguous: safe to split f into disjoint mutable chunks.
-            let (ki, kj) = (&ki[..], &kj[..]);
-            parallel::par_apply_mut(&mut f, threads, parallel::MIN_CHUNK, |start, piece| {
-                for (off, ft) in piece.iter_mut().enumerate() {
-                    let t = start + off;
-                    *ft += ci * ki[t] as f64 + cj * kj[t] as f64;
-                }
-            });
+            // Contiguous: one panel sweep materializes both rows and
+            // applies the update (bitwise the two-pass result).
+            let _ = src.pair_update(i, j, ci, cj, &mut f, threads);
         } else {
-            // Shrunk: the scattered index list is already small.
+            // Shrunk: the scattered index list is already small; fetch
+            // the pair (still one sweep) and update the scattered slots.
+            let (ki, kj) = src.pair(i, j);
             for &t in &active.idx {
                 f[t] += ci * ki[t] as f64 + cj * kj[t] as f64;
             }

@@ -1,0 +1,246 @@
+//! Property tests for the fused panel kernel engine: blocked panel
+//! evaluation must be **bitwise** identical to the scalar reference
+//! (`rbf_row_into` / `rbf_gram`) for random shapes, column windows, block
+//! sizes and gamma (including gamma = 0, d not a multiple of the lane
+//! width, and n smaller than one panel); the fused evaluate-and-update
+//! pass must match the two-pass f-update exactly; and the engines — the
+//! single-rank `WorkingSetSmo` and the R-rank `DistributedSmo` — must
+//! replay the scalar trajectories bit-for-bit with panels enabled.
+//! Replay failures with PARASVM_PROP_SEED=<seed>.
+
+use parasvm::cluster::CostModel;
+use parasvm::data::BinaryProblem;
+use parasvm::svm::solver::panel::LANES;
+use parasvm::svm::solver::{
+    parallel, DatasetView, DistributedSmo, DualSolver, EngineConfig, KernelCache, KernelSource,
+    RowEval, RowSlice, WorkingSetSmo,
+};
+use parasvm::svm::{kernel, SvmParams};
+use parasvm::util::prop::{check, usize_in, Config};
+use parasvm::util::rng::Rng;
+
+fn cfg(cases: usize) -> Config {
+    Config { cases, ..Default::default() }
+}
+
+fn random_x(rng: &mut Rng, n: usize, d: usize) -> Vec<f32> {
+    (0..n * d).map(|_| rng.normal()).collect()
+}
+
+/// Random gamma, with a fat thumb on the gamma = 0 edge case.
+fn random_gamma(rng: &mut Rng) -> f32 {
+    if rng.below(4) == 0 {
+        0.0
+    } else {
+        0.05 + 2.0 * rng.f32()
+    }
+}
+
+fn assert_rows_bitwise(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: lengths");
+    for (t, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: [{t}] {x} vs {y}");
+    }
+}
+
+/// Two overlapping Gaussian blobs (long-ish trajectories).
+fn blobs(rng: &mut Rng, n_per: usize, d: usize, sep: f32) -> BinaryProblem {
+    let mut x = Vec::with_capacity(2 * n_per * d);
+    let mut y = Vec::with_capacity(2 * n_per);
+    for s in [1.0f32, -1.0] {
+        for _ in 0..n_per {
+            for t in 0..d {
+                let center = if t == 0 { s * sep } else { 0.0 };
+                x.push(center + rng.normal());
+            }
+            y.push(s);
+        }
+    }
+    BinaryProblem { x, y, d, pos_class: 0, neg_class: 1 }
+}
+
+// ---------------------------------------------------------------------------
+// micro-kernel bit-identity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_panel_rows_match_scalar_rows_bitwise() {
+    check("panel row == scalar row (bits)", cfg(64), |rng| {
+        // n deliberately spans < LANES up to several panels; d is
+        // arbitrary (including tiny) — lane padding is in n, never d.
+        let n = usize_in(rng, 1, 4 * LANES + 3);
+        let d = usize_in(rng, 1, 11);
+        let gamma = random_gamma(rng);
+        let x = random_x(rng, n, d);
+        let view = DatasetView::pack(&x, n, d);
+        let mut scalar = vec![0.0f32; n];
+        let mut panel = vec![0.0f32; n];
+        for _ in 0..3 {
+            let q = rng.below(n);
+            parallel::rbf_row_into(&mut scalar, &x, view.norms(), q, d, gamma, 1);
+            view.row_into(q, gamma, &mut panel, 1);
+            assert_rows_bitwise(&panel, &scalar, &format!("q={q} gamma={gamma}"));
+        }
+    });
+}
+
+#[test]
+fn prop_windowed_panels_match_full_row_windows_bitwise() {
+    check("windowed panel == row slice (bits)", cfg(48), |rng| {
+        let n = usize_in(rng, 2, 40);
+        let d = usize_in(rng, 1, 8);
+        let gamma = random_gamma(rng);
+        let x = random_x(rng, n, d);
+        let lo = rng.below(n);
+        let hi = lo + rng.below(n - lo + 1);
+        let cols = RowSlice::new(lo, hi);
+        let view = DatasetView::pack_window(&x, n, d, cols);
+        let q = rng.below(n);
+        let mut panel = vec![0.0f32; cols.len()];
+        view.row_into(q, gamma, &mut panel, 1);
+        let mut scalar = vec![0.0f32; cols.len()];
+        parallel::rbf_row_slice_into(&mut scalar, &x, view.norms(), q, d, gamma, lo, 1);
+        assert_rows_bitwise(&panel, &scalar, &format!("window [{lo},{hi}) q={q}"));
+    });
+}
+
+#[test]
+fn prop_panel_gram_matches_dense_oracle_bitwise() {
+    check("panel gram == rbf_gram (bits)", cfg(32), |rng| {
+        let n = usize_in(rng, 1, 3 * LANES + 5); // exercises block tails
+        let d = usize_in(rng, 1, 9);
+        let gamma = random_gamma(rng);
+        let x = random_x(rng, n, d);
+        let dense = kernel::rbf_gram(&x, n, d, gamma);
+        let threads = usize_in(rng, 1, 4);
+        let panel = parallel::rbf_gram_parallel(&x, n, d, gamma, threads);
+        assert_rows_bitwise(&panel, &dense, &format!("n={n} d={d} threads={threads}"));
+    });
+}
+
+#[test]
+fn prop_pair_fill_and_fused_update_match_two_pass_bitwise() {
+    check("fused pair update == two-pass (bits)", cfg(48), |rng| {
+        let n = usize_in(rng, 2, 5 * LANES);
+        let d = usize_in(rng, 1, 10);
+        let gamma = random_gamma(rng);
+        let x = random_x(rng, n, d);
+        let view = DatasetView::pack(&x, n, d);
+        let i = rng.below(n);
+        let j = (i + 1 + rng.below(n - 1)) % n;
+        let (ci, cj) = (rng.normal() as f64, rng.normal() as f64);
+        let f0: Vec<f64> = (0..n).map(|_| rng.normal() as f64).collect();
+
+        // Reference: two scalar row fills + a separate update pass.
+        let (mut si, mut sj) = (vec![0.0f32; n], vec![0.0f32; n]);
+        parallel::rbf_row_into(&mut si, &x, view.norms(), i, d, gamma, 1);
+        parallel::rbf_row_into(&mut sj, &x, view.norms(), j, d, gamma, 1);
+        let mut f_ref = f0.clone();
+        for t in 0..n {
+            f_ref[t] += ci * si[t] as f64 + cj * sj[t] as f64;
+        }
+
+        // Fused: one sweep materializes the pair AND updates f.
+        let (mut pi, mut pj) = (vec![0.0f32; n], vec![0.0f32; n]);
+        let mut f_fused = f0;
+        let threads = usize_in(rng, 1, 3);
+        view.pair_update_into(i, j, gamma, &mut pi, &mut pj, ci, cj, &mut f_fused, threads);
+        assert_rows_bitwise(&pi, &si, "pair row i");
+        assert_rows_bitwise(&pj, &sj, "pair row j");
+        for t in 0..n {
+            assert_eq!(f_fused[t].to_bits(), f_ref[t].to_bits(), "f[{t}]");
+        }
+    });
+}
+
+#[test]
+fn prop_cache_serves_identical_rows_across_eval_modes() {
+    check("cache rows invariant under RowEval", cfg(32), |rng| {
+        let n = usize_in(rng, 2, 30);
+        let d = usize_in(rng, 1, 7);
+        let gamma = random_gamma(rng);
+        let x = random_x(rng, n, d);
+        let budget = usize_in(rng, 1, n);
+        let mut scalar = KernelCache::new(&x, n, d, gamma, budget, 1).with_eval(RowEval::Scalar);
+        let mut panel = KernelCache::new(&x, n, d, gamma, budget, 1).with_eval(RowEval::Panel);
+        let mut fused = KernelCache::new(&x, n, d, gamma, budget, 1);
+        for _ in 0..2 * n {
+            let i = rng.below(n);
+            let (a, b, c) = (scalar.row(i), panel.row(i), fused.row(i));
+            assert_rows_bitwise(&b, &a, "panel vs scalar");
+            assert_rows_bitwise(&c, &a, "fused vs scalar");
+        }
+        assert!(panel.stats().max_resident <= budget);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// engine-level trajectory identity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_working_set_trajectory_is_row_eval_invariant() {
+    check("WorkingSetSmo bitwise across RowEval", cfg(12), |rng| {
+        let prob = blobs(rng, usize_in(rng, 10, 25), usize_in(rng, 2, 6), 1.0);
+        let p = SvmParams::default();
+        let budget = usize_in(rng, 1, prob.n());
+        let scalar_cfg = EngineConfig::cached_eval(budget, RowEval::Scalar);
+        let base = WorkingSetSmo::new(scalar_cfg).solve(&prob, &p);
+        for eval in [RowEval::Panel, RowEval::PanelFused] {
+            let out = WorkingSetSmo::new(EngineConfig::cached_eval(budget, eval)).solve(&prob, &p);
+            assert_eq!(out.solution.iters, base.solution.iters, "{eval:?}");
+            assert_eq!(out.solution.converged, base.solution.converged, "{eval:?}");
+            assert_rows_bitwise(&out.solution.alpha, &base.solution.alpha, "alpha");
+            assert_eq!(out.solution.bias.to_bits(), base.solution.bias.to_bits());
+        }
+    });
+}
+
+#[test]
+fn prop_distributed_trajectory_is_row_eval_invariant() {
+    check("DistributedSmo bitwise across RowEval", cfg(8), |rng| {
+        let prob = blobs(rng, usize_in(rng, 8, 16), usize_in(rng, 2, 5), 1.0);
+        let p = SvmParams::default();
+        let ranks = usize_in(rng, 2, 4);
+        let budget = usize_in(rng, 2, prob.n());
+        let scalar_cfg = EngineConfig::cached_eval(budget, RowEval::Scalar);
+        let base = DistributedSmo::new(ranks, scalar_cfg, CostModel::free()).solve(&prob, &p);
+        let fused_cfg = EngineConfig::cached(budget);
+        let fused = DistributedSmo::new(ranks, fused_cfg, CostModel::free()).solve(&prob, &p);
+        assert_eq!(fused.solution.iters, base.solution.iters, "{ranks} ranks");
+        assert_rows_bitwise(&fused.solution.alpha, &base.solution.alpha, "alpha");
+        assert_eq!(fused.solution.bias.to_bits(), base.solution.bias.to_bits());
+    });
+}
+
+#[test]
+fn panel_engine_replays_the_dense_oracle_on_unshrunk_runs() {
+    // The acceptance-criterion pin: unshrunk WorkingSetSmo with panels on
+    // (the default) is bit-identical to the dense full-Gram oracle.
+    let mut rng = Rng::new(0xBEEF);
+    let prob = blobs(&mut rng, 30, 5, 1.2);
+    let p = SvmParams::default();
+    let n = prob.n();
+    let k = kernel::rbf_gram(&prob.x, n, prob.d, p.gamma);
+    let oracle = parasvm::svm::smo::solve_gram(&k, &prob.y, &p);
+    let out = WorkingSetSmo::new(EngineConfig::cached(0)).solve(&prob, &p);
+    assert_eq!(out.solution.iters, oracle.iters);
+    assert_rows_bitwise(&out.solution.alpha, &oracle.alpha, "alpha vs oracle");
+    assert_eq!(out.solution.bias.to_bits(), oracle.bias.to_bits());
+}
+
+#[test]
+fn serve_path_cross_kernel_is_bitwise_stable_across_batch_sizes() {
+    // rbf_cross routes batches through the panel engine and single
+    // queries through the scalar loop — the same query row must get the
+    // same bits either way.
+    let mut rng = Rng::new(7);
+    let (n, d, gamma) = (21usize, 6usize, 0.8f32);
+    let x = random_x(&mut rng, n, d);
+    let q = random_x(&mut rng, 5, d);
+    let batched = kernel::rbf_cross(&q, 5, &x, n, d, gamma);
+    for i in 0..5 {
+        let single = kernel::rbf_cross(&q[i * d..(i + 1) * d], 1, &x, n, d, gamma);
+        assert_rows_bitwise(&single, &batched[i * n..(i + 1) * n], &format!("query {i}"));
+    }
+}
