@@ -2,8 +2,10 @@
 //! row-evaluation paths (scalar vs panel vs panel+fused-update) vs
 //! cached+shrink vs parallel working-set SMO on the Pavia subset, the
 //! row-sharded distributed engine at 1/2/4 ranks vs the single-rank
-//! cached engine, plus sequential- vs concurrent-pair OvO multiclass on a
-//! 4-worker universe.
+//! cached engine, sequential- vs concurrent-pair OvO multiclass on a
+//! 4-worker universe, plus the serve-throughput comparison (legacy
+//! per-pair path vs the compiled shared-SV engine at 1 and 2 shard
+//! workers on iris/wdbc).
 //!
 //! Native-only — runs from a clean checkout, no `make artifacts` needed:
 //!
@@ -14,10 +16,12 @@
 //! the machine-readable baseline to `BENCH_solver.json` (repo root when run
 //! from the workspace root; override with PARASVM_BENCH_JSON).
 //!
-//! Doubles as the CI perf gate for the panel kernel engine: the run
-//! FAILS if the panel+fused row path is more than 10% slower than the
-//! scalar baseline (they solve the identical trajectory, so any slowdown
-//! is a pure micro-kernel regression).
+//! Doubles as the CI perf gates: the run FAILS if the panel+fused row
+//! path is more than 10% slower than the scalar baseline (identical
+//! trajectory, so any slowdown is a pure micro-kernel regression), or if
+//! the compiled serve engine delivers less QPS than the legacy per-pair
+//! path on any bench dataset (identical answers, so any slowdown is a
+//! pure serving-stack regression).
 
 use parasvm::harness::{run_solver_ablation, LABEL_PANEL_FUSED, LABEL_SCALAR_ROWS};
 use parasvm::metrics::bench::BenchConfig;
@@ -35,10 +39,12 @@ fn main() {
         cv_target: 0.15,
     };
     // Paper-scale subset by default, CI-scale under QUICK.
-    let (per_class, ovo_per_class) = if quick { (100, 30) } else { (400, 100) };
+    let (per_class, ovo_per_class, serve_requests) =
+        if quick { (100, 30, 1500) } else { (400, 100, 6000) };
 
     let (table, ablation) =
-        run_solver_ablation(per_class, ovo_per_class, &cfg, 42).expect("ablation");
+        run_solver_ablation(per_class, ovo_per_class, serve_requests, &cfg, 42)
+            .expect("ablation");
     println!("{}", table.render());
     std::fs::create_dir_all("results").ok();
     table
@@ -78,4 +84,21 @@ fn main() {
         fused <= scalar * 1.10,
         "panel engine regressed: panel+fused {fused:.4}s vs scalar {scalar:.4}s (>10% slower)"
     );
+
+    // Compiled-serve regression guard (the serve perf gate): the compiled
+    // shared-SV engine answers bit-identically to the legacy per-pair
+    // path, so losing on QPS means the serving stack regressed. Target is
+    // >= 1.3x (the shared sweep removes Sigma|SV_p|/|unique| kernel work);
+    // the hard gate is >= 1.0x.
+    assert!(
+        !ablation.serve_speedup_vs_legacy.is_empty(),
+        "serve bench produced no speedup rows"
+    );
+    for (dataset, speedup) in &ablation.serve_speedup_vs_legacy {
+        println!("compiled serve speedup vs legacy on {dataset}: {speedup:.2}x");
+        assert!(
+            *speedup >= 1.0,
+            "compiled serve engine slower than legacy on {dataset}: {speedup:.2}x"
+        );
+    }
 }

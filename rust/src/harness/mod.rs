@@ -10,10 +10,14 @@
 //! measured-vs-paper shape comparisons side by side.
 
 pub mod paper;
+pub mod serve_bench;
 pub mod solver_ablation;
 pub mod tables;
 pub mod workloads;
 
+pub use serve_bench::{
+    run_serve_bench, serve_speedups, serve_table, ServeRow, SERVE_BENCH_DATASETS,
+};
 pub use solver_ablation::{
     run_solver_ablation, DistRow, HierRow, SolverAblation, LABEL_PANEL_FUSED, LABEL_PANEL_ROWS,
     LABEL_SCALAR_ROWS,

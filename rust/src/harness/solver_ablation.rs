@@ -10,11 +10,12 @@
 //! artifacts, no device), so it runs from a clean checkout and in CI — it
 //! is the reproducible speedup story for the `svm::solver` subsystem. The
 //! bench wrapper (`benches/solver_ablation.rs`) renders the table, writes
-//! the machine-readable `BENCH_solver.json` (schema v4: the panel
+//! the machine-readable `BENCH_solver.json` (schema v5: the panel
 //! row-eval rows + `panel_speedup_vs_scalar`, per-level `net_levels` on
-//! distributed rows and the `hierarchical` section) that later PRs diff
-//! against, and enforces the panel-vs-scalar regression guard CI runs on
-//! every push.
+//! distributed rows, the `hierarchical` section, and the `serve` rows
+//! with `serve_speedup_vs_legacy` from the compiled-inference bench) that
+//! later PRs diff against, and enforces both the panel-vs-scalar and the
+//! compiled-vs-legacy-serve regression guards CI runs on every push.
 
 use std::sync::Arc;
 
@@ -91,6 +92,12 @@ pub struct SolverAblation {
     pub distributed: Vec<DistRow>,
     pub ovo: Vec<OvoRow>,
     pub hierarchical: Vec<HierRow>,
+    /// Serve-throughput rows (legacy vs compiled-w1 vs compiled-wN per
+    /// dataset) — schema v5's inference-side trajectory.
+    pub serve: Vec<super::serve_bench::ServeRow>,
+    /// Best-compiled / legacy QPS per serve dataset (the serve perf
+    /// gate's headline; CI fails any ratio < 1).
+    pub serve_speedup_vs_legacy: Vec<(String, f64)>,
 }
 
 fn levels_json(levels: &[LevelNet]) -> Json {
@@ -113,7 +120,7 @@ impl SolverAblation {
     /// Machine-readable form for `BENCH_solver.json`.
     pub fn to_json(&self) -> Json {
         json::obj(vec![
-            ("schema", json::s("parasvm-solver-ablation/v4")),
+            ("schema", json::s("parasvm-solver-ablation/v5")),
             ("dataset", json::s(&self.dataset)),
             ("n", json::num(self.n as f64)),
             ("d", json::num(self.d as f64)),
@@ -195,6 +202,40 @@ impl SolverAblation {
                         .collect(),
                 ),
             ),
+            (
+                "serve",
+                json::arr(
+                    self.serve
+                        .iter()
+                        .map(|r| {
+                            json::obj(vec![
+                                ("dataset", json::s(&r.dataset)),
+                                ("path", json::s(&r.path)),
+                                ("workers", json::num(r.workers as f64)),
+                                ("requests", json::num(r.requests as f64)),
+                                ("qps", json::num(r.qps)),
+                                ("mean_batch", json::num(r.mean_batch)),
+                                ("p50_ms", json::num(r.p50_ms)),
+                                ("p99_ms", json::num(r.p99_ms)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "serve_speedup_vs_legacy",
+                json::arr(
+                    self.serve_speedup_vs_legacy
+                        .iter()
+                        .map(|(dataset, ratio)| {
+                            json::obj(vec![
+                                ("dataset", json::s(dataset)),
+                                ("compiled_over_legacy_qps", json::num(*ratio)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ])
     }
 }
@@ -242,10 +283,13 @@ fn engines(n: usize) -> Vec<(&'static str, Box<dyn DualSolver>)> {
 }
 
 /// Run the ablation on a Pavia binary subset (`per_class` rows per class)
-/// and a 9-class Pavia OvO workload on a 4-worker universe.
+/// and a 9-class Pavia OvO workload on a 4-worker universe, then the
+/// serve-throughput comparison (`serve_requests` per measured pass;
+/// legacy vs compiled, 2 shard workers).
 pub fn run_solver_ablation(
     per_class: usize,
     ovo_per_class: usize,
+    serve_requests: usize,
     cfg: &BenchConfig,
     seed: u64,
 ) -> Result<(Table, SolverAblation)> {
@@ -425,6 +469,23 @@ pub fn run_solver_ablation(
         level_cell,
     ]);
 
+    // Serve-throughput comparison: the compiled shared-SV engine must not
+    // lose to the per-pair path it replaced (they answer bit-identically).
+    let reps = cfg.max_samples.clamp(1, 3);
+    let serve_rows = super::serve_bench::run_serve_bench(serve_requests, 2, reps, seed)?;
+    for r in &serve_rows {
+        table.row(&[
+            format!("serve {} {}", r.dataset, r.path),
+            format!("{:.0} qps", r.qps),
+            String::new(),
+            String::new(),
+            String::new(),
+            String::new(),
+            format!("p50 {:.2}ms p99 {:.2}ms batch {:.1}", r.p50_ms, r.p99_ms, r.mean_batch),
+        ]);
+    }
+    let serve_speedup_vs_legacy = super::serve_bench::serve_speedups(&serve_rows);
+
     let ablation = SolverAblation {
         dataset: w.name.clone(),
         n: prob.n(),
@@ -434,6 +495,8 @@ pub fn run_solver_ablation(
         distributed: dist_rows,
         ovo: ovo_rows,
         hierarchical: vec![hier_row],
+        serve: serve_rows,
+        serve_speedup_vs_legacy,
     };
     Ok((table, ablation))
 }
@@ -445,7 +508,7 @@ mod tests {
     #[test]
     fn tiny_ablation_runs_end_to_end() {
         let cfg = BenchConfig { warmup: 0, min_samples: 1, max_samples: 1, cv_target: 1.0 };
-        let (table, ab) = run_solver_ablation(30, 8, &cfg, 3).unwrap();
+        let (table, ab) = run_solver_ablation(30, 8, 40, &cfg, 3).unwrap();
         assert_eq!(ab.engines.len(), 6);
         assert_eq!(ab.distributed.len(), 3);
         assert_eq!(ab.ovo.len(), 2);
@@ -490,17 +553,34 @@ mod tests {
         let by_name = |n: &str| h.net_levels.iter().find(|l| l.level == n).unwrap();
         assert!(by_name("inter").bytes > 0, "bcast/gather must cross the inter link");
         assert!(by_name("intra").bytes > 0, "solver chatter must cross the intra link");
+        // The serve section covers every path on every bench dataset and
+        // carries the per-dataset compiled/legacy ratios.
+        assert_eq!(ab.serve.len(), 3 * crate::harness::SERVE_BENCH_DATASETS.len());
+        for r in &ab.serve {
+            assert!(r.qps > 0.0, "serve {} {}", r.dataset, r.path);
+        }
+        assert_eq!(
+            ab.serve_speedup_vs_legacy.len(),
+            crate::harness::SERVE_BENCH_DATASETS.len()
+        );
         let rendered = table.render();
         assert!(rendered.contains("dense"));
         assert!(rendered.contains("parallel"));
         assert!(rendered.contains("panel+fused"));
         assert!(rendered.contains("distributed (4 ranks)"));
         assert!(rendered.contains("hierarchical 2x2"));
+        assert!(rendered.contains("serve iris legacy"));
+        assert!(rendered.contains("serve wdbc compiled-w2"));
         let j = ab.to_json();
-        assert_eq!(j.get("schema").and_then(Json::as_str), Some("parasvm-solver-ablation/v4"));
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some("parasvm-solver-ablation/v5"));
         assert!(j.get("panel_speedup_vs_scalar").is_some());
         assert_eq!(j.get("engines").and_then(Json::as_arr).unwrap().len(), 6);
         assert_eq!(j.get("distributed").and_then(Json::as_arr).unwrap().len(), 3);
         assert_eq!(j.get("hierarchical").and_then(Json::as_arr).unwrap().len(), 1);
+        assert_eq!(j.get("serve").and_then(Json::as_arr).unwrap().len(), ab.serve.len());
+        assert_eq!(
+            j.get("serve_speedup_vs_legacy").and_then(Json::as_arr).unwrap().len(),
+            ab.serve_speedup_vs_legacy.len()
+        );
     }
 }

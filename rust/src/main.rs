@@ -3,7 +3,9 @@
 //! Subcommands:
 //!   train      train a multiclass OvO SVM across the simulated cluster
 //!   eval       train + held-out accuracy
-//!   serve      start the batching classifier and drive a synthetic load
+//!   serve      start the batching classifier (compiled shared-SV engine,
+//!              --workers sharded serve threads, --legacy-serve for the
+//!              per-pair baseline) and drive a synthetic load
 //!   bench      regenerate a paper table (--table 3|4|5|6)
 //!   datasets   paper Table I inventory
 //!   artifacts  list the AOT artifact registry
@@ -29,7 +31,7 @@ use parasvm::util::args::Args;
 use parasvm::util::fmt_secs;
 use parasvm::util::rng::Rng;
 
-const FLAGS: &[&str] = &["verbose", "help", "quick", "no-scale"];
+const FLAGS: &[&str] = &["verbose", "help", "quick", "no-scale", "legacy-serve"];
 
 fn main() {
     let args = match Args::parse_with_flags(std::env::args().skip(1), FLAGS) {
@@ -78,6 +80,12 @@ fn print_help() {
            --per-class N      subsample N points per class\n\
            --config FILE      load a JSON RunConfig (CLI flags override)\n\
            --seed N           dataset/run seed (default 42)\n\
+         serve options:\n\
+           --requests N       synthetic load size (default 2000)\n\
+           --model FILE       serve a persisted model instead of training\n\
+           --legacy-serve     per-pair baseline path (default: compiled\n\
+                              shared-SV engine; --workers doubles as the\n\
+                              sharded serve-thread count)\n\
          bench options:\n\
            --table N          3 | 4 | 5 | 6 (paper table to regenerate)\n\
            --quick            fewer repetitions\n\
@@ -207,6 +215,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .map_err(parasvm::Error::Config)?
         .unwrap_or(2000);
     let model_path = args.opt("model").map(std::path::PathBuf::from);
+    let legacy = args.flag("legacy-serve");
     args.finish().map_err(parasvm::Error::Config)?;
     let ds = load_dataset(&cfg)?;
     let model = match model_path {
@@ -216,9 +225,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
             train_multiclass(&ds, backend, &cfg.train_config())?.0
         }
     };
-    let server = Server::start(model, BatchPolicy::default());
+    // `--workers` doubles as the serve shard-thread count: the compiled
+    // pack is shared read-only, batches split by rows.
+    let server = if legacy {
+        Server::start_legacy(model, BatchPolicy::default())
+    } else {
+        Server::start_compiled(model, BatchPolicy::default(), cfg.workers.max(1))
+    };
 
-    println!("serving synthetic load: {n_requests} requests over {}", ds.name);
+    println!(
+        "serving synthetic load: {n_requests} requests over {} [{}]",
+        ds.name,
+        server.engine_label()
+    );
     let t0 = std::time::Instant::now();
     let mut rng = Rng::new(cfg.seed);
     let pending: Vec<_> = (0..n_requests)
@@ -228,16 +247,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .collect();
     let mut correct_dim = 0usize;
+    let mut latencies = Vec::with_capacity(n_requests);
     for rx in pending {
         let resp = rx.recv().map_err(|_| parasvm::Error::Serve("dropped".into()))?;
         correct_dim += usize::from(resp.class < ds.n_classes);
+        latencies.push(resp.latency_secs);
     }
     let wall = t0.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| {
+        if latencies.is_empty() {
+            0.0
+        } else {
+            parasvm::metrics::stats::percentile_sorted(&latencies, p)
+        }
+    };
     let stats = server.stats();
     println!(
-        "throughput {:.0} req/s, mean latency {}, mean batch {:.1}, {} ok",
+        "throughput {:.0} req/s, mean latency {}, p50 {}, p99 {}, mean batch {:.1}, {} ok",
         n_requests as f64 / wall,
         fmt_secs(stats.mean_latency_secs()),
+        fmt_secs(pct(50.0)),
+        fmt_secs(pct(99.0)),
         stats.mean_batch_size(),
         correct_dim
     );

@@ -1,5 +1,7 @@
-//! Dynamic batching policy: flush on size or deadline, whichever first.
+//! Dynamic batching policy: flush on size or deadline, whichever first —
+//! with single-query cut-through when the server also tracks queue depth.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
@@ -26,6 +28,41 @@ impl Default for BatchPolicy {
 pub fn collect_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
     let first = rx.recv().ok()?;
     let mut batch = vec![first];
+    drain_until_flush(rx, policy, &mut batch, None);
+    Some(batch)
+}
+
+/// [`collect_batch`] with a queue-depth gauge enabling single-query
+/// cut-through: `depth` counts requests enqueued (incremented by the
+/// submitter *before* sending) but not yet dequeued here. When the first
+/// item arrives and the gauge reads zero — an empty queue, an idle server
+/// — the batch is dispatched immediately instead of idling out
+/// `max_wait`, so a lone synchronous `classify` pays compute latency
+/// only. Under load the gauge is non-zero and batching proceeds exactly
+/// as [`collect_batch`].
+pub fn collect_batch_tracked<T>(
+    rx: &Receiver<T>,
+    policy: &BatchPolicy,
+    depth: &AtomicUsize,
+) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    depth.fetch_sub(1, Ordering::AcqRel);
+    let mut batch = vec![first];
+    if depth.load(Ordering::Acquire) == 0 {
+        return Some(batch); // cut-through: nothing else is waiting
+    }
+    drain_until_flush(rx, policy, &mut batch, Some(depth));
+    Some(batch)
+}
+
+/// The shared drain loop: append until `max_batch` items are pending or
+/// `max_wait` has elapsed since the first item.
+fn drain_until_flush<T>(
+    rx: &Receiver<T>,
+    policy: &BatchPolicy,
+    batch: &mut Vec<T>,
+    depth: Option<&AtomicUsize>,
+) {
     let deadline = Instant::now() + policy.max_wait;
     while batch.len() < policy.max_batch {
         let now = Instant::now();
@@ -33,12 +70,16 @@ pub fn collect_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>
             break;
         }
         match rx.recv_timeout(deadline - now) {
-            Ok(item) => batch.push(item),
+            Ok(item) => {
+                if let Some(d) = depth {
+                    d.fetch_sub(1, Ordering::AcqRel);
+                }
+                batch.push(item);
+            }
             Err(RecvTimeoutError::Timeout) => break,
             Err(RecvTimeoutError::Disconnected) => break,
         }
     }
-    Some(batch)
 }
 
 #[cfg(test)]
@@ -75,6 +116,32 @@ mod tests {
         let (tx, rx) = mpsc::channel::<u32>();
         drop(tx);
         assert!(collect_batch(&rx, &BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn tracked_single_item_cuts_through_without_waiting() {
+        let (tx, rx) = mpsc::channel();
+        let depth = AtomicUsize::new(1);
+        tx.send(42).unwrap();
+        let policy = BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(250) };
+        let t0 = Instant::now();
+        let b = collect_batch_tracked(&rx, &policy, &depth).unwrap();
+        assert_eq!(b, vec![42]);
+        assert!(t0.elapsed() < Duration::from_millis(100), "paid the max-wait");
+        assert_eq!(depth.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn tracked_batches_when_queue_is_nonempty() {
+        let (tx, rx) = mpsc::channel();
+        let depth = AtomicUsize::new(3);
+        for i in 0..3 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20) };
+        let b = collect_batch_tracked(&rx, &policy, &depth).unwrap();
+        assert_eq!(b, vec![0, 1, 2]);
+        assert_eq!(depth.load(Ordering::Relaxed), 0);
     }
 
     #[test]

@@ -1,21 +1,49 @@
 //! Classification serving: a dynamic-batching request loop over a trained
-//! OvO model.
+//! OvO model, executed by the compiled shared-SV inference engine.
 //!
-//! The paper stops at training; serving is the natural deployment story and
-//! exercises the same decision kernels. Architecture (vLLM-router-style,
-//! scaled to this problem):
+//! The paper stops at training; serving is the natural deployment story
+//! and exercises the same decision kernels. Architecture
+//! (vLLM-router-style, scaled to this problem):
 //!
-//!   clients -> mpsc queue -> batcher (size/deadline policy) -> executor
-//!          (one decision_batch per binary model over the whole batch,
-//!           vectorized through the backend) -> per-request votes -> reply
+//!   clients -> mpsc queue -> batcher (size/deadline policy, single-query
+//!          cut-through) -> compiled executor (ONE shared-SV panel sweep
+//!          for the whole batch, rows sharded across N worker threads)
+//!          -> per-request votes -> reply
 //!
-//! Batching matters because OvO prediction is m(m-1)/2 kernel passes; doing
-//! them once per *batch* instead of once per request amortizes dispatch.
+//! # Migration: per-pair row-major → compiled shared-SV panels
+//!
+//! Through PR 4 the executor ran one `decision_batch` per binary model:
+//! K(K-1)/2 independent passes, each walking its own SV matrix row-major,
+//! re-deriving SV norms per batch, and re-packing panels per call (with a
+//! scalar fallback for single queries, since packing O(n·d) to evaluate
+//! one O(n·d) row would double the work). That wastes the OvO structure:
+//! every training point appears in up to K-1 pair models, so the same
+//! kernel values were computed repeatedly under different pair labels.
+//!
+//! The serve path now *compiles* the model once at server start
+//! ([`crate::svm::compile::CompiledModel`], via [`Server::start_compiled`]):
+//! the SV union is deduplicated into one panel-packed
+//! [`crate::svm::solver::panel::DatasetView`] (norms precomputed, pack
+//! amortized over the server's lifetime — single queries now use the
+//! panels too), and each pair keeps only a sparse `(slot, coef)` table.
+//! A batch costs one `|unique SVs|·d` kernel sweep instead of
+//! `Σ_p |SV_p|·d`, plus O(Σ|SV_p|) multiply-adds of combine. Batches big
+//! enough to amortize a channel hop are split by rows across persistent
+//! shard threads sharing the read-only pack. Decisions, votes and
+//! tie-breaks are bit-identical to the legacy path (property-tested in
+//! `tests/compiled_serve.rs`); [`Server::start_legacy`] keeps the old
+//! executor alive as the bench baseline.
+//!
+//! Batching still matters — the shared sweep is per *batch*, so batching
+//! amortizes the per-pair combines and the vote loop — but an idle
+//! server no longer taxes lone requests: the batcher dispatches
+//! immediately when the queue depth is zero
+//! ([`batcher::collect_batch_tracked`]).
 
 pub mod batcher;
 pub mod server;
 pub mod types;
 
-pub use batcher::{collect_batch, BatchPolicy};
+pub use batcher::{collect_batch, collect_batch_tracked, BatchPolicy};
 pub use server::{Server, ServerStats};
 pub use types::{ClassifyRequest, ClassifyResponse};

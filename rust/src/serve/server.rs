@@ -1,14 +1,36 @@
-//! The serving loop: batcher + vectorized OvO executor on a worker thread.
+//! The serving loop: batcher + OvO executor.
+//!
+//! Two engines sit behind the same `Server` facade:
+//!
+//!  * **Compiled** (default, [`Server::start_compiled`]): the model is
+//!    compiled once into a shared-SV panel pack
+//!    ([`crate::svm::compile::CompiledModel`]) and every batch is one
+//!    shared kernel sweep + per-pair combines. Large batches are split by
+//!    rows across `workers` persistent shard threads, all reading the one
+//!    immutable compiled pack (`Arc`-shared, no locks); per-row results
+//!    are independent of the split, so `workers = 1` and `workers = N`
+//!    answer bit-identically. Single queries skip the pool and go through
+//!    the packed SVs directly.
+//!  * **Legacy** ([`Server::start_legacy`]): the pre-compile path — one
+//!    `decision_batch` per binary model, each walking its own SV rows.
+//!    Kept as the serve bench baseline; answers are bit-identical to the
+//!    compiled engine (property-tested), only slower.
+//!
+//! Both use the depth-tracked batcher: a lone `classify` on an idle
+//! server cuts through immediately instead of idling out the batch
+//! deadline ([`super::batcher::collect_batch_tracked`]).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use super::batcher::{collect_batch, BatchPolicy};
+use super::batcher::{collect_batch_tracked, BatchPolicy};
 use super::types::{ClassifyRequest, ClassifyResponse};
 use crate::error::{Error, Result};
-use crate::svm::multiclass::argmax_tiebreak;
+use crate::svm::compile::CompiledModel;
+use crate::svm::multiclass::{accumulate_ovo_votes, argmax_tiebreak};
+use crate::svm::solver::RowSlice;
 use crate::svm::OvoModel;
 
 type Job = (ClassifyRequest, Sender<ClassifyResponse>);
@@ -40,37 +62,208 @@ impl ServerStats {
     }
 }
 
+/// Rows per shard worker before a batch is worth splitting: below this
+/// the channel round-trip costs more than the combine it offloads.
+const SHARD_MIN_ROWS_PER_WORKER: usize = 16;
+
+/// One shard request: the whole batch's features (shared read-only), the
+/// row window to evaluate, and where to send `(row_lo, decisions)`.
+type ShardJob = (Arc<Vec<f32>>, RowSlice, Sender<(usize, Vec<f32>)>);
+
+/// Persistent shard threads for the compiled engine. Workers hold their
+/// own `Arc<CompiledModel>` clone and block on their job channel between
+/// batches — no per-batch spawn cost.
+struct ShardPool {
+    txs: Vec<Sender<ShardJob>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ShardPool {
+    fn spawn(model: &Arc<CompiledModel>, extra_workers: usize) -> ShardPool {
+        let mut txs = Vec::with_capacity(extra_workers);
+        let mut handles = Vec::with_capacity(extra_workers);
+        for w in 0..extra_workers {
+            let (tx, rx) = mpsc::channel::<ShardJob>();
+            let model = Arc::clone(model);
+            let h = std::thread::Builder::new()
+                .name(format!("parasvm-serve-shard-{w}"))
+                .spawn(move || {
+                    let d = model.d;
+                    while let Ok((features, rows, reply)) = rx.recv() {
+                        let q = &features[rows.lo * d..rows.hi * d];
+                        let dec = model.decision_all_pairs(q, rows.len());
+                        let _ = reply.send((rows.lo, dec));
+                    }
+                })
+                .expect("spawn shard worker");
+            txs.push(tx);
+            handles.push(h);
+        }
+        ShardPool { txs, handles }
+    }
+
+    fn extra_workers(&self) -> usize {
+        self.txs.len()
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The executor behind the batcher thread.
+enum Engine {
+    Legacy(OvoModel),
+    Compiled { model: Arc<CompiledModel>, pool: ShardPool },
+}
+
+impl Engine {
+    fn n_classes(&self) -> usize {
+        match self {
+            Engine::Legacy(m) => m.n_classes,
+            Engine::Compiled { model, .. } => model.n_classes,
+        }
+    }
+
+    fn class_name(&self, class: usize) -> String {
+        let names = match self {
+            Engine::Legacy(m) => &m.class_names,
+            Engine::Compiled { model, .. } => &model.class_names,
+        };
+        names.get(class).cloned().unwrap_or_default()
+    }
+
+    /// Per-row votes + margins for a packed feature batch. Both arms
+    /// produce an `m × n_pairs` decision matrix (pairs in `binaries`
+    /// order) and feed the ONE shared accumulation loop
+    /// ([`accumulate_ovo_votes`]), so results agree bit-for-bit.
+    fn votes_for_batch(&self, features: Vec<f32>, bsz: usize) -> (Vec<Vec<u32>>, Vec<Vec<f64>>) {
+        match self {
+            Engine::Legacy(model) => {
+                let dec = model.decision_all_pairs(&features, bsz);
+                let pair_classes: Vec<(usize, usize)> =
+                    model.binaries.iter().map(|b| (b.pos_class, b.neg_class)).collect();
+                accumulate_ovo_votes(&dec, bsz, model.n_classes, &pair_classes)
+            }
+            Engine::Compiled { model, pool } => {
+                let dec = sharded_decisions(model.as_ref(), pool, features, bsz);
+                accumulate_ovo_votes(&dec, bsz, model.n_classes, &model.pair_classes())
+            }
+        }
+    }
+}
+
+/// Evaluate a batch's all-pairs decisions, splitting rows across the
+/// shard pool when the batch is big enough to amortize the hand-off.
+/// Row results never depend on the split, so any worker count returns
+/// identical bits.
+fn sharded_decisions(
+    model: &CompiledModel,
+    pool: &ShardPool,
+    features: Vec<f32>,
+    bsz: usize,
+) -> Vec<f32> {
+    let workers = pool.extra_workers() + 1;
+    if pool.extra_workers() == 0 || bsz < SHARD_MIN_ROWS_PER_WORKER * workers {
+        return model.decision_all_pairs(&features, bsz);
+    }
+    let d = model.d;
+    let p_count = model.n_pairs();
+    let features = Arc::new(features);
+    let shards = RowSlice::partition(bsz, workers);
+    let (rtx, rrx) = mpsc::channel();
+    let mut shipped = 0usize;
+    for (w, rows) in shards.iter().skip(1).enumerate() {
+        if rows.is_empty() {
+            continue;
+        }
+        pool.txs[w]
+            .send((Arc::clone(&features), *rows, rtx.clone()))
+            .expect("shard worker alive");
+        shipped += 1;
+    }
+    drop(rtx);
+    // Shard 0 computes on the batcher thread while the pool works.
+    let own = shards[0];
+    let mut dec = vec![0.0f32; bsz * p_count];
+    let own_dec = model.decision_all_pairs(&features[own.lo * d..own.hi * d], own.len());
+    dec[own.lo * p_count..own.hi * p_count].copy_from_slice(&own_dec);
+    for _ in 0..shipped {
+        let (lo, chunk) = rrx.recv().expect("shard reply");
+        dec[lo * p_count..lo * p_count + chunk.len()].copy_from_slice(&chunk);
+    }
+    dec
+}
+
 /// A running classification server over one trained model.
 pub struct Server {
     tx: Option<Sender<Job>>,
     worker: Option<JoinHandle<()>>,
     stats: Arc<ServerStats>,
+    depth: Arc<AtomicUsize>,
     d: usize,
+    engine_label: String,
 }
 
 impl Server {
-    /// Start the worker thread.
+    /// Start with the compiled shared-SV engine on one worker (the
+    /// default path).
     pub fn start(model: OvoModel, policy: BatchPolicy) -> Server {
+        Server::start_compiled(model, policy, 1)
+    }
+
+    /// Compile the model and serve through `workers` sharded threads
+    /// (1 = the batcher thread evaluates alone).
+    pub fn start_compiled(model: OvoModel, policy: BatchPolicy, workers: usize) -> Server {
+        let workers = workers.max(1);
+        let d = model.d;
+        let compiled = Arc::new(model.compile());
+        let pool = ShardPool::spawn(&compiled, workers - 1);
+        let label = format!("compiled-w{workers}");
+        Server::start_engine(Engine::Compiled { model: compiled, pool }, policy, d, label)
+    }
+
+    /// The pre-compile per-pair path (bench baseline; answers are
+    /// bit-identical to the compiled engine).
+    pub fn start_legacy(model: OvoModel, policy: BatchPolicy) -> Server {
+        let d = model.d;
+        Server::start_engine(Engine::Legacy(model), policy, d, "legacy".into())
+    }
+
+    fn start_engine(engine: Engine, policy: BatchPolicy, d: usize, label: String) -> Server {
         let (tx, rx) = mpsc::channel::<Job>();
         let stats = Arc::new(ServerStats::default());
         let stats2 = Arc::clone(&stats);
-        let d = model.d;
+        let depth = Arc::new(AtomicUsize::new(0));
+        let depth2 = Arc::clone(&depth);
         let worker = std::thread::Builder::new()
             .name("parasvm-serve".into())
             .spawn(move || {
-                while let Some(batch) = collect_batch(&rx, &policy) {
-                    serve_batch(&model, batch, &stats2);
+                while let Some(batch) = collect_batch_tracked(&rx, &policy, &depth2) {
+                    serve_batch(&engine, batch, &stats2);
                 }
             })
             .expect("spawn server thread");
-        Server { tx: Some(tx), worker: Some(worker), stats, d }
+        Server { tx: Some(tx), worker: Some(worker), stats, depth, d, engine_label: label }
     }
 
     pub fn stats(&self) -> &Arc<ServerStats> {
         &self.stats
     }
 
-    /// Synchronous classify (enqueue + wait).
+    /// Which engine is running ("legacy" or "compiled-wN") — for logs and
+    /// bench tables.
+    pub fn engine_label(&self) -> &str {
+        &self.engine_label
+    }
+
+    /// Synchronous classify (enqueue + wait). On an idle server this cuts
+    /// through the batcher without paying the max-wait deadline.
     pub fn classify(&self, features: Vec<f32>) -> Result<ClassifyResponse> {
         self.submit(features)?
             .recv()
@@ -89,11 +282,19 @@ impl Server {
         static NEXT_ID: AtomicU64 = AtomicU64::new(0);
         let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = mpsc::channel();
-        self.tx
+        // Depth rises BEFORE the send so the batcher can only observe
+        // depth == 0 when the queue is truly empty (cut-through safety).
+        self.depth.fetch_add(1, Ordering::AcqRel);
+        if self
+            .tx
             .as_ref()
             .expect("server running")
             .send((ClassifyRequest::new(id, features), rtx))
-            .map_err(|_| Error::Serve("server shut down".into()))?;
+            .is_err()
+        {
+            self.depth.fetch_sub(1, Ordering::AcqRel);
+            return Err(Error::Serve("server shut down".into()));
+        }
         Ok(rrx)
     }
 
@@ -115,28 +316,15 @@ impl Drop for Server {
     }
 }
 
-/// Classify one batch: for each binary model, one vectorized decision pass
-/// over the whole batch; then per-request voting.
-fn serve_batch(model: &OvoModel, batch: Vec<Job>, stats: &ServerStats) {
+/// Classify one batch through the engine, then reply per request.
+fn serve_batch(engine: &Engine, batch: Vec<Job>, stats: &ServerStats) {
     let bsz = batch.len();
-    let d = model.d;
+    let d = batch.first().map_or(0, |(req, _)| req.features.len());
     let mut features = Vec::with_capacity(bsz * d);
     for (req, _) in &batch {
         features.extend_from_slice(&req.features);
     }
-
-    // Vectorized OvO: m(m-1)/2 batch passes instead of bsz * m(m-1)/2
-    // single-row passes.
-    let mut votes = vec![vec![0u32; model.n_classes]; bsz];
-    let mut margins = vec![vec![0.0f64; model.n_classes]; bsz];
-    for b in &model.binaries {
-        let dec = b.decision_batch(&features, bsz);
-        for (i, &v) in dec.iter().enumerate() {
-            let winner = if v > 0.0 { b.pos_class } else { b.neg_class };
-            votes[i][winner] += 1;
-            margins[i][winner] += v.abs() as f64;
-        }
-    }
+    let (votes, margins) = engine.votes_for_batch(features, bsz);
 
     // Count the batch before replying so stats are consistent the moment
     // the last requester unblocks.
@@ -151,7 +339,7 @@ fn serve_batch(model: &OvoModel, batch: Vec<Job>, stats: &ServerStats) {
         let _ = rtx.send(ClassifyResponse {
             id: req.id,
             class,
-            class_name: model.class_names.get(class).cloned().unwrap_or_default(),
+            class_name: engine.class_name(class),
             votes: votes[i].clone(),
             latency_secs: latency,
             batch_size: bsz,
@@ -223,5 +411,42 @@ mod tests {
         server.shutdown();
         // The queued request is still answered.
         assert!(rx.recv_timeout(Duration::from_secs(1)).is_ok());
+    }
+
+    #[test]
+    fn idle_single_query_cuts_through_the_batch_deadline() {
+        // A generous max_wait that a lone classify must NOT pay.
+        let policy = BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(400) };
+        let (server, ds) = iris_server(policy);
+        let _ = server.classify(ds.row(0).to_vec()).unwrap(); // warm the pack
+        let t0 = std::time::Instant::now();
+        let resp = server.classify(ds.row(1).to_vec()).unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_millis(200),
+            "single query paid the batch deadline ({:?})",
+            t0.elapsed()
+        );
+        assert_eq!(resp.batch_size, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn legacy_and_compiled_engines_answer_identically() {
+        let ds = iris::load();
+        let be: Arc<dyn SvmBackend> = Arc::new(NativeBackend::new());
+        let cfg = TrainConfig { workers: 2, ..Default::default() };
+        let (model, _) = train_multiclass(&ds, be, &cfg).unwrap();
+        let legacy = Server::start_legacy(model.clone(), BatchPolicy::default());
+        let compiled = Server::start_compiled(model, BatchPolicy::default(), 2);
+        assert_eq!(legacy.engine_label(), "legacy");
+        assert_eq!(compiled.engine_label(), "compiled-w2");
+        for i in (0..ds.n).step_by(11) {
+            let a = legacy.classify(ds.row(i).to_vec()).unwrap();
+            let b = compiled.classify(ds.row(i).to_vec()).unwrap();
+            assert_eq!(a.class, b.class, "row {i}");
+            assert_eq!(a.votes, b.votes, "row {i}");
+        }
+        legacy.shutdown();
+        compiled.shutdown();
     }
 }

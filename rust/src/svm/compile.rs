@@ -1,0 +1,348 @@
+//! The compiled shared-SV inference engine: one panel pack serves every
+//! OvO pair.
+//!
+//! # Why compile at all
+//!
+//! The legacy serve path ([`super::model::BinaryModel::decision_batch`])
+//! treats the K(K-1)/2 one-vs-one binaries as independent models: each
+//! walks its own SV matrix row-major per batch, so a vote costs
+//! `Σ_p |SV_p| · d` kernel work even though every training point appears
+//! in up to K-1 pair models (any point of class c is a candidate SV of
+//! every pair touching c). [`CompiledModel`] deduplicates the *union* of
+//! support vectors across all pairs into ONE packed
+//! [`DatasetView`](crate::svm::solver::panel::DatasetView) — built once at
+//! compile time, reused for every batch — and keeps a per-pair *sparse
+//! coefficient table* mapping global SV slots back to that pair's
+//! `alpha·y` weights. A whole OvO vote then becomes:
+//!
+//!  1. one shared `cross_into` panel sweep: `K(q, s)` for the m queries
+//!     against the `|unique SVs|` deduped rows (`|unique|·d` kernel work
+//!     instead of `Σ_p |SV_p|·d`), and
+//!  2. a cheap per-pair combine: `dec_p(q) = bias_p + Σ_i coef_i ·
+//!     K(q, slot_i)` — O(|SV_p|) multiply-adds, no kernel math — followed
+//!     by the usual vote.
+//!
+//! Single queries take the same path: the pack is amortized across the
+//! model's lifetime, so `m == 1` no longer pays the per-call pack that
+//! made [`crate::svm::kernel::rbf_cross`] keep a scalar fallback.
+//!
+//! # Bit-identity contract
+//!
+//! Compiled decisions are **bit-identical** to the legacy per-pair
+//! `decision_batch` (property-tested in `tests/compiled_serve.rs`):
+//!
+//!  * deduplication keys on exact f32 bit patterns, so a slot's row and
+//!    norm are the very values the pair's private copy held;
+//!  * `cross_into` replays the scalar expanded-identity expression and
+//!    accumulation order (`tests/panel_kernel.rs`);
+//!  * each pair's combine iterates its SVs in the pair's original SV
+//!    order, accumulating `bias + Σ coef·K` in the same f32 order the
+//!    legacy loop used.
+//!
+//! Compilation itself is deterministic: slots are assigned by first
+//! occurrence while scanning pairs in `binaries` order (never by hash
+//! iteration), so a persisted model recompiles to the identical table
+//! (`svm::persist` round-trips f32 values exactly).
+
+use std::collections::HashMap;
+
+use super::multiclass::{argmax_tiebreak, OvoModel};
+use super::solver::panel::DatasetView;
+
+/// One pair's slice of the compiled model: where its SVs live in the
+/// shared pack and how to weigh them.
+#[derive(Debug, Clone)]
+pub struct PairTable {
+    pub pos_class: usize,
+    pub neg_class: usize,
+    pub bias: f32,
+    pub gamma: f32,
+    /// Global slots into the deduped SV pack, in the pair's ORIGINAL SV
+    /// order (load-bearing: the combine replays the legacy accumulation
+    /// order, which is what makes decisions bit-identical).
+    pub slots: Vec<u32>,
+    /// `alpha_i · y_i`, aligned with `slots`.
+    pub coefs: Vec<f32>,
+}
+
+/// An [`OvoModel`] compiled for serving: the deduplicated SV union packed
+/// once into feature-major panels, plus per-pair sparse coefficient
+/// tables. Immutable after compile — share it read-only across server
+/// worker threads (`Arc<CompiledModel>`).
+pub struct CompiledModel {
+    pub n_classes: usize,
+    pub d: usize,
+    pub class_names: Vec<String>,
+    /// Pair tables in the source model's `binaries` order (vote order).
+    pairs: Vec<PairTable>,
+    /// Distinct gammas across pairs (normally exactly one); each gets its
+    /// own shared kernel sweep.
+    gammas: Vec<f32>,
+    n_unique: usize,
+    /// Total SVs across pairs before dedup (the work the shared sweep
+    /// saves).
+    total_svs: usize,
+    /// The deduped SV matrix, owned and packed once.
+    view: DatasetView<'static>,
+}
+
+impl CompiledModel {
+    /// Compile an ensemble. Deterministic: same model (bit-for-bit) in,
+    /// same slot table out.
+    pub fn compile(model: &OvoModel) -> CompiledModel {
+        let d = model.d;
+        let mut unique: Vec<f32> = Vec::new();
+        let mut index: HashMap<Vec<u32>, u32> = HashMap::new();
+        let mut pairs = Vec::with_capacity(model.binaries.len());
+        let mut gammas: Vec<f32> = Vec::new();
+        let mut total_svs = 0usize;
+        for b in &model.binaries {
+            let mut slots = Vec::with_capacity(b.n_sv());
+            for i in 0..b.n_sv() {
+                let row = &b.sv[i * d..(i + 1) * d];
+                let key: Vec<u32> = row.iter().map(|v| v.to_bits()).collect();
+                let next = (unique.len() / d.max(1)) as u32;
+                let slot = *index.entry(key).or_insert_with(|| {
+                    unique.extend_from_slice(row);
+                    next
+                });
+                slots.push(slot);
+            }
+            total_svs += b.n_sv();
+            // Only pairs with SVs need a kernel sweep; a pure-bias pair's
+            // gamma never touches K (its combine is the bias alone).
+            if b.n_sv() > 0 && !gammas.iter().any(|g| g.to_bits() == b.gamma.to_bits()) {
+                gammas.push(b.gamma);
+            }
+            pairs.push(PairTable {
+                pos_class: b.pos_class,
+                neg_class: b.neg_class,
+                bias: b.bias,
+                gamma: b.gamma,
+                slots,
+                coefs: b.coef.clone(),
+            });
+        }
+        let n_unique = unique.len() / d.max(1);
+        let view = DatasetView::pack_owned(unique, n_unique, d);
+        CompiledModel {
+            n_classes: model.n_classes,
+            d: model.d,
+            class_names: model.class_names.clone(),
+            pairs,
+            gammas,
+            n_unique,
+            total_svs,
+            view,
+        }
+    }
+
+    /// The per-pair tables, in vote (`binaries`) order.
+    pub fn pairs(&self) -> &[PairTable] {
+        &self.pairs
+    }
+
+    pub fn n_pairs(&self) -> usize {
+        self.pairs.len()
+    }
+
+    /// Rows in the deduped SV pack.
+    pub fn n_unique(&self) -> usize {
+        self.n_unique
+    }
+
+    /// Total SVs across pairs before dedup; `total_svs() / n_unique()` is
+    /// the kernel-work amplification the shared sweep removes.
+    pub fn total_svs(&self) -> usize {
+        self.total_svs
+    }
+
+    /// Decision values for ALL pairs over a row-major batch, laid out
+    /// `out[qi * n_pairs + p]` — one shared panel sweep (per distinct
+    /// gamma among SV-carrying pairs) plus the per-pair sparse combines;
+    /// pure-bias pairs skip the kernel entirely. Bit-identical to calling
+    /// the legacy `decision_batch` on each binary.
+    pub fn decision_all_pairs(&self, q: &[f32], m: usize) -> Vec<f32> {
+        assert_eq!(q.len(), m * self.d, "query batch dim mismatch");
+        let p_count = self.pairs.len();
+        let nu = self.n_unique;
+        let mut out = vec![0.0f32; m * p_count];
+        let mut k = vec![0.0f32; m * nu];
+        for &gamma in &self.gammas {
+            self.view.cross_into(q, m, gamma, &mut k);
+            for (p, pair) in self.pairs.iter().enumerate() {
+                if pair.slots.is_empty() || pair.gamma.to_bits() != gamma.to_bits() {
+                    continue;
+                }
+                for qi in 0..m {
+                    let krow = &k[qi * nu..(qi + 1) * nu];
+                    let mut acc = pair.bias;
+                    for (slot, &c) in pair.slots.iter().zip(pair.coefs.iter()) {
+                        acc += c * krow[*slot as usize];
+                    }
+                    out[qi * p_count + p] = acc;
+                }
+            }
+        }
+        // Pure-bias pairs (their gammas are excluded from the sweeps).
+        for (p, pair) in self.pairs.iter().enumerate() {
+            if pair.slots.is_empty() {
+                for qi in 0..m {
+                    out[qi * p_count + p] = pair.bias;
+                }
+            }
+        }
+        out
+    }
+
+    /// The pairs' `(pos_class, neg_class)` ids, in vote order.
+    pub fn pair_classes(&self) -> Vec<(usize, usize)> {
+        self.pairs.iter().map(|p| (p.pos_class, p.neg_class)).collect()
+    }
+
+    /// OvO votes + accumulated |decision| margins per class for a batch
+    /// (same tie-breaking inputs as the legacy batch path, accumulated in
+    /// the same pair order via
+    /// [`crate::svm::multiclass::accumulate_ovo_votes`]).
+    pub fn vote_batch(&self, q: &[f32], m: usize) -> (Vec<Vec<u32>>, Vec<Vec<f64>>) {
+        let dec = self.decision_all_pairs(q, m);
+        super::multiclass::accumulate_ovo_votes(&dec, m, self.n_classes, &self.pair_classes())
+    }
+
+    /// Batched class prediction (the serving fast path).
+    pub fn predict_batch(&self, q: &[f32], m: usize) -> Vec<usize> {
+        let (votes, margins) = self.vote_batch(q, m);
+        (0..m).map(|qi| argmax_tiebreak(&votes[qi], &margins[qi])).collect()
+    }
+
+    /// Single-query prediction through the packed SVs (no per-call pack;
+    /// identical result to [`OvoModel::predict`]).
+    pub fn predict(&self, q: &[f32]) -> usize {
+        self.predict_batch(q, 1)[0]
+    }
+
+    /// Bytes held by the packed panel layout (0 until first evaluation —
+    /// packing is lazy).
+    pub fn packed_bytes(&self) -> usize {
+        self.view.packed_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::svm::model::BinaryModel;
+
+    fn model_with_shared_svs() -> OvoModel {
+        // 3 classes; rows deliberately shared across pairs bit-for-bit.
+        let r = |a: f32, b: f32| vec![a, b];
+        let rows = [r(0.0, 0.0), r(1.0, 0.5), r(-1.0, 0.25), r(0.5, -0.5)];
+        let bin = |pos: usize, neg: usize, idx: &[usize], coefs: &[f32], bias: f32| BinaryModel {
+            sv: idx.iter().flat_map(|&i| rows[i].clone()).collect(),
+            coef: coefs.to_vec(),
+            d: 2,
+            bias,
+            gamma: 0.7,
+            pos_class: pos,
+            neg_class: neg,
+        };
+        OvoModel::new(
+            3,
+            2,
+            vec![
+                bin(0, 1, &[0, 1, 2], &[0.5, -0.25, 1.0], 0.1),
+                bin(0, 2, &[1, 3], &[1.5, -0.75], -0.2),
+                bin(1, 2, &[2, 3, 0], &[0.3, 0.6, -0.9], 0.0),
+            ],
+            vec!["a".into(), "b".into(), "c".into()],
+        )
+    }
+
+    #[test]
+    fn dedup_counts_shared_rows_once() {
+        let m = model_with_shared_svs();
+        let c = m.compile();
+        assert_eq!(c.total_svs(), 8);
+        assert_eq!(c.n_unique(), 4); // 4 distinct rows across 8 SV uses
+        assert_eq!(c.n_pairs(), 3);
+        // Slots preserve each pair's original SV order.
+        assert_eq!(c.pairs()[0].slots, vec![0, 1, 2]);
+        assert_eq!(c.pairs()[1].slots, vec![1, 3]);
+        assert_eq!(c.pairs()[2].slots, vec![2, 3, 0]);
+    }
+
+    #[test]
+    fn decisions_match_legacy_bitwise() {
+        let m = model_with_shared_svs();
+        let c = m.compile();
+        let q = vec![0.2f32, -0.1, 1.3, 0.9, -0.4, 0.0];
+        let got = c.decision_all_pairs(&q, 3);
+        let want = m.decision_all_pairs(&q, 3);
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(want.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Predictions against the legacy batch surface (NOT OvoModel::
+        // predict, whose single-query kernel takes the sub-square-
+        // accumulate form and can differ in low bits).
+        let (v, mg) = super::multiclass::accumulate_ovo_votes(&want, 3, 3, &c.pair_classes());
+        for (qi, &p) in c.predict_batch(&q, 3).iter().enumerate() {
+            assert_eq!(p, argmax_tiebreak(&v[qi], &mg[qi]), "row {qi}");
+        }
+    }
+
+    #[test]
+    fn zero_sv_pair_and_single_class_compile_cleanly() {
+        // A pair that converged to pure bias (no SVs) still votes.
+        let empty = BinaryModel {
+            sv: vec![],
+            coef: vec![],
+            d: 1,
+            bias: -0.5,
+            gamma: 1.0,
+            pos_class: 0,
+            neg_class: 1,
+        };
+        let m = OvoModel::new(2, 1, vec![empty], vec!["a".into(), "b".into()]);
+        let c = m.compile();
+        assert_eq!(c.n_unique(), 0);
+        let dec = c.decision_all_pairs(&[0.3], 1);
+        assert_eq!(dec[0].to_bits(), (-0.5f32).to_bits());
+        assert_eq!(c.predict(&[0.3]), m.predict(&[0.3]));
+
+        // Degenerate single-class ensemble: zero pairs, class 0 wins.
+        let one = OvoModel::new(1, 1, vec![], vec!["only".into()]);
+        let c1 = one.compile();
+        assert_eq!(c1.n_pairs(), 0);
+        assert!(c1.decision_all_pairs(&[0.0, 1.0], 2).is_empty());
+        assert_eq!(c1.predict_batch(&[0.0, 1.0], 2), vec![0, 0]);
+    }
+
+    #[test]
+    fn mixed_gamma_pairs_each_use_their_own_kernel() {
+        let sv = vec![1.0f32, -1.0];
+        let mk = |gamma: f32, pos: usize, neg: usize| BinaryModel {
+            sv: sv.clone(),
+            coef: vec![0.8, -0.3],
+            d: 1,
+            bias: 0.05,
+            gamma,
+            pos_class: pos,
+            neg_class: neg,
+        };
+        let m = OvoModel::new(
+            3,
+            1,
+            vec![mk(0.5, 0, 1), mk(2.0, 0, 2), mk(0.5, 1, 2)],
+            vec!["a".into(), "b".into(), "c".into()],
+        );
+        let c = m.compile();
+        assert_eq!(c.n_unique(), 2); // shared rows dedup across gammas
+        let q = vec![0.25f32, -0.75];
+        let got = c.decision_all_pairs(&q, 2);
+        let want = m.decision_all_pairs(&q, 2);
+        for (a, b) in got.iter().zip(want.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

@@ -63,9 +63,13 @@ pub fn rbf_gram(x: &[f32], n: usize, d: usize, gamma: f32) -> Vec<f32> {
 /// ([`crate::svm::solver::panel::DatasetView`]): `x` is packed once, then
 /// query rows are evaluated four per blocked sweep. Single-query calls
 /// keep the direct scalar loop (packing O(n·d) to evaluate one O(n·d) row
-/// would double the work). Both paths produce identical bits — the panel
-/// lanes replay the scalar per-element expression and accumulation order
-/// exactly (no diagonal shortcut here: queries are arbitrary points).
+/// would double the work — callers that evaluate many single queries
+/// against a *fixed* matrix should hold a pack instead, which is exactly
+/// what the compiled serve engine does; see
+/// [`crate::svm::compile::CompiledModel`]). Both paths produce identical
+/// bits — the panel lanes replay the scalar per-element expression and
+/// accumulation order exactly (no diagonal shortcut here: queries are
+/// arbitrary points).
 pub fn rbf_cross(q: &[f32], m: usize, x: &[f32], n: usize, d: usize, gamma: f32) -> Vec<f32> {
     assert_eq!(q.len(), m * d);
     assert_eq!(x.len(), n * d);

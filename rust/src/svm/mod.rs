@@ -7,6 +7,7 @@
 //!  3. an artifact-free fallback so the coordinator works without `make
 //!     artifacts` (used widely by unit tests).
 
+pub mod compile;
 pub mod gd;
 pub mod kernel;
 pub mod model;
@@ -16,6 +17,7 @@ pub mod smo;
 pub mod solver;
 pub mod tune;
 
+pub use compile::CompiledModel;
 pub use model::{BinaryModel, TrainStats};
 pub use multiclass::OvoModel;
 pub use solver::{DistributedSmo, DualSolver, EngineConfig, KernelSource, Selection};

@@ -72,6 +72,17 @@ impl BinaryModel {
         self.coef.len()
     }
 
+    /// Squared SV norms in SV order — the expanded-identity hoist shared
+    /// (expression-for-expression, hence bit-for-bit) with the packed
+    /// panel layout the compiled inference engine builds over the deduped
+    /// SV union ([`crate::svm::compile::CompiledModel`]).
+    pub fn sv_norms(&self) -> Vec<f32> {
+        let d = self.d;
+        (0..self.n_sv())
+            .map(|i| self.sv[i * d..(i + 1) * d].iter().map(|v| v * v).sum())
+            .collect()
+    }
+
     /// Decision value for a single query row.
     pub fn decision(&self, q: &[f32]) -> f32 {
         debug_assert_eq!(q.len(), self.d);
@@ -101,11 +112,8 @@ impl BinaryModel {
     pub fn decision_batch(&self, q: &[f32], m: usize) -> Vec<f32> {
         assert_eq!(q.len(), m * self.d);
         let d = self.d;
-        let n_sv = self.n_sv();
         // Hoisted per-call: O(n_sv * d), amortized over the batch.
-        let sv_norms: Vec<f32> = (0..n_sv)
-            .map(|i| self.sv[i * d..(i + 1) * d].iter().map(|v| v * v).sum())
-            .collect();
+        let sv_norms = self.sv_norms();
         let mut out = Vec::with_capacity(m);
         for qi in 0..m {
             let qrow = &q[qi * d..(qi + 1) * d];

@@ -64,6 +64,57 @@ impl OvoModel {
     pub fn total_svs(&self) -> usize {
         self.binaries.iter().map(|b| b.n_sv()).sum()
     }
+
+    /// Compile into the shared-SV panel-packed inference engine
+    /// ([`crate::svm::compile::CompiledModel`]): the SV union is deduped
+    /// and packed once, so serving pays `|unique SVs|·d` kernel work per
+    /// query instead of `Σ_p |SV_p|·d`. Votes and decision values are
+    /// bit-identical to this model's per-pair path.
+    pub fn compile(&self) -> crate::svm::compile::CompiledModel {
+        crate::svm::compile::CompiledModel::compile(self)
+    }
+
+    /// Legacy per-pair batched decisions, laid out `out[qi * n_pairs + p]`
+    /// with pairs in `binaries` order — the reference surface the compiled
+    /// engine is property-tested against (and the serve bench's baseline).
+    pub fn decision_all_pairs(&self, q: &[f32], m: usize) -> Vec<f32> {
+        let p_count = self.binaries.len();
+        let mut out = vec![0.0f32; m * p_count];
+        for (p, b) in self.binaries.iter().enumerate() {
+            let dec = b.decision_batch(q, m);
+            for (qi, &v) in dec.iter().enumerate() {
+                out[qi * p_count + p] = v;
+            }
+        }
+        out
+    }
+}
+
+/// Accumulate OvO votes + |decision| margins per query row from a
+/// row-major `m × n_pairs` decision matrix. `pair_classes[p]` is pair
+/// `p`'s `(pos_class, neg_class)`. The ONE accumulation loop shared by
+/// the legacy serve path, the compiled engine and its tests — per row,
+/// margins add in ascending pair order, so every caller agrees
+/// bit-for-bit.
+pub fn accumulate_ovo_votes(
+    dec: &[f32],
+    m: usize,
+    n_classes: usize,
+    pair_classes: &[(usize, usize)],
+) -> (Vec<Vec<u32>>, Vec<Vec<f64>>) {
+    let p_count = pair_classes.len();
+    assert_eq!(dec.len(), m * p_count, "decision matrix shape");
+    let mut votes = vec![vec![0u32; n_classes]; m];
+    let mut margins = vec![vec![0.0f64; n_classes]; m];
+    for qi in 0..m {
+        for (p, &(pos, neg)) in pair_classes.iter().enumerate() {
+            let v = dec[qi * p_count + p];
+            let winner = if v > 0.0 { pos } else { neg };
+            votes[qi][winner] += 1;
+            margins[qi][winner] += v.abs() as f64;
+        }
+    }
+    (votes, margins)
 }
 
 /// Deterministic argmax: most votes, then largest accumulated margin, then

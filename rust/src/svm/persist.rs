@@ -7,6 +7,16 @@
 //!   "binaries": [ { "pos": 0, "neg": 1, "bias": ..., "gamma": ...,
 //!                   "coef": [...], "sv": [...flat row-major...] } ] }
 //! ```
+//!
+//! Round-trips are **value-exact**: f32 payloads widen to f64 (lossless),
+//! the writer emits shortest-round-trip decimal (`Display` for f64) and
+//! the parser is correctly rounded, so every SV/coef/bias/gamma bit
+//! survives save → load. That exactness is load-bearing for the compiled
+//! inference engine: [`super::compile::CompiledModel`] deduplicates SVs
+//! by exact bit pattern and assigns slots by first occurrence in
+//! `binaries` order (which this format preserves), so a persisted model
+//! *recompiles* to the identical slot table and decision surface
+//! (pinned by `tests/compiled_serve.rs` and the test below).
 
 use std::path::Path;
 
@@ -147,6 +157,33 @@ mod tests {
         let back = load(&path).unwrap();
         assert_eq!(back.binaries.len(), 3);
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn roundtrip_preserves_every_model_bit() {
+        // Value-exact round-trip is what makes recompilation
+        // deterministic; check it field by field, bit by bit.
+        let m = trained();
+        let back = from_json(&to_json(&m)).unwrap();
+        assert_eq!(back.binaries.len(), m.binaries.len());
+        for (a, b) in m.binaries.iter().zip(back.binaries.iter()) {
+            assert_eq!(a.bias.to_bits(), b.bias.to_bits());
+            assert_eq!(a.gamma.to_bits(), b.gamma.to_bits());
+            assert_eq!(
+                a.sv.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                b.sv.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+            assert_eq!(
+                a.coef.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                b.coef.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+        }
+        // Hence: identical compile tables on both sides.
+        let (ca, cb) = (m.compile(), back.compile());
+        assert_eq!(ca.n_unique(), cb.n_unique());
+        for (pa, pb) in ca.pairs().iter().zip(cb.pairs().iter()) {
+            assert_eq!(pa.slots, pb.slots);
+        }
     }
 
     #[test]

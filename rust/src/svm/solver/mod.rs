@@ -82,6 +82,18 @@
 //! the ablation baseline (`scalar` vs `panel` vs `panel+fused` rows in
 //! `BENCH_solver.json`).
 //!
+//! The same packed layout now serves *inference* too: the compiled
+//! engine ([`crate::svm::compile::CompiledModel`]) deduplicates the SV
+//! union across all OvO pairs into one model-lifetime
+//! [`panel::DatasetView`] (via [`panel::DatasetView::pack_owned`]) and
+//! evaluates whole serve batches — single queries included — through
+//! [`panel::DatasetView::cross_into`], with per-pair sparse coefficient
+//! combines replacing the per-pair kernel passes. See `serve` for the
+//! migration story. The dense Gram build additionally exploits symmetry
+//! now: [`panel::DatasetView::gram`] evaluates the upper triangle and
+//! mirrors (bit-safe by operand commutativity — the ROADMAP's
+//! gram-symmetry item).
+//!
 //! # Distributed → hierarchical: split, don't spawn
 //!
 //! Through PR 2, [`DistributedSmo::solve`] *spawned* a private, unrelated

@@ -51,11 +51,18 @@
 //!    value is identical;
 //!  * the fused f-update applies `f[t] += ci·v_i + cj·v_j` with the same
 //!    f64 expression, over ascending `t`, using the very lane values the
-//!    two-pass code would have re-read from the materialized rows.
+//!    two-pass code would have re-read from the materialized rows;
+//!  * the symmetric Gram build ([`DatasetView::gram`]) evaluates only the
+//!    upper triangle and mirrors — exactly what the scalar oracle does —
+//!    which is bit-safe because the transposed entry is the same
+//!    expression with commuted operands (f32 `a·b`/`a+b` are
+//!    operand-commutative under IEEE-754).
 //!
 //! Property tests (`tests/panel_kernel.rs`) pin all of this bitwise
 //! against `rbf_row_into` / `rbf_gram` for random shapes, windows, gamma
 //! (including 0), and block sizes.
+
+use std::borrow::Cow;
 
 use super::slice::RowSlice;
 
@@ -106,7 +113,10 @@ impl Lane {
 /// full problem so any global row can act as a query.
 pub struct DatasetView<'a> {
     /// The original row-major matrix (query rows are read from here).
-    x: &'a [f32],
+    /// Borrowed for per-solve packs; owned (`'static`) when the view IS
+    /// the long-lived storage, as in the compiled inference engine's
+    /// deduplicated SV pack ([`crate::svm::compile::CompiledModel`]).
+    x: Cow<'a, [f32]>,
     n: usize,
     d: usize,
     /// Global column window the panels cover.
@@ -128,9 +138,21 @@ impl<'a> DatasetView<'a> {
         DatasetView::pack_window(x, n, d, RowSlice::full(n))
     }
 
+    /// Pack a matrix the view takes ownership of — the model-lifetime
+    /// layout: the compiled inference engine packs its deduplicated SV
+    /// union ONCE at compile time and reuses the panels for every batch,
+    /// so the view must outlive any borrowed source.
+    pub fn pack_owned(x: Vec<f32>, n: usize, d: usize) -> DatasetView<'static> {
+        DatasetView::pack_cow(Cow::Owned(x), n, d, RowSlice::full(n))
+    }
+
     /// Pack only the panels covering the column window `cols` (the
     /// distributed per-rank layout; see [`super::cache::KernelCache::new_slice`]).
     pub fn pack_window(x: &'a [f32], n: usize, d: usize, cols: RowSlice) -> DatasetView<'a> {
+        DatasetView::pack_cow(Cow::Borrowed(x), n, d, cols)
+    }
+
+    fn pack_cow(x: Cow<'a, [f32]>, n: usize, d: usize, cols: RowSlice) -> DatasetView<'a> {
         assert_eq!(x.len(), n * d);
         assert!(cols.hi <= n, "window [{}, {}) exceeds n={n}", cols.lo, cols.hi);
         let norms: Vec<f32> = (0..n)
@@ -171,8 +193,8 @@ impl<'a> DatasetView<'a> {
     }
 
     /// The raw row-major matrix the view was packed from.
-    pub fn x(&self) -> &'a [f32] {
-        self.x
+    pub fn x(&self) -> &[f32] {
+        &self.x
     }
 
     /// Precomputed squared row norms (full length `n`).
@@ -294,30 +316,46 @@ impl<'a> DatasetView<'a> {
     /// Full dense Gram matrix (full-window views only): rows banded across
     /// threads, each band evaluated four query rows per panel sweep.
     /// Bit-identical to [`crate::svm::kernel::rbf_gram`].
+    ///
+    /// Exploits symmetry the same way the scalar oracle does: each band
+    /// evaluates only the panels from its block's diagonal onward (the
+    /// upper triangle, rounded down to the block's panel boundary) and the
+    /// strict lower triangle is mirrored afterwards. Mirroring preserves
+    /// bit-identity because the transposed accumulation is the *same* f32
+    /// expression: `K(j,i)` sums `x_j[c]·x_i[c]` over ascending `c` while
+    /// `K(i,j)` sums `x_i[c]·x_j[c]` — IEEE-754 multiplication and
+    /// addition are commutative operand-for-operand, so both dots (and the
+    /// `norms[i]+norms[j]` / `norms[j]+norms[i]` finishes) produce
+    /// identical bits. `rbf_gram` itself mirrors its upper triangle, so no
+    /// full-build fallback is needed (`tests/panel_kernel.rs` pins the
+    /// transposed order bitwise).
     pub fn gram(&self, gamma: f32, threads: usize) -> Vec<f32> {
         assert!(self.cols.lo == 0 && self.cols.hi == self.n, "gram needs a full-window view");
         let n = self.n;
         let mut k = vec![0.0f32; n * n];
         let threads = threads.max(1).min(n.max(1));
         if threads <= 1 || n * self.d < 2 * PAR_MIN_ELEMS {
-            self.gram_band(0, gamma, &mut k);
-            return k;
-        }
-        // Force the lazy pack before fanning out so the workers start on
-        // an already-built layout instead of serializing on the init.
-        let _ = self.panels_data();
-        let bands = RowSlice::partition(n, threads);
-        std::thread::scope(|s| {
-            let mut rest = k.as_mut_slice();
-            for band in bands {
-                if band.is_empty() {
-                    continue;
+            self.gram_band_upper(0, gamma, &mut k);
+        } else {
+            // Force the lazy pack before fanning out so the workers start
+            // on an already-built layout instead of serializing on the
+            // init. Bands are area-balanced: upper-triangle row `i` costs
+            // ~`n - i` entries, so equal-row bands would starve the tail.
+            let _ = self.panels_data();
+            let bands = triangle_bands(n, threads);
+            std::thread::scope(|s| {
+                let mut rest = k.as_mut_slice();
+                for band in bands {
+                    if band.is_empty() {
+                        continue;
+                    }
+                    let (chunk, tail) = rest.split_at_mut(band.len() * n);
+                    s.spawn(move || self.gram_band_upper(band.lo, gamma, chunk));
+                    rest = tail;
                 }
-                let (chunk, tail) = rest.split_at_mut(band.len() * n);
-                s.spawn(move || self.gram_band(band.lo, gamma, chunk));
-                rest = tail;
-            }
-        });
+            });
+        }
+        mirror_lower(&mut k, n);
         k
     }
 
@@ -350,23 +388,31 @@ impl<'a> DatasetView<'a> {
 
     /// One band of Gram rows starting at global row `row0` into `out`
     /// (`band_rows × n`), blocked [`GRAM_BLOCK`] query rows per sweep.
-    fn gram_band(&self, row0: usize, gamma: f32, out: &mut [f32]) {
+    /// Each block evaluates only the panels from its first row's diagonal
+    /// panel onward — columns `[panel_floor(i0), n)` — leaving the strict
+    /// lower triangle for the mirror pass. (Within a block, a handful of
+    /// sub-diagonal entries in the leading panel are computed anyway; the
+    /// mirror overwrites them with bitwise-equal values.)
+    fn gram_band_upper(&self, row0: usize, gamma: f32, out: &mut [f32]) {
         let n = self.n;
         let rows = out.len() / n.max(1);
         let mut r = 0usize;
         while r < rows {
             let b = (rows - r).min(GRAM_BLOCK);
+            let p0 = (row0 + r) / LANES;
+            let col0 = p0 * LANES;
             let queries: Vec<&[f32]> = (0..b).map(|t| self.query(row0 + r + t)).collect();
             let qnorms: Vec<f32> = (0..b).map(|t| self.norms[row0 + r + t]).collect();
             let diags: Vec<usize> = (0..b).map(|t| row0 + r + t).collect();
             let mut outs: Vec<&mut [f32]> = Vec::with_capacity(b);
             let mut rest = &mut out[r * n..(r + b) * n];
             for _ in 0..b {
-                let (head, tail) = rest.split_at_mut(n);
+                let (_skip, from_col0) = rest.split_at_mut(col0);
+                let (head, tail) = from_col0.split_at_mut(n - col0);
                 outs.push(head);
                 rest = tail;
             }
-            self.eval_block(&queries, &qnorms, &diags, gamma, 0, &mut outs);
+            self.eval_block(&queries, &qnorms, &diags, gamma, p0, &mut outs);
             r += b;
         }
     }
@@ -526,6 +572,41 @@ const GRAM_BLOCK: usize = 4;
 /// Minimum per-chunk flops (elements × d) before a panel fill is worth a
 /// scoped thread — mirrors [`super::parallel::MIN_CHUNK`].
 const PAR_MIN_ELEMS: usize = 4096;
+
+/// Copy the strict upper triangle onto the strict lower one — the scalar
+/// oracle's ([`crate::svm::kernel::rbf_gram`]) own construction, bit-safe
+/// by operand commutativity (see [`DatasetView::gram`]).
+fn mirror_lower(k: &mut [f32], n: usize) {
+    for i in 1..n {
+        for j in 0..i {
+            k[i * n + j] = k[j * n + i];
+        }
+    }
+}
+
+/// Split `[0, n)` into `pieces` ascending bands whose *upper-triangle*
+/// areas are roughly equal (row `i` of a symmetric build costs ~`n - i`
+/// entries, so equal-row bands would leave the last thread nearly idle).
+fn triangle_bands(n: usize, pieces: usize) -> Vec<RowSlice> {
+    let pieces = pieces.max(1);
+    let total = n as f64 * (n as f64 + 1.0) / 2.0;
+    let mut out = Vec::with_capacity(pieces);
+    let mut lo = 0usize;
+    for p in 1..=pieces {
+        let hi = if p == pieces {
+            n
+        } else {
+            // Area of rows [0, hi) is total - (n-hi)(n-hi+1)/2; aim it at
+            // p/pieces of the total: n-hi ≈ sqrt(2·(1 - p/pieces)·total).
+            let rem = total * (1.0 - p as f64 / pieces as f64);
+            let tail = (2.0 * rem).sqrt().round() as usize;
+            n.saturating_sub(tail).clamp(lo, n)
+        };
+        out.push(RowSlice::new(lo, hi));
+        lo = hi;
+    }
+    out
+}
 
 /// One thread's chunk: its first panel index and window-local row range.
 struct PanelRange {
@@ -744,6 +825,50 @@ mod tests {
         let g = v.gram(1.3, 4);
         for (a, b) in g.iter().zip(dense.iter()) {
             assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn triangle_bands_cover_ascending_and_balance_area() {
+        for n in [0usize, 1, 7, 64, 331] {
+            for pieces in [1usize, 2, 4, 7] {
+                let bands = triangle_bands(n, pieces);
+                assert_eq!(bands.len(), pieces);
+                let mut next = 0usize;
+                for b in &bands {
+                    assert_eq!(b.lo, next, "n={n} pieces={pieces}");
+                    next = b.hi;
+                }
+                assert_eq!(next, n, "n={n} pieces={pieces}");
+                if n >= 8 * pieces {
+                    // Every band carries a nontrivial share of the area.
+                    let area = |b: &RowSlice| (b.lo..b.hi).map(|i| n - i).sum::<usize>();
+                    let target = n * (n + 1) / 2 / pieces;
+                    for b in &bands {
+                        assert!(area(b) >= target / 4, "n={n} pieces={pieces} band={b:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_gram_mirror_matches_direct_lower_triangle_bitwise() {
+        // The mirror pass writes K[i][j] = K[j][i]; pin that a *direct*
+        // evaluation of the transposed entry produces the same bits
+        // (operand commutativity of the f32 dot/finish), so the symmetric
+        // build needs no full-build fallback.
+        let (n, d, gamma) = (37, 6, 0.9);
+        let x = random_x(n, d, 12);
+        let v = DatasetView::pack(&x, n, d);
+        let g = v.gram(gamma, 2);
+        let norms = v.norms().to_vec();
+        for i in 0..n {
+            for j in 0..i {
+                let direct = crate::svm::solver::parallel::rbf_entry(&x, &norms, i, j, d, gamma);
+                assert_eq!(g[i * n + j].to_bits(), direct.to_bits(), "({i},{j})");
+                assert_eq!(g[i * n + j].to_bits(), g[j * n + i].to_bits(), "({i},{j})");
+            }
         }
     }
 

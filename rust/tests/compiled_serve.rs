@@ -1,0 +1,216 @@
+//! Compiled-vs-legacy inference equivalence: the shared-SV compiled
+//! engine must reproduce the per-pair decision path **bitwise** — decision
+//! values, votes, margins and predictions — on random ensembles (shared
+//! and disjoint SV sets, zero-SV pairs, mixed gammas, single-class and
+//! m == 1 edges), the sharded server must answer identically for any
+//! worker count, and persisted models must recompile deterministically.
+//! Replay failures with PARASVM_PROP_SEED=<seed>.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use parasvm::backend::{NativeBackend, SvmBackend};
+use parasvm::coordinator::{train_multiclass, TrainConfig};
+use parasvm::data::{self, scale::Scaler};
+use parasvm::harness::hyperparams_for;
+use parasvm::serve::{BatchPolicy, Server};
+use parasvm::svm::model::BinaryModel;
+use parasvm::svm::multiclass::{accumulate_ovo_votes, argmax_tiebreak, ovo_pairs};
+use parasvm::svm::solver::RowSlice;
+use parasvm::svm::OvoModel;
+use parasvm::util::prop::{check, usize_in, Config};
+use parasvm::util::rng::Rng;
+
+fn cfg(cases: usize) -> Config {
+    Config { cases, ..Default::default() }
+}
+
+/// Random OvO ensemble over a shared SV pool: pairs draw overlapping
+/// subsets (so dedup has real work), may have zero SVs, and may disagree
+/// on gamma.
+fn random_ovo(rng: &mut Rng) -> OvoModel {
+    let n_classes = usize_in(rng, 1, 4);
+    let d = usize_in(rng, 1, 7);
+    let pool_n = usize_in(rng, 1, 12);
+    let pool: Vec<Vec<f32>> = (0..pool_n)
+        .map(|_| (0..d).map(|_| rng.normal()).collect())
+        .collect();
+    let mut binaries = Vec::new();
+    for (a, b) in ovo_pairs(n_classes) {
+        let n_sv = rng.below(6); // 0..=5, zero-SV pairs included
+        let mut sv = Vec::with_capacity(n_sv * d);
+        let mut coef = Vec::with_capacity(n_sv);
+        for _ in 0..n_sv {
+            sv.extend_from_slice(&pool[rng.below(pool_n)]);
+            coef.push(rng.normal());
+        }
+        let gamma = if rng.below(5) == 0 { 0.0 } else { 0.1 + rng.f32() };
+        binaries.push(BinaryModel {
+            sv,
+            coef,
+            d,
+            bias: rng.normal(),
+            gamma,
+            pos_class: a,
+            neg_class: b,
+        });
+    }
+    let names = (0..n_classes).map(|c| format!("c{c}")).collect();
+    OvoModel::new(n_classes, d, binaries, names)
+}
+
+fn random_queries(rng: &mut Rng, m: usize, d: usize) -> Vec<f32> {
+    (0..m * d).map(|_| rng.normal()).collect()
+}
+
+#[test]
+fn prop_compiled_decisions_and_votes_match_legacy_bitwise() {
+    check("compiled == legacy (bits)", cfg(48), |rng| {
+        let model = random_ovo(rng);
+        let compiled = model.compile();
+        let d = model.d;
+        let m = usize_in(rng, 1, 9); // includes the m == 1 fast path
+        let q = random_queries(rng, m, d);
+
+        let got = compiled.decision_all_pairs(&q, m);
+        let want = model.decision_all_pairs(&q, m);
+        assert_eq!(got.len(), want.len());
+        for (t, (a, b)) in got.iter().zip(want.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "decision [{t}]: {a} vs {b}");
+        }
+
+        // Reference votes come from the legacy BATCH path (the surface
+        // the engine mirrors bit-for-bit) — NOT from OvoModel::vote,
+        // whose single-query kernel uses the sub-square-accumulate form
+        // and may differ in low bits on adversarial random models.
+        let pair_classes: Vec<(usize, usize)> =
+            model.binaries.iter().map(|b| (b.pos_class, b.neg_class)).collect();
+        let (v_ref, m_ref) = accumulate_ovo_votes(&want, m, model.n_classes, &pair_classes);
+        let (votes, margins) = compiled.vote_batch(&q, m);
+        for qi in 0..m {
+            assert_eq!(votes[qi], v_ref[qi], "votes row {qi}");
+            for (c, (a, b)) in margins[qi].iter().zip(m_ref[qi].iter()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "margin row {qi} class {c}");
+            }
+        }
+        let preds = compiled.predict_batch(&q, m);
+        for qi in 0..m {
+            assert_eq!(preds[qi], argmax_tiebreak(&v_ref[qi], &m_ref[qi]), "predict row {qi}");
+            let row = &q[qi * d..(qi + 1) * d];
+            assert_eq!(compiled.predict(row), preds[qi], "m==1 path row {qi}");
+        }
+    });
+}
+
+#[test]
+fn prop_row_sharded_decisions_are_split_invariant() {
+    // The server splits batches by rows across workers; the compiled
+    // surface must not care where the split lands.
+    check("shard split invariance (bits)", cfg(32), |rng| {
+        let model = random_ovo(rng);
+        let compiled = model.compile();
+        let d = model.d;
+        let m = usize_in(rng, 2, 24);
+        let q = random_queries(rng, m, d);
+        let whole = compiled.decision_all_pairs(&q, m);
+        let parts = usize_in(rng, 2, 5);
+        let p_count = compiled.n_pairs();
+        let mut stitched = vec![0.0f32; whole.len()];
+        for rows in RowSlice::partition(m, parts) {
+            if rows.is_empty() {
+                continue;
+            }
+            let dec = compiled.decision_all_pairs(&q[rows.lo * d..rows.hi * d], rows.len());
+            stitched[rows.lo * p_count..rows.hi * p_count].copy_from_slice(&dec);
+        }
+        for (t, (a, b)) in stitched.iter().zip(whole.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "[{t}]");
+        }
+    });
+}
+
+#[test]
+fn prop_compilation_is_deterministic() {
+    check("compile twice == same tables", cfg(24), |rng| {
+        let model = random_ovo(rng);
+        let (a, b) = (model.compile(), model.compile());
+        assert_eq!(a.n_unique(), b.n_unique());
+        assert_eq!(a.total_svs(), b.total_svs());
+        for (pa, pb) in a.pairs().iter().zip(b.pairs().iter()) {
+            assert_eq!(pa.slots, pb.slots);
+            assert_eq!(
+                pa.coefs.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                pb.coefs.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    });
+}
+
+fn trained(dataset: &str) -> (OvoModel, parasvm::data::Dataset) {
+    let ds = data::by_name(dataset, 42).unwrap();
+    let ds = Scaler::fit_minmax(&ds).apply(&ds);
+    let be: Arc<dyn SvmBackend> = Arc::new(NativeBackend::new());
+    let cfg = TrainConfig { workers: 2, params: hyperparams_for(&ds), ..Default::default() };
+    let (model, _) = train_multiclass(&ds, be, &cfg).unwrap();
+    (model, ds)
+}
+
+#[test]
+fn trained_iris_model_compiles_to_the_same_decision_surface() {
+    let (model, ds) = trained("iris");
+    let compiled = model.compile();
+    // Real OvO models share heavily: every class's points sit in 2 of the
+    // 3 pair problems, so the union must be smaller than the sum.
+    assert!(compiled.n_unique() < compiled.total_svs(), "no SV sharing on iris?");
+    let got = compiled.decision_all_pairs(&ds.x, ds.n);
+    let want = model.decision_all_pairs(&ds.x, ds.n);
+    for (t, (a, b)) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "[{t}]");
+    }
+    for i in (0..ds.n).step_by(9) {
+        assert_eq!(compiled.predict(ds.row(i)), model.predict(ds.row(i)), "row {i}");
+    }
+}
+
+#[test]
+fn persisted_models_recompile_deterministically() {
+    let (model, ds) = trained("iris");
+    let c1 = model.compile();
+    let back = parasvm::svm::persist::from_json(&parasvm::svm::persist::to_json(&model)).unwrap();
+    let c2 = back.compile();
+    // Same dedup table (JSON round-trips f32 exactly), same decisions.
+    assert_eq!(c1.n_unique(), c2.n_unique());
+    for (pa, pb) in c1.pairs().iter().zip(c2.pairs().iter()) {
+        assert_eq!(pa.slots, pb.slots);
+    }
+    let a = c1.decision_all_pairs(&ds.x, ds.n);
+    let b = c2.decision_all_pairs(&ds.x, ds.n);
+    for (t, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "[{t}]");
+    }
+}
+
+#[test]
+fn sharded_server_answers_identically_for_any_worker_count() {
+    let (model, ds) = trained("wdbc");
+    let policy = BatchPolicy { max_batch: 256, max_wait: Duration::from_millis(40) };
+    let mut answers: Vec<Vec<(usize, Vec<u32>)>> = Vec::new();
+    for workers in [1usize, 4] {
+        let server = Server::start_compiled(model.clone(), policy, workers);
+        // Async flood so the batcher forms batches big enough to shard
+        // (>= 64 rows for 4 workers).
+        let rxs: Vec<_> = (0..200)
+            .map(|i| server.submit(ds.row(i % ds.n).to_vec()).unwrap())
+            .collect();
+        let got: Vec<(usize, Vec<u32>)> = rxs
+            .into_iter()
+            .map(|rx| {
+                let r = rx.recv().unwrap();
+                (r.class, r.votes)
+            })
+            .collect();
+        answers.push(got);
+        server.shutdown();
+    }
+    assert_eq!(answers[0], answers[1], "workers=1 vs workers=4 diverged");
+}

@@ -119,6 +119,36 @@ fn prop_panel_gram_matches_dense_oracle_bitwise() {
 }
 
 #[test]
+fn prop_transposed_accumulation_order_is_bitwise_safe() {
+    // The symmetric gram build evaluates only the upper triangle and
+    // mirrors K[j][i] into K[i][j]. That is only sound because the
+    // transposed entry is the same f32 expression with commuted operands:
+    // K(i,j) sums x_i[c]·x_j[c] and K(j,i) sums x_j[c]·x_i[c], both over
+    // ascending c, and IEEE-754 mul/add are operand-commutative. Pin it:
+    // a direct evaluation of every transposed entry must equal the
+    // mirrored one bit-for-bit (no fallback to a full build is needed).
+    check("K(i,j) == K(j,i) (bits)", cfg(48), |rng| {
+        let n = usize_in(rng, 2, 3 * LANES + 3);
+        let d = usize_in(rng, 1, 9);
+        let gamma = random_gamma(rng);
+        let x = random_x(rng, n, d);
+        let norms: Vec<f32> = (0..n)
+            .map(|i| x[i * d..(i + 1) * d].iter().map(|v| v * v).sum())
+            .collect();
+        let g = parallel::rbf_gram_parallel(&x, n, d, gamma, usize_in(rng, 1, 3));
+        for _ in 0..8 {
+            let i = rng.below(n);
+            let j = rng.below(n);
+            let direct = parallel::rbf_entry(&x, &norms, i, j, d, gamma);
+            let transposed = parallel::rbf_entry(&x, &norms, j, i, d, gamma);
+            assert_eq!(direct.to_bits(), transposed.to_bits(), "entry ({i},{j})");
+            assert_eq!(g[i * n + j].to_bits(), direct.to_bits(), "gram ({i},{j})");
+            assert_eq!(g[i * n + j].to_bits(), g[j * n + i].to_bits(), "mirror ({i},{j})");
+        }
+    });
+}
+
+#[test]
 fn prop_pair_fill_and_fused_update_match_two_pass_bitwise() {
     check("fused pair update == two-pass (bits)", cfg(48), |rng| {
         let n = usize_in(rng, 2, 5 * LANES);
