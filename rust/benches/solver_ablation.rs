@@ -1,11 +1,12 @@
-//! Solver-engine ablation bench: dense vs the cached engine's three
-//! row-evaluation paths (scalar vs panel vs panel+fused-update) vs
-//! cached+shrink vs parallel working-set SMO on the Pavia subset, the
-//! row-sharded distributed engine at 1/2/4 ranks vs the single-rank
-//! cached engine, sequential- vs concurrent-pair OvO multiclass on a
-//! 4-worker universe, plus the serve-throughput comparison (legacy
-//! per-pair path vs the compiled shared-SV engine at 1 and 2 shard
-//! workers on iris/wdbc).
+//! Solver-engine ablation bench: dense vs the cached engine's four
+//! row-evaluation paths (scalar vs panel vs panel+fused-update vs the
+//! relaxed explicit-SIMD tier) vs cached+shrink vs parallel working-set
+//! SMO on the Pavia subset, the row-sharded distributed engine at 1/2/4
+//! ranks vs the single-rank cached engine, sequential- vs
+//! concurrent-pair OvO multiclass on a 4-worker universe, plus the
+//! serve-throughput comparison (legacy per-pair path vs the compiled
+//! shared-SV engine at 1 and 2 shard workers, and the f16 quantized pack
+//! with its accuracy delta, on iris/wdbc).
 //!
 //! Native-only — runs from a clean checkout, no `make artifacts` needed:
 //!
@@ -18,12 +19,17 @@
 //!
 //! Doubles as the CI perf gates: the run FAILS if the panel+fused row
 //! path is more than 10% slower than the scalar baseline (identical
-//! trajectory, so any slowdown is a pure micro-kernel regression), or if
-//! the compiled serve engine delivers less QPS than the legacy per-pair
-//! path on any bench dataset (identical answers, so any slowdown is a
-//! pure serving-stack regression).
+//! trajectory, so any slowdown is a pure micro-kernel regression), if the
+//! simd tier is more than 10% slower than the bit-exact fused row it is
+//! supposed to beat, if the compiled serve engine delivers less QPS than
+//! the legacy per-pair path on any bench dataset (identical answers, so
+//! any slowdown is a pure serving-stack regression), or if the f16
+//! quantized pack's accuracy delta exceeds the documented bound.
 
-use parasvm::harness::{run_solver_ablation, LABEL_PANEL_FUSED, LABEL_SCALAR_ROWS};
+use parasvm::harness::{
+    run_solver_ablation, LABEL_PANEL_FUSED, LABEL_SCALAR_ROWS, LABEL_SIMD_ROWS,
+};
+use parasvm::svm::compile::F16_ACCURACY_DELTA_BOUND;
 use parasvm::metrics::bench::BenchConfig;
 
 fn main() {
@@ -85,6 +91,19 @@ fn main() {
         "panel engine regressed: panel+fused {fused:.4}s vs scalar {scalar:.4}s (>10% slower)"
     );
 
+    // Simd-vs-fused regression guard: the relaxed tier exists to beat the
+    // bit-exact fused row, so losing to it by more than measurement noise
+    // means the explicit-vector kernels (or their dispatch) regressed.
+    // Trajectories may differ slightly (reassociated sums perturb pair
+    // selection), hence the same 10% noise allowance as the panel gate.
+    let simd = median_of(LABEL_SIMD_ROWS);
+    let simd_ratio = ablation.simd_speedup_vs_fused.unwrap_or(0.0);
+    println!("simd speedup vs panel+fused: {simd_ratio:.2}x");
+    assert!(
+        simd <= fused * 1.10,
+        "simd tier regressed: simd {simd:.4}s vs panel+fused {fused:.4}s (>10% slower)"
+    );
+
     // Compiled-serve regression guard (the serve perf gate): the compiled
     // shared-SV engine answers bit-identically to the legacy per-pair
     // path, so losing on QPS means the serving stack regressed. Target is
@@ -99,6 +118,22 @@ fn main() {
         assert!(
             *speedup >= 1.0,
             "compiled serve engine slower than legacy on {dataset}: {speedup:.2}x"
+        );
+    }
+
+    // f16 accuracy guard (the quantization gate): the reduced-precision
+    // pack trades bytes for a bounded accuracy delta; blowing past the
+    // documented bound means the quantizer (or the widening kernel) broke.
+    assert!(
+        !ablation.f16_accuracy_deltas.is_empty(),
+        "serve bench produced no f16 accuracy deltas"
+    );
+    for (dataset, delta) in &ablation.f16_accuracy_deltas {
+        println!("f16 serve accuracy delta on {dataset}: {delta:+.4}");
+        assert!(
+            delta.abs() <= F16_ACCURACY_DELTA_BOUND,
+            "f16 quantized serve accuracy delta out of bound on {dataset}: \
+             {delta:+.4} (bound {F16_ACCURACY_DELTA_BOUND})"
         );
     }
 }

@@ -4,18 +4,33 @@ use super::{Solver, SvmBackend};
 use crate::data::BinaryProblem;
 use crate::error::Result;
 use crate::svm::solver as dual;
+use crate::svm::solver::RowEval;
 use crate::svm::{gd, smo, BinaryModel, SvmParams, TrainStats};
 
 /// Host CPU backend: pure-rust implementations of both solvers. Kernel
 /// evaluation — the dense oracle's Gram build and the cached engines' row
 /// fills alike — runs through the packed panel engine
-/// ([`crate::svm::solver::panel`]), bit-identical to the scalar reference.
+/// ([`crate::svm::solver::panel`]), bit-identical to the scalar reference
+/// by default; [`RowEval::Simd`] (the CLI's `--row-eval simd`) swaps the
+/// cached engines onto the tolerance-validated vector micro-kernels.
 #[derive(Debug, Default, Clone, Copy)]
-pub struct NativeBackend;
+pub struct NativeBackend {
+    /// Row-evaluation tier for the cached solver path (`Solver::SmoCached`).
+    /// The dense `Solver::Smo` oracle ignores it by design — it *is* the
+    /// bit-exact reference.
+    pub row_eval: RowEval,
+}
 
 impl NativeBackend {
     pub fn new() -> NativeBackend {
-        NativeBackend
+        NativeBackend::default()
+    }
+
+    /// Select the row-evaluation tier for cached solves (see
+    /// [`crate::svm::solver::auto_engine_eval`] for the policy).
+    pub fn with_row_eval(mut self, row_eval: RowEval) -> NativeBackend {
+        self.row_eval = row_eval;
+        self
     }
 }
 
@@ -32,7 +47,7 @@ impl SvmBackend for NativeBackend {
     ) -> Result<(BinaryModel, TrainStats)> {
         Ok(match solver {
             Solver::Smo => smo::train(prob, params),
-            Solver::SmoCached => dual::train_cached(prob, params),
+            Solver::SmoCached => dual::train_cached_eval(prob, params, self.row_eval),
             // Natively there is no dispatch boundary, so session-style and
             // fused GD coincide: one in-process loop over a cached Gram.
             Solver::Gd | Solver::GdFused => gd::train(prob, params),
@@ -86,6 +101,21 @@ mod tests {
         for i in 0..prob.n() {
             let a = m_dense.decision(prob.row(i));
             let b = m_cached.decision(prob.row(i));
+            assert!((a - b).abs() < 1e-3, "row {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn simd_row_eval_backend_agrees_with_default() {
+        let prob = blobs(35, 4, 1.5, 6);
+        let p = SvmParams::default();
+        let (m0, s0) = NativeBackend::new().train_binary(&prob, &p, Solver::SmoCached).unwrap();
+        let be = NativeBackend::new().with_row_eval(RowEval::Simd);
+        let (m1, s1) = be.train_binary(&prob, &p, Solver::SmoCached).unwrap();
+        assert!(s0.converged && s1.converged);
+        for i in 0..prob.n() {
+            let a = m0.decision(prob.row(i));
+            let b = m1.decision(prob.row(i));
             assert!((a - b).abs() < 1e-3, "row {i}: {a} vs {b}");
         }
     }

@@ -9,6 +9,7 @@ use crate::backend::Solver;
 use crate::cluster::CostModel;
 use crate::coordinator::{Partition, TrainConfig};
 use crate::error::{Error, Result};
+use crate::svm::solver::RowEval;
 use crate::svm::SvmParams;
 use crate::util::args::Args;
 use crate::util::json::{self, Json};
@@ -61,6 +62,11 @@ pub struct RunConfig {
     /// Intra-node link: the solver sub-worlds' level (`--net-intra`).
     pub intra_latency: f64,
     pub intra_bandwidth: f64,
+    /// Kernel-row evaluation tier for SMO-family solvers
+    /// (`--row-eval scalar|panel|panel-fused|simd`). Everything but
+    /// `simd` is bit-exact; `simd` is the tolerance-validated explicit
+    /// vector tier (see `svm::solver`'s precision-tier story).
+    pub row_eval: RowEval,
 }
 
 impl Default for RunConfig {
@@ -81,6 +87,7 @@ impl Default for RunConfig {
             net_bandwidth: 1.25e9,
             intra_latency: CostModel::shm().latency,
             intra_bandwidth: CostModel::shm().bandwidth,
+            row_eval: RowEval::default(),
         }
     }
 }
@@ -99,6 +106,7 @@ impl RunConfig {
             },
             pair_threads: self.pair_threads,
             solver_ranks: self.solver_ranks,
+            row_eval: self.row_eval,
         }
     }
 
@@ -124,6 +132,9 @@ impl RunConfig {
         }
         if let Some(v) = args.opt("partition") {
             self.partition = v.parse().map_err(e)?;
+        }
+        if let Some(v) = args.opt("row-eval") {
+            self.row_eval = v.parse().map_err(e)?;
         }
         self.params.c = args.get("c").map_err(e)?.unwrap_or(self.params.c);
         self.params.gamma = args.get("gamma").map_err(e)?.unwrap_or(self.params.gamma);
@@ -191,6 +202,7 @@ impl RunConfig {
             ("workers", json::num(self.workers as f64)),
             ("pair_threads", json::num(self.pair_threads as f64)),
             ("solver_ranks", json::num(self.solver_ranks as f64)),
+            ("row_eval", json::s(self.row_eval.as_str())),
             (
                 "partition",
                 json::s(match self.partition {
@@ -262,6 +274,9 @@ impl RunConfig {
         }
         if let Some(v) = gs("partition") {
             c.partition = v.parse().map_err(Error::Config)?;
+        }
+        if let Some(v) = gs("row_eval") {
+            c.row_eval = v.parse().map_err(Error::Config)?;
         }
         if let Some(v) = gn("c") {
             c.params.c = v as f32;
@@ -337,6 +352,33 @@ mod tests {
         assert_eq!(back.solver_ranks, 4);
         let bad =
             Args::parse("x --solver-ranks 0".split_whitespace().map(String::from)).unwrap();
+        assert!(RunConfig::default().apply_args(&bad).is_err());
+    }
+
+    #[test]
+    fn row_eval_plumbing() {
+        // CLI override, JSON roundtrip and TrainConfig mapping for the
+        // precision-tier knob.
+        let args =
+            Args::parse("train --row-eval simd".split_whitespace().map(String::from)).unwrap();
+        let mut c = RunConfig::default();
+        assert_eq!(c.row_eval, RowEval::PanelFused);
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.row_eval, RowEval::Simd);
+        assert_eq!(c.train_config().row_eval, RowEval::Simd);
+        let back = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.row_eval, RowEval::Simd);
+        for spelling in ["scalar", "panel", "panel-fused"] {
+            let a = Args::parse(
+                format!("train --row-eval {spelling}").split_whitespace().map(String::from),
+            )
+            .unwrap();
+            let mut c2 = RunConfig::default();
+            c2.apply_args(&a).unwrap();
+            assert_eq!(c2.row_eval.as_str(), spelling);
+        }
+        let bad =
+            Args::parse("x --row-eval avx512".split_whitespace().map(String::from)).unwrap();
         assert!(RunConfig::default().apply_args(&bad).is_err());
     }
 

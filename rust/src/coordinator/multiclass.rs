@@ -83,6 +83,13 @@ pub struct TrainConfig {
     /// ([`crate::svm::solver::DistributedSmo`], host-executed, unshrunk
     /// WSS1 — so models stay bit-identical to the single-rank baseline).
     pub solver_ranks: usize,
+    /// Row-evaluation tier for the hierarchical path's per-rank window
+    /// caches (`solver_ranks > 1`). The exact tiers keep the bit-identity
+    /// guarantee above; [`crate::svm::solver::RowEval::Simd`] relaxes it
+    /// to the documented tolerance. The flat path's tier is the
+    /// backend's own knob (`NativeBackend::with_row_eval`) — this field
+    /// only steers solves the coordinator drives itself.
+    pub row_eval: crate::svm::solver::RowEval,
 }
 
 impl Default for TrainConfig {
@@ -96,6 +103,7 @@ impl Default for TrainConfig {
             intra_net: CostModel::shm(),
             pair_threads: 1,
             solver_ranks: 1,
+            row_eval: crate::svm::solver::RowEval::default(),
         }
     }
 }
@@ -277,7 +285,8 @@ pub fn train_multiclass(
                 let out = if r > 1 {
                     let engine =
                         crate::svm::solver::DistributedSmo::auto(r, prob.n(), cfg2.intra_net)
-                            .with_threads(engine_threads);
+                            .with_threads(engine_threads)
+                            .with_eval(cfg2.row_eval);
                     crate::svm::solver::distributed::solve_on(
                         &mut intra,
                         prob,

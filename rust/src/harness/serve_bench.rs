@@ -1,14 +1,18 @@
 //! Serve-throughput bench: the compiled shared-SV engine vs the legacy
 //! per-pair path under a synthetic batched load.
 //!
-//! For each dataset an OvO model is trained once, then served three ways
-//! — `legacy`, `compiled-w1` and `compiled-wN` — with the same request
-//! stream (async submits, drained in order, so the batcher forms real
-//! batches). Recorded per row: queries/sec, mean batch size, p50/p99
-//! request latency. The bench wrapper turns `compiled ≥ legacy QPS` into
-//! a CI perf gate (the engines answer bit-identically, so any slowdown
-//! is pure serving-stack regression), and the rows land in
-//! `BENCH_solver.json` schema v5.
+//! For each dataset an OvO model is trained once, then served four ways
+//! — `legacy`, `compiled-w1`, `compiled-wN` and `compiled-wN-f16` (the
+//! quantized pack) — with the same request stream (async submits,
+//! drained in order, so the batcher forms real batches). Recorded per
+//! row: queries/sec, mean batch size, p50/p99 request latency, and for
+//! the f16 row the accuracy delta vs the f32 pack (fraction of the
+//! dataset, CI-gated against
+//! [`crate::svm::compile::F16_ACCURACY_DELTA_BOUND`]). The bench wrapper
+//! turns `compiled ≥ legacy QPS` into a CI perf gate (those engines
+//! answer bit-identically, so any slowdown is pure serving-stack
+//! regression; the f16 row is excluded from that ratio), and the rows
+//! land in `BENCH_solver.json` schema v6.
 
 use std::sync::Arc;
 
@@ -26,7 +30,7 @@ use crate::util::rng::Rng;
 #[derive(Debug, Clone)]
 pub struct ServeRow {
     pub dataset: String,
-    /// `legacy` | `compiled-w1` | `compiled-wN`.
+    /// `legacy` | `compiled-w1` | `compiled-wN` | `compiled-wN-f16`.
     pub path: String,
     pub workers: usize,
     pub requests: usize,
@@ -34,6 +38,10 @@ pub struct ServeRow {
     pub mean_batch: f64,
     pub p50_ms: f64,
     pub p99_ms: f64,
+    /// f32 accuracy minus this path's accuracy over the whole dataset
+    /// (Some only for the quantized path; positive = quantization cost
+    /// accuracy).
+    pub accuracy_delta: Option<f64>,
 }
 
 /// Datasets the serve bench exercises (paper's small real-ish workloads).
@@ -87,9 +95,12 @@ fn measure(
     seed: u64,
 ) -> Result<ServeRow> {
     use std::sync::atomic::Ordering;
+    // "compiled-w4-f16" → 4: parse only the digit run after the prefix
+    // (a plain `.parse()` would choke on the f16 suffix).
     let workers = server
         .engine_label()
         .strip_prefix("compiled-w")
+        .map(|w| w.chars().take_while(|c| c.is_ascii_digit()).collect::<String>())
         .and_then(|w| w.parse::<usize>().ok())
         .unwrap_or(1);
     drive(server, ds, (requests / 4).max(1), seed)?; // warmup (pack + cache)
@@ -120,13 +131,29 @@ fn measure(
         mean_batch: best_mean_batch,
         p50_ms: percentile_sorted(&best_lat, 50.0) * 1e3,
         p99_ms: percentile_sorted(&best_lat, 99.0) * 1e3,
+        accuracy_delta: None,
     })
 }
 
-/// Run the serve bench over [`SERVE_BENCH_DATASETS`]: three rows per
-/// dataset (legacy, compiled-w1, compiled-w`workers`). `requests` is the
-/// per-pass load; `reps` measured passes keep the best. Render the rows
-/// with [`serve_table`] where a standalone presentation is wanted.
+/// Whole-dataset accuracy delta of the quantized pack vs the f32 pack
+/// (positive = the f16 pack misclassified rows the f32 pack got right).
+fn f16_accuracy_delta(model: &OvoModel, ds: &Dataset) -> f64 {
+    let acc = |preds: &[usize]| {
+        let hits = preds.iter().zip(ds.y.iter()).filter(|(p, y)| **p == **y as usize).count();
+        hits as f64 / ds.n.max(1) as f64
+    };
+    let c32 = model.compile();
+    let mut c16 = model.compile();
+    c16.quantize();
+    acc(&c32.predict_batch(&ds.x, ds.n)) - acc(&c16.predict_batch(&ds.x, ds.n))
+}
+
+/// Run the serve bench over [`SERVE_BENCH_DATASETS`]: four rows per
+/// dataset (legacy, compiled-w1, compiled-w`workers`, and the f16
+/// quantized compiled-w`workers`-f16 with its accuracy delta).
+/// `requests` is the per-pass load; `reps` measured passes keep the
+/// best. Render the rows with [`serve_table`] where a standalone
+/// presentation is wanted.
 pub fn run_serve_bench(
     requests: usize,
     workers: usize,
@@ -138,13 +165,19 @@ pub fn run_serve_bench(
     let mut rows = Vec::new();
     for dataset in SERVE_BENCH_DATASETS {
         let (model, ds) = trained(dataset, seed)?;
+        let delta = f16_accuracy_delta(&model, &ds);
         let servers = [
             Server::start_legacy(model.clone(), policy),
             Server::start_compiled(model.clone(), policy, 1),
-            Server::start_compiled(model, policy, workers.max(2)),
+            Server::start_compiled(model.clone(), policy, workers.max(2)),
+            Server::start_compiled_f16(model, policy, workers.max(2)),
         ];
         for server in servers {
-            rows.push(measure(&server, &ds, dataset, requests, reps, seed)?);
+            let mut row = measure(&server, &ds, dataset, requests, reps, seed)?;
+            if row.path.ends_with("-f16") {
+                row.accuracy_delta = Some(delta);
+            }
+            rows.push(row);
             server.shutdown();
         }
     }
@@ -155,7 +188,7 @@ pub fn run_serve_bench(
 pub fn serve_table(rows: &[ServeRow]) -> Table {
     let mut table = Table::new(
         "Serve throughput — compiled shared-SV engine vs legacy per-pair path",
-        &["dataset", "path", "workers", "qps", "mean batch", "p50 (ms)", "p99 (ms)"],
+        &["dataset", "path", "workers", "qps", "mean batch", "p50 (ms)", "p99 (ms)", "acc Δ"],
     );
     for row in rows {
         table.row(&[
@@ -166,13 +199,15 @@ pub fn serve_table(rows: &[ServeRow]) -> Table {
             format!("{:.1}", row.mean_batch),
             format!("{:.3}", row.p50_ms),
             format!("{:.3}", row.p99_ms),
+            row.accuracy_delta.map_or("-".into(), |d| format!("{d:+.4}")),
         ]);
     }
     table
 }
 
 /// Best compiled QPS over legacy QPS per dataset — the serve gate's
-/// headline ratios.
+/// headline ratios. The f16 rows are excluded: their win is bytes, not
+/// an apples-to-apples QPS claim against the bit-identical engines.
 pub fn serve_speedups(rows: &[ServeRow]) -> Vec<(String, f64)> {
     let mut out = Vec::new();
     for dataset in SERVE_BENCH_DATASETS {
@@ -182,7 +217,11 @@ pub fn serve_speedups(rows: &[ServeRow]) -> Vec<(String, f64)> {
             .map(|r| r.qps);
         let compiled = rows
             .iter()
-            .filter(|r| r.dataset == *dataset && r.path.starts_with("compiled"))
+            .filter(|r| {
+                r.dataset == *dataset
+                    && r.path.starts_with("compiled")
+                    && !r.path.ends_with("-f16")
+            })
             .map(|r| r.qps)
             .fold(f64::NAN, f64::max);
         if let Some(l) = legacy {
@@ -194,6 +233,13 @@ pub fn serve_speedups(rows: &[ServeRow]) -> Vec<(String, f64)> {
     out
 }
 
+/// Per-dataset f16 accuracy deltas (the quantization gate's input).
+pub fn f16_deltas(rows: &[ServeRow]) -> Vec<(String, f64)> {
+    rows.iter()
+        .filter_map(|r| r.accuracy_delta.map(|d| (r.dataset.clone(), d)))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -201,17 +247,32 @@ mod tests {
     #[test]
     fn tiny_serve_bench_runs_and_reports_all_paths() {
         let rows = run_serve_bench(60, 2, 1, 7).unwrap();
-        assert_eq!(rows.len(), 3 * SERVE_BENCH_DATASETS.len());
+        assert_eq!(rows.len(), 4 * SERVE_BENCH_DATASETS.len());
         for r in &rows {
             assert!(r.qps > 0.0, "{} {}", r.dataset, r.path);
             assert!(r.p99_ms >= r.p50_ms, "{} {}", r.dataset, r.path);
             assert!(r.mean_batch >= 1.0, "{} {}", r.dataset, r.path);
+            // Only the quantized path carries a delta, and workers must
+            // parse out of the suffixed label.
+            if r.path.ends_with("-f16") {
+                assert_eq!(r.workers, 2, "{}", r.path);
+                let d = r.accuracy_delta.expect("f16 row has a delta");
+                assert!(
+                    d.abs() <= crate::svm::compile::F16_ACCURACY_DELTA_BOUND,
+                    "{}: delta {d}",
+                    r.dataset
+                );
+            } else {
+                assert!(r.accuracy_delta.is_none(), "{}", r.path);
+            }
         }
         let speedups = serve_speedups(&rows);
         assert_eq!(speedups.len(), SERVE_BENCH_DATASETS.len());
+        assert_eq!(f16_deltas(&rows).len(), SERVE_BENCH_DATASETS.len());
         let rendered = serve_table(&rows).render();
         assert!(rendered.contains("legacy"));
         assert!(rendered.contains("compiled-w1"));
         assert!(rendered.contains("compiled-w2"));
+        assert!(rendered.contains("compiled-w2-f16"));
     }
 }

@@ -1,21 +1,24 @@
-//! Solver-engine ablation: dense vs the cached engine's three
-//! row-evaluation paths (scalar vs panel vs panel+fused-update) vs
-//! cached+shrink vs parallel, the row-sharded distributed engine at 1/2/4
-//! ranks vs the single-rank cached engine, sequential- vs concurrent-pair
-//! OvO multiclass, plus a hierarchical 2-workers x 2-solver-ranks run
-//! with distinct inter/intra cost models reporting the per-level overhead
-//! split.
+//! Solver-engine ablation: dense vs the cached engine's four
+//! row-evaluation paths (scalar vs panel vs panel+fused-update vs the
+//! relaxed explicit-SIMD tier) vs cached+shrink vs parallel, the
+//! row-sharded distributed engine at 1/2/4 ranks vs the single-rank
+//! cached engine, sequential- vs concurrent-pair OvO multiclass, plus a
+//! hierarchical 2-workers x 2-solver-ranks run with distinct inter/intra
+//! cost models reporting the per-level overhead split.
 //!
 //! Unlike the paper-table runners this workload is **native-only** (no AOT
 //! artifacts, no device), so it runs from a clean checkout and in CI — it
 //! is the reproducible speedup story for the `svm::solver` subsystem. The
 //! bench wrapper (`benches/solver_ablation.rs`) renders the table, writes
-//! the machine-readable `BENCH_solver.json` (schema v5: the panel
-//! row-eval rows + `panel_speedup_vs_scalar`, per-level `net_levels` on
-//! distributed rows, the `hierarchical` section, and the `serve` rows
-//! with `serve_speedup_vs_legacy` from the compiled-inference bench) that
-//! later PRs diff against, and enforces both the panel-vs-scalar and the
-//! compiled-vs-legacy-serve regression guards CI runs on every push.
+//! the machine-readable `BENCH_solver.json` (schema v6: the panel
+//! row-eval rows + `panel_speedup_vs_scalar` and the simd row +
+//! `simd_speedup_vs_fused`, per-level `net_levels` on distributed rows,
+//! the `hierarchical` section, and the `serve` rows — now including the
+//! f16 quantized path with `f16_accuracy_deltas` — with
+//! `serve_speedup_vs_legacy` from the compiled-inference bench) that
+//! later PRs diff against, and enforces the panel-vs-scalar,
+//! simd-vs-fused, compiled-vs-legacy-serve and f16-accuracy regression
+//! guards CI runs on every push.
 
 use std::sync::Arc;
 
@@ -89,15 +92,24 @@ pub struct SolverAblation {
     /// headline number of the panel kernel engine, recorded so later PRs
     /// (and the CI regression guard) can diff the perf trajectory.
     pub panel_speedup_vs_scalar: Option<f64>,
+    /// Median-time ratio panel+fused engine / simd engine — the headline
+    /// number of the relaxed explicit-vector tier (CI fails when the
+    /// simd row is materially slower than the bit-exact fused row).
+    pub simd_speedup_vs_fused: Option<f64>,
     pub distributed: Vec<DistRow>,
     pub ovo: Vec<OvoRow>,
     pub hierarchical: Vec<HierRow>,
-    /// Serve-throughput rows (legacy vs compiled-w1 vs compiled-wN per
-    /// dataset) — schema v5's inference-side trajectory.
+    /// Serve-throughput rows (legacy vs compiled-w1 vs compiled-wN vs
+    /// the f16 compiled-wN-f16 per dataset) — schema v6's inference-side
+    /// trajectory.
     pub serve: Vec<super::serve_bench::ServeRow>,
     /// Best-compiled / legacy QPS per serve dataset (the serve perf
-    /// gate's headline; CI fails any ratio < 1).
+    /// gate's headline; CI fails any ratio < 1). The f16 row is excluded
+    /// from the ratio.
     pub serve_speedup_vs_legacy: Vec<(String, f64)>,
+    /// Per-dataset f32-minus-f16 accuracy deltas from the quantized serve
+    /// rows (CI fails any |delta| above the documented bound).
+    pub f16_accuracy_deltas: Vec<(String, f64)>,
 }
 
 fn levels_json(levels: &[LevelNet]) -> Json {
@@ -120,13 +132,17 @@ impl SolverAblation {
     /// Machine-readable form for `BENCH_solver.json`.
     pub fn to_json(&self) -> Json {
         json::obj(vec![
-            ("schema", json::s("parasvm-solver-ablation/v5")),
+            ("schema", json::s("parasvm-solver-ablation/v6")),
             ("dataset", json::s(&self.dataset)),
             ("n", json::num(self.n as f64)),
             ("d", json::num(self.d as f64)),
             (
                 "panel_speedup_vs_scalar",
                 self.panel_speedup_vs_scalar.map_or(Json::Null, json::num),
+            ),
+            (
+                "simd_speedup_vs_fused",
+                self.simd_speedup_vs_fused.map_or(Json::Null, json::num),
             ),
             (
                 "engines",
@@ -217,6 +233,10 @@ impl SolverAblation {
                                 ("mean_batch", json::num(r.mean_batch)),
                                 ("p50_ms", json::num(r.p50_ms)),
                                 ("p99_ms", json::num(r.p99_ms)),
+                                (
+                                    "accuracy_delta",
+                                    r.accuracy_delta.map_or(Json::Null, json::num),
+                                ),
                             ])
                         })
                         .collect(),
@@ -236,6 +256,20 @@ impl SolverAblation {
                         .collect(),
                 ),
             ),
+            (
+                "f16_accuracy_deltas",
+                json::arr(
+                    self.f16_accuracy_deltas
+                        .iter()
+                        .map(|(dataset, delta)| {
+                            json::obj(vec![
+                                ("dataset", json::s(dataset)),
+                                ("f32_minus_f16_accuracy", json::num(*delta)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ])
     }
 }
@@ -247,11 +281,17 @@ pub const LABEL_SCALAR_ROWS: &str = "cached scalar rows (n/4)";
 pub const LABEL_PANEL_ROWS: &str = "cached panel rows (n/4)";
 /// Ablation label of the panel engine with the fused pair/f-update sweep.
 pub const LABEL_PANEL_FUSED: &str = "cached panel+fused (n/4)";
+/// Ablation label of the relaxed explicit-SIMD tier (same budget as the
+/// fused row; values are tolerance-bounded, not bit-identical, so its
+/// trajectory may differ).
+pub const LABEL_SIMD_ROWS: &str = "cached simd (n/4)";
 
 /// The engine lineup: name + factory (budget is rows, n/4 when capped).
-/// The three `cached` variants differ only in [`RowEval`] — same budget,
-/// same trajectory (values are bit-identical) — so their median split
-/// isolates the panel layout win from the fused-update win.
+/// The first three `cached` variants differ only in [`RowEval`] — same
+/// budget, same trajectory (values are bit-identical) — so their median
+/// split isolates the panel layout win from the fused-update win. The
+/// `simd` row shares the budget but relaxes accumulation order
+/// ([`RowEval::Simd`]), so its iteration count may drift.
 fn engines(n: usize) -> Vec<(&'static str, Box<dyn DualSolver>)> {
     let budget = (n / 4).max(2);
     vec![
@@ -270,6 +310,10 @@ fn engines(n: usize) -> Vec<(&'static str, Box<dyn DualSolver>)> {
                 budget,
                 RowEval::PanelFused,
             ))),
+        ),
+        (
+            LABEL_SIMD_ROWS,
+            Box::new(WorkingSetSmo::new(EngineConfig::cached_eval(budget, RowEval::Simd))),
         ),
         (
             "cached+shrink",
@@ -297,7 +341,7 @@ pub fn run_solver_ablation(
     let prob = w.problem();
     let mut table = Table::new(
         format!(
-            "Solver ablation — pavia binary {}x{} (dense vs scalar/panel/fused vs shrink vs par)",
+            "Solver ablation — pavia binary {}x{} (dense, scalar/panel/fused/simd, shrink, par)",
             prob.n(),
             prob.d
         ),
@@ -350,6 +394,11 @@ pub fn run_solver_ablation(
     let fused_median = median_of(LABEL_PANEL_FUSED);
     let panel_speedup_vs_scalar =
         (fused_median > 0.0).then_some(scalar_median / fused_median);
+    // The relaxed tier's headline: bit-exact fused vs simd on the same
+    // budget (values are tolerance-bounded, so this is the price/payoff
+    // of reassociated accumulation + explicit vectors).
+    let simd_median = median_of(LABEL_SIMD_ROWS);
+    let simd_speedup_vs_fused = (simd_median > 0.0).then_some(fused_median / simd_median);
 
     // Distributed row-sharded engine at 1/2/4 ranks vs the single-rank
     // cached engine on the same (panel-fused) row path and total budget,
@@ -485,6 +534,7 @@ pub fn run_solver_ablation(
         ]);
     }
     let serve_speedup_vs_legacy = super::serve_bench::serve_speedups(&serve_rows);
+    let f16_accuracy_deltas = super::serve_bench::f16_deltas(&serve_rows);
 
     let ablation = SolverAblation {
         dataset: w.name.clone(),
@@ -492,11 +542,13 @@ pub fn run_solver_ablation(
         d: prob.d,
         engines: rows,
         panel_speedup_vs_scalar,
+        simd_speedup_vs_fused,
         distributed: dist_rows,
         ovo: ovo_rows,
         hierarchical: vec![hier_row],
         serve: serve_rows,
         serve_speedup_vs_legacy,
+        f16_accuracy_deltas,
     };
     Ok((table, ablation))
 }
@@ -509,7 +561,7 @@ mod tests {
     fn tiny_ablation_runs_end_to_end() {
         let cfg = BenchConfig { warmup: 0, min_samples: 1, max_samples: 1, cv_target: 1.0 };
         let (table, ab) = run_solver_ablation(30, 8, 40, &cfg, 3).unwrap();
-        assert_eq!(ab.engines.len(), 6);
+        assert_eq!(ab.engines.len(), 7);
         assert_eq!(ab.distributed.len(), 3);
         assert_eq!(ab.ovo.len(), 2);
         assert!((ab.engines[0].speedup_vs_dense - 1.0).abs() < 1e-9);
@@ -517,14 +569,19 @@ mod tests {
         for r in &ab.engines[1..] {
             assert!(r.max_resident_rows < ab.n, "{}", r.engine);
         }
-        // The three row-eval variants replay the identical trajectory —
-        // only the evaluation layout differs — so iteration counts match.
+        // The three bit-exact row-eval variants replay the identical
+        // trajectory — only the evaluation layout differs — so iteration
+        // counts match. The simd row relaxes accumulation order, so it
+        // is deliberately NOT held to the same iteration count.
         let by_label = |l: &str| ab.engines.iter().find(|r| r.engine == l).unwrap();
         let scalar = by_label(LABEL_SCALAR_ROWS);
         assert_eq!(by_label(LABEL_PANEL_ROWS).iters, scalar.iters);
         assert_eq!(by_label(LABEL_PANEL_FUSED).iters, scalar.iters);
+        assert!(by_label(LABEL_SIMD_ROWS).iters > 0);
         let ratio = ab.panel_speedup_vs_scalar.expect("panel ratio recorded");
         assert!(ratio.is_finite() && ratio > 0.0);
+        let simd_ratio = ab.simd_speedup_vs_fused.expect("simd ratio recorded");
+        assert!(simd_ratio.is_finite() && simd_ratio > 0.0);
         // The distributed sweep is 1/2/4 ranks; every rank count replays
         // the same unshrunk trajectory, so iteration counts agree, and
         // only multi-rank rows move candidate bytes over the wire.
@@ -555,12 +612,16 @@ mod tests {
         assert!(by_name("intra").bytes > 0, "solver chatter must cross the intra link");
         // The serve section covers every path on every bench dataset and
         // carries the per-dataset compiled/legacy ratios.
-        assert_eq!(ab.serve.len(), 3 * crate::harness::SERVE_BENCH_DATASETS.len());
+        assert_eq!(ab.serve.len(), 4 * crate::harness::SERVE_BENCH_DATASETS.len());
         for r in &ab.serve {
             assert!(r.qps > 0.0, "serve {} {}", r.dataset, r.path);
         }
         assert_eq!(
             ab.serve_speedup_vs_legacy.len(),
+            crate::harness::SERVE_BENCH_DATASETS.len()
+        );
+        assert_eq!(
+            ab.f16_accuracy_deltas.len(),
             crate::harness::SERVE_BENCH_DATASETS.len()
         );
         let rendered = table.render();
@@ -572,15 +633,20 @@ mod tests {
         assert!(rendered.contains("serve iris legacy"));
         assert!(rendered.contains("serve wdbc compiled-w2"));
         let j = ab.to_json();
-        assert_eq!(j.get("schema").and_then(Json::as_str), Some("parasvm-solver-ablation/v5"));
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some("parasvm-solver-ablation/v6"));
         assert!(j.get("panel_speedup_vs_scalar").is_some());
-        assert_eq!(j.get("engines").and_then(Json::as_arr).unwrap().len(), 6);
+        assert!(j.get("simd_speedup_vs_fused").is_some());
+        assert_eq!(j.get("engines").and_then(Json::as_arr).unwrap().len(), 7);
         assert_eq!(j.get("distributed").and_then(Json::as_arr).unwrap().len(), 3);
         assert_eq!(j.get("hierarchical").and_then(Json::as_arr).unwrap().len(), 1);
         assert_eq!(j.get("serve").and_then(Json::as_arr).unwrap().len(), ab.serve.len());
         assert_eq!(
             j.get("serve_speedup_vs_legacy").and_then(Json::as_arr).unwrap().len(),
             ab.serve_speedup_vs_legacy.len()
+        );
+        assert_eq!(
+            j.get("f16_accuracy_deltas").and_then(Json::as_arr).unwrap().len(),
+            ab.f16_accuracy_deltas.len()
         );
     }
 }

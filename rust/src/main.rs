@@ -5,7 +5,8 @@
 //!   eval       train + held-out accuracy
 //!   serve      start the batching classifier (compiled shared-SV engine,
 //!              --workers sharded serve threads, --legacy-serve for the
-//!              per-pair baseline) and drive a synthetic load
+//!              per-pair baseline, --f16-serve for the reduced-precision
+//!              pack) and drive a synthetic load
 //!   bench      regenerate a paper table (--table 3|4|5|6)
 //!   datasets   paper Table I inventory
 //!   artifacts  list the AOT artifact registry
@@ -31,7 +32,7 @@ use parasvm::util::args::Args;
 use parasvm::util::fmt_secs;
 use parasvm::util::rng::Rng;
 
-const FLAGS: &[&str] = &["verbose", "help", "quick", "no-scale", "legacy-serve"];
+const FLAGS: &[&str] = &["verbose", "help", "quick", "no-scale", "legacy-serve", "f16-serve"];
 
 fn main() {
     let args = match Args::parse_with_flags(std::env::args().skip(1), FLAGS) {
@@ -77,6 +78,10 @@ fn print_help() {
                               (seconds : bytes/sec; default gige10)\n\
            --net-intra M      intra-node link for solver sub-worlds\n\
                               (default shm = 1e-6:1.2e10)\n\
+           --row-eval T       kernel-row tier for SMO-family solvers:\n\
+                              scalar | panel | panel-fused (default,\n\
+                              bit-exact) | simd (explicit AVX2+FMA,\n\
+                              tolerance-validated)\n\
            --per-class N      subsample N points per class\n\
            --config FILE      load a JSON RunConfig (CLI flags override)\n\
            --seed N           dataset/run seed (default 42)\n\
@@ -86,6 +91,9 @@ fn print_help() {
            --legacy-serve     per-pair baseline path (default: compiled\n\
                               shared-SV engine; --workers doubles as the\n\
                               sharded serve-thread count)\n\
+           --f16-serve        quantize the compiled SV pack to f16 (half\n\
+                              the pack bytes; accuracy within the\n\
+                              documented delta bound, not bit-identical)\n\
          bench options:\n\
            --table N          3 | 4 | 5 | 6 (paper table to regenerate)\n\
            --quick            fewer repetitions\n\
@@ -102,10 +110,10 @@ fn load_config(args: &Args) -> Result<RunConfig> {
     Ok(cfg)
 }
 
-fn make_backend(kind: BackendKind) -> Result<Arc<dyn SvmBackend>> {
-    Ok(match kind {
+fn make_backend(cfg: &RunConfig) -> Result<Arc<dyn SvmBackend>> {
+    Ok(match cfg.backend {
         BackendKind::Xla => Arc::new(XlaBackend::open_default()?),
-        BackendKind::Native => Arc::new(NativeBackend::new()),
+        BackendKind::Native => Arc::new(NativeBackend::new().with_row_eval(cfg.row_eval)),
     })
 }
 
@@ -149,7 +157,7 @@ fn cmd_train(args: &Args, eval: bool) -> Result<()> {
     let save_path = args.opt("save").map(std::path::PathBuf::from);
     args.finish().map_err(parasvm::Error::Config)?;
     let ds = load_dataset(&cfg)?;
-    let backend = make_backend(cfg.backend)?;
+    let backend = make_backend(&cfg)?;
     println!(
         "training {} (n={}, d={}, classes={}) on {} / {:?}, {} worker(s)",
         ds.name, ds.n, ds.d, ds.n_classes, backend.name(), cfg.solver, cfg.workers
@@ -216,12 +224,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .unwrap_or(2000);
     let model_path = args.opt("model").map(std::path::PathBuf::from);
     let legacy = args.flag("legacy-serve");
+    let f16 = args.flag("f16-serve");
     args.finish().map_err(parasvm::Error::Config)?;
+    if legacy && f16 {
+        return Err(parasvm::Error::Config(
+            "--legacy-serve conflicts with --f16-serve (the legacy path has no \
+             quantized pack)"
+                .into(),
+        ));
+    }
     let ds = load_dataset(&cfg)?;
     let model = match model_path {
         Some(p) => parasvm::svm::persist::load(&p)?,
         None => {
-            let backend = make_backend(cfg.backend)?;
+            let backend = make_backend(&cfg)?;
             train_multiclass(&ds, backend, &cfg.train_config())?.0
         }
     };
@@ -229,6 +245,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // pack is shared read-only, batches split by rows.
     let server = if legacy {
         Server::start_legacy(model, BatchPolicy::default())
+    } else if f16 {
+        Server::start_compiled_f16(model, BatchPolicy::default(), cfg.workers.max(1))
     } else {
         Server::start_compiled(model, BatchPolicy::default(), cfg.workers.max(1))
     };

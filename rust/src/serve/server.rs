@@ -16,6 +16,13 @@
 //!    Kept as the serve bench baseline; answers are bit-identical to the
 //!    compiled engine (property-tested), only slower.
 //!
+//! The compiled engine has an opt-in reduced-precision variant
+//! ([`Server::start_compiled_f16`]): the shared SV pack is quantized to
+//! IEEE binary16 ([`crate::svm::compile::CompiledModel::quantize`]), so
+//! answers are no longer bit-identical to legacy — the accuracy delta is
+//! measured per dataset by the serve bench and CI-bounded by
+//! [`crate::svm::compile::F16_ACCURACY_DELTA_BOUND`].
+//!
 //! Both use the depth-tracked batcher: a lone `classify` on an idle
 //! server cuts through immediately instead of idling out the batch
 //! deadline ([`super::batcher::collect_batch_tracked`]).
@@ -176,20 +183,28 @@ fn sharded_decisions(
     let p_count = model.n_pairs();
     let features = Arc::new(features);
     let shards = RowSlice::partition(bsz, workers);
+    let own_idx =
+        (0..shards.len()).max_by_key(|&i| shards[i].len()).expect("workers >= 1 shards");
     let (rtx, rrx) = mpsc::channel();
     let mut shipped = 0usize;
-    for (w, rows) in shards.iter().skip(1).enumerate() {
+    let mut txs = pool.txs.iter();
+    for (i, rows) in shards.iter().enumerate() {
+        if i == own_idx {
+            continue;
+        }
+        let tx = txs.next().expect("one pool worker per shipped shard");
         if rows.is_empty() {
             continue;
         }
-        pool.txs[w]
-            .send((Arc::clone(&features), *rows, rtx.clone()))
-            .expect("shard worker alive");
+        tx.send((Arc::clone(&features), *rows, rtx.clone())).expect("shard worker alive");
         shipped += 1;
     }
     drop(rtx);
-    // Shard 0 computes on the batcher thread while the pool works.
-    let own = shards[0];
+    // The batcher thread keeps the largest shard for itself while the
+    // pool works: its shard pays no channel hand-off, so pinning the
+    // remainder-padded slice here (partition front-loads the n % workers
+    // extra rows) keeps the pool from idling on the batcher's tail.
+    let own = shards[own_idx];
     let mut dec = vec![0.0f32; bsz * p_count];
     let own_dec = model.decision_all_pairs(&features[own.lo * d..own.hi * d], own.len());
     dec[own.lo * p_count..own.hi * p_count].copy_from_slice(&own_dec);
@@ -228,6 +243,21 @@ impl Server {
         Server::start_engine(Engine::Compiled { model: compiled, pool }, policy, d, label)
     }
 
+    /// [`Self::start_compiled`] with the SV pack quantized to f16 (the
+    /// reduced-precision serving tier — half the pack bytes, answers
+    /// within the documented accuracy-delta bound rather than
+    /// bit-identical).
+    pub fn start_compiled_f16(model: OvoModel, policy: BatchPolicy, workers: usize) -> Server {
+        let workers = workers.max(1);
+        let d = model.d;
+        let mut compiled = model.compile();
+        compiled.quantize();
+        let compiled = Arc::new(compiled);
+        let pool = ShardPool::spawn(&compiled, workers - 1);
+        let label = format!("compiled-w{workers}-f16");
+        Server::start_engine(Engine::Compiled { model: compiled, pool }, policy, d, label)
+    }
+
     /// The pre-compile per-pair path (bench baseline; answers are
     /// bit-identical to the compiled engine).
     pub fn start_legacy(model: OvoModel, policy: BatchPolicy) -> Server {
@@ -256,8 +286,8 @@ impl Server {
         &self.stats
     }
 
-    /// Which engine is running ("legacy" or "compiled-wN") — for logs and
-    /// bench tables.
+    /// Which engine is running ("legacy", "compiled-wN" or
+    /// "compiled-wN-f16") — for logs and bench tables.
     pub fn engine_label(&self) -> &str {
         &self.engine_label
     }
@@ -448,5 +478,25 @@ mod tests {
         }
         legacy.shutdown();
         compiled.shutdown();
+    }
+
+    #[test]
+    fn f16_engine_matches_f32_predictions_on_iris() {
+        let ds = iris::load();
+        let be: Arc<dyn SvmBackend> = Arc::new(NativeBackend::new());
+        let cfg = TrainConfig { workers: 2, ..Default::default() };
+        let (model, _) = train_multiclass(&ds, be, &cfg).unwrap();
+        let f32s = Server::start_compiled(model.clone(), BatchPolicy::default(), 2);
+        let f16s = Server::start_compiled_f16(model, BatchPolicy::default(), 2);
+        assert_eq!(f16s.engine_label(), "compiled-w2-f16");
+        // Iris margins dwarf f16 storage noise: classes (and on this
+        // dataset even the votes) must agree query for query.
+        for i in (0..ds.n).step_by(7) {
+            let a = f32s.classify(ds.row(i).to_vec()).unwrap();
+            let b = f16s.classify(ds.row(i).to_vec()).unwrap();
+            assert_eq!(a.class, b.class, "row {i}");
+        }
+        f32s.shutdown();
+        f16s.shutdown();
     }
 }

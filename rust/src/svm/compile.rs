@@ -43,11 +43,34 @@
 //! occurrence while scanning pairs in `binaries` order (never by hash
 //! iteration), so a persisted model recompiles to the identical table
 //! (`svm::persist` round-trips f32 values exactly).
+//!
+//! # The reduced-precision exception: f16 serving
+//!
+//! [`CompiledModel::quantize`] is the one *documented* departure from the
+//! bit-identity contract: it re-packs the deduped SV union as IEEE
+//! binary16 ([`QuantizedView`]) — half the panel bytes, the serve path's
+//! analog of the source paper's half-precision device storage — and
+//! routes the shared sweep through f16→f32 in-register widening. All
+//! arithmetic stays f32; only SV *storage* narrows, so decisions move by
+//! O(2⁻¹¹) relative per feature. The per-dataset accuracy delta is
+//! measured by `harness::serve_bench` and CI-gated against
+//! [`F16_ACCURACY_DELTA_BOUND`]. Quantization is opt-in
+//! (`--f16-serve`), never applied to training, and the f32 pack is kept
+//! alongside so an un-quantized sweep remains available.
 
 use std::collections::HashMap;
 
 use super::multiclass::{argmax_tiebreak, OvoModel};
-use super::solver::panel::DatasetView;
+use super::solver::panel::{DatasetView, QuantizedView};
+
+/// CI-gated ceiling on the absolute accuracy delta (fraction of
+/// queries, in [0, 1]) an f16-quantized serve pack may introduce versus
+/// the f32 pack on the bundled datasets. Measured deltas on iris/wdbc
+/// are 0.0 — their decision margins dwarf the O(2⁻¹¹)-per-feature
+/// quantization noise (see [`QuantizedView`]) — so 2% is generous
+/// headroom for datasets with near-tie votes; a larger delta means
+/// quantization flipped real predictions and the pack must not ship.
+pub const F16_ACCURACY_DELTA_BOUND: f64 = 0.02;
 
 /// One pair's slice of the compiled model: where its SVs live in the
 /// shared pack and how to weigh them.
@@ -84,6 +107,10 @@ pub struct CompiledModel {
     total_svs: usize,
     /// The deduped SV matrix, owned and packed once.
     view: DatasetView<'static>,
+    /// Optional f16 re-pack of the same SV union ([`Self::quantize`]);
+    /// when present the shared sweep widens it in-register instead of
+    /// reading the f32 panels.
+    quant: Option<QuantizedView>,
 }
 
 impl CompiledModel {
@@ -134,7 +161,25 @@ impl CompiledModel {
             n_unique,
             total_svs,
             view,
+            quant: None,
         }
+    }
+
+    /// Re-pack the deduped SV union as IEEE binary16 and route the shared
+    /// kernel sweep through it (see the module-level f16 story). Opt-in
+    /// and inference-only; call once after [`Self::compile`]. Decisions
+    /// are no longer bit-identical to the legacy path — they carry the
+    /// documented quantization noise, bounded in accuracy terms by
+    /// [`F16_ACCURACY_DELTA_BOUND`] on the bundled datasets.
+    pub fn quantize(&mut self) {
+        if self.quant.is_none() {
+            self.quant = Some(QuantizedView::quantize(&self.view));
+        }
+    }
+
+    /// Whether the shared sweep reads the f16 pack.
+    pub fn is_quantized(&self) -> bool {
+        self.quant.is_some()
     }
 
     /// The per-pair tables, in vote (`binaries`) order.
@@ -161,7 +206,15 @@ impl CompiledModel {
     /// `out[qi * n_pairs + p]` — one shared panel sweep (per distinct
     /// gamma among SV-carrying pairs) plus the per-pair sparse combines;
     /// pure-bias pairs skip the kernel entirely. Bit-identical to calling
-    /// the legacy `decision_batch` on each binary.
+    /// the legacy `decision_batch` on each binary — unless the model is
+    /// [quantized](Self::quantize), in which case the sweep reads the f16
+    /// pack and carries the documented quantization noise.
+    ///
+    /// The combine is CSR-style batched: each pair's `(slot, coef)` table
+    /// is walked once per *four* queries, the four accumulators sharing
+    /// every coefficient and slot load. Each query still accumulates
+    /// `bias + Σ coef·K` in the pair's original SV order, so batching
+    /// does not perturb a single bit.
     pub fn decision_all_pairs(&self, q: &[f32], m: usize) -> Vec<f32> {
         assert_eq!(q.len(), m * self.d, "query batch dim mismatch");
         let p_count = self.pairs.len();
@@ -169,18 +222,38 @@ impl CompiledModel {
         let mut out = vec![0.0f32; m * p_count];
         let mut k = vec![0.0f32; m * nu];
         for &gamma in &self.gammas {
-            self.view.cross_into(q, m, gamma, &mut k);
+            match &self.quant {
+                Some(qv) => qv.cross_into(q, m, gamma, &mut k),
+                None => self.view.cross_into(q, m, gamma, &mut k),
+            }
             for (p, pair) in self.pairs.iter().enumerate() {
                 if pair.slots.is_empty() || pair.gamma.to_bits() != gamma.to_bits() {
                     continue;
                 }
-                for qi in 0..m {
+                let mut qi = 0usize;
+                while qi + 4 <= m {
+                    let rows = &k[qi * nu..(qi + 4) * nu];
+                    let mut acc = [pair.bias; 4];
+                    for (slot, &c) in pair.slots.iter().zip(pair.coefs.iter()) {
+                        let s = *slot as usize;
+                        acc[0] += c * rows[s];
+                        acc[1] += c * rows[nu + s];
+                        acc[2] += c * rows[2 * nu + s];
+                        acc[3] += c * rows[3 * nu + s];
+                    }
+                    for (t, &a) in acc.iter().enumerate() {
+                        out[(qi + t) * p_count + p] = a;
+                    }
+                    qi += 4;
+                }
+                while qi < m {
                     let krow = &k[qi * nu..(qi + 1) * nu];
                     let mut acc = pair.bias;
                     for (slot, &c) in pair.slots.iter().zip(pair.coefs.iter()) {
                         acc += c * krow[*slot as usize];
                     }
                     out[qi * p_count + p] = acc;
+                    qi += 1;
                 }
             }
         }
@@ -225,6 +298,12 @@ impl CompiledModel {
     /// packing is lazy).
     pub fn packed_bytes(&self) -> usize {
         self.view.packed_bytes()
+    }
+
+    /// Bytes held by the f16 pack (0 when not quantized); half the f32
+    /// pack's panel payload.
+    pub fn quantized_bytes(&self) -> usize {
+        self.quant.as_ref().map_or(0, |q| q.packed_bytes())
     }
 }
 
@@ -289,6 +368,51 @@ mod tests {
         for (qi, &p) in c.predict_batch(&q, 3).iter().enumerate() {
             assert_eq!(p, argmax_tiebreak(&v[qi], &mg[qi]), "row {qi}");
         }
+    }
+
+    #[test]
+    fn batched_combine_matches_legacy_for_every_tail_shape() {
+        // m = 1..9 covers: tail-only, exactly one 4-block, block + tail,
+        // two blocks — the CSR-batched combine must be bitwise identical
+        // to the legacy per-query walk in all of them.
+        let model = model_with_shared_svs();
+        let c = model.compile();
+        for m in 1..=9usize {
+            let q: Vec<f32> = (0..m * 2).map(|t| (t as f32) * 0.37 - 1.1).collect();
+            let got = c.decision_all_pairs(&q, m);
+            let want = model.decision_all_pairs(&q, m);
+            for (a, b) in got.iter().zip(want.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_decisions_track_f32_within_noise() {
+        let model = model_with_shared_svs();
+        let mut c = model.compile();
+        let f32_dec = {
+            let q: Vec<f32> = (0..12).map(|t| (t as f32) * 0.29 - 0.8).collect();
+            c.decision_all_pairs(&q, 6)
+        };
+        assert!(!c.is_quantized());
+        assert_eq!(c.quantized_bytes(), 0);
+        c.quantize();
+        c.quantize(); // idempotent
+        assert!(c.is_quantized());
+        assert!(c.quantized_bytes() > 0);
+        let q: Vec<f32> = (0..12).map(|t| (t as f32) * 0.29 - 0.8).collect();
+        let f16_dec = c.decision_all_pairs(&q, 6);
+        for (a, b) in f16_dec.iter().zip(f32_dec.iter()) {
+            // Unit-scale features, |coef| ≤ 1.5, K ≤ 1: f16 storage noise
+            // stays far below this envelope.
+            assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+        }
+        // On a clear-margin model the noise must not flip predictions.
+        let mut c2 = model.compile();
+        let preds = c2.predict_batch(&q, 6);
+        c2.quantize();
+        assert_eq!(c2.predict_batch(&q, 6), preds);
     }
 
     #[test]

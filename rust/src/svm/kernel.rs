@@ -3,6 +3,17 @@
 //! This is the *native* (host/CPU-profile) mirror of the L1 Pallas kernel;
 //! numerics match the device path (same expanded-identity formulation) so
 //! models trained on either backend are interchangeable.
+//!
+//! Everything in this module is the **bit-exact reference rung** of the
+//! precision ladder described in [`crate::svm::solver`]: the panel engine
+//! ([`crate::svm::solver::panel::DatasetView`]) replays these scalar
+//! loops bit-for-bit by default, the relaxed explicit-SIMD tier
+//! ([`crate::svm::solver::RowEval::Simd`]) reassociates them within
+//! [`crate::svm::solver::SIMD_MAX_REL_ERROR`], and the f16 serving pack
+//! ([`crate::svm::solver::QuantizedView`], wired up by
+//! [`crate::svm::compile::CompiledModel::quantize`]) stores SV features
+//! in half precision and widens in-register. When this reference changes,
+//! all three rungs must be re-validated against it.
 
 /// Squared Euclidean distance between two rows.
 #[inline]

@@ -21,6 +21,13 @@
 //! panel fill — one sweep over the packed data instead of two independent
 //! cache fills — and optionally fold the SMO rank-2 f-update into that
 //! same sweep ([`RowEval::PanelFused`]).
+//!
+//! [`RowEval::Simd`] keeps the fused pair structure but runs the dot
+//! products through the relaxed vector micro-kernels
+//! ([`super::panel::PanelKernel::Relaxed`]): rows are then within
+//! [`super::panel::SIMD_MAX_REL_ERROR`] of the oracle rather than
+//! bit-identical — pick it only where tolerance validation is
+//! acceptable (see the precision-tier story in [`super`]).
 
 use std::sync::Arc;
 
@@ -192,8 +199,11 @@ impl<'a> KernelCache<'a> {
     }
 
     /// Select the row-evaluation path (panel-fused by default; scalar is
-    /// the reference/ablation baseline). Values are bit-identical across
-    /// modes, so this knob is a pure performance choice.
+    /// the reference/ablation baseline). All modes except
+    /// [`RowEval::Simd`] produce bit-identical values, so among those the
+    /// knob is a pure performance choice; `Simd` relaxes accumulation
+    /// order and is instead bounded by
+    /// [`super::panel::SIMD_MAX_REL_ERROR`].
     pub fn with_eval(mut self, eval: RowEval) -> KernelCache<'a> {
         self.eval = eval;
         self
@@ -267,7 +277,7 @@ impl<'a> KernelCache<'a> {
     fn fill_row(&self, i: usize) -> Arc<[f32]> {
         let mut buf = vec![0.0f32; self.cols().len()];
         if self.eval.uses_panels() {
-            self.view.row_into(i, self.gamma, &mut buf, self.threads);
+            self.view.row_into_with(i, self.gamma, &mut buf, self.threads, self.eval.kernel());
         } else {
             parallel::rbf_row_slice_into(
                 &mut buf,
@@ -335,7 +345,8 @@ impl KernelSource for KernelCache<'_> {
                 // data instead of two independent cache fills.
                 let w = self.cols().len();
                 let (mut bi, mut bj) = (vec![0.0f32; w], vec![0.0f32; w]);
-                self.view.pair_into(i, j, self.gamma, &mut bi, &mut bj, self.threads);
+                let k = self.eval.kernel();
+                self.view.pair_into_with(i, j, self.gamma, &mut bi, &mut bj, self.threads, k);
                 let (ri, rj): (Arc<[f32]>, Arc<[f32]>) = (bi.into(), bj.into());
                 self.insert(i, &ri);
                 self.insert(j, &rj);
@@ -354,7 +365,7 @@ impl KernelSource for KernelCache<'_> {
         threads: usize,
     ) -> (Arc<[f32]>, Arc<[f32]>) {
         debug_assert_eq!(f.len(), self.cols().len());
-        if self.eval == RowEval::PanelFused && i != j {
+        if self.eval.fused() && i != j {
             let hit_i = self.touch(i);
             let hit_j = self.touch(j);
             if hit_i.is_none() && hit_j.is_none() {
@@ -362,7 +373,19 @@ impl KernelSource for KernelCache<'_> {
                 // update in one sweep over the packed panels.
                 let w = self.cols().len();
                 let (mut bi, mut bj) = (vec![0.0f32; w], vec![0.0f32; w]);
-                self.view.pair_update_into(i, j, self.gamma, &mut bi, &mut bj, ci, cj, f, threads);
+                let k = self.eval.kernel();
+                self.view.pair_update_into_with(
+                    i,
+                    j,
+                    self.gamma,
+                    &mut bi,
+                    &mut bj,
+                    ci,
+                    cj,
+                    f,
+                    threads,
+                    k,
+                );
                 let (ri, rj): (Arc<[f32]>, Arc<[f32]>) = (bi.into(), bj.into());
                 self.insert(i, &ri);
                 self.insert(j, &rj);

@@ -98,6 +98,16 @@ impl DistributedSmo {
         self.cfg.threads = threads;
         self
     }
+
+    /// Per-rank row-evaluation tier. Every rank's window cache evaluates
+    /// through the same tier, so the R-rank trajectory stays comparable
+    /// to the matching single-rank run: bit-identical for the exact
+    /// tiers, tolerance-bounded
+    /// ([`super::panel::SIMD_MAX_REL_ERROR`]) for [`RowEval::Simd`].
+    pub fn with_eval(mut self, row_eval: crate::svm::solver::RowEval) -> DistributedSmo {
+        self.cfg.row_eval = row_eval;
+        self
+    }
 }
 
 /// What one rank hands back after the cooperative solve. The solution and

@@ -117,6 +117,40 @@
 //! ledgers accumulate across solves and the coordinator reports the
 //! split), and single-host engines report no levels at all.
 //!
+//! # Precision tiers: bit-exact → relaxed SIMD → f16 serve
+//!
+//! Everything above lives on one rung of a three-rung precision ladder,
+//! and each rung trades reproducibility for speed explicitly:
+//!
+//! 1. **Bit-exact** ([`RowEval::Scalar`] / [`RowEval::Panel`] /
+//!    [`RowEval::PanelFused`], the default): every kernel value is the
+//!    same f32 expression in the same order as [`parallel::rbf_entry`],
+//!    so trajectories replay the oracle bit-for-bit. Pick it for
+//!    cross-engine/cross-rank regression testing and anywhere a solve
+//!    must be reproducible to the last bit.
+//! 2. **Tolerance-validated SIMD** ([`RowEval::Simd`]): same panel
+//!    layout, but the per-lane dot products run through explicit
+//!    AVX2+FMA micro-kernels (portable unrolled fallback elsewhere) that
+//!    reassociate the feature reduction into lane-parallel trees. Kernel
+//!    values match the oracle within [`panel::SIMD_MAX_REL_ERROR`]
+//!    (relative, per entry) instead of bitwise; SV sets and predictions
+//!    on the bundled datasets are unchanged. Pick it when training
+//!    throughput matters more than bit-replay — it is opt-in via
+//!    `EngineConfig::cached_eval`, [`auto_engine_eval`] or the CLI's
+//!    `--row-eval simd`.
+//! 3. **f16 compiled serve** ([`panel::QuantizedView`],
+//!    `CompiledModel::quantize`): inference-only; SV panels are stored
+//!    as IEEE binary16 and widened back to f32 in-register per panel, so
+//!    the serve working set halves while all arithmetic stays f32.
+//!    Decision values move by O(2⁻¹¹) relative per feature; accuracy
+//!    deltas are measured per dataset and CI-bounded (see
+//!    `svm::compile::F16_ACCURACY_DELTA_BOUND`). Training never
+//!    quantizes.
+//!
+//! The oracle stays the hard reference at every rung: the relaxed tiers
+//! are validated against it by tolerance property tests
+//! (`tests/simd_tier.rs`) rather than trusted on faith.
+//!
 //! All engines return duals that agree with the sequential oracle within
 //! float tolerance (the unshrunk cached and distributed engines are
 //! bit-identical; shrinking re-verifies KKT on the full index set before
@@ -133,7 +167,10 @@ pub mod working_set;
 
 pub use cache::{CacheStats, DenseSource, KernelCache, KernelSource};
 pub use distributed::DistributedSmo;
-pub use panel::{DatasetView, RowEval};
+pub use panel::{
+    f16_bits_to_f32, f32_to_f16_bits, simd_acceleration_active, simd_force_portable, DatasetView,
+    PanelKernel, QuantizedView, RowEval, SIMD_MAX_REL_ERROR,
+};
 pub use shrink::{ActiveSet, ShrinkStats};
 pub use slice::RowSlice;
 pub use working_set::{EngineConfig, Selection};
@@ -295,6 +332,23 @@ pub fn auto_engine(n: usize) -> Box<dyn DualSolver> {
     }
 }
 
+/// Like [`auto_engine`], but honoring an explicit row-evaluation tier
+/// (`--row-eval` on the CLI). The default tier defers to [`auto_engine`]
+/// unchanged; any non-default tier forces the cached engine even below
+/// [`DENSE_CUTOFF_ROWS`], because the dense oracle has no row-eval knob —
+/// asking for `scalar`/`panel`/`simd` means "evaluate rows *this* way",
+/// and only the cached engine can honor that.
+pub fn auto_engine_eval(n: usize, eval: RowEval) -> Box<dyn DualSolver> {
+    if eval == RowEval::default() {
+        return auto_engine(n);
+    }
+    let budget = (n / AUTO_CACHE_FRACTION).max(DENSE_CUTOFF_ROWS);
+    Box::new(WorkingSetSmo::new(EngineConfig {
+        row_eval: eval,
+        ..EngineConfig::parallel(budget)
+    }))
+}
+
 /// Turn a solve outcome into the backend-facing (model, stats) pair.
 /// Shared by [`train_with`] and the coordinator's hierarchical path
 /// (which drives [`distributed::solve_on`] directly on a derived
@@ -329,6 +383,16 @@ pub fn train_with(
 /// Train with the auto-selected cached engine (`Solver::SmoCached`).
 pub fn train_cached(prob: &BinaryProblem, p: &SvmParams) -> (BinaryModel, TrainStats) {
     train_with(auto_engine(prob.n()).as_ref(), prob, p)
+}
+
+/// [`train_cached`] under an explicit row-evaluation tier (the backend's
+/// `--row-eval` plumbing; see [`auto_engine_eval`] for the policy).
+pub fn train_cached_eval(
+    prob: &BinaryProblem,
+    p: &SvmParams,
+    eval: RowEval,
+) -> (BinaryModel, TrainStats) {
+    train_with(auto_engine_eval(prob.n(), eval).as_ref(), prob, p)
 }
 
 /// Max KKT violation computed row-on-demand (0 when optimal within tol).
@@ -418,6 +482,30 @@ mod tests {
         assert_eq!(auto_engine(100).name(), "dense");
         assert_eq!(auto_engine(DENSE_CUTOFF_ROWS).name(), "dense");
         assert_eq!(auto_engine(100_000).name(), "cached+shrink+par");
+    }
+
+    #[test]
+    fn auto_engine_eval_honors_non_default_tiers() {
+        // Default tier: same policy as auto_engine on both sides of the
+        // cutoff. Non-default tiers must reach the cached engine even for
+        // small n (the dense oracle cannot evaluate rows any other way).
+        assert_eq!(auto_engine_eval(100, RowEval::default()).name(), "dense");
+        assert_eq!(auto_engine_eval(100_000, RowEval::default()).name(), "cached+shrink+par");
+        assert_eq!(auto_engine_eval(100, RowEval::Simd).name(), "cached+shrink+par");
+        assert_eq!(auto_engine_eval(100, RowEval::Scalar).name(), "cached+shrink+par");
+
+        // And a simd-tier train still produces the oracle's decisions
+        // within the relaxed tolerance.
+        let prob = blobs(40, 4, 2.0, 7);
+        let p = SvmParams::default();
+        let (m0, _) = train_with(&DenseSmo { threads: 1 }, &prob, &p);
+        let (ms, ss) = train_cached_eval(&prob, &p, RowEval::Simd);
+        assert!(ss.converged);
+        for i in 0..prob.n() {
+            let a = m0.decision(prob.row(i));
+            let b = ms.decision(prob.row(i));
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
     }
 
     #[test]

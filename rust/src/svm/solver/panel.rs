@@ -61,6 +61,34 @@
 //! Property tests (`tests/panel_kernel.rs`) pin all of this bitwise
 //! against `rbf_row_into` / `rbf_gram` for random shapes, windows, gamma
 //! (including 0), and block sizes.
+//!
+//! # Beyond bit-exact: the relaxed tier ([`RowEval::Simd`])
+//!
+//! The exact paths above deliberately leave FMA units and reduction
+//! reassociation on the table: each lane is ONE serial add chain over
+//! `d`, so the dot-product latency never overlaps. [`RowEval::Simd`]
+//! swaps the inner accumulation for explicit vector micro-kernels —
+//! AVX2+FMA (`core::arch`, runtime-detected) with a portable unrolled
+//! multi-accumulator fallback so a stable offline toolchain always
+//! builds — that split each dot product across independent accumulators
+//! and tree-combine them at the end. The finish (expanded identity,
+//! `max(0)` clamp, `exp`, diagonal override, fused f64 f-update) is the
+//! shared code either way, so the ONLY deviation from the oracle is f32
+//! dot reassociation + FMA contraction: a few ulps, bounded well inside
+//! [`SIMD_MAX_REL_ERROR`], validated by relative-tolerance property
+//! tests (`tests/simd_tier.rs`) instead of bitwise pins.
+//!
+//! Dispatch: decided once per process (`PARASVM_NO_SIMD` in the
+//! environment at first use disables the vector path; otherwise
+//! `is_x86_feature_detected!("avx2"/"fma")`), with
+//! [`simd_force_portable`] as a test hook that pins the portable
+//! kernels regardless. Both implementations honor the same relaxed
+//! contract, so toggling the hook never invalidates a tolerance test.
+//!
+//! The serve-side extension of the same idea is [`QuantizedView`]: the
+//! compiled engine's SV pack stored as IEEE binary16 (half the memory
+//! bandwidth), widened to f32 in-register inside `cross_into` — see
+//! [`crate::svm::compile::CompiledModel::quantize`].
 
 use std::borrow::Cow;
 
@@ -83,6 +111,13 @@ pub enum RowEval {
     /// pass that materializes a freshly computed working pair.
     #[default]
     PanelFused,
+    /// The relaxed tier: the fused pair path of [`RowEval::PanelFused`],
+    /// but every dot product runs through explicit vector micro-kernels
+    /// (AVX2+FMA when the host has them, an unrolled multi-accumulator
+    /// portable kernel otherwise) that reassociate the f32 reduction.
+    /// NOT bit-identical to the scalar oracle — tolerance-validated
+    /// within [`SIMD_MAX_REL_ERROR`] instead (see the module docs).
+    Simd,
 }
 
 impl RowEval {
@@ -90,6 +125,81 @@ impl RowEval {
     pub fn uses_panels(self) -> bool {
         !matches!(self, RowEval::Scalar)
     }
+
+    /// Does this mode fuse the SMO rank-2 f-update into the pair fetch?
+    pub fn fused(self) -> bool {
+        matches!(self, RowEval::PanelFused | RowEval::Simd)
+    }
+
+    /// The dot-product inner kernel this mode runs in the panel sweeps.
+    pub fn kernel(self) -> PanelKernel {
+        if self == RowEval::Simd {
+            PanelKernel::Relaxed
+        } else {
+            PanelKernel::Exact
+        }
+    }
+
+    /// Canonical CLI/JSON spelling (the `--row-eval` values).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RowEval::Scalar => "scalar",
+            RowEval::Panel => "panel",
+            RowEval::PanelFused => "panel-fused",
+            RowEval::Simd => "simd",
+        }
+    }
+}
+
+impl std::str::FromStr for RowEval {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<RowEval, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Ok(RowEval::Scalar),
+            "panel" => Ok(RowEval::Panel),
+            "panel-fused" | "panelfused" | "fused" => Ok(RowEval::PanelFused),
+            "simd" => Ok(RowEval::Simd),
+            other => Err(format!("unknown row-eval '{other}' (scalar|panel|panel-fused|simd)")),
+        }
+    }
+}
+
+/// Which inner dot-product kernel a panel sweep runs. [`PanelKernel::Exact`]
+/// replays the scalar accumulation order in every lane (bit-identical to
+/// the oracle); [`PanelKernel::Relaxed`] uses the reassociated vector
+/// micro-kernels and is only pinned to [`SIMD_MAX_REL_ERROR`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PanelKernel {
+    /// Scalar-order accumulation — bit-identical to the scalar oracle.
+    #[default]
+    Exact,
+    /// Reassociated multi-accumulator reduction (FMA where available).
+    Relaxed,
+}
+
+/// Documented bound on `|relaxed − exact| / max(|exact|, 1)` for any
+/// kernel value produced by [`PanelKernel::Relaxed`]. The actual
+/// deviation is f32 reassociation + FMA contraction noise in the dot
+/// product (a few ulps, ~1e-7 relative for well-scaled data); the bound
+/// is deliberately loose so the property tests stay robust across
+/// feature widths and CPUs. CI gates this via `tests/simd_tier.rs`.
+pub const SIMD_MAX_REL_ERROR: f32 = 1e-5;
+
+/// Force the relaxed tier onto its portable micro-kernels even when the
+/// host supports AVX2+FMA (process-wide test hook for fallback
+/// coverage). Safe to toggle at any point: both implementations honor
+/// the same tolerance contract, never a bitwise one.
+pub fn simd_force_portable(on: bool) {
+    simd::FORCE_PORTABLE.store(on, std::sync::atomic::Ordering::SeqCst);
+}
+
+/// Is the relaxed tier currently dispatching to the AVX2+FMA kernels?
+/// `false` on non-x86_64 hosts, when the CPU lacks avx2/fma, when
+/// `PARASVM_NO_SIMD` was set in the environment at first dispatch, or
+/// under [`simd_force_portable`].
+pub fn simd_acceleration_active() -> bool {
+    simd::use_avx2()
 }
 
 /// One packed panel word: [`LANES`] f32 values, 32-byte aligned so every
@@ -218,9 +328,22 @@ impl<'a> DatasetView<'a> {
     /// boundaries. Bit-identical to
     /// [`super::parallel::rbf_row_slice_into`] over the same window.
     pub fn row_into(&self, q: usize, gamma: f32, out: &mut [f32], threads: usize) {
+        self.row_into_with(q, gamma, out, threads, PanelKernel::Exact);
+    }
+
+    /// [`Self::row_into`] with an explicit inner kernel
+    /// ([`PanelKernel::Relaxed`] is the [`RowEval::Simd`] tier).
+    pub fn row_into_with(
+        &self,
+        q: usize,
+        gamma: f32,
+        out: &mut [f32],
+        threads: usize,
+        kernel: PanelKernel,
+    ) {
         assert_eq!(out.len(), self.cols.len());
         self.par_panel_chunks(out, threads, |p_lo, chunk| {
-            self.eval1(q, gamma, p_lo, chunk);
+            self.eval1(q, gamma, p_lo, chunk, kernel);
         });
     }
 
@@ -236,9 +359,24 @@ impl<'a> DatasetView<'a> {
         out_j: &mut [f32],
         threads: usize,
     ) {
+        self.pair_into_with(i, j, gamma, out_i, out_j, threads, PanelKernel::Exact);
+    }
+
+    /// [`Self::pair_into`] with an explicit inner kernel.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pair_into_with(
+        &self,
+        i: usize,
+        j: usize,
+        gamma: f32,
+        out_i: &mut [f32],
+        out_j: &mut [f32],
+        threads: usize,
+        kernel: PanelKernel,
+    ) {
         assert_eq!(out_i.len(), self.cols.len());
         assert_eq!(out_j.len(), self.cols.len());
-        self.pair_driver(i, j, gamma, out_i, out_j, None, threads);
+        self.pair_driver(i, j, gamma, out_i, out_j, None, threads, kernel);
     }
 
     /// The fused evaluate-and-update pass: materializes the pair rows like
@@ -260,10 +398,41 @@ impl<'a> DatasetView<'a> {
         f: &mut [f64],
         threads: usize,
     ) {
+        self.pair_update_into_with(
+            i,
+            j,
+            gamma,
+            out_i,
+            out_j,
+            ci,
+            cj,
+            f,
+            threads,
+            PanelKernel::Exact,
+        );
+    }
+
+    /// [`Self::pair_update_into`] with an explicit inner kernel. The
+    /// fused f64 update applies the same expression in the same order
+    /// either way; only the f32 row values feeding it are relaxed.
+    #[allow(clippy::too_many_arguments)]
+    pub fn pair_update_into_with(
+        &self,
+        i: usize,
+        j: usize,
+        gamma: f32,
+        out_i: &mut [f32],
+        out_j: &mut [f32],
+        ci: f64,
+        cj: f64,
+        f: &mut [f64],
+        threads: usize,
+        kernel: PanelKernel,
+    ) {
         assert_eq!(out_i.len(), self.cols.len());
         assert_eq!(out_j.len(), self.cols.len());
         assert_eq!(f.len(), self.cols.len());
-        self.pair_driver(i, j, gamma, out_i, out_j, Some((ci, cj, f)), threads);
+        self.pair_driver(i, j, gamma, out_i, out_j, Some((ci, cj, f)), threads, kernel);
     }
 
     /// The one chunk-scatter driver behind [`Self::pair_into`] and
@@ -280,10 +449,11 @@ impl<'a> DatasetView<'a> {
         out_j: &mut [f32],
         upd: Option<(f64, f64, &mut [f64])>,
         threads: usize,
+        kernel: PanelKernel,
     ) {
         let chunks = panel_ranges_for(self.cols.len(), self.d, threads);
         if chunks.len() <= 1 {
-            self.eval2(i, j, gamma, 0, out_i, out_j, upd);
+            self.eval2(i, j, gamma, 0, out_i, out_j, upd, kernel);
             return;
         }
         let (coeffs, mut rest_f) = match upd {
@@ -306,7 +476,7 @@ impl<'a> DatasetView<'a> {
                     _ => None,
                 };
                 let p_lo = r.p_lo;
-                s.spawn(move || self.eval2(i, j, gamma, p_lo, si, sj, chunk_upd));
+                s.spawn(move || self.eval2(i, j, gamma, p_lo, si, sj, chunk_upd, kernel));
                 rest_i = ti;
                 rest_j = tj;
             }
@@ -330,12 +500,18 @@ impl<'a> DatasetView<'a> {
     /// full-build fallback is needed (`tests/panel_kernel.rs` pins the
     /// transposed order bitwise).
     pub fn gram(&self, gamma: f32, threads: usize) -> Vec<f32> {
+        self.gram_with(gamma, threads, PanelKernel::Exact)
+    }
+
+    /// [`Self::gram`] with an explicit inner kernel. The mirror pass is
+    /// a plain copy, so the relaxed Gram stays exactly symmetric.
+    pub fn gram_with(&self, gamma: f32, threads: usize, kernel: PanelKernel) -> Vec<f32> {
         assert!(self.cols.lo == 0 && self.cols.hi == self.n, "gram needs a full-window view");
         let n = self.n;
         let mut k = vec![0.0f32; n * n];
         let threads = threads.max(1).min(n.max(1));
         if threads <= 1 || n * self.d < 2 * PAR_MIN_ELEMS {
-            self.gram_band_upper(0, gamma, &mut k);
+            self.gram_band_upper(0, gamma, &mut k, kernel);
         } else {
             // Force the lazy pack before fanning out so the workers start
             // on an already-built layout instead of serializing on the
@@ -350,7 +526,7 @@ impl<'a> DatasetView<'a> {
                         continue;
                     }
                     let (chunk, tail) = rest.split_at_mut(band.len() * n);
-                    s.spawn(move || self.gram_band_upper(band.lo, gamma, chunk));
+                    s.spawn(move || self.gram_band_upper(band.lo, gamma, chunk, kernel));
                     rest = tail;
                 }
             });
@@ -363,6 +539,18 @@ impl<'a> DatasetView<'a> {
     /// query rows per panel sweep, **no** diagonal override — queries are
     /// arbitrary points, exactly like [`crate::svm::kernel::rbf_cross`].
     pub fn cross_into(&self, q: &[f32], m: usize, gamma: f32, out: &mut [f32]) {
+        self.cross_into_with(q, m, gamma, out, PanelKernel::Exact);
+    }
+
+    /// [`Self::cross_into`] with an explicit inner kernel.
+    pub fn cross_into_with(
+        &self,
+        q: &[f32],
+        m: usize,
+        gamma: f32,
+        out: &mut [f32],
+        kernel: PanelKernel,
+    ) {
         assert_eq!(q.len(), m * self.d);
         let w = self.cols.len();
         assert_eq!(out.len(), m * w);
@@ -381,7 +569,7 @@ impl<'a> DatasetView<'a> {
                 outs.push(head);
                 rest = tail;
             }
-            self.eval_block(&queries, &qnorms[qi..qi + b], &[], gamma, 0, &mut outs);
+            self.eval_block(&queries, &qnorms[qi..qi + b], &[], gamma, 0, &mut outs, kernel);
             qi += b;
         }
     }
@@ -393,7 +581,7 @@ impl<'a> DatasetView<'a> {
     /// lower triangle for the mirror pass. (Within a block, a handful of
     /// sub-diagonal entries in the leading panel are computed anyway; the
     /// mirror overwrites them with bitwise-equal values.)
-    fn gram_band_upper(&self, row0: usize, gamma: f32, out: &mut [f32]) {
+    fn gram_band_upper(&self, row0: usize, gamma: f32, out: &mut [f32], kernel: PanelKernel) {
         let n = self.n;
         let rows = out.len() / n.max(1);
         let mut r = 0usize;
@@ -412,16 +600,16 @@ impl<'a> DatasetView<'a> {
                 outs.push(head);
                 rest = tail;
             }
-            self.eval_block(&queries, &qnorms, &diags, gamma, p0, &mut outs);
+            self.eval_block(&queries, &qnorms, &diags, gamma, p0, &mut outs, kernel);
             r += b;
         }
     }
 
     /// Single-row kernel over the panel chunk starting at panel `p_lo`.
-    fn eval1(&self, q: usize, gamma: f32, p_lo: usize, out: &mut [f32]) {
+    fn eval1(&self, q: usize, gamma: f32, p_lo: usize, out: &mut [f32], kernel: PanelKernel) {
         let xq = self.query(q);
         let qn = self.norms[q];
-        self.eval_block(&[xq], &[qn], &[q], gamma, p_lo, &mut [out]);
+        self.eval_block(&[xq], &[qn], &[q], gamma, p_lo, &mut [out], kernel);
     }
 
     /// Pair kernel over one panel chunk, optionally fused with the rank-2
@@ -436,6 +624,7 @@ impl<'a> DatasetView<'a> {
         out_i: &mut [f32],
         out_j: &mut [f32],
         upd: Option<(f64, f64, &mut [f64])>,
+        kernel: PanelKernel,
     ) {
         let d = self.d;
         let packed = self.panels_data();
@@ -450,17 +639,23 @@ impl<'a> DatasetView<'a> {
             let panel = &packed[p * d..(p + 1) * d];
             // 2×LANES register tile: both query chains share each panel
             // load, so the packed data is read once for the pair.
-            let mut acc_i = Lane::ZERO;
-            let mut acc_j = Lane::ZERO;
-            for (c, lane) in panel.iter().enumerate() {
-                let (vi, vj) = (xi[c], xj[c]);
-                for w in 0..LANES {
-                    acc_i.0[w] += vi * lane.0[w];
+            let (acc_i, acc_j) = match kernel {
+                PanelKernel::Exact => {
+                    let mut acc_i = Lane::ZERO;
+                    let mut acc_j = Lane::ZERO;
+                    for (c, lane) in panel.iter().enumerate() {
+                        let (vi, vj) = (xi[c], xj[c]);
+                        for w in 0..LANES {
+                            acc_i.0[w] += vi * lane.0[w];
+                        }
+                        for w in 0..LANES {
+                            acc_j.0[w] += vj * lane.0[w];
+                        }
+                    }
+                    (acc_i, acc_j)
                 }
-                for w in 0..LANES {
-                    acc_j.0[w] += vj * lane.0[w];
-                }
-            }
+                PanelKernel::Relaxed => simd::dot2(panel, xi, xj),
+            };
             let take = LANES.min(len - off);
             for w in 0..take {
                 let g = self.cols.lo + p * LANES + w;
@@ -491,6 +686,7 @@ impl<'a> DatasetView<'a> {
     /// `qnorms`; `diags[b]` is query b's global index for the diagonal
     /// override, empty to disable) against the panel chunk starting at
     /// `p_lo`, writing `outs[b]`.
+    #[allow(clippy::too_many_arguments)]
     fn eval_block(
         &self,
         queries: &[&[f32]],
@@ -499,6 +695,7 @@ impl<'a> DatasetView<'a> {
         gamma: f32,
         p_lo: usize,
         outs: &mut [&mut [f32]],
+        kernel: PanelKernel,
     ) {
         let d = self.d;
         let packed = self.panels_data();
@@ -510,12 +707,28 @@ impl<'a> DatasetView<'a> {
         while off < len {
             let panel = &packed[p * d..(p + 1) * d];
             let mut acc = [Lane::ZERO; GRAM_BLOCK];
-            for (c, lane) in panel.iter().enumerate() {
-                for (t, xq) in queries.iter().enumerate() {
-                    let v = xq[c];
-                    let a = &mut acc[t].0;
-                    for w in 0..LANES {
-                        a[w] += v * lane.0[w];
+            match kernel {
+                PanelKernel::Exact => {
+                    for (c, lane) in panel.iter().enumerate() {
+                        for (t, xq) in queries.iter().enumerate() {
+                            let v = xq[c];
+                            let a = &mut acc[t].0;
+                            for w in 0..LANES {
+                                a[w] += v * lane.0[w];
+                            }
+                        }
+                    }
+                }
+                PanelKernel::Relaxed => {
+                    let mut t = 0usize;
+                    while t + 2 <= b {
+                        let (a0, a1) = simd::dot2(panel, queries[t], queries[t + 1]);
+                        acc[t] = a0;
+                        acc[t + 1] = a1;
+                        t += 2;
+                    }
+                    if t < b {
+                        acc[t] = simd::dot1(panel, queries[t]);
                     }
                 }
             }
@@ -632,6 +845,462 @@ fn panel_ranges_for(len: usize, d: usize, threads: usize) -> Vec<PanelRange> {
             rows: s.lo * LANES..(s.hi * LANES).min(len),
         })
         .collect()
+}
+
+/// The relaxed-tier micro-kernels behind [`PanelKernel::Relaxed`]. Both
+/// implementations compute, per panel, the [`LANES`] dot products
+/// `Σ_c q[c]·panel[c][w]` with *reassociated* multi-accumulator
+/// reductions — the portable kernels split the feature dimension over 4
+/// (single-query) / 2 (pair) independent chains and tree-combine them;
+/// the AVX2 kernels do the same and additionally contract every step
+/// into `_mm256_fmadd_ps`. Neither is bit-pinned; both sit within
+/// [`SIMD_MAX_REL_ERROR`] of the exact path.
+mod simd {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::OnceLock;
+
+    use super::{Lane, LANES};
+
+    /// Test hook storage for [`super::simd_force_portable`].
+    pub(super) static FORCE_PORTABLE: AtomicBool = AtomicBool::new(false);
+
+    #[cfg(target_arch = "x86_64")]
+    fn detect_avx2() -> bool {
+        std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    fn detect_avx2() -> bool {
+        false
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    fn detect_f16c() -> bool {
+        detect_avx2() && std::arch::is_x86_feature_detected!("f16c")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    fn detect_f16c() -> bool {
+        false
+    }
+
+    /// Environment kill-switch, read once at first dispatch (CI sets it
+    /// before the process starts for the forced-fallback smoke run).
+    fn env_allows_simd() -> bool {
+        static ALLOWED: OnceLock<bool> = OnceLock::new();
+        *ALLOWED.get_or_init(|| std::env::var_os("PARASVM_NO_SIMD").is_none())
+    }
+
+    fn avx2_available() -> bool {
+        static AVAIL: OnceLock<bool> = OnceLock::new();
+        *AVAIL.get_or_init(|| env_allows_simd() && detect_avx2())
+    }
+
+    fn f16c_available() -> bool {
+        static AVAIL: OnceLock<bool> = OnceLock::new();
+        *AVAIL.get_or_init(|| env_allows_simd() && detect_f16c())
+    }
+
+    /// Should the next dispatch take the AVX2 path?
+    pub(super) fn use_avx2() -> bool {
+        avx2_available() && !FORCE_PORTABLE.load(Ordering::Relaxed)
+    }
+
+    /// One query's [`LANES`] dot products against `panel` (`d` words).
+    #[inline]
+    pub(super) fn dot1(panel: &[Lane], xq: &[f32]) -> Lane {
+        #[cfg(target_arch = "x86_64")]
+        if use_avx2() {
+            // SAFETY: use_avx2() verified avx2+fma at runtime.
+            return unsafe { avx2::dot1(panel, xq) };
+        }
+        dot1_portable(panel, xq)
+    }
+
+    /// Two queries' dot products in one panel sweep (the pair tile).
+    #[inline]
+    pub(super) fn dot2(panel: &[Lane], xi: &[f32], xj: &[f32]) -> (Lane, Lane) {
+        #[cfg(target_arch = "x86_64")]
+        if use_avx2() {
+            // SAFETY: use_avx2() verified avx2+fma at runtime.
+            return unsafe { avx2::dot2(panel, xi, xj) };
+        }
+        dot2_portable(panel, xi, xj)
+    }
+
+    /// Widen one half-precision panel to f32 lanes (F16C in-register
+    /// conversion when the host has it, scalar bit-twiddling otherwise;
+    /// both produce identical bits — the conversion itself is exact).
+    pub(super) fn widen_panel(half: &[super::HalfLane], out: &mut [Lane]) {
+        debug_assert_eq!(half.len(), out.len());
+        #[cfg(target_arch = "x86_64")]
+        if f16c_available() && !FORCE_PORTABLE.load(Ordering::Relaxed) {
+            // SAFETY: f16c_available() verified f16c at runtime.
+            unsafe { avx2::widen_panel(half, out) };
+            return;
+        }
+        for (h, o) in half.iter().zip(out.iter_mut()) {
+            for w in 0..LANES {
+                o.0[w] = super::f16_bits_to_f32(h.0[w]);
+            }
+        }
+    }
+
+    /// Portable relaxed kernel: 4 independent accumulators over the
+    /// feature dimension, unroll-4, tree-combined at the end.
+    fn dot1_portable(panel: &[Lane], xq: &[f32]) -> Lane {
+        let mut a = [Lane::ZERO; 4];
+        let d = panel.len();
+        let mut c = 0usize;
+        while c + 4 <= d {
+            for (u, acc) in a.iter_mut().enumerate() {
+                let v = xq[c + u];
+                let lane = &panel[c + u];
+                for w in 0..LANES {
+                    acc.0[w] += v * lane.0[w];
+                }
+            }
+            c += 4;
+        }
+        while c < d {
+            let v = xq[c];
+            let lane = &panel[c];
+            for w in 0..LANES {
+                a[0].0[w] += v * lane.0[w];
+            }
+            c += 1;
+        }
+        let mut out = Lane::ZERO;
+        for w in 0..LANES {
+            out.0[w] = (a[0].0[w] + a[1].0[w]) + (a[2].0[w] + a[3].0[w]);
+        }
+        out
+    }
+
+    /// Portable pair kernel: 2 accumulators per query, unroll-2 — the
+    /// 2-query tile already carries 4 independent chains, which keeps
+    /// the register budget inside what AVX2's 16 ymm registers mirror.
+    fn dot2_portable(panel: &[Lane], xi: &[f32], xj: &[f32]) -> (Lane, Lane) {
+        let mut ai = [Lane::ZERO; 2];
+        let mut aj = [Lane::ZERO; 2];
+        let d = panel.len();
+        let mut c = 0usize;
+        while c + 2 <= d {
+            for u in 0..2 {
+                let (vi, vj) = (xi[c + u], xj[c + u]);
+                let lane = &panel[c + u];
+                for w in 0..LANES {
+                    ai[u].0[w] += vi * lane.0[w];
+                }
+                for w in 0..LANES {
+                    aj[u].0[w] += vj * lane.0[w];
+                }
+            }
+            c += 2;
+        }
+        if c < d {
+            let (vi, vj) = (xi[c], xj[c]);
+            let lane = &panel[c];
+            for w in 0..LANES {
+                ai[0].0[w] += vi * lane.0[w];
+            }
+            for w in 0..LANES {
+                aj[0].0[w] += vj * lane.0[w];
+            }
+        }
+        let (mut oi, mut oj) = (Lane::ZERO, Lane::ZERO);
+        for w in 0..LANES {
+            oi.0[w] = ai[0].0[w] + ai[1].0[w];
+            oj.0[w] = aj[0].0[w] + aj[1].0[w];
+        }
+        (oi, oj)
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    mod avx2 {
+        use std::arch::x86_64::*;
+
+        use super::super::{HalfLane, Lane};
+
+        /// # Safety
+        /// Caller must have verified avx2 support at runtime.
+        #[inline]
+        #[target_feature(enable = "avx2")]
+        unsafe fn to_lane(v: __m256) -> Lane {
+            let mut out = Lane::ZERO;
+            // Lane is #[repr(C, align(32))]: the aligned store is sound.
+            _mm256_store_ps(out.0.as_mut_ptr(), v);
+            out
+        }
+
+        /// # Safety
+        /// Caller must have verified avx2+fma support at runtime.
+        #[target_feature(enable = "avx2", enable = "fma")]
+        pub(super) unsafe fn dot1(panel: &[Lane], xq: &[f32]) -> Lane {
+            let d = panel.len();
+            let mut a0 = _mm256_setzero_ps();
+            let mut a1 = _mm256_setzero_ps();
+            let mut a2 = _mm256_setzero_ps();
+            let mut a3 = _mm256_setzero_ps();
+            let mut c = 0usize;
+            while c + 4 <= d {
+                a0 = _mm256_fmadd_ps(
+                    _mm256_set1_ps(xq[c]),
+                    _mm256_load_ps(panel[c].0.as_ptr()),
+                    a0,
+                );
+                a1 = _mm256_fmadd_ps(
+                    _mm256_set1_ps(xq[c + 1]),
+                    _mm256_load_ps(panel[c + 1].0.as_ptr()),
+                    a1,
+                );
+                a2 = _mm256_fmadd_ps(
+                    _mm256_set1_ps(xq[c + 2]),
+                    _mm256_load_ps(panel[c + 2].0.as_ptr()),
+                    a2,
+                );
+                a3 = _mm256_fmadd_ps(
+                    _mm256_set1_ps(xq[c + 3]),
+                    _mm256_load_ps(panel[c + 3].0.as_ptr()),
+                    a3,
+                );
+                c += 4;
+            }
+            while c < d {
+                a0 = _mm256_fmadd_ps(
+                    _mm256_set1_ps(xq[c]),
+                    _mm256_load_ps(panel[c].0.as_ptr()),
+                    a0,
+                );
+                c += 1;
+            }
+            to_lane(_mm256_add_ps(_mm256_add_ps(a0, a1), _mm256_add_ps(a2, a3)))
+        }
+
+        /// # Safety
+        /// Caller must have verified avx2+fma support at runtime.
+        #[target_feature(enable = "avx2", enable = "fma")]
+        pub(super) unsafe fn dot2(panel: &[Lane], xi: &[f32], xj: &[f32]) -> (Lane, Lane) {
+            let d = panel.len();
+            let mut ai0 = _mm256_setzero_ps();
+            let mut ai1 = _mm256_setzero_ps();
+            let mut aj0 = _mm256_setzero_ps();
+            let mut aj1 = _mm256_setzero_ps();
+            let mut c = 0usize;
+            while c + 2 <= d {
+                let p0 = _mm256_load_ps(panel[c].0.as_ptr());
+                let p1 = _mm256_load_ps(panel[c + 1].0.as_ptr());
+                ai0 = _mm256_fmadd_ps(_mm256_set1_ps(xi[c]), p0, ai0);
+                aj0 = _mm256_fmadd_ps(_mm256_set1_ps(xj[c]), p0, aj0);
+                ai1 = _mm256_fmadd_ps(_mm256_set1_ps(xi[c + 1]), p1, ai1);
+                aj1 = _mm256_fmadd_ps(_mm256_set1_ps(xj[c + 1]), p1, aj1);
+                c += 2;
+            }
+            if c < d {
+                let p0 = _mm256_load_ps(panel[c].0.as_ptr());
+                ai0 = _mm256_fmadd_ps(_mm256_set1_ps(xi[c]), p0, ai0);
+                aj0 = _mm256_fmadd_ps(_mm256_set1_ps(xj[c]), p0, aj0);
+            }
+            (to_lane(_mm256_add_ps(ai0, ai1)), to_lane(_mm256_add_ps(aj0, aj1)))
+        }
+
+        /// # Safety
+        /// Caller must have verified f16c support at runtime.
+        #[target_feature(enable = "f16c")]
+        pub(super) unsafe fn widen_panel(half: &[HalfLane], out: &mut [Lane]) {
+            for (h, o) in half.iter().zip(out.iter_mut()) {
+                // HalfLane is #[repr(C, align(16))]: one aligned 128-bit
+                // load holds all 8 half words.
+                let v = _mm256_cvtph_ps(_mm_load_si128(h.0.as_ptr() as *const __m128i));
+                _mm256_store_ps(o.0.as_mut_ptr(), v);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reduced-precision (binary16) storage for the compiled serve tier.
+
+/// Convert f32 → IEEE-754 binary16 bits with round-to-nearest-even
+/// (overflow → ±inf, NaN quieted, subnormals handled). Hand-rolled: the
+/// toolchain has no stable `f16` and vendoring a crate is off the table.
+pub fn f32_to_f16_bits(v: f32) -> u16 {
+    let bits = v.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let abs = bits & 0x7fff_ffff;
+    if abs >= 0x7f80_0000 {
+        // Inf / NaN (any NaN payload collapses to a quiet NaN).
+        let nan = if abs > 0x7f80_0000 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | nan;
+    }
+    let exp = (abs >> 23) as i32 - 127;
+    if exp >= 16 {
+        return sign | 0x7c00; // overflow → inf
+    }
+    let mant = abs & 0x007f_ffff;
+    if exp >= -14 {
+        // Normal half: keep 10 mantissa bits, round the 13 dropped ones.
+        let half = (((exp + 15) as u32) << 10) | (mant >> 13);
+        let rem = mant & 0x1fff;
+        let round = (rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1)) as u32;
+        // A carry out of the mantissa bumps the exponent — the encoding
+        // is contiguous, so `half + round` is correct even then (and
+        // 0x7bff + 1 = 0x7c00 = inf is the right saturation).
+        return sign | (half + round) as u16;
+    }
+    if exp >= -25 {
+        // Subnormal half: shift the implicit-1 mantissa into place.
+        let mant = mant | 0x0080_0000;
+        let shift = (-14 - exp) as u32 + 13;
+        let half = mant >> shift;
+        let rem = mant & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let round = (rem > halfway || (rem == halfway && (half & 1) == 1)) as u32;
+        return sign | (half + round) as u16;
+    }
+    sign // underflow to ±0
+}
+
+/// Convert IEEE-754 binary16 bits → f32 (exact: every half value is
+/// representable in f32).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else if exp != 0 {
+        sign | ((exp + 112) << 23) | (mant << 13)
+    } else if mant != 0 {
+        // Subnormal half → normal f32: normalize the mantissa.
+        let b = 31 - mant.leading_zeros(); // highest set bit, 0..=9
+        sign | ((b + 103) << 23) | ((mant << (23 - b)) & 0x007f_ffff)
+    } else {
+        sign
+    };
+    f32::from_bits(bits)
+}
+
+/// One packed half-precision panel word: [`LANES`] binary16 values in
+/// 16 bytes, aligned so the F16C widen is one 128-bit load.
+#[derive(Debug, Clone, Copy)]
+#[repr(C, align(16))]
+struct HalfLane([u16; LANES]);
+
+impl HalfLane {
+    const ZERO: HalfLane = HalfLane([0; LANES]);
+}
+
+/// A half-precision twin of a full-window [`DatasetView`] pack: the
+/// compiled serve engine's opt-in reduced-precision tier
+/// ([`crate::svm::compile::CompiledModel::quantize`]). SV features are
+/// stored as binary16 (half the panel bytes → half the memory-bandwidth
+/// per sweep) and widened to f32 in-register inside [`Self::cross_into`];
+/// queries stay f32. `norms` are the squared norms of the *quantized*
+/// rows — the expanded identity must describe the vectors the dot
+/// products actually see, otherwise `d2` loses its `≥ 0` meaning.
+///
+/// Accuracy: quantization perturbs each stored feature by ≤ 2⁻¹¹
+/// relative, so decision values move at ~1e-3 relative scale —
+/// prediction flips only near the margin. The serve harness accounts
+/// the per-dataset accuracy delta and CI gates it against
+/// [`crate::svm::compile::F16_ACCURACY_DELTA_BOUND`].
+pub struct QuantizedView {
+    n: usize,
+    d: usize,
+    /// Same layout as [`DatasetView`]'s panels, half-precision words.
+    packed: Vec<HalfLane>,
+    norms: Vec<f32>,
+}
+
+impl QuantizedView {
+    /// Quantize a full-window view's rows (round-to-nearest-even).
+    pub fn quantize(view: &DatasetView<'_>) -> QuantizedView {
+        assert!(
+            view.cols.lo == 0 && view.cols.hi == view.n,
+            "quantize needs a full-window view"
+        );
+        let (n, d) = (view.n, view.d);
+        let panels = n.div_ceil(LANES);
+        let mut packed = vec![HalfLane::ZERO; panels * d];
+        let mut norms = vec![0.0f32; n];
+        for t in 0..n {
+            let row = &view.x[t * d..(t + 1) * d];
+            let (p, w) = (t / LANES, t % LANES);
+            let mut norm = 0.0f32;
+            for (c, &v) in row.iter().enumerate() {
+                let h = f32_to_f16_bits(v);
+                packed[p * d + c].0[w] = h;
+                let q = f16_bits_to_f32(h);
+                norm += q * q;
+            }
+            norms[t] = norm;
+        }
+        QuantizedView { n, d, packed, norms }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Packed bytes (the bandwidth story: half the f32 pack).
+    pub fn packed_bytes(&self) -> usize {
+        self.packed.len() * std::mem::size_of::<HalfLane>()
+    }
+
+    /// Squared norms of the quantized rows.
+    pub fn norms(&self) -> &[f32] {
+        &self.norms
+    }
+
+    /// Rectangular cross-kernel block like [`DatasetView::cross_into`]
+    /// (no diagonal override), SV features widened f16→f32 in-register
+    /// per panel and accumulated with the relaxed micro-kernels. Panels
+    /// are the outer loop so each one is widened exactly once per call.
+    pub fn cross_into(&self, q: &[f32], m: usize, gamma: f32, out: &mut [f32]) {
+        let d = self.d;
+        assert_eq!(q.len(), m * d);
+        let n = self.n;
+        assert_eq!(out.len(), m * n);
+        let qnorms: Vec<f32> = (0..m)
+            .map(|i| q[i * d..(i + 1) * d].iter().map(|v| v * v).sum())
+            .collect();
+        let mut wide = vec![Lane::ZERO; d];
+        let mut off = 0usize;
+        let mut p = 0usize;
+        while off < n {
+            simd::widen_panel(&self.packed[p * d..(p + 1) * d], &mut wide);
+            let take = LANES.min(n - off);
+            let mut qi = 0usize;
+            while qi < m {
+                if qi + 2 <= m {
+                    let xi = &q[qi * d..(qi + 1) * d];
+                    let xj = &q[(qi + 1) * d..(qi + 2) * d];
+                    let (ai, aj) = simd::dot2(&wide, xi, xj);
+                    self.finish(&ai, qnorms[qi], gamma, off, take, &mut out[qi * n..]);
+                    self.finish(&aj, qnorms[qi + 1], gamma, off, take, &mut out[(qi + 1) * n..]);
+                    qi += 2;
+                } else {
+                    let a = simd::dot1(&wide, &q[qi * d..(qi + 1) * d]);
+                    self.finish(&a, qnorms[qi], gamma, off, take, &mut out[qi * n..]);
+                    qi += 1;
+                }
+            }
+            off += take;
+            p += 1;
+        }
+    }
+
+    /// The shared expanded-identity finish for one query's panel chunk.
+    fn finish(&self, acc: &Lane, qn: f32, gamma: f32, off: usize, take: usize, out: &mut [f32]) {
+        for w in 0..take {
+            let d2 = (qn + self.norms[off + w] - 2.0 * acc.0[w]).max(0.0);
+            out[off + w] = (-gamma * d2).exp();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -869,6 +1538,149 @@ mod tests {
                 assert_eq!(g[i * n + j].to_bits(), direct.to_bits(), "({i},{j})");
                 assert_eq!(g[i * n + j].to_bits(), g[j * n + i].to_bits(), "({i},{j})");
             }
+        }
+    }
+
+    fn max_rel_err(got: &[f32], want: &[f32]) -> f32 {
+        got.iter()
+            .zip(want.iter())
+            .map(|(&g, &w)| (g - w).abs() / w.abs().max(1.0))
+            .fold(0.0f32, f32::max)
+    }
+
+    #[test]
+    fn row_eval_spellings_round_trip() {
+        for ev in [RowEval::Scalar, RowEval::Panel, RowEval::PanelFused, RowEval::Simd] {
+            assert_eq!(ev.as_str().parse::<RowEval>().unwrap(), ev);
+        }
+        assert_eq!("fused".parse::<RowEval>().unwrap(), RowEval::PanelFused);
+        assert!("warp".parse::<RowEval>().is_err());
+        assert!(RowEval::Simd.uses_panels() && RowEval::Simd.fused());
+        assert_eq!(RowEval::Simd.kernel(), PanelKernel::Relaxed);
+        assert_eq!(RowEval::PanelFused.kernel(), PanelKernel::Exact);
+    }
+
+    #[test]
+    fn relaxed_rows_match_exact_within_tolerance() {
+        let (n, d) = (37, 13);
+        let x = random_x(n, d, 21);
+        let v = DatasetView::pack(&x, n, d);
+        let mut exact = vec![0.0f32; n];
+        let mut relaxed = vec![0.0f32; n];
+        for gamma in [0.0f32, 0.7] {
+            for q in [0, 5, n - 1] {
+                v.row_into(q, gamma, &mut exact, 1);
+                v.row_into_with(q, gamma, &mut relaxed, 1, PanelKernel::Relaxed);
+                assert!(
+                    max_rel_err(&relaxed, &exact) <= SIMD_MAX_REL_ERROR,
+                    "q={q} gamma={gamma}"
+                );
+                assert_eq!(relaxed[q], 1.0, "diagonal override survives the relaxed path");
+            }
+        }
+    }
+
+    #[test]
+    fn relaxed_fused_update_tracks_its_own_rows_exactly() {
+        // The f64 f-update must replay the two-pass expression over the
+        // relaxed rows bit-for-bit — only the f32 rows are relaxed.
+        let (n, d, gamma) = (29, 7, 0.6);
+        let x = random_x(n, d, 22);
+        let v = DatasetView::pack(&x, n, d);
+        let (ci, cj) = (0.75f64, -0.5f64);
+        let mut f = vec![0.0f64; n];
+        let (mut ri, mut rj) = (vec![0.0f32; n], vec![0.0f32; n]);
+        let k = PanelKernel::Relaxed;
+        v.pair_update_into_with(3, 11, gamma, &mut ri, &mut rj, ci, cj, &mut f, 1, k);
+        for t in 0..n {
+            let want = ci * ri[t] as f64 + cj * rj[t] as f64;
+            assert_eq!(f[t].to_bits(), want.to_bits(), "t={t}");
+        }
+    }
+
+    #[test]
+    fn forced_portable_kernels_stay_within_tolerance() {
+        let (n, d, gamma) = (26, 9, 0.8);
+        let x = random_x(n, d, 23);
+        let v = DatasetView::pack(&x, n, d);
+        let mut exact = vec![0.0f32; n];
+        let mut portable = vec![0.0f32; n];
+        v.row_into(4, gamma, &mut exact, 1);
+        simd_force_portable(true);
+        assert!(!simd_acceleration_active());
+        v.row_into_with(4, gamma, &mut portable, 1, PanelKernel::Relaxed);
+        simd_force_portable(false);
+        assert!(max_rel_err(&portable, &exact) <= SIMD_MAX_REL_ERROR);
+    }
+
+    #[test]
+    fn f16_bits_round_trip_known_values() {
+        // Exactly representable values survive the round trip bit-for-bit.
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 6.103515625e-5] {
+            let rt = f16_bits_to_f32(f32_to_f16_bits(v));
+            assert_eq!(rt.to_bits(), v.to_bits(), "{v}");
+        }
+        // Overflow saturates to inf, inf/NaN are preserved.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1.0e6)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // Round-to-nearest-even: 1 + 2^-11 is exactly halfway between
+        // 1.0 and the next half (1 + 2^-10); even mantissa (1.0) wins.
+        assert_eq!(f32_to_f16_bits(1.0 + 0.000_488_281_25), 0x3c00);
+        // Subnormal halves round-trip too.
+        let tiny = f16_bits_to_f32(0x0001); // smallest positive subnormal
+        assert_eq!(f32_to_f16_bits(tiny), 0x0001);
+    }
+
+    #[test]
+    fn f16_quantization_error_is_bounded() {
+        let mut rng = Rng::new(31);
+        for _ in 0..2000 {
+            let v = rng.normal() * 10.0;
+            let q = f16_bits_to_f32(f32_to_f16_bits(v));
+            // binary16 has 11 significand bits: relative error ≤ 2^-11.
+            assert!((q - v).abs() <= v.abs() * 4.9e-4 + 1e-7, "{v} -> {q}");
+        }
+    }
+
+    #[test]
+    fn quantized_cross_matches_f32_cross_within_f16_noise() {
+        let (n, d, m, gamma) = (21, 6, 5, 0.9);
+        let x = random_x(n, d, 32);
+        let v = DatasetView::pack(&x, n, d);
+        let qv = QuantizedView::quantize(&v);
+        assert_eq!(qv.n(), n);
+        assert_eq!(qv.d(), d);
+        // Half the f32 pack, modulo the per-panel alignment rounding.
+        assert!(qv.packed_bytes() <= n.div_ceil(LANES) * LANES * d * 2);
+        let q = random_x(m, d, 33);
+        let mut full = vec![0.0f32; m * n];
+        let mut half = vec![0.0f32; m * n];
+        v.cross_into(&q, m, gamma, &mut full);
+        qv.cross_into(&q, m, gamma, &mut half);
+        // Kernel values live in (0, 1]; f16 SV storage moves them at the
+        // ~1e-3 scale. This is a sanity envelope, not the serve-accuracy
+        // gate (that is measured end-to-end on real datasets).
+        for (a, b) in half.iter().zip(full.iter()) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn quantized_norms_describe_the_quantized_rows() {
+        let (n, d) = (9, 4);
+        let x = random_x(n, d, 34);
+        let v = DatasetView::pack(&x, n, d);
+        let qv = QuantizedView::quantize(&v);
+        for i in 0..n {
+            let want: f32 = x[i * d..(i + 1) * d]
+                .iter()
+                .map(|&v| {
+                    let q = f16_bits_to_f32(f32_to_f16_bits(v));
+                    q * q
+                })
+                .sum();
+            assert_eq!(qv.norms()[i].to_bits(), want.to_bits(), "row {i}");
         }
     }
 

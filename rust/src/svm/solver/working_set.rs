@@ -62,8 +62,10 @@ pub struct EngineConfig {
     /// Working-set selection rule (WSS1 = the bit-exact oracle rule).
     pub selection: Selection,
     /// Kernel-row evaluation path (panel-fused by default; the scalar
-    /// loop is the reference/ablation baseline). Values are bit-identical
-    /// across modes, so this is a pure performance knob.
+    /// loop is the reference/ablation baseline). All modes except
+    /// [`RowEval::Simd`] are bit-identical; `Simd` trades bit-replay for
+    /// explicit vector kernels bounded by
+    /// [`super::panel::SIMD_MAX_REL_ERROR`].
     pub row_eval: RowEval,
 }
 
