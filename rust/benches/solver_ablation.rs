@@ -3,10 +3,13 @@
 //! relaxed explicit-SIMD tier) vs cached+shrink vs parallel working-set
 //! SMO on the Pavia subset, the row-sharded distributed engine at 1/2/4
 //! ranks vs the single-rank cached engine, sequential- vs
-//! concurrent-pair OvO multiclass on a 4-worker universe, plus the
+//! concurrent-pair OvO multiclass on a 4-worker universe, the
 //! serve-throughput comparison (legacy per-pair path vs the compiled
 //! shared-SV engine at 1 and 2 shard workers, and the f16 quantized pack
-//! with its accuracy delta, on iris/wdbc).
+//! with its accuracy delta, on iris/wdbc), the per-rank shared
+//! cross-pair kernel-row cache on the OvO workload, and the
+//! direct-vs-cascade scaling curve on the growing synthetic two-class
+//! workload (schema v7).
 //!
 //! Native-only — runs from a clean checkout, no `make artifacts` needed:
 //!
@@ -23,14 +26,18 @@
 //! simd tier is more than 10% slower than the bit-exact fused row it is
 //! supposed to beat, if the compiled serve engine delivers less QPS than
 //! the legacy per-pair path on any bench dataset (identical answers, so
-//! any slowdown is a pure serving-stack regression), or if the f16
-//! quantized pack's accuracy delta exceeds the documented bound.
+//! any slowdown is a pure serving-stack regression), if the f16
+//! quantized pack's accuracy delta exceeds the documented bound, if the
+//! cascade front disagrees with the direct solve beyond the documented
+//! tolerance or fails to beat it at the largest row count, or if the
+//! shared cross-pair cache records no reuse on the OvO workload.
 
 use parasvm::harness::{
     run_solver_ablation, LABEL_PANEL_FUSED, LABEL_SCALAR_ROWS, LABEL_SIMD_ROWS,
 };
-use parasvm::svm::compile::F16_ACCURACY_DELTA_BOUND;
 use parasvm::metrics::bench::BenchConfig;
+use parasvm::svm::compile::F16_ACCURACY_DELTA_BOUND;
+use parasvm::svm::solver::cascade::CASCADE_AGREEMENT_MIN;
 
 fn main() {
     let quick = std::env::var("PARASVM_BENCH_QUICK").is_ok();
@@ -47,9 +54,13 @@ fn main() {
     // Paper-scale subset by default, CI-scale under QUICK.
     let (per_class, ovo_per_class, serve_requests) =
         if quick { (100, 30, 1500) } else { (400, 100, 6000) };
+    // Scaling-curve row counts: large enough that the direct solve's
+    // working set outgrows its n/4 cache while the cascade leaves stay
+    // cache-resident, small enough for the CI budget under QUICK.
+    let scale_rows: &[usize] = if quick { &[2000, 6000] } else { &[10_000, 20_000] };
 
     let (table, ablation) =
-        run_solver_ablation(per_class, ovo_per_class, serve_requests, &cfg, 42)
+        run_solver_ablation(per_class, ovo_per_class, serve_requests, scale_rows, &cfg, 42)
             .expect("ablation");
     println!("{}", table.render());
     std::fs::create_dir_all("results").ok();
@@ -136,4 +147,40 @@ fn main() {
              {delta:+.4} (bound {F16_ACCURACY_DELTA_BOUND})"
         );
     }
+
+    // Cascade gates: the front is an approximation, so every scaling row
+    // must agree with the direct solve within the documented tolerance,
+    // and at the largest row count the approximation must actually pay
+    // for itself (direct/cascade >= 1.0; smaller rows are informational).
+    assert!(!ablation.scaling.is_empty(), "ablation produced no scaling rows");
+    for r in &ablation.scaling {
+        println!(
+            "scaling n={}: direct {:.3}s cascade {:.3}s ({:.2}x), agree {:.4}",
+            r.rows, r.direct_secs, r.cascade_secs, r.cascade_speedup, r.agreement
+        );
+        assert!(
+            r.agreement >= CASCADE_AGREEMENT_MIN,
+            "cascade disagrees with direct at n={}: {:.4} < {CASCADE_AGREEMENT_MIN}",
+            r.rows,
+            r.agreement
+        );
+    }
+    let last = ablation.scaling.last().unwrap();
+    assert!(
+        last.cascade_speedup >= 1.0,
+        "cascade slower than direct at n={}: {:.2}x",
+        last.rows,
+        last.cascade_speedup
+    );
+
+    // Shared-cache gate: on the OvO workload the per-rank cache must see
+    // reuse both within a pair (hit rate) and across pairs — zero
+    // cross-pair hits means the rank-wide sharing is wired up wrong.
+    let sc = ablation.shared_cache.first().expect("shared-cache row");
+    println!(
+        "shared cache ({}MB): hit rate {:.3}, {} cross-pair hits",
+        sc.cache_mb, sc.hit_rate, sc.cross_pair_hits
+    );
+    assert!(sc.hit_rate > 0.0, "shared cache recorded no hits");
+    assert!(sc.cross_pair_hits > 0, "shared cache recorded no cross-pair reuse");
 }

@@ -67,6 +67,19 @@ pub struct RunConfig {
     /// `simd` is bit-exact; `simd` is the tolerance-validated explicit
     /// vector tier (see `svm::solver`'s precision-tier story).
     pub row_eval: RowEval,
+    /// Per-rank shared kernel-row cache budget in MiB (`--cache-mb`,
+    /// 0 = off): one budgeted LRU per rank, shared by all of the rank's
+    /// OvO pair solves. Flat SMO path only.
+    pub cache_mb: usize,
+    /// Cascade front leaf shards (`--cascade-shards`, 0/1 = direct
+    /// solve): shard → SV merge tree → polish per pair. Flat SMO path
+    /// only; agreement-pinned, not bit-identical.
+    pub cascade_shards: usize,
+    /// Out-of-core ingest (`--streaming`): load the dataset through the
+    /// chunked streaming layer instead of one whole-file read. Combined
+    /// with `cascade_shards > 1` the trainer never materializes the full
+    /// dataset at all ([`crate::svm::solver::cascade::solve_streaming`]).
+    pub streaming: bool,
 }
 
 impl Default for RunConfig {
@@ -88,6 +101,9 @@ impl Default for RunConfig {
             intra_latency: CostModel::shm().latency,
             intra_bandwidth: CostModel::shm().bandwidth,
             row_eval: RowEval::default(),
+            cache_mb: 0,
+            cascade_shards: 0,
+            streaming: false,
         }
     }
 }
@@ -107,6 +123,8 @@ impl RunConfig {
             pair_threads: self.pair_threads,
             solver_ranks: self.solver_ranks,
             row_eval: self.row_eval,
+            cache_mb: self.cache_mb,
+            cascade_shards: self.cascade_shards,
         }
     }
 
@@ -124,6 +142,12 @@ impl RunConfig {
             args.get("pair-threads").map_err(e)?.unwrap_or(self.pair_threads);
         self.solver_ranks =
             args.get("solver-ranks").map_err(e)?.unwrap_or(self.solver_ranks);
+        self.cache_mb = args.get("cache-mb").map_err(e)?.unwrap_or(self.cache_mb);
+        self.cascade_shards =
+            args.get("cascade-shards").map_err(e)?.unwrap_or(self.cascade_shards);
+        if args.flag("streaming") {
+            self.streaming = true;
+        }
         if let Some(v) = args.opt("backend") {
             self.backend = v.parse().map_err(e)?;
         }
@@ -203,6 +227,9 @@ impl RunConfig {
             ("pair_threads", json::num(self.pair_threads as f64)),
             ("solver_ranks", json::num(self.solver_ranks as f64)),
             ("row_eval", json::s(self.row_eval.as_str())),
+            ("cache_mb", json::num(self.cache_mb as f64)),
+            ("cascade_shards", json::num(self.cascade_shards as f64)),
+            ("streaming", json::num(if self.streaming { 1.0 } else { 0.0 })),
             (
                 "partition",
                 json::s(match self.partition {
@@ -277,6 +304,15 @@ impl RunConfig {
         }
         if let Some(v) = gs("row_eval") {
             c.row_eval = v.parse().map_err(Error::Config)?;
+        }
+        if let Some(v) = gn("cache_mb") {
+            c.cache_mb = v as usize;
+        }
+        if let Some(v) = gn("cascade_shards") {
+            c.cascade_shards = v as usize;
+        }
+        if let Some(v) = gn("streaming") {
+            c.streaming = v != 0.0;
         }
         if let Some(v) = gn("c") {
             c.params.c = v as f32;
@@ -353,6 +389,35 @@ mod tests {
         let bad =
             Args::parse("x --solver-ranks 0".split_whitespace().map(String::from)).unwrap();
         assert!(RunConfig::default().apply_args(&bad).is_err());
+    }
+
+    #[test]
+    fn streaming_and_cache_plumbing() {
+        // CLI override, JSON roundtrip and TrainConfig mapping for the
+        // million-row knobs.
+        let args = Args::parse_with_flags(
+            "train --cache-mb 64 --cascade-shards 8 --streaming"
+                .split_whitespace()
+                .map(String::from),
+            &["streaming"],
+        )
+        .unwrap();
+        let mut c = RunConfig::default();
+        assert_eq!((c.cache_mb, c.cascade_shards, c.streaming), (0, 0, false));
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.cache_mb, 64);
+        assert_eq!(c.cascade_shards, 8);
+        assert!(c.streaming);
+        let tc = c.train_config();
+        assert_eq!(tc.cache_mb, 64);
+        assert_eq!(tc.cascade_shards, 8);
+        let back = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.cache_mb, 64);
+        assert_eq!(back.cascade_shards, 8);
+        assert!(back.streaming);
+        // Defaults stay off through a roundtrip.
+        let off = RunConfig::from_json(&RunConfig::default().to_json()).unwrap();
+        assert_eq!((off.cache_mb, off.cascade_shards, off.streaming), (0, 0, false));
     }
 
     #[test]

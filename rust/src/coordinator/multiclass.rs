@@ -49,11 +49,15 @@ use super::pairs::{assign, size_cost, Partition};
 use super::wire;
 use crate::backend::{Solver, SvmBackend};
 use crate::cluster::{CostModel, NetReport, Topology};
-use crate::data::Dataset;
+use crate::data::{BinaryProblem, Dataset};
 use crate::error::{Error, Result};
 use crate::svm::multiclass::ovo_pairs;
-use crate::svm::solver::model_from_outcome;
-use crate::svm::{OvoModel, SvmParams, TrainStats};
+use crate::svm::solver::cascade::{self, CascadeConfig};
+use crate::svm::solver::{
+    model_from_outcome, working_set, CacheStats, EngineConfig, KernelSource, SharedKernelCache,
+    SolveOutcome,
+};
+use crate::svm::{BinaryModel, OvoModel, SvmParams, TrainStats};
 
 /// Multiclass training configuration.
 #[derive(Debug, Clone)]
@@ -90,6 +94,22 @@ pub struct TrainConfig {
     /// backend's own knob (`NativeBackend::with_row_eval`) — this field
     /// only steers solves the coordinator drives itself.
     pub row_eval: crate::svm::solver::RowEval,
+    /// Per-rank shared kernel-row cache budget in MiB (`--cache-mb`).
+    /// 0 = off (each pair solve keeps its private per-solve cache). On,
+    /// every rank builds ONE [`SharedKernelCache`] over its replicated
+    /// dataset and all of its OvO pair solves — concurrent ones included
+    /// — share it: the budget bounds the *rank*, not each pair, and rows
+    /// a pair computed are hits for every later pair touching the same
+    /// classes ([`CacheStats::cross_pair_hits`]). Models are bit-identical
+    /// to the private-cache engine. SMO-family flat path only.
+    pub cache_mb: usize,
+    /// Cascade front leaf shards (`--cascade-shards`). 0/1 = off (direct
+    /// solve); above 1 every pair trains through
+    /// [`cascade::solve`]: shard → SV tree merge → polish. NOT
+    /// bit-identical to direct — pinned by
+    /// [`cascade::CASCADE_AGREEMENT_MIN`] prediction agreement.
+    /// SMO-family flat path only; takes precedence over `cache_mb`.
+    pub cascade_shards: usize,
 }
 
 impl Default for TrainConfig {
@@ -104,6 +124,8 @@ impl Default for TrainConfig {
             pair_threads: 1,
             solver_ranks: 1,
             row_eval: crate::svm::solver::RowEval::default(),
+            cache_mb: 0,
+            cascade_shards: 0,
         }
     }
 }
@@ -160,6 +182,11 @@ pub struct MulticlassReport {
     pub net_bytes: u64,
     pub net_sim_secs: f64,
     pub workers: usize,
+    /// Shared per-rank kernel-cache counters aggregated over all ranks
+    /// (counters summed, `max_resident` maxed). All-zero when
+    /// [`TrainConfig::cache_mb`] is 0. `cross_pair_hits > 0` is the
+    /// signal the cross-pair sharing actually fired.
+    pub shared_cache: CacheStats,
 }
 
 impl MulticlassReport {
@@ -201,6 +228,22 @@ pub fn train_multiclass(
             "solver-ranks {} requires an SMO-family solver (smo|smo-cached); {:?} has no \
              row-sharded form",
             cfg.solver_ranks, cfg.solver
+        )));
+    }
+    if (cfg.cache_mb > 0 || cfg.cascade_shards > 1)
+        && !matches!(cfg.solver, Solver::Smo | Solver::SmoCached)
+    {
+        return Err(Error::Train(format!(
+            "--cache-mb/--cascade-shards require an SMO-family solver (smo|smo-cached); {:?} \
+             has no kernel-row cache or cascade form",
+            cfg.solver
+        )));
+    }
+    if cfg.solver_ranks > 1 && (cfg.cache_mb > 0 || cfg.cascade_shards > 1) {
+        return Err(Error::Train(format!(
+            "--cache-mb/--cascade-shards apply to the flat path only; solver-ranks {} \
+             row-shards each pair across its own window caches",
+            cfg.solver_ranks
         )));
     }
     let topo = cfg.topology();
@@ -247,6 +290,22 @@ pub fn train_multiclass(
         };
         let local_ds = wire::decode_dataset(frame, "bcast")?;
 
+        // The rank's ONE shared kernel-row cache (flat SMO path with
+        // `--cache-mb` only): every pair solve below — concurrent ones
+        // included — reads and fills the same budgeted LRU of full-width
+        // global rows.
+        let shared = (r == 1 && cfg2.cache_mb > 0 && cfg2.cascade_shards <= 1).then(|| {
+            SharedKernelCache::new(
+                &local_ds.x,
+                local_ds.n,
+                local_ds.d,
+                cfg2.params.gamma,
+                SharedKernelCache::budget_rows_for_mb(cfg2.cache_mb, local_ds.n),
+                engine_threads,
+            )
+            .with_eval(cfg2.row_eval)
+        });
+
         // (2) canonical pair list + partition over *workers* (identical on
         // every rank).
         let pairs = ovo_pairs(n_classes);
@@ -281,7 +340,7 @@ pub fn train_multiclass(
         let abort = std::sync::atomic::AtomicBool::new(false);
         let order = std::sync::atomic::Ordering::Relaxed;
         if par <= 1 {
-            for (slot_out, (_, prob)) in outs.iter_mut().zip(probs.iter()) {
+            for (slot_out, (pi, prob)) in outs.iter_mut().zip(probs.iter()) {
                 let out = if r > 1 {
                     let engine =
                         crate::svm::solver::DistributedSmo::auto(r, prob.n(), cfg2.intra_net)
@@ -295,7 +354,15 @@ pub fn train_multiclass(
                     )
                     .map(|o| model_from_outcome(prob, &o, &cfg2.params))
                 } else {
-                    backend.train_binary(prob, &cfg2.params, cfg2.solver)
+                    solve_flat_pair(
+                        backend.as_ref(),
+                        &cfg2,
+                        engine_threads,
+                        shared.as_ref(),
+                        &local_ds,
+                        pairs[*pi],
+                        prob,
+                    )
                 };
                 let failed = out.is_err();
                 *slot_out = Some(out);
@@ -310,14 +377,25 @@ pub fn train_multiclass(
                 let cfg2 = &cfg2;
                 let probs = &probs;
                 let abort = &abort;
+                let shared = &shared;
+                let local_ds = &local_ds;
+                let pairs = &pairs;
                 for (ci, chunk) in outs.chunks_mut(stripe).enumerate() {
                     s.spawn(move || {
                         for (off, slot_out) in chunk.iter_mut().enumerate() {
                             if abort.load(order) {
                                 break;
                             }
-                            let (_, prob) = &probs[ci * stripe + off];
-                            let out = backend.train_binary(prob, &cfg2.params, cfg2.solver);
+                            let (pi, prob) = &probs[ci * stripe + off];
+                            let out = solve_flat_pair(
+                                backend.as_ref(),
+                                cfg2,
+                                engine_threads,
+                                shared.as_ref(),
+                                local_ds,
+                                pairs[*pi],
+                                prob,
+                            );
                             if out.is_err() {
                                 abort.store(true, order);
                             }
@@ -359,6 +437,18 @@ pub fn train_multiclass(
             ]);
             models.push(model);
         }
+        // Per-rank shared-cache trailer: [hits, misses, evictions,
+        // cross_pair_hits, max_resident] after the per-pair records
+        // (zeros when the shared cache is off). Counts are exact in f32
+        // up to 2^24 — plenty for the budgeted caches this wires up.
+        let cs = shared.as_ref().map(|c| c.stats()).unwrap_or_default();
+        stats_frame.extend_from_slice(&[
+            cs.hits as f32,
+            cs.misses as f32,
+            cs.evictions as f32,
+            cs.cross_pair_hits as f32,
+            cs.max_resident as f32,
+        ]);
 
         // (4) gather models at the leader — the only post-training
         // traffic. Frames travel by thread join (in-process); the transfer
@@ -390,8 +480,10 @@ pub fn train_multiclass(
     let pairs = ovo_pairs(ds.n_classes);
     let mut binaries = Vec::with_capacity(pairs.len());
     let mut pair_reports = Vec::with_capacity(pairs.len());
+    let mut shared_cache = CacheStats::default();
     for (worker, (mf, sf)) in frames.iter().zip(stat_frames.iter()).enumerate() {
         let models = wire::decode_models(mf)?;
+        let n_models = models.len();
         for (k, model) in models.into_iter().enumerate() {
             let s = &sf[k * 8..(k + 1) * 8];
             pair_reports.push(PairReport {
@@ -409,6 +501,14 @@ pub fn train_multiclass(
                 },
             });
             binaries.push(model);
+        }
+        let tail = &sf[n_models * 8..];
+        if tail.len() == 5 {
+            shared_cache.hits += tail[0] as u64;
+            shared_cache.misses += tail[1] as u64;
+            shared_cache.evictions += tail[2] as u64;
+            shared_cache.cross_pair_hits += tail[3] as u64;
+            shared_cache.max_resident = shared_cache.max_resident.max(tail[4] as usize);
         }
     }
     // Canonical order for the ensemble (pair order, not arrival order).
@@ -433,8 +533,57 @@ pub fn train_multiclass(
         net_sim_secs: net.sim_secs(),
         net,
         workers: cfg.workers,
+        shared_cache,
     };
     Ok((model, report))
+}
+
+/// One flat-path pair solve, routed by the training knobs: the cascade
+/// front (`--cascade-shards`), the rank's shared kernel-row cache
+/// (`--cache-mb`), or the backend's own engine. The engine configuration
+/// depends only on `cfg` — never on the pair-threads schedule — so
+/// concurrent and sequential runs produce bit-identical models.
+fn solve_flat_pair(
+    backend: &dyn SvmBackend,
+    cfg: &TrainConfig,
+    engine_threads: usize,
+    shared: Option<&SharedKernelCache<'_>>,
+    ds: &Dataset,
+    ab: (usize, usize),
+    prob: &BinaryProblem,
+) -> Result<(BinaryModel, TrainStats)> {
+    if cfg.cascade_shards > 1 {
+        let ccfg = CascadeConfig {
+            shards: cfg.cascade_shards,
+            threads: engine_threads,
+            row_eval: cfg.row_eval,
+            max_rescans: 1,
+        };
+        let out = cascade::solve(prob, &cfg.params, &ccfg);
+        return Ok(model_from_outcome(prob, &out.outcome, &cfg.params));
+    }
+    if let Some(cache) = shared {
+        let t0 = std::time::Instant::now();
+        let mut src = cache.pair_source(ds.pair_indices(ab.0, ab.1));
+        // cache_rows is inert here (the shared cache already exists);
+        // everything else matches the private cached+shrink engine.
+        let ecfg = EngineConfig {
+            threads: engine_threads,
+            row_eval: cfg.row_eval,
+            ..EngineConfig::cached_shrink(0)
+        };
+        let (solution, shrink) = working_set::solve(&mut src, &prob.y, &cfg.params, &ecfg);
+        let out = SolveOutcome {
+            solution,
+            cache: src.stats(),
+            shrink,
+            gram_secs: 0.0,
+            solve_secs: t0.elapsed().as_secs_f64(),
+            net: NetReport::none(),
+        };
+        return Ok(model_from_outcome(prob, &out, &cfg.params));
+    }
+    backend.train_binary(prob, &cfg.params, cfg.solver)
 }
 
 #[cfg(test)]
@@ -590,6 +739,73 @@ mod tests {
         );
         // An 8-rank hierarchy leaves at most cores/8 strands.
         assert!(super::resolve_pair_threads(0, 8, 1000) <= (cores / 8).max(1));
+    }
+
+    #[test]
+    fn shared_cache_is_deterministic_across_pair_threads() {
+        // One rank, three iris pairs, one shared cache: the pair-threads
+        // schedule may reorder who computes a row first, but every kernel
+        // entry is the same f32 expression, so models are bit-identical.
+        let ds = iris::load();
+        let be = Arc::new(NativeBackend::new());
+        let base = TrainConfig {
+            workers: 1,
+            solver: Solver::SmoCached,
+            cache_mb: 16,
+            ..Default::default()
+        };
+        let par = TrainConfig { pair_threads: 3, ..base.clone() };
+        let (m1, r1) = train_multiclass(&ds, be.clone(), &base).unwrap();
+        let (m3, r3) = train_multiclass(&ds, be, &par).unwrap();
+        assert!(m1.accuracy(&ds.x, &ds.y) >= 0.95);
+        for (a, b) in m1.binaries.iter().zip(m3.binaries.iter()) {
+            assert_eq!((a.pos_class, a.neg_class), (b.pos_class, b.neg_class));
+            assert_eq!(a.coef, b.coef);
+            assert_eq!(a.bias, b.bias);
+        }
+        // Sequential schedule: each class's rows are computed by the first
+        // pair touching them and hit cross-pair for the second.
+        assert!(r1.shared_cache.hits > 0);
+        assert!(r1.shared_cache.cross_pair_hits > 0, "{:?}", r1.shared_cache);
+        assert!(r1.shared_cache.max_resident > 0);
+        // Concurrent schedule: the hit/miss *split* is interleaving-
+        // dependent, but sharing still fires.
+        assert!(r3.shared_cache.hits > 0);
+    }
+
+    #[test]
+    fn cascade_flat_path_trains_accurately() {
+        // Iris is class-sorted, so leaf shards are single-class and pass
+        // through unsolved — the worst case the cascade must survive.
+        let ds = iris::load();
+        let be = Arc::new(NativeBackend::new());
+        let cfg = TrainConfig {
+            workers: 2,
+            solver: Solver::SmoCached,
+            cascade_shards: 4,
+            ..Default::default()
+        };
+        let (model, report) = train_multiclass(&ds, be, &cfg).unwrap();
+        assert_eq!(model.binaries.len(), 3);
+        assert!(model.accuracy(&ds.x, &ds.y) >= 0.95);
+        for p in &report.pairs {
+            assert!(p.stats.converged);
+            assert!(p.stats.n_sv > 0);
+        }
+        // Cascade runs leave the shared-cache trailer zeroed.
+        assert_eq!(report.shared_cache.hits, 0);
+    }
+
+    #[test]
+    fn cache_and_cascade_knobs_reject_bad_combos() {
+        let ds = iris::load();
+        let be = Arc::new(NativeBackend::new());
+        let gd = TrainConfig { solver: Solver::Gd, cache_mb: 16, ..quick_cfg(2) };
+        let err = train_multiclass(&ds, be.clone(), &gd).unwrap_err();
+        assert!(err.to_string().contains("cache-mb"), "{err}");
+        let hier = TrainConfig { solver_ranks: 2, cascade_shards: 4, ..quick_cfg(2) };
+        let err = train_multiclass(&ds, be, &hier).unwrap_err();
+        assert!(err.to_string().contains("flat path"), "{err}");
     }
 
     #[test]

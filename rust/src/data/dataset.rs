@@ -76,6 +76,20 @@ impl Dataset {
         BinaryProblem { x, y, d: self.d, pos_class: a, neg_class: b }
     }
 
+    /// Global row indices of the one-vs-one pair `(a, b)`, in exactly
+    /// the order [`Self::binary_pair`] copies them — the index map a
+    /// shared kernel cache uses to gather pair-local rows out of
+    /// full-width global ones.
+    pub fn pair_indices(&self, a: usize, b: usize) -> Vec<usize> {
+        assert!(a < self.n_classes && b < self.n_classes && a != b);
+        (0..self.n)
+            .filter(|&i| {
+                let c = self.y[i] as usize;
+                c == a || c == b
+            })
+            .collect()
+    }
+
     /// Feature-wise (min, max) over all rows — used by min-max scaling.
     pub fn feature_ranges(&self) -> Vec<(f32, f32)> {
         let mut ranges = vec![(f32::INFINITY, f32::NEG_INFINITY); self.d];
@@ -155,6 +169,17 @@ mod tests {
         assert_eq!(p.y, vec![1.0, 1.0, -1.0, -1.0]);
         assert_eq!(p.pos_class, 1);
         assert_eq!(p.row(3), &[2.0, 2.0]);
+    }
+
+    #[test]
+    fn pair_indices_match_binary_pair_order() {
+        let ds = toy();
+        let idx = ds.pair_indices(1, 2);
+        assert_eq!(idx, vec![1, 2, 3, 4]);
+        let p = ds.binary_pair(1, 2);
+        for (k, &g) in idx.iter().enumerate() {
+            assert_eq!(p.row(k), ds.row(g));
+        }
     }
 
     #[test]

@@ -7,6 +7,21 @@
 //!             §Substitutions for why synthetic is equivalent here).
 //! * `pavia` — synthetic Pavia Centre-shaped hyperspectral generator
 //!             (9 classes, 102 bands, 1096x715 scene).
+//! * `synth:<rows>x<d>x<classes>` — deterministic Gaussian-blob
+//!             generator for the 10^5–10^6-row scaling workloads
+//!             ([`synth`]); row `i` depends only on `(seed, i)`.
+//!
+//! ## Streaming ingest
+//!
+//! The loaders above materialize a full row-major matrix and the panel
+//! pack is a second full copy on top. For datasets where that doubling
+//! hurts, [`stream`] provides the out-of-core path: a resettable
+//! [`stream::ChunkSource`] (chunked CSV, the synthetic generator, or an
+//! in-RAM adapter) feeds [`stream::ChunkedDataset::ingest`], which
+//! packs `DatasetView` panels tile-by-tile with O(chunk) scratch and is
+//! bit-identical to the batch pack. The cascade solver
+//! (`svm::solver::cascade`) can also train straight off a `ChunkSource`
+//! one shard at a time, never holding the full matrix at once.
 
 pub mod csv;
 pub mod dataset;
@@ -14,18 +29,27 @@ pub mod iris;
 pub mod pavia;
 pub mod scale;
 pub mod split;
+pub mod stream;
+pub mod synth;
 pub mod wdbc;
 
 pub use dataset::{BinaryProblem, Dataset};
+pub use stream::{Chunk, ChunkSource, ChunkedDataset, CsvChunks, DatasetChunks, SynthChunks};
+pub use synth::SynthSpec;
 
 use crate::util::rng::Rng;
 
-/// The paper's three datasets by name (Table I), with a deterministic seed.
+/// The paper's three datasets by name (Table I) plus the synthetic
+/// scaling generator (`synth:<rows>x<d>x<classes>`), with a
+/// deterministic seed.
 pub fn by_name(name: &str, seed: u64) -> Option<Dataset> {
     match name {
         "iris" => Some(iris::load()),
         "wdbc" | "breast_cancer" => Some(wdbc::generate(seed)),
         "pavia" => Some(pavia::generate(&pavia::PaviaConfig::default(), seed)),
+        s if s.starts_with("synth:") => {
+            SynthSpec::parse(s).ok().map(|spec| synth::generate(&spec, seed))
+        }
         _ => None,
     }
 }

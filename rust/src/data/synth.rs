@@ -1,0 +1,164 @@
+//! Deterministic synthetic Gaussian-blob datasets for the 10^5–10^6-row
+//! training workloads the cascade and streaming layers target.
+//!
+//! Design constraint: row `i` depends only on `(seed, i)` — never on how
+//! many rows preceded it in a chunk — so chunked generation
+//! ([`super::stream::SynthChunks`]), row sharding, and whole-dataset
+//! generation all produce bit-identical rows. Each row draws from its own
+//! split RNG stream; class centers come from a second, disjoint stream.
+//! Classes rotate round-robin (`i % classes`), which keeps every
+//! contiguous shard class-balanced — exactly what the cascade front wants.
+
+use super::dataset::Dataset;
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Gaussian jitter around each class center. Centers live in [0,1)^d, so
+/// features stay roughly unit-scaled and the streaming path can train
+/// without a full-dataset min-max rescale pass.
+pub const SYNTH_SIGMA: f32 = 0.06;
+
+/// Parsed `synth:<rows>x<d>x<classes>` dataset spec.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SynthSpec {
+    pub rows: usize,
+    pub d: usize,
+    pub classes: usize,
+}
+
+impl SynthSpec {
+    /// Parse a spec of the form `synth:100000x16x3` (prefix optional).
+    pub fn parse(spec: &str) -> Result<SynthSpec> {
+        let bad = || {
+            Error::Data(format!(
+                "bad synth spec {spec:?} (want synth:<rows>x<d>x<classes>, e.g. synth:100000x16x3)"
+            ))
+        };
+        let body = spec.strip_prefix("synth:").unwrap_or(spec);
+        let mut nums = [0usize; 3];
+        let mut parts = body.split('x');
+        for slot in nums.iter_mut() {
+            *slot = parts.next().ok_or_else(bad)?.parse().map_err(|_| bad())?;
+        }
+        if parts.next().is_some() {
+            return Err(bad());
+        }
+        let [rows, d, classes] = nums;
+        if rows == 0 || d == 0 || classes < 2 || classes > rows {
+            return Err(bad());
+        }
+        Ok(SynthSpec { rows, d, classes })
+    }
+
+    /// Canonical dataset name (round-trips through [`SynthSpec::parse`]).
+    pub fn name(&self) -> String {
+        format!("synth:{}x{}x{}", self.rows, self.d, self.classes)
+    }
+
+    pub fn class_names(&self) -> Vec<String> {
+        (0..self.classes).map(|c| format!("c{c}")).collect()
+    }
+}
+
+/// Class centers (classes x d, row-major), drawn from an RNG stream
+/// disjoint from every per-row stream.
+pub fn class_centers(spec: &SynthSpec, seed: u64) -> Vec<f32> {
+    let mut root = Rng::new(seed ^ 0xC3A5_C85C_97CB_3127);
+    let mut centers = Vec::with_capacity(spec.classes * spec.d);
+    for c in 0..spec.classes {
+        let mut rng = root.split(c as u64);
+        for _ in 0..spec.d {
+            centers.push(rng.f32());
+        }
+    }
+    centers
+}
+
+/// Fill `out` (length `d`) with row `i`'s features; returns its class id.
+/// Depends only on `(seed, i)` and the precomputed center table.
+pub fn fill_row(spec: &SynthSpec, centers: &[f32], seed: u64, i: usize, out: &mut [f32]) -> i32 {
+    debug_assert_eq!(out.len(), spec.d);
+    debug_assert!(i < spec.rows);
+    let class = i % spec.classes;
+    let mut rng = Rng::new(seed).split(i as u64 ^ 0x517C_C1B7_2722_0A95);
+    let center = &centers[class * spec.d..(class + 1) * spec.d];
+    for (o, &c) in out.iter_mut().zip(center) {
+        *o = c + SYNTH_SIGMA * rng.normal();
+    }
+    class as i32
+}
+
+/// Materialize the whole dataset in RAM. Large specs should stream
+/// through [`super::stream::SynthChunks`] instead; both paths produce
+/// bit-identical rows.
+pub fn generate(spec: &SynthSpec, seed: u64) -> Dataset {
+    let centers = class_centers(spec, seed);
+    let mut x = vec![0.0f32; spec.rows * spec.d];
+    let mut y = Vec::with_capacity(spec.rows);
+    for (i, row) in x.chunks_exact_mut(spec.d).enumerate() {
+        y.push(fill_row(spec, &centers, seed, i, row));
+    }
+    Dataset::new(spec.name(), x, y, spec.d, spec.class_names())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_and_errors() {
+        let s = SynthSpec::parse("synth:100000x16x3").unwrap();
+        assert_eq!((s.rows, s.d, s.classes), (100_000, 16, 3));
+        assert_eq!(s.name(), "synth:100000x16x3");
+        assert_eq!(SynthSpec::parse("200x4x2").unwrap().rows, 200);
+        let bad_specs = [
+            "synth:",
+            "synth:10x3",
+            "synth:10x3x1",
+            "synth:0x3x2",
+            "synth:axbxc",
+            "synth:10x3x2x9",
+        ];
+        for bad in bad_specs {
+            assert!(SynthSpec::parse(bad).is_err(), "{bad} should fail");
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_and_balanced() {
+        let spec = SynthSpec { rows: 90, d: 5, classes: 3 };
+        let a = generate(&spec, 42);
+        let b = generate(&spec, 42);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        assert_eq!((a.n, a.d, a.n_classes), (90, 5, 3));
+        for c in 0..3 {
+            assert_eq!(a.class_count(c), 30);
+        }
+        let other = generate(&spec, 43);
+        assert_ne!(a.x, other.x);
+    }
+
+    #[test]
+    fn row_depends_only_on_seed_and_index() {
+        let spec = SynthSpec { rows: 40, d: 3, classes: 2 };
+        let ds = generate(&spec, 7);
+        let centers = class_centers(&spec, 7);
+        // Filling rows in arbitrary order reproduces the same values.
+        for &i in &[39usize, 0, 17, 5] {
+            let mut row = vec![0.0f32; spec.d];
+            let c = fill_row(&spec, &centers, 7, i, &mut row);
+            assert_eq!(row.as_slice(), ds.row(i));
+            assert_eq!(c, ds.y[i]);
+        }
+    }
+
+    #[test]
+    fn features_roughly_unit_scaled() {
+        let spec = SynthSpec { rows: 300, d: 4, classes: 3 };
+        let ds = generate(&spec, 11);
+        for &(lo, hi) in &ds.feature_ranges() {
+            assert!(lo > -1.0 && hi < 2.0, "range ({lo}, {hi}) drifted");
+        }
+    }
+}

@@ -10,15 +10,16 @@
 //! artifacts, no device), so it runs from a clean checkout and in CI — it
 //! is the reproducible speedup story for the `svm::solver` subsystem. The
 //! bench wrapper (`benches/solver_ablation.rs`) renders the table, writes
-//! the machine-readable `BENCH_solver.json` (schema v6: the panel
-//! row-eval rows + `panel_speedup_vs_scalar` and the simd row +
-//! `simd_speedup_vs_fused`, per-level `net_levels` on distributed rows,
-//! the `hierarchical` section, and the `serve` rows — now including the
-//! f16 quantized path with `f16_accuracy_deltas` — with
-//! `serve_speedup_vs_legacy` from the compiled-inference bench) that
-//! later PRs diff against, and enforces the panel-vs-scalar,
-//! simd-vs-fused, compiled-vs-legacy-serve and f16-accuracy regression
-//! guards CI runs on every push.
+//! the machine-readable `BENCH_solver.json` (schema v7: everything v6
+//! carried — panel/simd row-eval ratios, per-level `net_levels`,
+//! `hierarchical`, the `serve` rows with `f16_accuracy_deltas` and
+//! `serve_speedup_vs_legacy` — plus the `scaling` curve of direct-vs-
+//! cascade solves on the growing synthetic workload and the
+//! `shared_cache_ovo` row exercising the per-rank cross-pair kernel-row
+//! cache) that later PRs diff against, and enforces the panel-vs-scalar,
+//! simd-vs-fused, compiled-vs-legacy-serve, f16-accuracy,
+//! cascade-agreement and shared-cache-hit regression guards CI runs on
+//! every push.
 
 use std::sync::Arc;
 
@@ -28,8 +29,10 @@ use crate::coordinator::{train_multiclass, TrainConfig};
 use crate::error::Result;
 use crate::metrics::bench::{bench, BenchConfig};
 use crate::metrics::table::Table;
+use crate::svm::solver::cascade::{self, CascadeConfig};
 use crate::svm::solver::{
-    DenseSmo, DistributedSmo, DualSolver, EngineConfig, RowEval, WorkingSetSmo,
+    model_from_outcome, DenseSmo, DistributedSmo, DualSolver, EngineConfig, RowEval,
+    WorkingSetSmo,
 };
 use crate::util::json::{self, Json};
 
@@ -81,6 +84,36 @@ pub struct HierRow {
     pub net_levels: Vec<LevelNet>,
 }
 
+/// One point of the cascade scaling curve: direct cached solve vs the
+/// 8-shard cascade front on the synthetic two-class workload at `rows`.
+#[derive(Debug, Clone)]
+pub struct ScaleRow {
+    pub rows: usize,
+    pub d: usize,
+    pub direct_secs: f64,
+    pub cascade_secs: f64,
+    /// direct / cascade median wall time (> 1 means the cascade wins).
+    pub cascade_speedup: f64,
+    /// High-water kernel-cache footprint across all cascade sub-solves.
+    pub peak_cache_bytes: usize,
+    /// Sign-agreement of the two decision functions on the training rows
+    /// (the cascade is an approximation; CI pins this above
+    /// [`cascade::CASCADE_AGREEMENT_MIN`]).
+    pub agreement: f64,
+}
+
+/// The per-rank shared kernel-row cache on the OvO workload: one LRU
+/// budget serving all pairs of the rank, so rows fetched for one pair
+/// satisfy later pairs (`cross_pair_hits`).
+#[derive(Debug, Clone)]
+pub struct SharedCacheRow {
+    pub label: String,
+    pub cache_mb: usize,
+    pub median_wall_secs: f64,
+    pub hit_rate: f64,
+    pub cross_pair_hits: u64,
+}
+
 /// Full ablation result.
 #[derive(Debug, Clone)]
 pub struct SolverAblation {
@@ -110,6 +143,10 @@ pub struct SolverAblation {
     /// Per-dataset f32-minus-f16 accuracy deltas from the quantized serve
     /// rows (CI fails any |delta| above the documented bound).
     pub f16_accuracy_deltas: Vec<(String, f64)>,
+    /// Cascade-vs-direct scaling curve (schema v7's million-row story).
+    pub scaling: Vec<ScaleRow>,
+    /// The cross-pair shared-cache OvO row (schema v7).
+    pub shared_cache: Vec<SharedCacheRow>,
 }
 
 fn levels_json(levels: &[LevelNet]) -> Json {
@@ -132,7 +169,7 @@ impl SolverAblation {
     /// Machine-readable form for `BENCH_solver.json`.
     pub fn to_json(&self) -> Json {
         json::obj(vec![
-            ("schema", json::s("parasvm-solver-ablation/v6")),
+            ("schema", json::s("parasvm-solver-ablation/v7")),
             ("dataset", json::s(&self.dataset)),
             ("n", json::num(self.n as f64)),
             ("d", json::num(self.d as f64)),
@@ -270,6 +307,45 @@ impl SolverAblation {
                         .collect(),
                 ),
             ),
+            (
+                "scaling",
+                json::arr(
+                    self.scaling
+                        .iter()
+                        .map(|r| {
+                            json::obj(vec![
+                                ("rows", json::num(r.rows as f64)),
+                                ("d", json::num(r.d as f64)),
+                                ("direct_secs", json::num(r.direct_secs)),
+                                ("cascade_secs", json::num(r.cascade_secs)),
+                                ("cascade_speedup", json::num(r.cascade_speedup)),
+                                (
+                                    "peak_cache_bytes",
+                                    json::num(r.peak_cache_bytes as f64),
+                                ),
+                                ("agreement", json::num(r.agreement)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "shared_cache_ovo",
+                json::arr(
+                    self.shared_cache
+                        .iter()
+                        .map(|r| {
+                            json::obj(vec![
+                                ("label", json::s(&r.label)),
+                                ("cache_mb", json::num(r.cache_mb as f64)),
+                                ("median_wall_secs", json::num(r.median_wall_secs)),
+                                ("hit_rate", json::num(r.hit_rate)),
+                                ("cross_pair_hits", json::num(r.cross_pair_hits as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ])
     }
 }
@@ -329,11 +405,14 @@ fn engines(n: usize) -> Vec<(&'static str, Box<dyn DualSolver>)> {
 /// Run the ablation on a Pavia binary subset (`per_class` rows per class)
 /// and a 9-class Pavia OvO workload on a 4-worker universe, then the
 /// serve-throughput comparison (`serve_requests` per measured pass;
-/// legacy vs compiled, 2 shard workers).
+/// legacy vs compiled, 2 shard workers), the shared-cache OvO row and
+/// the direct-vs-cascade scaling curve at each synthetic row count in
+/// `scale_rows`.
 pub fn run_solver_ablation(
     per_class: usize,
     ovo_per_class: usize,
     serve_requests: usize,
+    scale_rows: &[usize],
     cfg: &BenchConfig,
     seed: u64,
 ) -> Result<(Table, SolverAblation)> {
@@ -477,6 +556,40 @@ pub fn run_solver_ablation(
         ovo_rows.push(row);
     }
 
+    // Per-rank shared kernel-row cache on the same 9-class workload: one
+    // LRU budget serves all pairs of the single rank, so rows computed
+    // for one pair satisfy later pairs that share a class.
+    let shared_tc = TrainConfig {
+        workers: 1,
+        solver: Solver::SmoCached,
+        params,
+        pair_threads: 1,
+        cache_mb: 32,
+        ..Default::default()
+    };
+    let mut shared_last = None;
+    let shared_bench = bench("ovo shared-cache 32MB", cfg, || {
+        let (_, rep) = train_multiclass(&ds, Arc::clone(&be), &shared_tc).unwrap();
+        shared_last = Some(rep);
+    });
+    let shared_stats = shared_last.expect("bench ran at least once").shared_cache;
+    let shared_row = SharedCacheRow {
+        label: "ovo shared-cache (1 rank)".to_string(),
+        cache_mb: 32,
+        median_wall_secs: shared_bench.summary.median,
+        hit_rate: shared_stats.hit_rate(),
+        cross_pair_hits: shared_stats.cross_pair_hits,
+    };
+    table.row(&[
+        shared_row.label.clone(),
+        format!("{:.4}", shared_row.median_wall_secs),
+        String::new(),
+        String::new(),
+        format!("{:.3}", shared_row.hit_rate),
+        String::new(),
+        format!("{} cross-pair hits", shared_row.cross_pair_hits),
+    ]);
+
     // Hierarchical composition: 2 workers x 2 solver ranks through the
     // split-based topology, slow inter link + fast intra link — the
     // Table-IV overhead split in miniature.
@@ -518,6 +631,60 @@ pub fn run_solver_ablation(
         level_cell,
     ]);
 
+    // Cascade scaling curve: direct cached+shrink solve vs the 8-shard
+    // cascade front on the synthetic two-class generator at growing row
+    // counts. The direct solve's working set outgrows its cache as n
+    // grows while the cascade's leaves stay cache-sized, so the speedup
+    // column is the million-row headline.
+    let mut scaling: Vec<ScaleRow> = Vec::new();
+    for &rows in scale_rows {
+        let sw = super::synth_binary_workload(rows, 16, seed);
+        let sprob = sw.problem();
+        let direct_engine =
+            WorkingSetSmo::new(EngineConfig::cached_shrink((sprob.n() / 4).max(2)));
+        let mut dlast = None;
+        let dr = bench(&format!("direct n={rows}"), cfg, || {
+            dlast = Some(direct_engine.solve(&sprob, &sw.params));
+        });
+        let direct_out = dlast.expect("bench ran at least once");
+        let ccfg = CascadeConfig {
+            shards: 8,
+            threads: 1,
+            row_eval: RowEval::default(),
+            max_rescans: 1,
+        };
+        let mut clast = None;
+        let cr = bench(&format!("cascade n={rows}"), cfg, || {
+            clast = Some(cascade::solve(&sprob, &sw.params, &ccfg));
+        });
+        let casc = clast.expect("bench ran at least once");
+        let (direct_model, _) = model_from_outcome(&sprob, &direct_out, &sw.params);
+        let (casc_model, _) = model_from_outcome(&sprob, &casc.outcome, &sw.params);
+        let agreement =
+            cascade::prediction_agreement(&direct_model, &casc_model, &sprob.x, sprob.n());
+        let direct_secs = dr.summary.median;
+        let cascade_secs = cr.summary.median;
+        let row = ScaleRow {
+            rows: sprob.n(),
+            d: sprob.d,
+            direct_secs,
+            cascade_secs,
+            cascade_speedup: if cascade_secs > 0.0 { direct_secs / cascade_secs } else { 0.0 },
+            peak_cache_bytes: casc.peak_cache_bytes,
+            agreement,
+        };
+        table.row(&[
+            format!("scaling n={} direct vs cascade-8", row.rows),
+            format!("{:.4}", row.cascade_secs),
+            format!("{:.2}x direct", row.cascade_speedup),
+            String::new(),
+            String::new(),
+            String::new(),
+            format!("agree {:.3} peak {}B", row.agreement, row.peak_cache_bytes),
+        ]);
+        scaling.push(row);
+    }
+
     // Serve-throughput comparison: the compiled shared-SV engine must not
     // lose to the per-pair path it replaced (they answer bit-identically).
     let reps = cfg.max_samples.clamp(1, 3);
@@ -549,6 +716,8 @@ pub fn run_solver_ablation(
         serve: serve_rows,
         serve_speedup_vs_legacy,
         f16_accuracy_deltas,
+        scaling,
+        shared_cache: vec![shared_row],
     };
     Ok((table, ablation))
 }
@@ -560,7 +729,7 @@ mod tests {
     #[test]
     fn tiny_ablation_runs_end_to_end() {
         let cfg = BenchConfig { warmup: 0, min_samples: 1, max_samples: 1, cv_target: 1.0 };
-        let (table, ab) = run_solver_ablation(30, 8, 40, &cfg, 3).unwrap();
+        let (table, ab) = run_solver_ablation(30, 8, 40, &[300], &cfg, 3).unwrap();
         assert_eq!(ab.engines.len(), 7);
         assert_eq!(ab.distributed.len(), 3);
         assert_eq!(ab.ovo.len(), 2);
@@ -624,6 +793,18 @@ mod tests {
             ab.f16_accuracy_deltas.len(),
             crate::harness::SERVE_BENCH_DATASETS.len()
         );
+        // Schema v7: the cascade scaling curve and the shared-cache row.
+        assert_eq!(ab.scaling.len(), 1);
+        let s = &ab.scaling[0];
+        assert_eq!((s.rows, s.d), (300, 16));
+        assert!(s.direct_secs > 0.0 && s.cascade_secs > 0.0);
+        assert!(s.peak_cache_bytes > 0);
+        assert!(s.agreement >= 0.9, "cascade agreement collapsed: {}", s.agreement);
+        assert_eq!(ab.shared_cache.len(), 1);
+        let sc = &ab.shared_cache[0];
+        assert_eq!(sc.cache_mb, 32);
+        assert!(sc.hit_rate > 0.0, "shared cache never hit");
+        assert!(sc.cross_pair_hits > 0, "no cross-pair reuse on the OvO workload");
         let rendered = table.render();
         assert!(rendered.contains("dense"));
         assert!(rendered.contains("parallel"));
@@ -632,8 +813,12 @@ mod tests {
         assert!(rendered.contains("hierarchical 2x2"));
         assert!(rendered.contains("serve iris legacy"));
         assert!(rendered.contains("serve wdbc compiled-w2"));
+        assert!(rendered.contains("scaling n=300"));
+        assert!(rendered.contains("shared-cache"));
         let j = ab.to_json();
-        assert_eq!(j.get("schema").and_then(Json::as_str), Some("parasvm-solver-ablation/v6"));
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some("parasvm-solver-ablation/v7"));
+        assert_eq!(j.get("scaling").and_then(Json::as_arr).unwrap().len(), 1);
+        assert_eq!(j.get("shared_cache_ovo").and_then(Json::as_arr).unwrap().len(), 1);
         assert!(j.get("panel_speedup_vs_scalar").is_some());
         assert!(j.get("simd_speedup_vs_fused").is_some());
         assert_eq!(j.get("engines").and_then(Json::as_arr).unwrap().len(), 7);

@@ -82,6 +82,17 @@ pub fn binary_workload(dataset: &str, per_class: usize, seed: u64) -> BinaryWork
     }
 }
 
+/// Deterministic two-class workload from the `synth:` scaling generator.
+/// No rescaling or subsetting: the generator emits unit-scale features
+/// and row `i` depends only on `(seed, i)`, so the workload is cheap to
+/// rebuild at any row count — this is what the cascade scaling curve in
+/// the solver ablation grows.
+pub fn synth_binary_workload(rows: usize, d: usize, seed: u64) -> BinaryWorkload {
+    let spec = data::SynthSpec { rows, d, classes: 2 };
+    let ds = data::synth::generate(&spec, seed);
+    BinaryWorkload { name: spec.name(), params: hyperparams_for(&ds), pair: (0, 1), ds }
+}
+
 /// Build the 9-class Pavia multiclass workload (paper Table IV rows).
 pub fn multiclass_workload(per_class: usize, seed: u64) -> (Dataset, SvmParams) {
     let full = load_scaled("pavia", seed);
@@ -169,6 +180,17 @@ mod tests {
         assert_eq!(two.n_classes, 2);
         assert!(two.y.iter().all(|&c| c == 0 || c == 1));
         assert_eq!(two.class_names, vec!["versicolor", "virginica"]);
+    }
+
+    #[test]
+    fn synth_workload_shapes_and_determinism() {
+        let w = synth_binary_workload(300, 16, 5);
+        assert_eq!((w.ds.n, w.ds.d, w.ds.n_classes), (300, 16, 2));
+        let prob = w.problem();
+        assert_eq!(prob.n(), 300);
+        let w2 = synth_binary_workload(300, 16, 5);
+        assert_eq!(w.ds.x, w2.ds.x);
+        assert!(w.params.gamma > 0.0);
     }
 
     #[test]

@@ -15,7 +15,9 @@
 //! Common options: --dataset iris|wdbc|pavia|<csv path>, --backend
 //! xla|native, --solver smo|gd, --workers N, --per-class N, --seed N,
 //! --config file.json, plus hyper-parameters (--c --gamma --tol --epochs
-//! --lr) and interconnect (--net-latency --net-bandwidth).
+//! --lr), interconnect (--net-latency --net-bandwidth), and the
+//! million-row knobs (--cache-mb --cascade-shards --streaming,
+//! --dataset synth:RxDxC).
 
 use std::sync::Arc;
 
@@ -32,7 +34,8 @@ use parasvm::util::args::Args;
 use parasvm::util::fmt_secs;
 use parasvm::util::rng::Rng;
 
-const FLAGS: &[&str] = &["verbose", "help", "quick", "no-scale", "legacy-serve", "f16-serve"];
+const FLAGS: &[&str] =
+    &["verbose", "help", "quick", "no-scale", "legacy-serve", "f16-serve", "streaming"];
 
 fn main() {
     let args = match Args::parse_with_flags(std::env::args().skip(1), FLAGS) {
@@ -64,7 +67,9 @@ fn print_help() {
          (reproduction of Elgarhy 2023, MPI-CUDA vs TensorFlow SVM)\n\n\
          usage: parasvm <train|eval|serve|bench|datasets|artifacts|selfcheck> [options]\n\n\
          common options:\n\
-           --dataset NAME     iris | wdbc | pavia (default iris)\n\
+           --dataset NAME     iris | wdbc | pavia | synth:RxDxC (deterministic\n\
+                              R-row, D-feature, C-class scaling generator)\n\
+                              (default iris)\n\
            --backend KIND     xla | native (default xla)\n\
            --solver NAME      smo (CUDA-analog) | smo-cached (working-set +\n\
                               LRU row cache + shrinking) | gd (TF-analog)\n\
@@ -83,6 +88,15 @@ fn print_help() {
                               bit-exact) | simd (explicit AVX2+FMA,\n\
                               tolerance-validated)\n\
            --per-class N      subsample N points per class\n\
+           --cache-mb MB      per-rank kernel-row cache budget shared across\n\
+                              all OvO pairs of a rank (0 = per-pair caches)\n\
+           --cascade-shards N cascade front: shard each pair into N leaves,\n\
+                              merge SVs pairwise, polish at the root\n\
+                              (0/1 = direct solve)\n\
+           --streaming        out-of-core chunked ingest (synth:RxDxC or CSV);\n\
+                              with --cascade-shards > 1 the cascade trains\n\
+                              straight off the stream, never holding the\n\
+                              full matrix (note: no min-max scaling there)\n\
            --config FILE      load a JSON RunConfig (CLI flags override)\n\
            --seed N           dataset/run seed (default 42)\n\
          serve options:\n\
@@ -117,13 +131,39 @@ fn make_backend(cfg: &RunConfig) -> Result<Arc<dyn SvmBackend>> {
     })
 }
 
+/// Chunked source for `--streaming`: the synthetic generator or a CSV
+/// file, both resettable so the cascade can re-stream for polish scans.
+fn make_chunk_source(cfg: &RunConfig) -> Result<Box<dyn data::ChunkSource>> {
+    if cfg.dataset.starts_with("synth:") {
+        let spec = data::SynthSpec::parse(&cfg.dataset)?;
+        Ok(Box::new(data::SynthChunks::new(spec, cfg.seed, data::stream::DEFAULT_CHUNK_ROWS)))
+    } else if cfg.dataset.ends_with(".csv") {
+        Ok(Box::new(data::CsvChunks::new(
+            std::path::Path::new(&cfg.dataset),
+            false,
+            data::stream::DEFAULT_CHUNK_ROWS,
+        )))
+    } else {
+        Err(parasvm::Error::Config(format!(
+            "--streaming needs a chunked source: synth:RxDxC or a *.csv path, got {:?}",
+            cfg.dataset
+        )))
+    }
+}
+
 fn load_dataset(cfg: &RunConfig) -> Result<Dataset> {
-    let raw = if cfg.dataset.ends_with(".csv") {
+    let raw = if cfg.streaming {
+        // Chunked ingest: packs panels tile-by-tile with O(chunk) scratch;
+        // bit-identical to the batch load, so the rest of the pipeline
+        // (scaling, splits, training) is unchanged downstream.
+        let mut src = make_chunk_source(cfg)?;
+        data::ChunkedDataset::ingest(&cfg.dataset, src.as_mut())?.into_dataset()
+    } else if cfg.dataset.ends_with(".csv") {
         data::csv::load(std::path::Path::new(&cfg.dataset), false)?
     } else {
         data::by_name(&cfg.dataset, cfg.seed).ok_or_else(|| {
             parasvm::Error::Config(format!(
-                "unknown dataset {:?} (want iris|wdbc|pavia|*.csv)",
+                "unknown dataset {:?} (want iris|wdbc|pavia|synth:RxDxC|*.csv)",
                 cfg.dataset
             ))
         })?
@@ -156,6 +196,19 @@ fn cmd_train(args: &Args, eval: bool) -> Result<()> {
     let cfg = load_config(args)?;
     let save_path = args.opt("save").map(std::path::PathBuf::from);
     args.finish().map_err(parasvm::Error::Config)?;
+    if cfg.streaming && cfg.cascade_shards > 1 {
+        // Fully out-of-core: the cascade trains straight off the chunk
+        // source, one shard resident at a time. No held-out split here —
+        // train accuracy is reported by re-streaming the source.
+        if eval {
+            return Err(parasvm::Error::Config(
+                "--streaming with --cascade-shards trains on the full stream; use `train` \
+                 (accuracy is reported by re-streaming the source)"
+                    .into(),
+            ));
+        }
+        return cmd_train_streaming_cascade(&cfg, save_path);
+    }
     let ds = load_dataset(&cfg)?;
     let backend = make_backend(&cfg)?;
     println!(
@@ -209,6 +262,91 @@ fn cmd_train(args: &Args, eval: bool) -> Result<()> {
     if eval {
         println!("test  accuracy: {:.4}", model.accuracy(&test_ds.x, &test_ds.y));
     }
+    if let Some(path) = save_path {
+        parasvm::svm::persist::save(&model, &path)?;
+        println!("model saved to {}", path.display());
+    }
+    Ok(())
+}
+
+/// Out-of-core cascade training: `--streaming --cascade-shards N`.
+///
+/// Differences from the in-RAM path, by design:
+/// * no min-max scaling — the stream is consumed as-is (`synth:` data is
+///   generated pre-scaled; CSV users pre-scale themselves),
+/// * no `--per-class` subsampling and no held-out split,
+/// * train accuracy is computed by re-streaming the source through the
+///   trained ensemble, one chunk resident at a time.
+fn cmd_train_streaming_cascade(
+    cfg: &RunConfig,
+    save_path: Option<std::path::PathBuf>,
+) -> Result<()> {
+    use parasvm::svm::solver::cascade::{self, CascadeConfig};
+
+    if matches!(cfg.solver, parasvm::backend::Solver::Gd) {
+        return Err(parasvm::Error::Config(
+            "--streaming --cascade-shards requires an SMO-family solver (smo|smo-cached)".into(),
+        ));
+    }
+    if cfg.per_class > 0 {
+        return Err(parasvm::Error::Config(
+            "--per-class needs the in-RAM path; drop it or drop --cascade-shards".into(),
+        ));
+    }
+    // Leaf size: a known row count (synth specs) is split into the
+    // requested number of shards; unknown-length CSV streams fall back
+    // to fixed-size leaves.
+    let shard_rows = if cfg.dataset.starts_with("synth:") {
+        let spec = data::SynthSpec::parse(&cfg.dataset)?;
+        spec.rows.div_ceil(cfg.cascade_shards).max(1024)
+    } else {
+        8192
+    };
+    let ccfg = CascadeConfig {
+        shards: cfg.cascade_shards,
+        threads: 0,
+        row_eval: cfg.row_eval,
+        max_rescans: 1,
+    };
+    println!(
+        "streaming cascade train: {} ({} rows/leaf, {} rows/chunk, unscaled stream)",
+        cfg.dataset,
+        shard_rows,
+        data::stream::DEFAULT_CHUNK_ROWS
+    );
+    let mut src = make_chunk_source(cfg)?;
+    let t0 = std::time::Instant::now();
+    let (model, stats) =
+        cascade::train_streaming_multiclass(src.as_mut(), shard_rows, &cfg.params, &ccfg)?;
+    println!(
+        "trained {} binary problems in {} ({} classes, d={})",
+        model.binaries.len(),
+        fmt_secs(t0.elapsed().as_secs_f64()),
+        model.n_classes,
+        model.d
+    );
+    for (b, st) in model.binaries.iter().zip(&stats) {
+        println!(
+            "  pair ({},{}) iters={} shards={} sv={} {}",
+            b.pos_class,
+            b.neg_class,
+            st.iters,
+            st.chunks,
+            st.n_sv,
+            fmt_secs(st.total_secs())
+        );
+    }
+    // Accuracy by re-streaming: one chunk resident at a time.
+    src.reset()?;
+    let (mut correct, mut total) = (0usize, 0usize);
+    while let Some(chunk) = src.next_chunk()? {
+        let d = chunk.d();
+        for (i, &y) in chunk.y.iter().enumerate() {
+            total += 1;
+            correct += usize::from(model.predict(&chunk.x[i * d..(i + 1) * d]) == y as usize);
+        }
+    }
+    println!("train accuracy (re-streamed): {:.4}", correct as f64 / total.max(1) as f64);
     if let Some(path) = save_path {
         parasvm::svm::persist::save(&model, &path)?;
         println!("model saved to {}", path.display());

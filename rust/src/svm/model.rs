@@ -43,7 +43,10 @@ impl TrainStats {
     }
 }
 
-const SV_EPS: f32 = 1e-6;
+/// Duals at or below this are treated as zero when extracting support
+/// vectors — shared with the cascade front, whose shard survivors must be
+/// exactly the rows [`BinaryModel::from_dense`] would keep.
+pub const SV_EPS: f32 = 1e-6;
 
 impl BinaryModel {
     /// Build from a dense alpha vector over the training problem.

@@ -41,6 +41,10 @@ pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// Hits on rows a *different* pair solve inserted — nonzero only
+    /// under the per-rank shared cache ([`super::shared`]), where OvO
+    /// pairs overlap in global rows. Always ≤ `hits`.
+    pub cross_pair_hits: u64,
     /// High-water mark of resident rows (≤ budget).
     pub max_resident: usize,
 }
@@ -454,6 +458,7 @@ impl KernelSource for DenseSource {
             hits: self.reads,
             misses: 0,
             evictions: 0,
+            cross_pair_hits: 0,
             max_resident: self.rows.len(),
         }
     }

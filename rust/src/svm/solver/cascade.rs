@@ -1,0 +1,765 @@
+//! Cascade SVM front: shard → binary-tree SV merge → polish.
+//!
+//! Direct working-set SMO touches all n rows every selection sweep; at
+//! 10⁵–10⁶ rows the f-vector updates and cache misses dominate. The
+//! cascade (Graf et al., "Cascade SVM") exploits that the solution is
+//! sparse: solve small shards independently, keep only their support
+//! vectors, merge survivor sets pairwise up a binary tree, and re-solve
+//! each union. Each level discards the bulk of its rows, so the root
+//! problem is close to the final SV set — a fraction of n.
+//!
+//! The cascade is an *approximation* front: a row discarded at a lower
+//! level never returns on its own. Two mechanisms bound the damage:
+//!
+//! * **Polish rescans** (Glasmachers-style): after the root solve, the
+//!   full dataset is scanned against the root model and every KKT
+//!   violator (`y·f < 1 − tol` at `alpha = 0`) is admitted back into the
+//!   root set, which is re-solved — up to
+//!   [`CascadeConfig::max_rescans`] rounds. One round recovers the
+//!   common failure mode (a margin row lost to an unlucky shard).
+//! * **Single-class shards pass through unsolved.** Contiguous sharding
+//!   of class-sorted data produces shards with one label; SMO on those
+//!   converges instantly at `alpha = 0` and would discard every row.
+//!   Such shards forward *all* rows to their merge instead — correct,
+//!   just without the pruning benefit until a mixed union appears. The
+//!   merge tree *fold-pairs* (shard `i` joins shard `i + half`, see
+//!   [`merge_level`]) so that union appears at the first merge level
+//!   rather than at the root.
+//!
+//! Predictions are therefore NOT bit-identical to the direct solve; they
+//! are pinned by [`CASCADE_AGREEMENT_MIN`] prediction agreement on the
+//! tier-1 datasets (tests here and in `tests/cascade_stream.rs`).
+//!
+//! [`solve`] runs the cascade over an in-RAM [`BinaryProblem`];
+//! [`solve_streaming`] runs the same reduction out-of-core, pulling rows
+//! from a [`ChunkSource`] one shard at a time so resident memory is
+//! O(shard + survivors), never the full dataset. Both paths share the
+//! same shard solver and merge order, so with matching shard boundaries
+//! they produce bitwise-identical models (pinned by a test below).
+
+use crate::data::stream::ChunkSource;
+use crate::data::BinaryProblem;
+use crate::error::{Error, Result};
+use crate::svm::model::{BinaryModel, TrainStats, SV_EPS};
+use crate::svm::multiclass::{ovo_pairs, OvoModel};
+use crate::svm::smo::SmoSolution;
+use crate::svm::SvmParams;
+
+use super::cache::{CacheStats, KernelCache};
+use super::panel::RowEval;
+use super::shrink::ShrinkStats;
+use super::slice::RowSlice;
+use super::working_set::{self, EngineConfig};
+use super::{DualSolver, NetReport, SolveOutcome};
+
+/// Minimum prediction agreement (fraction of rows classified the same)
+/// the cascade must reach against the direct solve on tier-1 datasets.
+/// CI and the ablation harness gate on this.
+pub const CASCADE_AGREEMENT_MIN: f64 = 0.98;
+
+/// Rows per `decision_batch` block in the polish violator scan.
+const SCAN_BLOCK: usize = 512;
+
+/// Cascade shape knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct CascadeConfig {
+    /// Leaf shard count (clamped to [1, n]). 1 degenerates to a direct
+    /// cached solve plus the polish scan.
+    pub shards: usize,
+    /// Row-evaluation threads inside each shard solve (0 = all cores).
+    pub threads: usize,
+    /// Row-evaluation tier for the shard solves (the `--row-eval` knob).
+    pub row_eval: RowEval,
+    /// Max polish rescan rounds after the root solve.
+    pub max_rescans: usize,
+}
+
+impl Default for CascadeConfig {
+    fn default() -> Self {
+        CascadeConfig { shards: 4, threads: 1, row_eval: RowEval::default(), max_rescans: 1 }
+    }
+}
+
+/// What a cascade solve produced beyond the plain [`SolveOutcome`].
+#[derive(Debug, Clone)]
+pub struct CascadeOutcome {
+    /// Root solution scattered back to full problem length (alpha is 0
+    /// for every row the cascade discarded), plus accumulated cache and
+    /// shrink counters across all shard/merge/polish solves.
+    pub outcome: SolveOutcome,
+    /// Tree levels run (leaf solves = level 1).
+    pub levels: usize,
+    /// Rows per leaf shard (the largest leaf).
+    pub shard_rows: usize,
+    /// High-water kernel-cache residency across all sub-solves, in bytes
+    /// (rows resident × subset width × 4). The cascade's memory story:
+    /// this stays O(shard²) while a direct cached solve scales O(n·cache).
+    pub peak_cache_bytes: usize,
+    /// Polish rounds that actually admitted violators.
+    pub rescans_used: usize,
+    /// Rows in the final (polished) root problem.
+    pub final_rows: usize,
+}
+
+/// One survivor set moving up the tree: global row ids (ascending) plus
+/// owned copies of the corresponding rows and ±1 labels. Owning copies is
+/// what lets the streaming path drop source rows once a shard is solved.
+struct Pool {
+    ids: Vec<usize>,
+    x: Vec<f32>,
+    y: Vec<f32>,
+}
+
+impl Pool {
+    fn with_capacity(rows: usize, d: usize) -> Pool {
+        Pool {
+            ids: Vec::with_capacity(rows),
+            x: Vec::with_capacity(rows * d),
+            y: Vec::with_capacity(rows),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    fn push(&mut self, id: usize, row: &[f32], y: f32) {
+        self.ids.push(id);
+        self.x.extend_from_slice(row);
+        self.y.push(y);
+    }
+
+    /// Keep the rows whose dual survived (`alpha > SV_EPS`), preserving
+    /// ascending id order. An all-zero solution (single-class shard, or a
+    /// degenerate solve) keeps everything — discarding on no evidence is
+    /// how cascades lose classes.
+    fn survivors(self, alpha: &[f32], d: usize) -> Pool {
+        debug_assert_eq!(alpha.len(), self.len());
+        if alpha.iter().all(|&a| a <= SV_EPS) {
+            return self;
+        }
+        let mut out = Pool::with_capacity(self.len(), d);
+        for (k, &id) in self.ids.iter().enumerate() {
+            if alpha[k] > SV_EPS {
+                out.push(id, &self.x[k * d..(k + 1) * d], self.y[k]);
+            }
+        }
+        out
+    }
+
+    /// Two-pointer merge by ascending id (ids must be disjoint).
+    fn merge(a: Pool, b: Pool, d: usize) -> Pool {
+        let mut out = Pool::with_capacity(a.len() + b.len(), d);
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < a.len() || j < b.len() {
+            let take_a = j >= b.len() || (i < a.len() && a.ids[i] < b.ids[j]);
+            if take_a {
+                out.push(a.ids[i], &a.x[i * d..(i + 1) * d], a.y[i]);
+                i += 1;
+            } else {
+                out.push(b.ids[j], &b.x[j * d..(j + 1) * d], b.y[j]);
+                j += 1;
+            }
+        }
+        out
+    }
+}
+
+/// Counters accumulated across every sub-solve of one cascade run.
+struct Acc {
+    cache: CacheStats,
+    shrink: ShrinkStats,
+    iters: usize,
+    peak_cache_bytes: usize,
+    solves: usize,
+}
+
+impl Acc {
+    fn new() -> Acc {
+        Acc {
+            cache: CacheStats::default(),
+            shrink: ShrinkStats { min_active: usize::MAX, ..Default::default() },
+            iters: 0,
+            peak_cache_bytes: 0,
+            solves: 0,
+        }
+    }
+
+    fn absorb(&mut self, m: usize, stats: CacheStats, shrink: ShrinkStats, iters: usize) {
+        self.cache.hits += stats.hits;
+        self.cache.misses += stats.misses;
+        self.cache.evictions += stats.evictions;
+        self.cache.cross_pair_hits += stats.cross_pair_hits;
+        self.cache.max_resident = self.cache.max_resident.max(stats.max_resident);
+        self.peak_cache_bytes = self.peak_cache_bytes.max(stats.max_resident * m * 4);
+        self.shrink.shrink_passes += shrink.shrink_passes;
+        self.shrink.shrunk_total += shrink.shrunk_total;
+        self.shrink.unshrinks += shrink.unshrinks;
+        self.shrink.min_active = self.shrink.min_active.min(shrink.min_active);
+        self.iters += iters;
+        self.solves += 1;
+    }
+
+    fn shrink_stats(&self) -> ShrinkStats {
+        let mut s = self.shrink;
+        if self.solves == 0 {
+            s.min_active = 0;
+        }
+        s
+    }
+}
+
+/// Solve one pool through the cached working-set engine, with the same
+/// budget formula on both the in-RAM and the streaming path (that shared
+/// formula is what makes the two paths bitwise-comparable).
+fn solve_pool(
+    pool: &Pool,
+    d: usize,
+    p: &SvmParams,
+    cfg: &CascadeConfig,
+    acc: &mut Acc,
+) -> SmoSolution {
+    let m = pool.len();
+    let has_pos = pool.y.iter().any(|&v| v > 0.0);
+    let has_neg = pool.y.iter().any(|&v| v < 0.0);
+    if !(has_pos && has_neg) {
+        // Single-class pool: the dual optimum is alpha = 0 and SMO would
+        // report instant convergence; skip the engine entirely.
+        return SmoSolution {
+            alpha: vec![0.0; m],
+            bias: 0.0,
+            iters: 0,
+            b_up: 0.0,
+            b_low: 0.0,
+            converged: true,
+        };
+    }
+    let engine_cfg = EngineConfig {
+        threads: cfg.threads,
+        row_eval: cfg.row_eval,
+        ..EngineConfig::cached_shrink((m / 4).max(2))
+    };
+    let row_threads = super::parallel::resolve_threads(cfg.threads);
+    let mut src = KernelCache::new(&pool.x, m, d, p.gamma, engine_cfg.cache_rows, row_threads)
+        .with_eval(cfg.row_eval);
+    let (sol, shrink) = working_set::solve(&mut src, &pool.y, p, &engine_cfg);
+    acc.absorb(m, src.stats(), shrink, sol.iters);
+    sol
+}
+
+/// One merge level with fold pairing: pool `i` joins pool `i + half`.
+/// Adjacent pairing would merge neighbours, and on class-sorted data
+/// contiguous shards ARE single-class neighbours — the tree would stay
+/// single-class (every pool passing all its rows up unsolved) until the
+/// root, degenerating the cascade into one direct solve of n rows.
+/// Folding the top half of the shard range onto the bottom half mixes
+/// the classes at the first merge, so pruning starts one level up
+/// instead of never. Odd count: the middle pool is promoted unchanged.
+fn merge_level(mut pools: Vec<Pool>, d: usize) -> Vec<Pool> {
+    let half = pools.len().div_ceil(2);
+    let mut upper = pools.split_off(half).into_iter();
+    pools
+        .into_iter()
+        .map(|a| match upper.next() {
+            Some(b) => Pool::merge(a, b, d),
+            None => a,
+        })
+        .collect()
+}
+
+/// Run the shard → merge tree over leaf pools until one pool remains;
+/// returns the final pool together with its full solution.
+fn reduce_pools(
+    mut pools: Vec<Pool>,
+    d: usize,
+    p: &SvmParams,
+    cfg: &CascadeConfig,
+    acc: &mut Acc,
+) -> (Pool, SmoSolution, usize) {
+    pools.retain(|pl| pl.len() > 0);
+    assert!(!pools.is_empty(), "cascade needs at least one non-empty shard");
+    let mut levels = 0usize;
+    loop {
+        levels += 1;
+        if pools.len() == 1 {
+            let pool = pools.pop().expect("one pool");
+            let sol = solve_pool(&pool, d, p, cfg, acc);
+            return (pool, sol, levels);
+        }
+        let surv: Vec<Pool> = pools
+            .into_iter()
+            .map(|pl| {
+                let sol = solve_pool(&pl, d, p, cfg, acc);
+                pl.survivors(&sol.alpha, d)
+            })
+            .collect();
+        pools = merge_level(surv, d);
+    }
+}
+
+fn model_from_pool(
+    pool: &Pool,
+    sol: &SmoSolution,
+    d: usize,
+    p: &SvmParams,
+    classes: (usize, usize),
+) -> BinaryModel {
+    let prob = BinaryProblem {
+        x: pool.x.clone(),
+        y: pool.y.clone(),
+        d,
+        pos_class: classes.0,
+        neg_class: classes.1,
+    };
+    BinaryModel::from_dense(&prob, &sol.alpha, sol.bias, p.gamma)
+}
+
+/// `y·f < 1 − tol` at `alpha = 0` — the polish admission test. Rows
+/// already in the root set are never scanned (their KKT status is the
+/// root solver's business).
+#[inline]
+fn violates(y: f32, f: f32, tol: f32) -> bool {
+    y * f < 1.0 - tol
+}
+
+/// Run the cascade over an in-RAM binary problem.
+pub fn solve(prob: &BinaryProblem, p: &SvmParams, cfg: &CascadeConfig) -> CascadeOutcome {
+    let n = prob.n();
+    let d = prob.d;
+    assert!(n > 0, "empty problem");
+    let t0 = std::time::Instant::now();
+    let shards = cfg.shards.clamp(1, n);
+    let slices = RowSlice::partition(n, shards);
+    let shard_rows = slices.iter().map(|s| s.len()).max().unwrap_or(0);
+    let mut acc = Acc::new();
+    let pools: Vec<Pool> = slices
+        .iter()
+        .filter(|s| !s.is_empty())
+        .map(|s| {
+            let mut pl = Pool::with_capacity(s.len(), d);
+            for t in s.lo..s.hi {
+                pl.push(t, prob.row(t), prob.y[t]);
+            }
+            pl
+        })
+        .collect();
+    let (mut pool, mut sol, levels) = reduce_pools(pools, d, p, cfg, &mut acc);
+
+    let mut rescans_used = 0usize;
+    while rescans_used < cfg.max_rescans {
+        let model = model_from_pool(&pool, &sol, d, p, (prob.pos_class, prob.neg_class));
+        let mut in_pool = vec![false; n];
+        for &g in &pool.ids {
+            in_pool[g] = true;
+        }
+        let mut violators = Pool::with_capacity(SCAN_BLOCK, d);
+        let mut block_ids: Vec<usize> = Vec::with_capacity(SCAN_BLOCK);
+        let mut block_x: Vec<f32> = Vec::with_capacity(SCAN_BLOCK * d);
+        let mut flush = |ids: &mut Vec<usize>, x: &mut Vec<f32>, violators: &mut Pool| {
+            if ids.is_empty() {
+                return;
+            }
+            let dec = model.decision_batch(x, ids.len());
+            for (k, &t) in ids.iter().enumerate() {
+                if violates(prob.y[t], dec[k], p.tol) {
+                    violators.push(t, &x[k * d..(k + 1) * d], prob.y[t]);
+                }
+            }
+            ids.clear();
+            x.clear();
+        };
+        for t in 0..n {
+            if in_pool[t] {
+                continue;
+            }
+            block_ids.push(t);
+            block_x.extend_from_slice(prob.row(t));
+            if block_ids.len() == SCAN_BLOCK {
+                flush(&mut block_ids, &mut block_x, &mut violators);
+            }
+        }
+        flush(&mut block_ids, &mut block_x, &mut violators);
+        if violators.len() == 0 {
+            break;
+        }
+        rescans_used += 1;
+        pool = Pool::merge(pool, violators, d);
+        sol = solve_pool(&pool, d, p, cfg, &mut acc);
+    }
+
+    let mut alpha = vec![0.0f32; n];
+    for (k, &g) in pool.ids.iter().enumerate() {
+        alpha[g] = sol.alpha[k];
+    }
+    let final_rows = pool.len();
+    CascadeOutcome {
+        outcome: SolveOutcome {
+            solution: SmoSolution {
+                alpha,
+                bias: sol.bias,
+                iters: acc.iters,
+                b_up: sol.b_up,
+                b_low: sol.b_low,
+                converged: sol.converged,
+            },
+            cache: acc.cache,
+            shrink: acc.shrink_stats(),
+            gram_secs: 0.0,
+            solve_secs: t0.elapsed().as_secs_f64(),
+            net: NetReport::none(),
+        },
+        levels,
+        shard_rows,
+        peak_cache_bytes: acc.peak_cache_bytes,
+        rescans_used,
+        final_rows,
+    }
+}
+
+/// The cascade as a [`DualSolver`] engine (the coordinator's
+/// `--cascade-shards` path goes through [`solve`] directly to keep the
+/// cascade-specific counters; this adapter serves the ablation harness).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CascadeSmo {
+    pub cfg: CascadeConfig,
+}
+
+impl DualSolver for CascadeSmo {
+    fn name(&self) -> &'static str {
+        "cascade"
+    }
+
+    fn solve(&self, prob: &BinaryProblem, p: &SvmParams) -> SolveOutcome {
+        solve(prob, p, &self.cfg).outcome
+    }
+}
+
+/// Fraction of rows two binary models classify identically (sign of the
+/// decision value) over a row-major batch — the cascade's acceptance
+/// metric against the direct solve.
+pub fn prediction_agreement(a: &BinaryModel, b: &BinaryModel, x: &[f32], n: usize) -> f64 {
+    assert_eq!(a.d, b.d);
+    assert_eq!(x.len(), n * a.d);
+    let da = a.decision_batch(x, n);
+    let db = b.decision_batch(x, n);
+    let same = da.iter().zip(&db).filter(|(va, vb)| (**va > 0.0) == (**vb > 0.0)).count();
+    same as f64 / n.max(1) as f64
+}
+
+/// What one out-of-core cascade solve produced.
+#[derive(Debug, Clone)]
+pub struct StreamingOutcome {
+    pub model: BinaryModel,
+    pub stats: TrainStats,
+    pub levels: usize,
+    /// Leaf shards streamed (= passes of the merge tree's bottom level).
+    pub shards: usize,
+    pub rescans_used: usize,
+    pub final_rows: usize,
+    pub peak_cache_bytes: usize,
+}
+
+/// Out-of-core cascade for one OvO pair: stream the source, keep rows of
+/// classes `pos`/`neg`, cut a leaf shard every `shard_rows` rows, and run
+/// the same reduce + polish as [`solve`]. Resident memory is
+/// O(shard_rows + survivors + chunk) — the full dataset never
+/// materializes. The polish rescan re-streams the source once per round.
+///
+/// Row ids are positions in the pair-filtered stream, which is exactly
+/// [`crate::data::Dataset::binary_pair`] order — so with shard
+/// boundaries matching [`RowSlice::partition`] (n divisible by shards)
+/// this is bitwise-identical to the in-RAM cascade (pinned by a test).
+pub fn solve_streaming(
+    source: &mut dyn ChunkSource,
+    pos: usize,
+    neg: usize,
+    shard_rows: usize,
+    p: &SvmParams,
+    cfg: &CascadeConfig,
+) -> Result<StreamingOutcome> {
+    assert!(shard_rows > 0, "shard_rows must be positive");
+    let t0 = std::time::Instant::now();
+    source.reset()?;
+    let mut acc = Acc::new();
+    let mut d: Option<usize> = None;
+    let mut shard: Option<Pool> = None;
+    let mut pools: Vec<Pool> = Vec::new();
+    let mut next_id = 0usize;
+    // Leaf pass: solve each full shard as soon as it closes, so at most
+    // one unsolved shard plus survivor pools are ever resident.
+    while let Some(chunk) = source.next_chunk()? {
+        let cd = chunk.d();
+        let width = *d.get_or_insert(cd);
+        if cd != width {
+            return Err(Error::Data(format!("chunk width {cd} != {width}")));
+        }
+        for (r, &label) in chunk.y.iter().enumerate() {
+            let sign = if label == pos as i32 {
+                1.0
+            } else if label == neg as i32 {
+                -1.0
+            } else {
+                continue;
+            };
+            let pl = shard.get_or_insert_with(|| Pool::with_capacity(shard_rows, width));
+            pl.push(next_id, &chunk.x[r * width..(r + 1) * width], sign);
+            next_id += 1;
+            if pl.len() == shard_rows {
+                let full = shard.take().expect("shard present");
+                let sol = solve_pool(&full, width, p, cfg, &mut acc);
+                pools.push(full.survivors(&sol.alpha, width));
+            }
+        }
+    }
+    if let Some(tail) = shard.take() {
+        let width = d.expect("width known once any row was kept");
+        let sol = solve_pool(&tail, width, p, cfg, &mut acc);
+        pools.push(tail.survivors(&sol.alpha, width));
+    }
+    let d = d.ok_or_else(|| Error::Data("empty stream".into()))?;
+    if pools.is_empty() || pools.iter().all(|pl| pl.len() == 0) {
+        return Err(Error::Data(format!("no rows of classes {pos}/{neg} in stream")));
+    }
+    let shards = pools.len();
+    // The leaf level is already solved; reduce_pools re-solves singleton
+    // roots, so only run the merge tree when there is something to merge.
+    let (mut pool, mut sol, levels) = if shards == 1 {
+        let pool = pools.pop().expect("one pool");
+        let sol = solve_pool(&pool, d, p, cfg, &mut acc);
+        (pool, sol, 1)
+    } else {
+        let next = merge_level(pools, d);
+        let (pool, sol, upper) = reduce_pools(next, d, p, cfg, &mut acc);
+        (pool, sol, upper + 1)
+    };
+
+    let mut rescans_used = 0usize;
+    while rescans_used < cfg.max_rescans {
+        let model = model_from_pool(&pool, &sol, d, p, (pos, neg));
+        let in_pool: std::collections::HashSet<usize> = pool.ids.iter().copied().collect();
+        let mut violators = Pool::with_capacity(SCAN_BLOCK, d);
+        let mut block_ids: Vec<usize> = Vec::with_capacity(SCAN_BLOCK);
+        let mut block_x: Vec<f32> = Vec::with_capacity(SCAN_BLOCK * d);
+        let mut block_y: Vec<f32> = Vec::with_capacity(SCAN_BLOCK);
+        source.reset()?;
+        let mut id = 0usize;
+        while let Some(chunk) = source.next_chunk()? {
+            for (r, &label) in chunk.y.iter().enumerate() {
+                let sign = if label == pos as i32 {
+                    1.0
+                } else if label == neg as i32 {
+                    -1.0
+                } else {
+                    continue;
+                };
+                let t = id;
+                id += 1;
+                if in_pool.contains(&t) {
+                    continue;
+                }
+                block_ids.push(t);
+                block_x.extend_from_slice(&chunk.x[r * d..(r + 1) * d]);
+                block_y.push(sign);
+                if block_ids.len() == SCAN_BLOCK {
+                    scan_block(&model, &block_ids, &block_x, &block_y, p.tol, d, &mut violators);
+                    block_ids.clear();
+                    block_x.clear();
+                    block_y.clear();
+                }
+            }
+        }
+        scan_block(&model, &block_ids, &block_x, &block_y, p.tol, d, &mut violators);
+        if violators.len() == 0 {
+            break;
+        }
+        rescans_used += 1;
+        pool = Pool::merge(pool, violators, d);
+        sol = solve_pool(&pool, d, p, cfg, &mut acc);
+    }
+
+    let model = model_from_pool(&pool, &sol, d, p, (pos, neg));
+    let stats = TrainStats {
+        iters: acc.iters,
+        converged: sol.converged,
+        gram_secs: 0.0,
+        solve_secs: t0.elapsed().as_secs_f64(),
+        chunks: shards,
+        n_sv: model.n_sv(),
+    };
+    Ok(StreamingOutcome {
+        model,
+        stats,
+        levels,
+        shards,
+        rescans_used,
+        final_rows: pool.len(),
+        peak_cache_bytes: acc.peak_cache_bytes,
+    })
+}
+
+fn scan_block(
+    model: &BinaryModel,
+    ids: &[usize],
+    x: &[f32],
+    y: &[f32],
+    tol: f32,
+    d: usize,
+    violators: &mut Pool,
+) {
+    if ids.is_empty() {
+        return;
+    }
+    let dec = model.decision_batch(x, ids.len());
+    for (k, &t) in ids.iter().enumerate() {
+        if violates(y[k], dec[k], tol) {
+            violators.push(t, &x[k * d..(k + 1) * d], y[k]);
+        }
+    }
+}
+
+/// Train a full OvO ensemble out-of-core: one [`solve_streaming`] pass
+/// per class pair (the source is reset between pairs). Class names come
+/// from the source; a source that only learns labels while streaming
+/// (CSV) gets one extra discovery pass up front.
+pub fn train_streaming_multiclass(
+    source: &mut dyn ChunkSource,
+    shard_rows: usize,
+    p: &SvmParams,
+    cfg: &CascadeConfig,
+) -> Result<(OvoModel, Vec<TrainStats>)> {
+    let mut names = source.class_names();
+    if names.is_empty() {
+        source.reset()?;
+        while source.next_chunk()?.is_some() {}
+        names = source.class_names();
+    }
+    if names.len() < 2 {
+        return Err(Error::Data(format!("need >= 2 classes, found {}", names.len())));
+    }
+    let n_classes = names.len();
+    let mut binaries = Vec::new();
+    let mut stats = Vec::new();
+    let mut d = 0usize;
+    for (a, b) in ovo_pairs(n_classes) {
+        let out = solve_streaming(source, a, b, shard_rows, p, cfg)?;
+        d = out.model.d;
+        binaries.push(out.model);
+        stats.push(out.stats);
+    }
+    Ok((OvoModel::new(n_classes, d, binaries, names), stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::stream::SynthChunks;
+    use crate::data::SynthSpec;
+    use crate::svm::solver::WorkingSetSmo;
+
+    fn synth_pair(rows: usize, d: usize, seed: u64) -> (crate::data::Dataset, BinaryProblem) {
+        let spec = SynthSpec { rows, d, classes: 2 };
+        let ds = crate::data::synth::generate(&spec, seed);
+        let prob = ds.binary_pair(0, 1);
+        (ds, prob)
+    }
+
+    #[test]
+    fn cascade_agrees_with_direct_on_synth() {
+        let (_, prob) = synth_pair(400, 6, 11);
+        let p = SvmParams::default();
+        let cfg = CascadeConfig { shards: 4, ..CascadeConfig::default() };
+        let casc = solve(&prob, &p, &cfg);
+        assert!(casc.outcome.solution.converged);
+        assert_eq!(casc.levels, 3); // 4 -> 2 -> 1
+        assert_eq!(casc.outcome.solution.alpha.len(), prob.n());
+        assert!(casc.final_rows < prob.n(), "cascade should prune rows");
+        let direct = WorkingSetSmo::default().solve(&prob, &p);
+        let sol = &casc.outcome.solution;
+        let m_c = BinaryModel::from_dense(&prob, &sol.alpha, sol.bias, p.gamma);
+        let ds = &direct.solution;
+        let m_d = BinaryModel::from_dense(&prob, &ds.alpha, ds.bias, p.gamma);
+        let agree = prediction_agreement(&m_c, &m_d, &prob.x, prob.n());
+        assert!(agree >= CASCADE_AGREEMENT_MIN, "agreement {agree} below {CASCADE_AGREEMENT_MIN}");
+    }
+
+    #[test]
+    fn class_sorted_data_survives_single_class_shards() {
+        // Round-robin synth labels, re-sorted by class: leaf shards are
+        // pure single-class sets and must pass rows up unsolved. Fold
+        // pairing then mixes the classes at the first merge level, so
+        // the cascade still prunes instead of degenerating into one
+        // direct solve of all n rows at the root.
+        let (ds, _) = synth_pair(200, 5, 29);
+        let mut idx: Vec<usize> = (0..ds.n).collect();
+        idx.sort_by_key(|&i| ds.y[i]);
+        let sorted = ds.select(&idx);
+        let prob = sorted.binary_pair(0, 1);
+        let p = SvmParams::default();
+        let cfg = CascadeConfig { shards: 4, ..CascadeConfig::default() };
+        let casc = solve(&prob, &p, &cfg);
+        let direct = WorkingSetSmo::default().solve(&prob, &p);
+        let sol = &casc.outcome.solution;
+        let m_c = BinaryModel::from_dense(&prob, &sol.alpha, sol.bias, p.gamma);
+        let ds = &direct.solution;
+        let m_d = BinaryModel::from_dense(&prob, &ds.alpha, ds.bias, p.gamma);
+        assert!(m_c.n_sv() > 0, "cascade lost every SV on sorted data");
+        assert!(casc.final_rows < prob.n(), "fold pairing should prune sorted data");
+        let agree = prediction_agreement(&m_c, &m_d, &prob.x, prob.n());
+        assert!(agree >= CASCADE_AGREEMENT_MIN, "agreement {agree} below {CASCADE_AGREEMENT_MIN}");
+    }
+
+    #[test]
+    fn alpha_scatters_only_onto_final_pool_rows() {
+        let (_, prob) = synth_pair(240, 4, 7);
+        let p = SvmParams::default();
+        let casc = solve(&prob, &p, &CascadeConfig { shards: 3, ..CascadeConfig::default() });
+        let nz = casc.outcome.solution.alpha.iter().filter(|&&a| a > 0.0).count();
+        assert!(nz <= casc.final_rows);
+        assert!(nz > 0);
+        assert!(casc.peak_cache_bytes > 0);
+        assert_eq!(CascadeSmo { cfg: CascadeConfig::default() }.name(), "cascade");
+    }
+
+    #[test]
+    fn streaming_matches_in_ram_cascade_bitwise() {
+        // 240 rows / 4 shards = 60-row leaves on both paths; chunk size 37
+        // deliberately misaligned with shard boundaries.
+        let spec = SynthSpec { rows: 240, d: 5, classes: 2 };
+        let seed = 33;
+        let ds = crate::data::synth::generate(&spec, seed);
+        let prob = ds.binary_pair(0, 1);
+        let p = SvmParams::default();
+        let cfg = CascadeConfig { shards: 4, ..CascadeConfig::default() };
+        let in_ram = solve(&prob, &p, &cfg);
+        let sol = &in_ram.outcome.solution;
+        let m_ram = BinaryModel::from_dense(&prob, &sol.alpha, sol.bias, p.gamma);
+        let mut source = SynthChunks::new(spec, seed, 37);
+        let streamed = solve_streaming(&mut source, 0, 1, 60, &p, &cfg).unwrap();
+        assert_eq!(streamed.shards, 4);
+        assert_eq!(streamed.levels, in_ram.levels);
+        assert_eq!(streamed.rescans_used, in_ram.rescans_used);
+        assert_eq!(streamed.final_rows, in_ram.final_rows);
+        assert_eq!(streamed.model.bias.to_bits(), m_ram.bias.to_bits());
+        assert_eq!(streamed.model.coef.len(), m_ram.coef.len());
+        for (a, b) in streamed.model.coef.iter().zip(&m_ram.coef) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in streamed.model.sv.iter().zip(&m_ram.sv) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn streaming_multiclass_trains_an_ovo_ensemble() {
+        let spec = SynthSpec { rows: 300, d: 4, classes: 3 };
+        let ds = crate::data::synth::generate(&spec, 5);
+        let mut source = SynthChunks::new(spec, 5, 64);
+        let p = SvmParams::default();
+        let cfg = CascadeConfig::default();
+        let (model, stats) = train_streaming_multiclass(&mut source, 64, &p, &cfg).unwrap();
+        assert_eq!(model.binaries.len(), 3);
+        assert_eq!(stats.len(), 3);
+        let acc = model.accuracy(&ds.x, &ds.y);
+        assert!(acc > 0.9, "synth accuracy {acc}");
+    }
+}

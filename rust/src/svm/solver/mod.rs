@@ -151,6 +151,42 @@
 //! are validated against it by tolerance property tests
 //! (`tests/simd_tier.rs`) rather than trusted on faith.
 //!
+//! # Per-pair caches → one shared per-rank cache
+//!
+//! Every cached engine above builds its kernel cache *per solve*: K
+//! classes give K(K−1)/2 OvO pairs, each pair re-evaluates the global
+//! rows it shares with every other pair touching those classes, and W
+//! concurrent pairs × a per-solve budget silently overcommits a rank's
+//! memory W-fold. [`shared::SharedKernelCache`] inverts both: ONE
+//! mutex-guarded LRU of *full-width* rows keyed by **global row id**,
+//! built once per rank over the rank's dataset and budgeted once
+//! (`--cache-mb`, whole-rank accounting). Pair solves borrow it through
+//! [`shared::SharedPairSource`], which gathers pair-local rows out of the
+//! full-width ones via the pair's global index map
+//! ([`crate::data::Dataset::pair_indices`]); rows a neighbouring pair
+//! already paid for are cross-pair hits ([`CacheStats::cross_pair_hits`]).
+//! Rows are computed *outside* the lock, so `--pair-threads` strands
+//! contend only on pointer bookkeeping, and each kernel entry is the
+//! same f32 expression as always — per-pair models are bit-identical to
+//! the per-solve-cache engine, whatever the interleaving.
+//!
+//! # Direct solve → cascade + polish
+//!
+//! Even with every trick above, one direct solve still walks a working
+//! set over *all* n rows. The cascade front ([`cascade`], Graf et al.'s
+//! Cascade SVM with Glasmachers' polishing pass) cuts the problem down
+//! first: shard the rows, solve each shard, merge surviving SVs up a
+//! binary tree re-solving at each node, then *polish* the root SV set
+//! with the very same working-set engine and finally re-admit any
+//! full-set KKT violators for a bounded number of rescan rounds. Most
+//! non-SVs never enter a solve bigger than a shard, and the streaming
+//! variant ([`cascade::solve_streaming`]) never materializes more than
+//! O(shard + SVs) rows at once. The price is exactness: cascade+polish
+//! is *not* bit-identical to the direct solve — predictions are pinned
+//! within [`cascade::CASCADE_AGREEMENT_MIN`] agreement on the tier-1
+//! datasets instead (the third entry on the relaxation ladder, after
+//! SIMD and f16).
+//!
 //! All engines return duals that agree with the sequential oracle within
 //! float tolerance (the unshrunk cached and distributed engines are
 //! bit-identical; shrinking re-verifies KKT on the full index set before
@@ -158,15 +194,19 @@
 //! semantics.
 
 pub mod cache;
+pub mod cascade;
 pub mod distributed;
 pub mod panel;
 pub mod parallel;
+pub mod shared;
 pub mod shrink;
 pub mod slice;
 pub mod working_set;
 
 pub use cache::{CacheStats, DenseSource, KernelCache, KernelSource};
+pub use cascade::{CascadeConfig, CascadeOutcome, CascadeSmo, CASCADE_AGREEMENT_MIN};
 pub use distributed::DistributedSmo;
+pub use shared::{SharedKernelCache, SharedPairSource};
 pub use panel::{
     f16_bits_to_f32, f32_to_f16_bits, simd_acceleration_active, simd_force_portable, DatasetView,
     PanelKernel, QuantizedView, RowEval, SIMD_MAX_REL_ERROR,
@@ -249,7 +289,13 @@ impl DualSolver for DenseSmo {
         let solve_secs = t1.elapsed().as_secs_f64();
         SolveOutcome {
             solution,
-            cache: CacheStats { hits: 0, misses: n as u64, evictions: 0, max_resident: n },
+            cache: CacheStats {
+                hits: 0,
+                misses: n as u64,
+                evictions: 0,
+                cross_pair_hits: 0,
+                max_resident: n,
+            },
             shrink: ShrinkStats { min_active: n, ..Default::default() },
             gram_secs,
             solve_secs,

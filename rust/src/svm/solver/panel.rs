@@ -212,6 +212,80 @@ impl Lane {
     const ZERO: Lane = Lane([0.0; LANES]);
 }
 
+/// Incremental builder for an owned full-window [`DatasetView`]: rows
+/// arrive in chunks (the streaming-ingest path,
+/// [`crate::data::stream::ChunkedDataset`]) and are placed straight into
+/// the final panel layout as they arrive, so ingest never stages a second
+/// full copy of the matrix beyond the view's own storage and packing
+/// cost is O(chunk) resident scratch.
+///
+/// The finished view is bit-identical to `DatasetView::pack` of the
+/// concatenated matrix: a row's panel slot `(t / LANES, t % LANES)` and
+/// its norm (`Σ v·v` ascending) depend only on its global index `t` and
+/// contents, never on chunk boundaries, and the tail panel keeps the
+/// same [`Lane::ZERO`] padding the batch pack pre-fills.
+pub struct PanelPacker {
+    d: usize,
+    n: usize,
+    x: Vec<f32>,
+    packed: Vec<Lane>,
+    norms: Vec<f32>,
+}
+
+impl PanelPacker {
+    pub fn new(d: usize) -> PanelPacker {
+        assert!(d > 0, "feature width must be positive");
+        PanelPacker { d, n: 0, x: Vec::new(), packed: Vec::new(), norms: Vec::new() }
+    }
+
+    /// Rows appended so far.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Append `rows.len() / d` whole rows (the chunk must be row-aligned).
+    pub fn push_rows(&mut self, rows: &[f32]) {
+        assert_eq!(rows.len() % self.d, 0, "chunk must hold whole rows");
+        for row in rows.chunks_exact(self.d) {
+            let (p, w) = (self.n / LANES, self.n % LANES);
+            if w == 0 {
+                // Starting a new panel: pre-fill with the zero padding the
+                // batch pack guarantees for the tail lanes.
+                self.packed.resize(self.packed.len() + self.d, Lane::ZERO);
+            }
+            let mut norm = 0.0f32;
+            for (c, &v) in row.iter().enumerate() {
+                self.packed[p * self.d + c].0[w] = v;
+                norm += v * v;
+            }
+            self.norms.push(norm);
+            self.n += 1;
+        }
+        self.x.extend_from_slice(rows);
+    }
+
+    /// Finish into an owned full-window view whose panels are already
+    /// built — the lazy pack of [`DatasetView`] is pre-seeded, so no
+    /// whole-matrix packing pass ever runs.
+    pub fn finish(self) -> DatasetView<'static> {
+        let packed = std::sync::OnceLock::new();
+        // A freshly created lock cannot already be set.
+        let _ = packed.set(self.packed);
+        DatasetView {
+            x: Cow::Owned(self.x),
+            n: self.n,
+            d: self.d,
+            cols: RowSlice::full(self.n),
+            packed,
+            norms: self.norms,
+        }
+    }
+}
+
 /// The packed, zero-padded, cache-blocked view of (a column window of) a
 /// row-major training matrix, plus the precomputed squared row norms the
 /// expanded-identity kernel needs. Built once per solve and shared by all
@@ -295,6 +369,13 @@ impl<'a> DatasetView<'a> {
 
     pub fn d(&self) -> usize {
         self.d
+    }
+
+    /// Take the row-major matrix out of an owned view (no copy when the
+    /// view owns its storage — the streaming-ingest bridge back to a
+    /// plain in-RAM [`crate::data::Dataset`]).
+    pub fn take_x(self) -> Vec<f32> {
+        self.x.into_owned()
     }
 
     /// The column window the panels cover.
@@ -1334,6 +1415,48 @@ mod tests {
         let norms = v.norms().to_vec();
         let want = parallel::rbf_entry(&x, &norms, 0, n - 1, d, 0.7);
         assert_eq!(out[0].to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn panel_packer_is_bit_identical_to_batch_pack() {
+        let (n, d) = (27, 5); // tail panel is partially filled
+        let x = random_x(n, d, 14);
+        let batch = DatasetView::pack(&x, n, d);
+        batch.panels_data(); // force the lazy batch pack
+        // Feed the same rows through the incremental packer in ragged,
+        // panel-misaligned chunks (including an empty one).
+        let mut packer = PanelPacker::new(d);
+        let mut off = 0;
+        for rows in [3usize, 0, 9, 1, 8, 6] {
+            packer.push_rows(&x[off * d..(off + rows) * d]);
+            off += rows;
+        }
+        assert_eq!(off, n);
+        assert_eq!(packer.n(), n);
+        let v = packer.finish();
+        assert_eq!((v.n(), v.d()), (n, d));
+        assert_eq!(v.x(), &x[..]);
+        // Norms, panel contents (incl. zero padding), and every evaluated
+        // row must match the batch pack bit for bit.
+        for (a, b) in v.norms().iter().zip(batch.norms()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let (pa, pb) = (v.panels_data(), batch.panels_data());
+        assert_eq!(pa.len(), pb.len());
+        for (la, lb) in pa.iter().zip(pb) {
+            for (va, vb) in la.0.iter().zip(lb.0.iter()) {
+                assert_eq!(va.to_bits(), vb.to_bits());
+            }
+        }
+        let mut got = vec![0.0f32; n];
+        let mut want = vec![0.0f32; n];
+        for q in [0, 13, n - 1] {
+            v.row_into(q, 0.8, &mut got, 1);
+            batch.row_into(q, 0.8, &mut want, 1);
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,466 @@
+//! ONE kernel-row cache shared across all OvO pairs of a rank.
+//!
+//! The per-solve [`super::cache::KernelCache`] gives every class-pair
+//! solve its own LRU: K classes → K(K−1)/2 pairs, each re-evaluating the
+//! global rows it shares with every other pair touching its classes, and
+//! W concurrent pairs × a per-solve budget overcommits the rank's memory
+//! W-fold. This module fixes both at once:
+//!
+//! * **Global rows, not pair rows.** The shared LRU caches *full-width*
+//!   rows `K(g, 0..n)` keyed by **global row id** `g` over the rank's
+//!   whole dataset. A pair solve sees the pair-local kernel through
+//!   [`SharedPairSource`], which gathers its columns out of a full-width
+//!   row via the pair's global index map
+//!   ([`crate::data::Dataset::pair_indices`]). Gathering preserves bit
+//!   identity: every kernel entry is the same expanded-identity f32
+//!   expression over the same two rows regardless of which view asks —
+//!   including the `j == i → 1.0` diagonal, which lands at global column
+//!   `g` = the pair-local diagonal after the gather — so pair solves are
+//!   bit-identical to the per-pair-cache engine (pinned by tests below).
+//! * **One budget per rank.** `--cache-mb` converts to a whole-rank row
+//!   budget once ([`SharedKernelCache::budget_rows_for_mb`]); pairs
+//!   compete for the same slots instead of multiplying them.
+//! * **Concurrent readers.** Rows are evaluated *outside* the mutex;
+//!   `--pair-threads` strands contend only on pointer bookkeeping. A
+//!   lost insert race keeps the winner's row (the values are identical
+//!   bits), so counters may vary with interleaving but models cannot.
+//!
+//! Hits on rows another pair inserted are surfaced as
+//! [`CacheStats::cross_pair_hits`] — the direct measure of the cross-pair
+//! overlap this cache exists to exploit.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::cache::{CacheStats, KernelSource};
+use super::panel::{DatasetView, RowEval};
+use super::parallel;
+
+/// A full-width resident row and the pair-handle that paid for it.
+struct Slot {
+    row: Arc<[f32]>,
+    owner: u64,
+}
+
+struct Lru {
+    slots: Vec<Option<Slot>>,
+    last_used: Vec<u64>,
+    /// Global ids currently resident (≤ budget).
+    resident: Vec<usize>,
+    tick: u64,
+    stats: CacheStats,
+}
+
+/// The per-rank shared LRU of full-width kernel rows. Build one per rank
+/// (over the rank's replicated dataset), then hand each pair solve a
+/// [`SharedPairSource`] via [`SharedKernelCache::pair_source`]. `Sync`:
+/// safe to share by reference across the coordinator's pair strands.
+pub struct SharedKernelCache<'a> {
+    view: DatasetView<'a>,
+    n: usize,
+    d: usize,
+    gamma: f32,
+    /// Max resident full-width rows (whole-rank budget, ≥ 2).
+    budget: usize,
+    /// Threads for evaluating one missing row.
+    threads: usize,
+    eval: RowEval,
+    inner: Mutex<Lru>,
+    next_handle: AtomicU64,
+}
+
+impl<'a> SharedKernelCache<'a> {
+    pub fn new(
+        x: &'a [f32],
+        n: usize,
+        d: usize,
+        gamma: f32,
+        budget_rows: usize,
+        threads: usize,
+    ) -> SharedKernelCache<'a> {
+        assert_eq!(x.len(), n * d);
+        SharedKernelCache {
+            view: DatasetView::pack(x, n, d),
+            n,
+            d,
+            gamma,
+            budget: budget_rows.max(2),
+            threads: threads.max(1),
+            eval: RowEval::default(),
+            inner: Mutex::new(Lru {
+                slots: (0..n).map(|_| None).collect(),
+                last_used: vec![0; n],
+                resident: Vec::new(),
+                tick: 0,
+                stats: CacheStats::default(),
+            }),
+            next_handle: AtomicU64::new(1),
+        }
+    }
+
+    /// Select the row-evaluation path (same semantics as
+    /// [`super::cache::KernelCache::with_eval`]).
+    pub fn with_eval(mut self, eval: RowEval) -> SharedKernelCache<'a> {
+        self.eval = eval;
+        self
+    }
+
+    /// Convert a `--cache-mb` MiB budget into resident full-width rows
+    /// (4 bytes per entry, n entries per row), clamped to [2, n] so a
+    /// working pair always fits and the budget never exceeds the matrix.
+    pub fn budget_rows_for_mb(mb: usize, n: usize) -> usize {
+        let rows = (mb * 1024 * 1024) / (4 * n.max(1));
+        rows.clamp(2, n.max(2))
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Aggregate counters across all pairs served so far (the per-rank
+    /// view; each [`SharedPairSource`] keeps its own per-solve slice).
+    pub fn stats(&self) -> CacheStats {
+        self.inner.lock().expect("shared cache lock").stats
+    }
+
+    /// A pair-local [`KernelSource`] over this cache. `idx` maps the
+    /// pair's local rows to global row ids, in pair-local row order
+    /// (see [`crate::data::Dataset::pair_indices`]).
+    pub fn pair_source(&self, idx: Vec<usize>) -> SharedPairSource<'_, 'a> {
+        debug_assert!(idx.iter().all(|&g| g < self.n));
+        let handle = self.next_handle.fetch_add(1, Ordering::Relaxed);
+        SharedPairSource { cache: self, idx, handle, stats: CacheStats::default() }
+    }
+
+    /// Lock-and-probe: on a hit, refresh recency and clone the row.
+    /// Counts exactly one hit-or-miss per probe into both the rank-wide
+    /// and the pair-local counters.
+    fn touch(&self, g: usize, handle: u64, local: &mut CacheStats) -> Option<Arc<[f32]>> {
+        let mut guard = self.inner.lock().expect("shared cache lock");
+        let lru = &mut *guard;
+        lru.tick += 1;
+        lru.last_used[g] = lru.tick;
+        if let Some(slot) = &lru.slots[g] {
+            lru.stats.hits += 1;
+            local.hits += 1;
+            if slot.owner != handle {
+                lru.stats.cross_pair_hits += 1;
+                local.cross_pair_hits += 1;
+            }
+            return Some(Arc::clone(&slot.row));
+        }
+        lru.stats.misses += 1;
+        local.misses += 1;
+        None
+    }
+
+    /// Insert a freshly computed full-width row, evicting down to the
+    /// budget first. If a racing pair inserted `g` meanwhile, keep the
+    /// winner's row — the bits are identical by construction.
+    fn insert(&self, g: usize, row: Arc<[f32]>, handle: u64) -> Arc<[f32]> {
+        let mut guard = self.inner.lock().expect("shared cache lock");
+        let lru = &mut *guard;
+        if let Some(slot) = &lru.slots[g] {
+            return Arc::clone(&slot.row);
+        }
+        while lru.resident.len() >= self.budget {
+            // O(resident) LRU scan, same policy as the per-solve cache.
+            let mut oldest_pos = 0usize;
+            let mut oldest_tick = u64::MAX;
+            for (pos, &r) in lru.resident.iter().enumerate() {
+                if lru.last_used[r] < oldest_tick {
+                    oldest_tick = lru.last_used[r];
+                    oldest_pos = pos;
+                }
+            }
+            let victim = lru.resident.swap_remove(oldest_pos);
+            lru.slots[victim] = None;
+            lru.stats.evictions += 1;
+        }
+        lru.tick += 1;
+        lru.last_used[g] = lru.tick;
+        lru.slots[g] = Some(Slot { row: Arc::clone(&row), owner: handle });
+        lru.resident.push(g);
+        lru.stats.max_resident = lru.stats.max_resident.max(lru.resident.len());
+        row
+    }
+
+    /// Evaluate one missing full-width row — outside any lock.
+    fn fill_row(&self, g: usize) -> Arc<[f32]> {
+        let mut buf = vec![0.0f32; self.n];
+        if self.eval.uses_panels() {
+            self.view.row_into_with(g, self.gamma, &mut buf, self.threads, self.eval.kernel());
+        } else {
+            parallel::rbf_row_slice_into(
+                &mut buf,
+                self.view.x(),
+                self.view.norms(),
+                g,
+                self.d,
+                self.gamma,
+                0,
+                self.threads,
+            );
+        }
+        buf.into()
+    }
+
+    fn global_row(&self, g: usize, handle: u64, local: &mut CacheStats) -> Arc<[f32]> {
+        if let Some(row) = self.touch(g, handle, local) {
+            return row;
+        }
+        let row = self.fill_row(g);
+        self.insert(g, row, handle)
+    }
+
+    /// Both working rows; a double miss on the panel path evaluates them
+    /// in one sweep over the packed data (the pair-fill fusion).
+    fn global_pair(
+        &self,
+        gi: usize,
+        gj: usize,
+        handle: u64,
+        local: &mut CacheStats,
+    ) -> (Arc<[f32]>, Arc<[f32]>) {
+        if gi == gj {
+            let r = self.global_row(gi, handle, local);
+            return (Arc::clone(&r), r);
+        }
+        let hit_i = self.touch(gi, handle, local);
+        let hit_j = self.touch(gj, handle, local);
+        match (hit_i, hit_j) {
+            (Some(ri), Some(rj)) => (ri, rj),
+            (Some(ri), None) => {
+                let rj = self.fill_row(gj);
+                (ri, self.insert(gj, rj, handle))
+            }
+            (None, Some(rj)) => {
+                let ri = self.fill_row(gi);
+                (self.insert(gi, ri, handle), rj)
+            }
+            (None, None) => {
+                if !self.eval.uses_panels() {
+                    let ri = self.fill_row(gi);
+                    let rj = self.fill_row(gj);
+                    return (self.insert(gi, ri, handle), self.insert(gj, rj, handle));
+                }
+                let (mut bi, mut bj) = (vec![0.0f32; self.n], vec![0.0f32; self.n]);
+                self.view.pair_into_with(
+                    gi,
+                    gj,
+                    self.gamma,
+                    &mut bi,
+                    &mut bj,
+                    self.threads,
+                    self.eval.kernel(),
+                );
+                (self.insert(gi, bi.into(), handle), self.insert(gj, bj.into(), handle))
+            }
+        }
+    }
+}
+
+/// One pair solve's window onto the shared cache: a full-fledged
+/// [`KernelSource`] whose rows are pair-width gathers of the shared
+/// full-width rows. Holds a distinct handle id so hits on rows inserted
+/// by *other* pairs are counted as cross-pair hits, plus its own
+/// per-solve counter slice (surfaced in `SolveOutcome::cache`;
+/// `max_resident` stays 0 here — residency is a rank-level notion under
+/// the shared budget).
+pub struct SharedPairSource<'c, 'a> {
+    cache: &'c SharedKernelCache<'a>,
+    idx: Vec<usize>,
+    handle: u64,
+    stats: CacheStats,
+}
+
+impl SharedPairSource<'_, '_> {
+    fn gather(&self, full: &[f32]) -> Arc<[f32]> {
+        self.idx.iter().map(|&g| full[g]).collect()
+    }
+}
+
+impl KernelSource for SharedPairSource<'_, '_> {
+    fn n(&self) -> usize {
+        self.idx.len()
+    }
+
+    fn row(&mut self, i: usize) -> Arc<[f32]> {
+        let full = self.cache.global_row(self.idx[i], self.handle, &mut self.stats);
+        self.gather(&full)
+    }
+
+    /// One O(d) scalar entry — same expression (same bits) as the panel
+    /// and row paths, straight from the global rows.
+    fn entry(&mut self, i: usize, j: usize) -> f32 {
+        parallel::rbf_entry(
+            self.cache.view.x(),
+            self.cache.view.norms(),
+            self.idx[i],
+            self.idx[j],
+            self.cache.d,
+            self.cache.gamma,
+        )
+    }
+
+    fn pair(&mut self, i: usize, j: usize) -> (Arc<[f32]>, Arc<[f32]>) {
+        let (fi, fj) =
+            self.cache.global_pair(self.idx[i], self.idx[j], self.handle, &mut self.stats);
+        (self.gather(&fi), self.gather(&fj))
+    }
+
+    // pair_update: the default two-pass form (pair + apply_rank2) — the
+    // panel property tests pin it bitwise-equal to the fused sweep, and
+    // the shared rows are full-width, so a fused f-update over the pair
+    // window would need the gather first anyway.
+
+    fn stats(&self) -> CacheStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::svm::solver::working_set::{self, EngineConfig};
+    use crate::svm::solver::KernelCache;
+    use crate::svm::SvmParams;
+
+    fn three_class_ds() -> crate::data::Dataset {
+        let spec = crate::data::SynthSpec { rows: 90, d: 6, classes: 3 };
+        crate::data::synth::generate(&spec, 21)
+    }
+
+    #[test]
+    fn gathered_rows_match_per_pair_cache_bitwise() {
+        let ds = three_class_ds();
+        let gamma = 0.5f32;
+        for eval in [RowEval::Scalar, RowEval::PanelFused] {
+            let shared = SharedKernelCache::new(&ds.x, ds.n, ds.d, gamma, 16, 1).with_eval(eval);
+            let idx = ds.pair_indices(0, 2);
+            let prob = ds.binary_pair(0, 2);
+            let mut src = shared.pair_source(idx.clone());
+            let mut private =
+                KernelCache::new(&prob.x, prob.n(), prob.d, gamma, 0, 1).with_eval(eval);
+            for i in [0usize, 7, idx.len() - 1] {
+                let a = src.row(i);
+                let b = private.row(i);
+                assert_eq!(a.len(), b.len());
+                for (va, vb) in a.iter().zip(b.iter()) {
+                    assert_eq!(va.to_bits(), vb.to_bits(), "{eval:?} row {i}");
+                }
+                assert_eq!(a[i].to_bits(), 1.0f32.to_bits(), "diagonal after gather");
+            }
+            let (pa, pb) = (src.pair(3, 11), private.pair(3, 11));
+            for (x, y) in pa.0.iter().zip(pb.0.iter()).chain(pa.1.iter().zip(pb.1.iter())) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            assert_eq!(src.entry(2, 9).to_bits(), private.entry(2, 9).to_bits());
+        }
+    }
+
+    #[test]
+    fn shared_solve_is_bit_identical_to_private_cache_solve() {
+        let ds = three_class_ds();
+        let p = SvmParams::default();
+        let cfg = EngineConfig { shrink: true, ..EngineConfig::default() };
+        let shared = SharedKernelCache::new(&ds.x, ds.n, ds.d, p.gamma, 8, 1);
+        for (a, b) in [(0usize, 1usize), (0, 2), (1, 2)] {
+            let prob = ds.binary_pair(a, b);
+            let mut src = shared.pair_source(ds.pair_indices(a, b));
+            let (sol_shared, _) = working_set::solve(&mut src, &prob.y, &p, &cfg);
+            let mut private = KernelCache::new(&prob.x, prob.n(), prob.d, p.gamma, 8, 1);
+            let (sol_priv, _) = working_set::solve(&mut private, &prob.y, &p, &cfg);
+            assert_eq!(sol_shared.iters, sol_priv.iters, "pair ({a},{b})");
+            assert_eq!(sol_shared.bias.to_bits(), sol_priv.bias.to_bits());
+            for (x, y) in sol_shared.alpha.iter().zip(&sol_priv.alpha) {
+                assert_eq!(x.to_bits(), y.to_bits(), "pair ({a},{b})");
+            }
+        }
+    }
+
+    #[test]
+    fn cross_pair_hits_are_counted() {
+        let ds = three_class_ds();
+        let shared = SharedKernelCache::new(&ds.x, ds.n, ds.d, 0.4, ds.n, 1);
+        let idx01 = ds.pair_indices(0, 1);
+        let mut first = shared.pair_source(idx01.clone());
+        for i in 0..idx01.len() {
+            let _ = first.row(i);
+        }
+        assert_eq!(first.stats().cross_pair_hits, 0, "first pair sees only its own rows");
+        // The (0,2) pair shares exactly the class-0 rows with (0,1).
+        let idx02 = ds.pair_indices(0, 2);
+        let mut second = shared.pair_source(idx02.clone());
+        for i in 0..idx02.len() {
+            let _ = second.row(i);
+        }
+        let class0 = ds.class_count(0) as u64;
+        assert_eq!(second.stats().cross_pair_hits, class0);
+        assert_eq!(second.stats().hits, class0);
+        let agg = shared.stats();
+        assert_eq!(agg.cross_pair_hits, class0);
+        assert_eq!(agg.hits, class0);
+        assert_eq!(agg.misses, (idx01.len() + idx02.len()) as u64 - class0);
+    }
+
+    #[test]
+    fn budget_is_enforced_rank_wide() {
+        let ds = three_class_ds();
+        let shared = SharedKernelCache::new(&ds.x, ds.n, ds.d, 0.4, 3, 1);
+        let mut a = shared.pair_source(ds.pair_indices(0, 1));
+        let mut b = shared.pair_source(ds.pair_indices(1, 2));
+        for i in 0..a.n() {
+            let _ = a.row(i);
+            let _ = b.row(i % b.n());
+        }
+        let agg = shared.stats();
+        assert!(agg.max_resident <= 3, "resident {} exceeds shared budget", agg.max_resident);
+        assert!(agg.evictions > 0);
+        // Tiny budgets clamp up to 2 so a working pair always fits.
+        assert_eq!(SharedKernelCache::budget_rows_for_mb(0, 1000), 2);
+        assert_eq!(SharedKernelCache::budget_rows_for_mb(1, 64), 64);
+        assert_eq!(SharedKernelCache::budget_rows_for_mb(1, 1024), 256);
+    }
+
+    #[test]
+    fn concurrent_pair_solves_match_serial_bitwise() {
+        let ds = three_class_ds();
+        let p = SvmParams::default();
+        let cfg = EngineConfig { shrink: true, ..EngineConfig::default() };
+        let pairs = [(0usize, 1usize), (0, 2), (1, 2)];
+        let serial: Vec<_> = pairs
+            .iter()
+            .map(|&(a, b)| {
+                let prob = ds.binary_pair(a, b);
+                let shared = SharedKernelCache::new(&ds.x, ds.n, ds.d, p.gamma, 6, 1);
+                let mut src = shared.pair_source(ds.pair_indices(a, b));
+                working_set::solve(&mut src, &prob.y, &p, &cfg).0
+            })
+            .collect();
+        let shared = SharedKernelCache::new(&ds.x, ds.n, ds.d, p.gamma, 6, 1);
+        let mut concurrent: Vec<Option<crate::svm::smo::SmoSolution>> = vec![None; pairs.len()];
+        std::thread::scope(|scope| {
+            for (slot, &(a, b)) in concurrent.iter_mut().zip(&pairs) {
+                let (shared, ds, p, cfg) = (&shared, &ds, &p, &cfg);
+                scope.spawn(move || {
+                    let prob = ds.binary_pair(a, b);
+                    let mut src = shared.pair_source(ds.pair_indices(a, b));
+                    *slot = Some(working_set::solve(&mut src, &prob.y, &p, cfg).0);
+                });
+            }
+        });
+        for (s, c) in serial.iter().zip(&concurrent) {
+            let c = c.as_ref().expect("strand finished");
+            assert_eq!(s.iters, c.iters);
+            assert_eq!(s.bias.to_bits(), c.bias.to_bits());
+            for (x, y) in s.alpha.iter().zip(&c.alpha) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+}

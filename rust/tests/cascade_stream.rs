@@ -1,0 +1,111 @@
+//! Integration: the million-row training stack — cascade front vs the
+//! direct solve on the tier-1 datasets, chunked out-of-core ingest vs
+//! the batch loaders, the per-rank shared cross-pair kernel cache under
+//! concurrent pair solves, and streaming cascade training end to end.
+
+use std::sync::Arc;
+
+use parasvm::backend::{NativeBackend, Solver, SvmBackend};
+use parasvm::coordinator::{train_multiclass, TrainConfig};
+use parasvm::data::{self, scale::Scaler, ChunkedDataset, DatasetChunks, SynthChunks, SynthSpec};
+use parasvm::harness::{binary_workload, hyperparams_for};
+use parasvm::svm::solver::cascade::{self, CascadeConfig, CASCADE_AGREEMENT_MIN};
+use parasvm::svm::solver::{model_from_outcome, DualSolver, WorkingSetSmo};
+
+/// The cascade is an approximation front, so it is not bit-identical to
+/// the direct solve — its contract is prediction agreement within the
+/// documented tolerance on the tier-1 datasets.
+#[test]
+fn cascade_agrees_with_direct_on_tier1_datasets() {
+    for (name, per_class) in [("iris", 40usize), ("wdbc", 150)] {
+        let w = binary_workload(name, per_class, 42);
+        let prob = w.problem();
+        let direct = WorkingSetSmo::default().solve(&prob, &w.params);
+        let ccfg = CascadeConfig { shards: 4, ..Default::default() };
+        let casc = cascade::solve(&prob, &w.params, &ccfg);
+        let (dm, _) = model_from_outcome(&prob, &direct, &w.params);
+        let (cm, _) = model_from_outcome(&prob, &casc.outcome, &w.params);
+        let agree = cascade::prediction_agreement(&dm, &cm, &prob.x, prob.n());
+        assert!(
+            agree >= CASCADE_AGREEMENT_MIN,
+            "{name}: cascade/direct agreement {agree} < {CASCADE_AGREEMENT_MIN}"
+        );
+        assert!(casc.final_rows < prob.n(), "{name}: cascade never shrank the problem");
+    }
+}
+
+/// Chunked ingest packs panels tile-by-tile with O(chunk) scratch; the
+/// result must be bit-identical to the batch loaders, whatever the chunk
+/// size (including sizes that straddle panel boundaries).
+#[test]
+fn chunked_ingest_is_bit_identical_to_batch_load() {
+    for (name, chunk) in [("wdbc", 100usize), ("iris", 37), ("synth:500x8x3", 64)] {
+        let batch = data::by_name(name, 9).unwrap();
+        let mut src = DatasetChunks::new(batch.clone(), chunk);
+        let streamed = ChunkedDataset::ingest(name, &mut src).unwrap().into_dataset();
+        assert_eq!(streamed.x, batch.x, "{name}: ingest drifted from the batch load");
+        assert_eq!(streamed.y, batch.y, "{name}");
+        assert_eq!(streamed.d, batch.d, "{name}");
+        assert_eq!(streamed.class_names, batch.class_names, "{name}");
+    }
+    // The chunked synthetic generator reproduces the in-RAM generator
+    // exactly, even with a chunk size misaligned to everything.
+    let spec = SynthSpec { rows: 400, d: 6, classes: 3 };
+    let batch = data::by_name(&spec.name(), 11).unwrap();
+    let mut src = SynthChunks::new(spec, 11, 57);
+    let streamed = ChunkedDataset::ingest(&spec.name(), &mut src).unwrap().into_dataset();
+    assert_eq!(streamed.x, batch.x);
+    assert_eq!(streamed.y, batch.y);
+}
+
+/// One rank-wide LRU serves every OvO pair: rows are gathered per pair
+/// from full-width global rows, so the trained models are bitwise
+/// independent of the pair-threads schedule, and pairs sharing a class
+/// must reuse each other's rows.
+#[test]
+fn shared_cache_is_deterministic_across_pair_threads() {
+    let ds = data::by_name("iris", 42).unwrap();
+    let ds = Scaler::fit_minmax(&ds).apply(&ds);
+    let be: Arc<dyn SvmBackend> = Arc::new(NativeBackend::new());
+    let run = |pair_threads: usize| {
+        let cfg = TrainConfig {
+            workers: 1,
+            solver: Solver::SmoCached,
+            params: hyperparams_for(&ds),
+            pair_threads,
+            cache_mb: 16,
+            ..Default::default()
+        };
+        train_multiclass(&ds, Arc::clone(&be), &cfg).unwrap()
+    };
+    let (m1, r1) = run(1);
+    let (m3, _) = run(3);
+    assert_eq!(m1.binaries.len(), m3.binaries.len());
+    for (a, b) in m1.binaries.iter().zip(&m3.binaries) {
+        assert_eq!((a.pos_class, a.neg_class), (b.pos_class, b.neg_class));
+        assert_eq!(a.coef, b.coef, "pair ({},{})", a.pos_class, a.neg_class);
+        assert_eq!(a.bias.to_bits(), b.bias.to_bits());
+        assert_eq!(a.sv, b.sv);
+    }
+    assert!(r1.shared_cache.hits > 0, "shared cache recorded no hits");
+    assert!(r1.shared_cache.cross_pair_hits > 0, "no cross-pair reuse on iris OvO");
+    assert!(m1.accuracy(&ds.x, &ds.y) >= 0.9);
+}
+
+/// End to end out-of-core: the cascade trains a 3-class OvO ensemble
+/// straight off the chunk source, one shard resident at a time, and the
+/// result classifies the (identical, in-RAM) data accurately.
+#[test]
+fn streaming_cascade_trains_synth_multiclass() {
+    let spec = SynthSpec { rows: 3000, d: 8, classes: 3 };
+    let ds = data::by_name(&spec.name(), 42).unwrap();
+    let p = hyperparams_for(&ds);
+    let ccfg = CascadeConfig { shards: 4, ..Default::default() };
+    let mut src = SynthChunks::new(spec, 42, 256);
+    let (model, stats) = cascade::train_streaming_multiclass(&mut src, 750, &p, &ccfg).unwrap();
+    assert_eq!(model.binaries.len(), 3);
+    assert_eq!(model.n_classes, 3);
+    assert!(stats.iter().all(|s| s.n_sv > 0));
+    let acc = model.accuracy(&ds.x, &ds.y);
+    assert!(acc >= 0.9, "streaming cascade accuracy {acc}");
+}
