@@ -9,7 +9,7 @@
 //! with its accuracy delta, on iris/wdbc), the per-rank shared
 //! cross-pair kernel-row cache on the OvO workload, and the
 //! direct-vs-cascade scaling curve on the growing synthetic two-class
-//! workload (schema v7).
+//! workload, each point run warm-started and cold (schema v8).
 //!
 //! Native-only — runs from a clean checkout, no `make artifacts` needed:
 //!
@@ -29,7 +29,9 @@
 //! any slowdown is a pure serving-stack regression), if the f16
 //! quantized pack's accuracy delta exceeds the documented bound, if the
 //! cascade front disagrees with the direct solve beyond the documented
-//! tolerance or fails to beat it at the largest row count, or if the
+//! tolerance or fails to beat it at the largest row count, if the
+//! warm-started merge tree spends more SMO iterations than the cold one
+//! anywhere on the curve (the warm seed must never cost work), or if the
 //! shared cross-pair cache records no reuse on the OvO workload.
 
 use parasvm::harness::{
@@ -172,6 +174,25 @@ fn main() {
         last.rows,
         last.cascade_speedup
     );
+
+    // Warm-start gate: seeding merge/polish solves from the children's
+    // converged alphas reaches the SAME KKT stopping test, so it must
+    // never spend more iterations than starting cold — on every point of
+    // the curve, not just the largest.
+    for r in &ablation.scaling {
+        println!(
+            "warm-start n={}: {} warm iters vs {} cold ({} warm solves, cold {:.3}s warm {:.3}s)",
+            r.rows, r.warm_iters, r.cold_iters, r.warm_solves, r.cold_cascade_secs, r.cascade_secs
+        );
+        assert!(r.warm_solves > 0, "warm cascade at n={} never seeded a solve", r.rows);
+        assert!(
+            r.warm_iters <= r.cold_iters,
+            "warm seeds cost iterations at n={}: warm {} > cold {}",
+            r.rows,
+            r.warm_iters,
+            r.cold_iters
+        );
+    }
 
     // Shared-cache gate: on the OvO workload the per-rank cache must see
     // reuse both within a pair (hit rate) and across pairs — zero

@@ -38,6 +38,15 @@
 //! solver_ranks, pair_threads) combination — the unshrunk distributed
 //! engine replays the single-rank trajectory exactly.
 //!
+//! The million-row knobs compose with the second axis: `--cache-mb`
+//! gives every solver rank a persistent [`SharedKernelCache`] serving
+//! its column window across the worker's sequential pairs (cross-pair
+//! reuse counted and summed into [`MulticlassReport::shared_cache`];
+//! still bit-identical), and `--cascade-shards` runs the warm-started
+//! cascade driver replicated on the sub-world with every pool solve
+//! row-sharded across it ([`cascade::solve_on`]; agreement-pinned like
+//! the flat cascade).
+//!
 //! The returned report carries per-worker compute seconds, per-pair stats
 //! and the interconnect's per-level byte/simulated-time accounting
 //! ([`MulticlassReport::net`]), which is what splits the Table IV
@@ -101,14 +110,21 @@ pub struct TrainConfig {
     /// — share it: the budget bounds the *rank*, not each pair, and rows
     /// a pair computed are hits for every later pair touching the same
     /// classes ([`CacheStats::cross_pair_hits`]). Models are bit-identical
-    /// to the private-cache engine. SMO-family flat path only.
+    /// to the private-cache engine. SMO-family solvers only. With
+    /// `solver_ranks > 1` every solver rank keeps its own cache and
+    /// serves its column window from it
+    /// ([`SharedKernelCache::window_source`]); the report sums the
+    /// worker's per-rank counters.
     pub cache_mb: usize,
     /// Cascade front leaf shards (`--cascade-shards`). 0/1 = off (direct
     /// solve); above 1 every pair trains through
-    /// [`cascade::solve`]: shard → SV tree merge → polish. NOT
-    /// bit-identical to direct — pinned by
-    /// [`cascade::CASCADE_AGREEMENT_MIN`] prediction agreement.
-    /// SMO-family flat path only; takes precedence over `cache_mb`.
+    /// [`cascade::solve`]: shard → SV tree merge → polish, warm-starting
+    /// each merge from its children. NOT bit-identical to direct —
+    /// pinned by [`cascade::CASCADE_AGREEMENT_MIN`] prediction
+    /// agreement. SMO-family solvers only; takes precedence over
+    /// `cache_mb`. With `solver_ranks > 1` the cascade driver runs
+    /// replicated on the worker's sub-world and every pool solve is
+    /// row-sharded across it ([`cascade::solve_on`]).
     pub cascade_shards: usize,
 }
 
@@ -239,13 +255,6 @@ pub fn train_multiclass(
             cfg.solver
         )));
     }
-    if cfg.solver_ranks > 1 && (cfg.cache_mb > 0 || cfg.cascade_shards > 1) {
-        return Err(Error::Train(format!(
-            "--cache-mb/--cascade-shards apply to the flat path only; solver-ranks {} \
-             row-shards each pair across its own window caches",
-            cfg.solver_ranks
-        )));
-    }
     let topo = cfg.topology();
     let universe = topo.universe();
     let t0 = std::time::Instant::now();
@@ -290,11 +299,14 @@ pub fn train_multiclass(
         };
         let local_ds = wire::decode_dataset(frame, "bcast")?;
 
-        // The rank's ONE shared kernel-row cache (flat SMO path with
-        // `--cache-mb` only): every pair solve below — concurrent ones
-        // included — reads and fills the same budgeted LRU of full-width
-        // global rows.
-        let shared = (r == 1 && cfg2.cache_mb > 0 && cfg2.cascade_shards <= 1).then(|| {
+        // The rank's ONE shared kernel-row cache (`--cache-mb`, SMO
+        // paths): every pair solve below — concurrent ones included —
+        // reads and fills the same budgeted LRU of full-width global
+        // rows. On the hierarchical path each of the worker's R ranks
+        // keeps its own cache and serves its column window from it
+        // (`SharedKernelCache::window_source`), so rows persist across
+        // the worker's sequential pair solves there too.
+        let shared = (cfg2.cache_mb > 0 && cfg2.cascade_shards <= 1).then(|| {
             SharedKernelCache::new(
                 &local_ds.x,
                 local_ds.n,
@@ -342,17 +354,15 @@ pub fn train_multiclass(
         if par <= 1 {
             for (slot_out, (pi, prob)) in outs.iter_mut().zip(probs.iter()) {
                 let out = if r > 1 {
-                    let engine =
-                        crate::svm::solver::DistributedSmo::auto(r, prob.n(), cfg2.intra_net)
-                            .with_threads(engine_threads)
-                            .with_eval(cfg2.row_eval);
-                    crate::svm::solver::distributed::solve_on(
+                    solve_hier_pair(
                         &mut intra,
+                        &cfg2,
+                        engine_threads,
+                        shared.as_ref(),
+                        &local_ds,
+                        pairs[*pi],
                         prob,
-                        &cfg2.params,
-                        &engine.cfg,
                     )
-                    .map(|o| model_from_outcome(prob, &o, &cfg2.params))
                 } else {
                     solve_flat_pair(
                         backend.as_ref(),
@@ -413,6 +423,33 @@ pub fn train_multiclass(
             return Err(e);
         }
         let busy_secs = busy.elapsed().as_secs_f64();
+        // Worker-wide shared-cache counters. Flat path: the rank's own
+        // cache. Hierarchical path: every solver rank holds its own
+        // window cache, so the counters are exchanged over intra
+        // (collective — all R ranks participate) and summed; the lead
+        // reports the worker total in its trailer below.
+        let cs = match shared.as_ref().map(|c| c.stats()) {
+            Some(s) if r > 1 => {
+                let frames = intra.allgather_u64s(&[
+                    s.hits,
+                    s.misses,
+                    s.evictions,
+                    s.cross_pair_hits,
+                    s.max_resident as u64,
+                ])?;
+                let mut agg = CacheStats::default();
+                for f in &frames {
+                    agg.hits += f[0];
+                    agg.misses += f[1];
+                    agg.evictions += f[2];
+                    agg.cross_pair_hits += f[3];
+                    agg.max_resident = agg.max_resident.max(f[4] as usize);
+                }
+                agg
+            }
+            Some(s) => s,
+            None => CacheStats::default(),
+        };
         if slot != 0 {
             // Non-lead solver ranks hold replicated results; only the lead
             // speaks for the worker.
@@ -437,11 +474,11 @@ pub fn train_multiclass(
             ]);
             models.push(model);
         }
-        // Per-rank shared-cache trailer: [hits, misses, evictions,
+        // Per-worker shared-cache trailer: [hits, misses, evictions,
         // cross_pair_hits, max_resident] after the per-pair records
-        // (zeros when the shared cache is off). Counts are exact in f32
+        // (zeros when the shared cache is off; summed over the worker's
+        // solver ranks on the hierarchical path). Counts are exact in f32
         // up to 2^24 — plenty for the budgeted caches this wires up.
-        let cs = shared.as_ref().map(|c| c.stats()).unwrap_or_default();
         stats_frame.extend_from_slice(&[
             cs.hits as f32,
             cs.misses as f32,
@@ -558,6 +595,7 @@ fn solve_flat_pair(
             threads: engine_threads,
             row_eval: cfg.row_eval,
             max_rescans: 1,
+            warm_start: true,
         };
         let out = cascade::solve(prob, &cfg.params, &ccfg);
         return Ok(model_from_outcome(prob, &out.outcome, &cfg.params));
@@ -584,6 +622,47 @@ fn solve_flat_pair(
         return Ok(model_from_outcome(prob, &out, &cfg.params));
     }
     backend.train_binary(prob, &cfg.params, cfg.solver)
+}
+
+/// One hierarchical-path pair solve: the worker's R-rank intra world
+/// co-solves the QP collectively. Routing mirrors [`solve_flat_pair`]:
+/// the cascade front first (`--cascade-shards`, every pool solve
+/// row-sharded across the sub-world), then the rank-persistent shared
+/// window cache (`--cache-mb`, cross-pair reuse counted per rank), then
+/// the private per-solve window caches. The non-cascade routes stay
+/// bit-identical to the flat single-rank baseline.
+fn solve_hier_pair(
+    intra: &mut crate::cluster::Comm,
+    cfg: &TrainConfig,
+    engine_threads: usize,
+    shared: Option<&SharedKernelCache<'_>>,
+    ds: &Dataset,
+    ab: (usize, usize),
+    prob: &BinaryProblem,
+) -> Result<(BinaryModel, TrainStats)> {
+    use crate::svm::solver::{distributed, DistributedSmo, RowSlice};
+    if cfg.cascade_shards > 1 {
+        let ccfg = CascadeConfig {
+            shards: cfg.cascade_shards,
+            threads: engine_threads,
+            row_eval: cfg.row_eval,
+            max_rescans: 1,
+            warm_start: true,
+        };
+        let out = cascade::solve_on(intra, prob, &cfg.params, &ccfg)?;
+        return Ok(model_from_outcome(prob, &out.outcome, &cfg.params));
+    }
+    let engine = DistributedSmo::auto(intra.size(), prob.n(), cfg.intra_net)
+        .with_threads(engine_threads)
+        .with_eval(cfg.row_eval);
+    let out = if let Some(cache) = shared {
+        let cols = RowSlice::partition(prob.n(), intra.size())[intra.rank()];
+        let mut src = cache.window_source(ds.pair_indices(ab.0, ab.1), cols);
+        distributed::solve_on_source(intra, &mut src, &prob.y, &cfg.params, &engine.cfg, None)?
+    } else {
+        distributed::solve_on(intra, prob, &cfg.params, &engine.cfg)?
+    };
+    Ok(model_from_outcome(prob, &out, &cfg.params))
 }
 
 #[cfg(test)]
@@ -801,11 +880,57 @@ mod tests {
         let ds = iris::load();
         let be = Arc::new(NativeBackend::new());
         let gd = TrainConfig { solver: Solver::Gd, cache_mb: 16, ..quick_cfg(2) };
-        let err = train_multiclass(&ds, be.clone(), &gd).unwrap_err();
+        let err = train_multiclass(&ds, be, &gd).unwrap_err();
         assert!(err.to_string().contains("cache-mb"), "{err}");
-        let hier = TrainConfig { solver_ranks: 2, cascade_shards: 4, ..quick_cfg(2) };
-        let err = train_multiclass(&ds, be, &hier).unwrap_err();
-        assert!(err.to_string().contains("flat path"), "{err}");
+    }
+
+    #[test]
+    fn hierarchical_cascade_trains_and_reports_intra_traffic() {
+        // cascade x distributed: W=2 workers, each pair's cascade pools
+        // row-sharded across an R=2 solver sub-world. Iris is
+        // class-sorted (single-class leaves), the cascade's worst case.
+        let ds = iris::load();
+        let be = Arc::new(NativeBackend::new());
+        let cfg = TrainConfig {
+            workers: 2,
+            solver_ranks: 2,
+            solver: Solver::SmoCached,
+            cascade_shards: 4,
+            ..Default::default()
+        };
+        let (model, report) = train_multiclass(&ds, be, &cfg).unwrap();
+        assert_eq!(model.binaries.len(), 3);
+        assert!(model.accuracy(&ds.x, &ds.y) >= 0.95);
+        for p in &report.pairs {
+            assert!(p.stats.converged);
+            assert!(p.stats.n_sv > 0);
+        }
+        // The pool solves' candidate collectives land on the intra level.
+        let intra = report.net.level(LEVEL_INTRA).unwrap();
+        assert!(intra.bytes > 0, "cascade pool solves never crossed the intra wire");
+        assert!(report.net.level(LEVEL_INTER).unwrap().bytes > 0);
+    }
+
+    #[test]
+    fn hierarchical_shared_cache_is_bit_identical_and_counts_cross_pair_hits() {
+        // --cache-mb x --solver-ranks: per-rank window caches persist
+        // across the worker's sequential pairs. The window gathers the
+        // same f32 kernel entries the private sliced caches evaluate, so
+        // models must equal the flat baseline bit-for-bit — and class-0
+        // rows computed for pair (0,1) must hit cross-pair for (0,2).
+        let ds = iris::load();
+        let be = Arc::new(NativeBackend::new());
+        let (m0, _) = train_multiclass(&ds, be.clone(), &quick_cfg(2)).unwrap();
+        let cfg = TrainConfig { solver_ranks: 2, cache_mb: 8, ..quick_cfg(2) };
+        let (m, r) = train_multiclass(&ds, be, &cfg).unwrap();
+        for (a, b) in m0.binaries.iter().zip(m.binaries.iter()) {
+            assert_eq!((a.pos_class, a.neg_class), (b.pos_class, b.neg_class));
+            assert_eq!(a.coef, b.coef);
+            assert_eq!(a.bias, b.bias);
+        }
+        assert!(r.shared_cache.hits > 0);
+        assert!(r.shared_cache.cross_pair_hits > 0, "{:?}", r.shared_cache);
+        assert!(r.shared_cache.max_resident > 0);
     }
 
     #[test]

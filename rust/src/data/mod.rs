@@ -22,18 +22,29 @@
 //! bit-identical to the batch pack. The cascade solver
 //! (`svm::solver::cascade`) can also train straight off a `ChunkSource`
 //! one shard at a time, never holding the full matrix at once.
+//!
+//! Out-of-core training re-streams its source many times (leaf pass,
+//! polish rescans, one pass per OvO pair, accuracy pass), and for CSV
+//! every pass pays full text re-parsing. [`spill::write_spill`] converts
+//! any `ChunkSource` into a packed little-endian binary spill in one
+//! pass, and [`spill::MmapChunks`] replays it bitwise-identically with
+//! O(1) `reset()` — repeat passes are `f32::from_le_bytes` copies out of
+//! the OS page cache instead of tokenizer work, and the class table is
+//! known before the first chunk (no discovery pass).
 
 pub mod csv;
 pub mod dataset;
 pub mod iris;
 pub mod pavia;
 pub mod scale;
+pub mod spill;
 pub mod split;
 pub mod stream;
 pub mod synth;
 pub mod wdbc;
 
 pub use dataset::{BinaryProblem, Dataset};
+pub use spill::{write_spill, MmapChunks, SpillInfo};
 pub use stream::{Chunk, ChunkSource, ChunkedDataset, CsvChunks, DatasetChunks, SynthChunks};
 pub use synth::SynthSpec;
 

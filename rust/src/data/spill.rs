@@ -1,0 +1,442 @@
+//! Binary row spill: parse the text stream once, replay it for free.
+//!
+//! The out-of-core cascade re-streams its source repeatedly — leaf pass,
+//! one full pass per polish rescan, one per OvO pair, plus the final
+//! train-accuracy pass. For a CSV source every one of those passes
+//! re-tokenizes and re-parses the whole file; at 10⁶ rows the float
+//! parsing dominates the actual solve. [`write_spill`] converts any
+//! [`ChunkSource`] into a packed little-endian binary file in ONE pass,
+//! and [`MmapChunks`] replays it as a `ChunkSource` whose rows are
+//! `f32::from_le_bytes` copies — no tokenizing, no allocation churn, and
+//! an O(1) [`MmapChunks::reset`] (a seek, not a reopen-and-reparse).
+//!
+//! "Mmap" is in spirit: repeated passes hit the OS page cache, so the
+//! file behaves like mapped memory. The implementation is positioned
+//! buffered reads — the only mmap syscall route would be a `libc`-family
+//! dependency, and this crate is std-only — but the properties the
+//! cascade needs (byte-addressable rows, free resets, warm re-reads) are
+//! the page cache's, not the mapping's.
+//!
+//! Round-tripping is bitwise: a parsed f32 is stored as its exact bit
+//! pattern and read back with `from_le_bytes`, so a solve driven by the
+//! spill is bit-identical to one driven by the original source (pinned by
+//! tests here). Labels are stored as the source's already-assigned class
+//! ids with the id→name table in a trailer, so [`MmapChunks`] knows the
+//! full class list up front — sources that discover labels while
+//! streaming (CSV) need a discovery pass, the spill never does.
+//!
+//! # Layout (all little-endian)
+//!
+//! ```text
+//! [0..4)   magic  b"PSVM"
+//! [4..8)   version u32 (= 1)
+//! [8..12)  d       u32 (features per row, > 0)
+//! [12..16) reserved u32 (= 0)
+//! [16..24) n       u64 (row count)
+//! [24..32) names_off u64 (byte offset of the class-name table
+//!                         = 32 + n * (4 + 4 d), checked on open)
+//! then n rows of: label i32, then d × f32
+//! then the name table: count u32, then per name: len u32, UTF-8 bytes
+//! ```
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use super::stream::{Chunk, ChunkSource, DEFAULT_CHUNK_ROWS};
+use crate::error::{Error, Result};
+
+const MAGIC: &[u8; 4] = b"PSVM";
+const VERSION: u32 = 1;
+const HEADER_BYTES: u64 = 32;
+
+/// Bytes per stored row: i32 label + d × f32 features.
+fn row_bytes(d: usize) -> u64 {
+    4 + 4 * d as u64
+}
+
+/// What one spill conversion produced.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpillInfo {
+    pub rows: usize,
+    pub d: usize,
+    pub classes: usize,
+}
+
+/// Drain `source` once and write it as a packed binary spill at `path`
+/// (overwriting). The source is reset first, so the spill always covers
+/// the full stream; class names are taken AFTER the drain, when
+/// label-discovering sources know them all.
+pub fn write_spill(source: &mut dyn ChunkSource, path: &Path) -> Result<SpillInfo> {
+    let io = |e: std::io::Error| Error::Data(format!("spill {}: {e}", path.display()));
+    source.reset()?;
+    let file = File::create(path).map_err(io)?;
+    let mut w = BufWriter::new(file);
+    // Placeholder header; finalized by a seek-back once n and d are known.
+    w.write_all(&[0u8; HEADER_BYTES as usize]).map_err(io)?;
+
+    let mut n = 0u64;
+    let mut d: Option<usize> = None;
+    let mut rowbuf: Vec<u8> = Vec::new();
+    while let Some(chunk) = source.next_chunk()? {
+        if chunk.y.is_empty() {
+            continue;
+        }
+        let cd = chunk.d();
+        let width = *d.get_or_insert(cd);
+        if cd != width {
+            return Err(Error::Data(format!("spill: chunk width {cd} != {width}")));
+        }
+        rowbuf.clear();
+        rowbuf.reserve(chunk.y.len() * row_bytes(width) as usize);
+        for (k, &label) in chunk.y.iter().enumerate() {
+            rowbuf.extend_from_slice(&label.to_le_bytes());
+            for &v in &chunk.x[k * width..(k + 1) * width] {
+                rowbuf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        w.write_all(&rowbuf).map_err(io)?;
+        n += chunk.y.len() as u64;
+    }
+    let d = d.ok_or_else(|| Error::Data("spill: empty chunk stream".into()))?;
+
+    let names = source.class_names();
+    let names_off = HEADER_BYTES + n * row_bytes(d);
+    w.write_all(&(names.len() as u32).to_le_bytes()).map_err(io)?;
+    for name in &names {
+        let b = name.as_bytes();
+        w.write_all(&(b.len() as u32).to_le_bytes()).map_err(io)?;
+        w.write_all(b).map_err(io)?;
+    }
+
+    let mut file = w.into_inner().map_err(|e| Error::Data(format!("spill flush: {e}")))?;
+    file.seek(SeekFrom::Start(0)).map_err(io)?;
+    let mut header = [0u8; HEADER_BYTES as usize];
+    header[0..4].copy_from_slice(MAGIC);
+    header[4..8].copy_from_slice(&VERSION.to_le_bytes());
+    header[8..12].copy_from_slice(&(d as u32).to_le_bytes());
+    // [12..16) reserved, already zero.
+    header[16..24].copy_from_slice(&n.to_le_bytes());
+    header[24..32].copy_from_slice(&names_off.to_le_bytes());
+    file.write_all(&header).map_err(io)?;
+    Ok(SpillInfo { rows: n as usize, d, classes: names.len() })
+}
+
+/// Replay a [`write_spill`] file as a [`ChunkSource`]: packed f32 rows
+/// through the OS page cache, bitwise-identical to the stream the spill
+/// was written from, with an O(1) seek for [`ChunkSource::reset`].
+pub struct MmapChunks {
+    path: PathBuf,
+    reader: BufReader<File>,
+    d: usize,
+    n: u64,
+    names: Vec<String>,
+    chunk_rows: usize,
+    next: u64,
+}
+
+impl MmapChunks {
+    /// Open and validate a spill. Header, row region, and name table are
+    /// all length-checked up front, so a truncated or corrupt file fails
+    /// here — not ten minutes into a training pass.
+    pub fn new(path: &Path, chunk_rows: usize) -> Result<MmapChunks> {
+        assert!(chunk_rows > 0, "chunk_rows must be positive");
+        let bad = |what: &str| Error::Data(format!("spill {}: {what}", path.display()));
+        let io = |e: std::io::Error| Error::Data(format!("spill {}: {e}", path.display()));
+        let file = File::open(path).map_err(io)?;
+        let file_len = file.metadata().map_err(io)?.len();
+        let mut reader = BufReader::new(file);
+
+        let mut header = [0u8; HEADER_BYTES as usize];
+        reader.read_exact(&mut header).map_err(|_| bad("truncated header"))?;
+        if &header[0..4] != MAGIC {
+            return Err(bad("bad magic (not a spill file)"));
+        }
+        let version = u32::from_le_bytes(header[4..8].try_into().expect("4 bytes"));
+        if version != VERSION {
+            return Err(bad(&format!("unsupported version {version} (want {VERSION})")));
+        }
+        let d = u32::from_le_bytes(header[8..12].try_into().expect("4 bytes")) as usize;
+        if d == 0 {
+            return Err(bad("zero feature width"));
+        }
+        let n = u64::from_le_bytes(header[16..24].try_into().expect("8 bytes"));
+        let names_off = u64::from_le_bytes(header[24..32].try_into().expect("8 bytes"));
+        if names_off != HEADER_BYTES + n * row_bytes(d) {
+            return Err(bad("name-table offset disagrees with row count (corrupt header)"));
+        }
+        if file_len < names_off {
+            return Err(bad("truncated row region"));
+        }
+
+        reader.seek(SeekFrom::Start(names_off)).map_err(io)?;
+        let mut u32buf = [0u8; 4];
+        reader.read_exact(&mut u32buf).map_err(|_| bad("truncated name table"))?;
+        let count = u32::from_le_bytes(u32buf) as usize;
+        let mut names = Vec::with_capacity(count);
+        for _ in 0..count {
+            reader.read_exact(&mut u32buf).map_err(|_| bad("truncated name table"))?;
+            let len = u32::from_le_bytes(u32buf) as usize;
+            if len > file_len as usize {
+                return Err(bad("corrupt name length"));
+            }
+            let mut b = vec![0u8; len];
+            reader.read_exact(&mut b).map_err(|_| bad("truncated name table"))?;
+            names.push(String::from_utf8(b).map_err(|_| bad("name not UTF-8"))?);
+        }
+
+        reader.seek(SeekFrom::Start(HEADER_BYTES)).map_err(io)?;
+        Ok(MmapChunks {
+            path: path.to_path_buf(),
+            reader,
+            d,
+            n,
+            names,
+            chunk_rows,
+            next: 0,
+        })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.n as usize
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+}
+
+impl ChunkSource for MmapChunks {
+    fn next_chunk(&mut self) -> Result<Option<Chunk>> {
+        if self.next >= self.n {
+            return Ok(None);
+        }
+        let take = (self.chunk_rows as u64).min(self.n - self.next) as usize;
+        let rb = row_bytes(self.d) as usize;
+        let mut raw = vec![0u8; take * rb];
+        self.reader.read_exact(&mut raw).map_err(|_| {
+            Error::Data(format!(
+                "spill {}: truncated at row {} (file changed underneath?)",
+                self.path.display(),
+                self.next
+            ))
+        })?;
+        let mut x = Vec::with_capacity(take * self.d);
+        let mut y = Vec::with_capacity(take);
+        for row in raw.chunks_exact(rb) {
+            y.push(i32::from_le_bytes(row[0..4].try_into().expect("4 bytes")));
+            for f in row[4..].chunks_exact(4) {
+                x.push(f32::from_le_bytes(f.try_into().expect("4 bytes")));
+            }
+        }
+        self.next += take as u64;
+        Ok(Some(Chunk { x, y }))
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        // The whole point: one seek, zero re-parsing.
+        self.reader
+            .seek(SeekFrom::Start(HEADER_BYTES))
+            .map_err(|e| Error::Data(format!("spill {}: {e}", self.path.display())))?;
+        self.next = 0;
+        Ok(())
+    }
+
+    fn class_names(&self) -> Vec<String> {
+        // Complete before any chunk is read — the spill carries the full
+        // table, so no discovery pass is ever needed.
+        self.names.clone()
+    }
+}
+
+/// Convenience: spill `source` to `path` and reopen it for replay.
+pub fn spill_and_open(
+    source: &mut dyn ChunkSource,
+    path: &Path,
+    chunk_rows: usize,
+) -> Result<MmapChunks> {
+    write_spill(source, path)?;
+    MmapChunks::new(path, if chunk_rows == 0 { DEFAULT_CHUNK_ROWS } else { chunk_rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::stream::{CsvChunks, DatasetChunks, SynthChunks};
+    use crate::data::{ChunkedDataset, SynthSpec};
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("parasvm_spill_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    /// Drain a source to one flat (x, y) stream.
+    fn drain(src: &mut dyn ChunkSource) -> (Vec<f32>, Vec<i32>) {
+        let (mut x, mut y) = (Vec::new(), Vec::new());
+        while let Some(c) = src.next_chunk().unwrap() {
+            x.extend_from_slice(&c.x);
+            y.extend_from_slice(&c.y);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn spill_replays_csv_stream_bitwise() {
+        let ds = crate::data::iris::load();
+        let csv = tmp("iris_spill.csv");
+        crate::data::csv::save(&ds, &csv).unwrap();
+        let spill = tmp("iris.spill");
+        let info = write_spill(&mut CsvChunks::new(&csv, false, 11), &spill).unwrap();
+        assert_eq!((info.rows, info.d, info.classes), (ds.n, ds.d, ds.n_classes));
+
+        let (want_x, want_y) = drain(&mut CsvChunks::new(&csv, false, 11));
+        // Deliberately different chunking: values must not depend on it.
+        let mut mm = MmapChunks::new(&spill, 37).unwrap();
+        assert_eq!(mm.class_names(), ds.class_names, "names known before any read");
+        assert_eq!((mm.rows(), mm.d()), (ds.n, ds.d));
+        let (got_x, got_y) = drain(&mut mm);
+        assert_eq!(got_y, want_y);
+        assert_eq!(got_x.len(), want_x.len());
+        for (a, b) in got_x.iter().zip(&want_x) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        std::fs::remove_file(csv).ok();
+        std::fs::remove_file(spill).ok();
+    }
+
+    #[test]
+    fn spill_ingest_matches_source_ingest_on_wdbc_and_synth() {
+        for (name, mut src) in [
+            (
+                "wdbc",
+                Box::new(DatasetChunks::new(crate::data::by_name("wdbc", 3).unwrap(), 13))
+                    as Box<dyn ChunkSource>,
+            ),
+            (
+                "synth",
+                Box::new(SynthChunks::new(SynthSpec::parse("synth:200x5x3").unwrap(), 7, 31))
+                    as Box<dyn ChunkSource>,
+            ),
+        ] {
+            let path = tmp(&format!("{name}.spill"));
+            write_spill(src.as_mut(), &path).unwrap();
+            src.reset().unwrap();
+            let want = ChunkedDataset::ingest(name, src.as_mut()).unwrap().into_dataset();
+            let mut mm = MmapChunks::new(&path, 64).unwrap();
+            let got = ChunkedDataset::ingest(name, &mut mm).unwrap().into_dataset();
+            assert_eq!(got.y, want.y, "{name}");
+            assert_eq!(got.class_names, want.class_names, "{name}");
+            for (a, b) in got.x.iter().zip(&want.x) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{name}");
+            }
+            std::fs::remove_file(path).ok();
+        }
+    }
+
+    #[test]
+    fn reset_is_a_seek_that_replays_identically() {
+        let spec = SynthSpec::parse("synth:90x4x2").unwrap();
+        let path = tmp("reset.spill");
+        write_spill(&mut SynthChunks::new(spec, 5, 17), &path).unwrap();
+        let mut mm = MmapChunks::new(&path, 23).unwrap();
+        let first = drain(&mut mm);
+        assert!(mm.next_chunk().unwrap().is_none(), "drained");
+        mm.reset().unwrap();
+        let second = drain(&mut mm);
+        assert_eq!(first.1, second.1);
+        for (a, b) in first.0.iter().zip(&second.0) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn corrupt_and_truncated_spills_are_rejected() {
+        let spec = SynthSpec::parse("synth:50x3x2").unwrap();
+        let path = tmp("corrupt.spill");
+        write_spill(&mut SynthChunks::new(spec, 5, 16), &path).unwrap();
+
+        // Bad magic.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = MmapChunks::new(&path, 16).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+        bytes[0] ^= 0xFF;
+
+        // Unsupported version.
+        bytes[4] = 99;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = MmapChunks::new(&path, 16).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+        bytes[4] = VERSION as u8;
+
+        // Row region truncated: opening must fail up front.
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(MmapChunks::new(&path, 16).is_err());
+
+        // Header row count inflated past the file: also caught at open.
+        let mut inflated = bytes.clone();
+        let n = u64::from_le_bytes(bytes[16..24].try_into().unwrap());
+        inflated[16..24].copy_from_slice(&(n + 7).to_le_bytes());
+        std::fs::write(&path, &inflated).unwrap();
+        assert!(MmapChunks::new(&path, 16).is_err());
+
+        // Pristine bytes still open fine.
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(MmapChunks::new(&path, 16).is_ok());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn empty_stream_cannot_be_spilled() {
+        let spec = SynthSpec::parse("synth:10x2x2").unwrap();
+        let mut src = SynthChunks::new(spec, 1, 4);
+        while src.next_chunk().unwrap().is_some() {}
+        // write_spill resets first, so a drained source still spills; an
+        // actually-empty stream must be rejected.
+        struct Empty;
+        impl ChunkSource for Empty {
+            fn next_chunk(&mut self) -> crate::error::Result<Option<Chunk>> {
+                Ok(None)
+            }
+            fn reset(&mut self) -> crate::error::Result<()> {
+                Ok(())
+            }
+            fn class_names(&self) -> Vec<String> {
+                Vec::new()
+            }
+        }
+        let path = tmp("empty.spill");
+        assert!(write_spill(&mut Empty, &path).is_err());
+        let ok = tmp("drained.spill");
+        assert!(write_spill(&mut src, &ok).is_ok(), "reset-first writer handles drained source");
+        std::fs::remove_file(path).ok();
+        std::fs::remove_file(ok).ok();
+    }
+
+    #[test]
+    fn streaming_cascade_off_spill_is_bit_identical_to_source() {
+        // The property the cascade cares about: a training run driven by
+        // the spill replays the source-driven run bit-for-bit.
+        use crate::svm::solver::cascade::{self, CascadeConfig};
+        use crate::svm::SvmParams;
+        let spec = SynthSpec { rows: 240, d: 5, classes: 2 };
+        let path = tmp("cascade.spill");
+        write_spill(&mut SynthChunks::new(spec, 33, 64), &path).unwrap();
+        let p = SvmParams::default();
+        let cfg = CascadeConfig { shards: 4, ..CascadeConfig::default() };
+        let mut live = SynthChunks::new(spec, 33, 37);
+        let want = cascade::solve_streaming(&mut live, 0, 1, 60, &p, &cfg).unwrap();
+        let mut mm = MmapChunks::new(&path, 53).unwrap();
+        let got = cascade::solve_streaming(&mut mm, 0, 1, 60, &p, &cfg).unwrap();
+        assert_eq!(got.model.bias.to_bits(), want.model.bias.to_bits());
+        assert_eq!(got.model.coef.len(), want.model.coef.len());
+        for (a, b) in got.model.coef.iter().zip(&want.model.coef) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(got.final_rows, want.final_rows);
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -10,16 +10,19 @@
 //! artifacts, no device), so it runs from a clean checkout and in CI — it
 //! is the reproducible speedup story for the `svm::solver` subsystem. The
 //! bench wrapper (`benches/solver_ablation.rs`) renders the table, writes
-//! the machine-readable `BENCH_solver.json` (schema v7: everything v6
+//! the machine-readable `BENCH_solver.json` (schema v8: everything v7
 //! carried — panel/simd row-eval ratios, per-level `net_levels`,
 //! `hierarchical`, the `serve` rows with `f16_accuracy_deltas` and
-//! `serve_speedup_vs_legacy` — plus the `scaling` curve of direct-vs-
-//! cascade solves on the growing synthetic workload and the
-//! `shared_cache_ovo` row exercising the per-rank cross-pair kernel-row
-//! cache) that later PRs diff against, and enforces the panel-vs-scalar,
-//! simd-vs-fused, compiled-vs-legacy-serve, f16-accuracy,
-//! cascade-agreement and shared-cache-hit regression guards CI runs on
-//! every push.
+//! `serve_speedup_vs_legacy`, the `scaling` curve of direct-vs-cascade
+//! solves and the `shared_cache_ovo` row — plus the warm-vs-cold merge
+//! tree split inside each `scaling` point: the cascade now runs twice
+//! per row count, once seeding every fold-merge solve from its
+//! children's converged alphas and once from zero, and the row records
+//! both iteration totals and the warm-solve count) that later PRs diff
+//! against, and enforces the panel-vs-scalar, simd-vs-fused,
+//! compiled-vs-legacy-serve, f16-accuracy, cascade-agreement,
+//! warm-le-cold-iterations and shared-cache-hit regression guards CI
+//! runs on every push.
 
 use std::sync::Arc;
 
@@ -86,11 +89,16 @@ pub struct HierRow {
 
 /// One point of the cascade scaling curve: direct cached solve vs the
 /// 8-shard cascade front on the synthetic two-class workload at `rows`.
+/// The cascade runs twice — warm-started (merge solves seeded from the
+/// children's converged alphas) and cold (every solve from zero) — so
+/// the row carries the warm-start payoff alongside the cascade-vs-direct
+/// headline.
 #[derive(Debug, Clone)]
 pub struct ScaleRow {
     pub rows: usize,
     pub d: usize,
     pub direct_secs: f64,
+    /// Warm-started cascade median wall time (the default config).
     pub cascade_secs: f64,
     /// direct / cascade median wall time (> 1 means the cascade wins).
     pub cascade_speedup: f64,
@@ -100,6 +108,16 @@ pub struct ScaleRow {
     /// (the cascade is an approximation; CI pins this above
     /// [`cascade::CASCADE_AGREEMENT_MIN`]).
     pub agreement: f64,
+    /// Cold-cascade median wall time (same tree, zero seeds everywhere).
+    pub cold_cascade_secs: f64,
+    /// Accumulated SMO iterations across all warm-started sub-solves.
+    pub warm_iters: usize,
+    /// Accumulated SMO iterations across all cold sub-solves. CI pins
+    /// `warm_iters <= cold_iters` — the warm seed must never cost work.
+    pub cold_iters: usize,
+    /// Sub-solves that actually started from a nonzero seed (merge and
+    /// polish solves; leaves are always cold).
+    pub warm_solves: usize,
 }
 
 /// The per-rank shared kernel-row cache on the OvO workload: one LRU
@@ -169,7 +187,7 @@ impl SolverAblation {
     /// Machine-readable form for `BENCH_solver.json`.
     pub fn to_json(&self) -> Json {
         json::obj(vec![
-            ("schema", json::s("parasvm-solver-ablation/v7")),
+            ("schema", json::s("parasvm-solver-ablation/v8")),
             ("dataset", json::s(&self.dataset)),
             ("n", json::num(self.n as f64)),
             ("d", json::num(self.d as f64)),
@@ -324,6 +342,10 @@ impl SolverAblation {
                                     json::num(r.peak_cache_bytes as f64),
                                 ),
                                 ("agreement", json::num(r.agreement)),
+                                ("cold_cascade_secs", json::num(r.cold_cascade_secs)),
+                                ("warm_iters", json::num(r.warm_iters as f64)),
+                                ("cold_iters", json::num(r.cold_iters as f64)),
+                                ("warm_solves", json::num(r.warm_solves as f64)),
                             ])
                         })
                         .collect(),
@@ -647,17 +669,29 @@ pub fn run_solver_ablation(
             dlast = Some(direct_engine.solve(&sprob, &sw.params));
         });
         let direct_out = dlast.expect("bench ran at least once");
-        let ccfg = CascadeConfig {
+        // Warm merge tree (the default): every fold-merge union solve is
+        // seeded from its children's converged alphas and the root polish
+        // re-seeds from the previous root.
+        let warm_cfg = CascadeConfig {
             shards: 8,
             threads: 1,
             row_eval: RowEval::default(),
             max_rescans: 1,
+            warm_start: true,
         };
         let mut clast = None;
         let cr = bench(&format!("cascade n={rows}"), cfg, || {
-            clast = Some(cascade::solve(&sprob, &sw.params, &ccfg));
+            clast = Some(cascade::solve(&sprob, &sw.params, &warm_cfg));
         });
         let casc = clast.expect("bench ran at least once");
+        // Same tree with every sub-solve started from zero: the control
+        // for the warm-le-cold iteration gate.
+        let cold_cfg = CascadeConfig { warm_start: false, ..warm_cfg };
+        let mut cold_last = None;
+        let cold_r = bench(&format!("cascade-cold n={rows}"), cfg, || {
+            cold_last = Some(cascade::solve(&sprob, &sw.params, &cold_cfg));
+        });
+        let cold = cold_last.expect("bench ran at least once");
         let (direct_model, _) = model_from_outcome(&sprob, &direct_out, &sw.params);
         let (casc_model, _) = model_from_outcome(&sprob, &casc.outcome, &sw.params);
         let agreement =
@@ -672,12 +706,16 @@ pub fn run_solver_ablation(
             cascade_speedup: if cascade_secs > 0.0 { direct_secs / cascade_secs } else { 0.0 },
             peak_cache_bytes: casc.peak_cache_bytes,
             agreement,
+            cold_cascade_secs: cold_r.summary.median,
+            warm_iters: casc.outcome.solution.iters,
+            cold_iters: cold.outcome.solution.iters,
+            warm_solves: casc.warm_solves,
         };
         table.row(&[
             format!("scaling n={} direct vs cascade-8", row.rows),
             format!("{:.4}", row.cascade_secs),
             format!("{:.2}x direct", row.cascade_speedup),
-            String::new(),
+            format!("{} warm / {} cold", row.warm_iters, row.cold_iters),
             String::new(),
             String::new(),
             format!("agree {:.3} peak {}B", row.agreement, row.peak_cache_bytes),
@@ -793,13 +831,28 @@ mod tests {
             ab.f16_accuracy_deltas.len(),
             crate::harness::SERVE_BENCH_DATASETS.len()
         );
-        // Schema v7: the cascade scaling curve and the shared-cache row.
+        // Schema v8: the cascade scaling curve (now with the warm/cold
+        // merge-tree split) and the shared-cache row.
         assert_eq!(ab.scaling.len(), 1);
         let s = &ab.scaling[0];
         assert_eq!((s.rows, s.d), (300, 16));
         assert!(s.direct_secs > 0.0 && s.cascade_secs > 0.0);
+        assert!(s.cold_cascade_secs > 0.0);
         assert!(s.peak_cache_bytes > 0);
         assert!(s.agreement >= 0.9, "cascade agreement collapsed: {}", s.agreement);
+        assert!(s.warm_solves > 0, "warm cascade never seeded a merge solve");
+        assert!(
+            s.warm_iters > 0 && s.cold_iters > 0,
+            "iteration totals missing: warm {} cold {}",
+            s.warm_iters,
+            s.cold_iters
+        );
+        assert!(
+            s.warm_iters <= s.cold_iters,
+            "warm seeds cost iterations: warm {} > cold {}",
+            s.warm_iters,
+            s.cold_iters
+        );
         assert_eq!(ab.shared_cache.len(), 1);
         let sc = &ab.shared_cache[0];
         assert_eq!(sc.cache_mb, 32);
@@ -816,8 +869,13 @@ mod tests {
         assert!(rendered.contains("scaling n=300"));
         assert!(rendered.contains("shared-cache"));
         let j = ab.to_json();
-        assert_eq!(j.get("schema").and_then(Json::as_str), Some("parasvm-solver-ablation/v7"));
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some("parasvm-solver-ablation/v8"));
         assert_eq!(j.get("scaling").and_then(Json::as_arr).unwrap().len(), 1);
+        let sj = &j.get("scaling").and_then(Json::as_arr).unwrap()[0];
+        assert!(sj.get("warm_iters").is_some());
+        assert!(sj.get("cold_iters").is_some());
+        assert!(sj.get("warm_solves").is_some());
+        assert!(sj.get("cold_cascade_secs").is_some());
         assert_eq!(j.get("shared_cache_ovo").and_then(Json::as_arr).unwrap().len(), 1);
         assert!(j.get("panel_speedup_vs_scalar").is_some());
         assert!(j.get("simd_speedup_vs_fused").is_some());

@@ -16,8 +16,9 @@
 //! xla|native, --solver smo|gd, --workers N, --per-class N, --seed N,
 //! --config file.json, plus hyper-parameters (--c --gamma --tol --epochs
 //! --lr), interconnect (--net-latency --net-bandwidth), and the
-//! million-row knobs (--cache-mb --cascade-shards --streaming,
-//! --dataset synth:RxDxC).
+//! million-row knobs (--cache-mb --cascade-shards --streaming --spill,
+//! --dataset synth:RxDxC|*.spill) — all of which compose with
+//! --solver-ranks.
 
 use std::sync::Arc;
 
@@ -68,7 +69,8 @@ fn print_help() {
          usage: parasvm <train|eval|serve|bench|datasets|artifacts|selfcheck> [options]\n\n\
          common options:\n\
            --dataset NAME     iris | wdbc | pavia | synth:RxDxC (deterministic\n\
-                              R-row, D-feature, C-class scaling generator)\n\
+                              R-row, D-feature, C-class scaling generator) |\n\
+                              *.csv | *.spill (packed binary spill, see --spill)\n\
                               (default iris)\n\
            --backend KIND     xla | native (default xla)\n\
            --solver NAME      smo (CUDA-analog) | smo-cached (working-set +\n\
@@ -93,10 +95,18 @@ fn print_help() {
            --cascade-shards N cascade front: shard each pair into N leaves,\n\
                               merge SVs pairwise, polish at the root\n\
                               (0/1 = direct solve)\n\
-           --streaming        out-of-core chunked ingest (synth:RxDxC or CSV);\n\
-                              with --cascade-shards > 1 the cascade trains\n\
-                              straight off the stream, never holding the\n\
-                              full matrix (note: no min-max scaling there)\n\
+           --streaming        out-of-core chunked ingest (synth:RxDxC, CSV, or\n\
+                              a *.spill file); with --cascade-shards > 1 the\n\
+                              cascade trains straight off the stream, never\n\
+                              holding the full matrix (no min-max scaling\n\
+                              there), and composes with --solver-ranks R\n\
+                              (each pool QP row-sharded across the intra\n\
+                              sub-world, bit-identical to R=1)\n\
+           --spill FILE       (with --streaming --cascade-shards) parse the\n\
+                              source once into a packed binary spill at FILE\n\
+                              and replay every later pass from it — polish\n\
+                              rescans and per-pair re-streams become page-\n\
+                              cache byte copies instead of CSV re-parses\n\
            --config FILE      load a JSON RunConfig (CLI flags override)\n\
            --seed N           dataset/run seed (default 42)\n\
          serve options:\n\
@@ -131,8 +141,10 @@ fn make_backend(cfg: &RunConfig) -> Result<Arc<dyn SvmBackend>> {
     })
 }
 
-/// Chunked source for `--streaming`: the synthetic generator or a CSV
-/// file, both resettable so the cascade can re-stream for polish scans.
+/// Chunked source for `--streaming`: the synthetic generator, a CSV
+/// file, or a packed binary spill (`*.spill`, from `--spill` or
+/// [`data::write_spill`]) — all resettable so the cascade can re-stream
+/// for polish scans.
 fn make_chunk_source(cfg: &RunConfig) -> Result<Box<dyn data::ChunkSource>> {
     if cfg.dataset.starts_with("synth:") {
         let spec = data::SynthSpec::parse(&cfg.dataset)?;
@@ -143,9 +155,15 @@ fn make_chunk_source(cfg: &RunConfig) -> Result<Box<dyn data::ChunkSource>> {
             false,
             data::stream::DEFAULT_CHUNK_ROWS,
         )))
+    } else if cfg.dataset.ends_with(".spill") {
+        Ok(Box::new(data::MmapChunks::new(
+            std::path::Path::new(&cfg.dataset),
+            data::stream::DEFAULT_CHUNK_ROWS,
+        )?))
     } else {
         Err(parasvm::Error::Config(format!(
-            "--streaming needs a chunked source: synth:RxDxC or a *.csv path, got {:?}",
+            "--streaming needs a chunked source: synth:RxDxC, a *.csv path, or a *.spill \
+             file, got {:?}",
             cfg.dataset
         )))
     }
@@ -195,6 +213,7 @@ fn run(sub: &str, args: &Args) -> Result<()> {
 fn cmd_train(args: &Args, eval: bool) -> Result<()> {
     let cfg = load_config(args)?;
     let save_path = args.opt("save").map(std::path::PathBuf::from);
+    let spill_path = args.opt("spill").map(std::path::PathBuf::from);
     args.finish().map_err(parasvm::Error::Config)?;
     if cfg.streaming && cfg.cascade_shards > 1 {
         // Fully out-of-core: the cascade trains straight off the chunk
@@ -207,7 +226,14 @@ fn cmd_train(args: &Args, eval: bool) -> Result<()> {
                     .into(),
             ));
         }
-        return cmd_train_streaming_cascade(&cfg, save_path);
+        return cmd_train_streaming_cascade(&cfg, spill_path, save_path);
+    }
+    if spill_path.is_some() {
+        return Err(parasvm::Error::Config(
+            "--spill serves the out-of-core path: add --streaming --cascade-shards N, or \
+             train directly off an existing spill with --dataset FILE.spill --streaming"
+                .into(),
+        ));
     }
     let ds = load_dataset(&cfg)?;
     let backend = make_backend(&cfg)?;
@@ -269,7 +295,12 @@ fn cmd_train(args: &Args, eval: bool) -> Result<()> {
     Ok(())
 }
 
-/// Out-of-core cascade training: `--streaming --cascade-shards N`.
+/// Out-of-core cascade training: `--streaming --cascade-shards N`, with
+/// two optional composers: `--spill FILE` converts the text/generator
+/// stream into a packed binary spill ONCE and replays every later pass
+/// (leaves, polish rescans, remaining pairs, accuracy) from it, and
+/// `--solver-ranks R` runs the cascade driver replicated on an `intra`
+/// sub-world with every pool QP row-sharded across the R ranks.
 ///
 /// Differences from the in-RAM path, by design:
 /// * no min-max scaling — the stream is consumed as-is (`synth:` data is
@@ -279,6 +310,7 @@ fn cmd_train(args: &Args, eval: bool) -> Result<()> {
 ///   trained ensemble, one chunk resident at a time.
 fn cmd_train_streaming_cascade(
     cfg: &RunConfig,
+    spill_path: Option<std::path::PathBuf>,
     save_path: Option<std::path::PathBuf>,
 ) -> Result<()> {
     use parasvm::svm::solver::cascade::{self, CascadeConfig};
@@ -293,31 +325,95 @@ fn cmd_train_streaming_cascade(
             "--per-class needs the in-RAM path; drop it or drop --cascade-shards".into(),
         ));
     }
-    // Leaf size: a known row count (synth specs) is split into the
-    // requested number of shards; unknown-length CSV streams fall back
-    // to fixed-size leaves.
-    let shard_rows = if cfg.dataset.starts_with("synth:") {
-        let spec = data::SynthSpec::parse(&cfg.dataset)?;
-        spec.rows.div_ceil(cfg.cascade_shards).max(1024)
-    } else {
-        8192
+    // Optional spill: parse the source once into packed f32 rows, then
+    // every later pass is byte copies out of the page cache.
+    let spill_info = match &spill_path {
+        Some(path) => {
+            let mut src = make_chunk_source(cfg)?;
+            let info = data::write_spill(src.as_mut(), path)?;
+            println!(
+                "spilled {} rows x {} features ({} classes) to {}",
+                info.rows,
+                info.d,
+                info.classes,
+                path.display()
+            );
+            Some(info)
+        }
+        None => None,
     };
+    // Leaf size: a known row count (spill headers, synth specs) is split
+    // into the requested number of shards; unknown-length CSV streams
+    // fall back to fixed-size leaves.
+    let known_rows = if let Some(info) = &spill_info {
+        Some(info.rows)
+    } else if cfg.dataset.starts_with("synth:") {
+        Some(data::SynthSpec::parse(&cfg.dataset)?.rows)
+    } else if cfg.dataset.ends_with(".spill") {
+        let path = std::path::Path::new(&cfg.dataset);
+        Some(data::MmapChunks::new(path, data::stream::DEFAULT_CHUNK_ROWS)?.rows())
+    } else {
+        None
+    };
+    let shard_rows = known_rows.map_or(8192, |n| n.div_ceil(cfg.cascade_shards).max(1024));
     let ccfg = CascadeConfig {
         shards: cfg.cascade_shards,
         threads: 0,
         row_eval: cfg.row_eval,
         max_rescans: 1,
+        warm_start: true,
     };
+    let ranks = cfg.solver_ranks.max(1);
     println!(
-        "streaming cascade train: {} ({} rows/leaf, {} rows/chunk, unscaled stream)",
+        "streaming cascade train: {} ({} rows/leaf, {} rows/chunk, {} solver rank(s), \
+         unscaled stream)",
         cfg.dataset,
         shard_rows,
-        data::stream::DEFAULT_CHUNK_ROWS
+        data::stream::DEFAULT_CHUNK_ROWS,
+        ranks
     );
-    let mut src = make_chunk_source(cfg)?;
+    // Fresh resettable source on demand: the spill when one was written,
+    // the raw stream otherwise. Every solver rank opens its own — chunk
+    // streams are stateful and cannot be shared across rank threads.
+    let cfg2 = cfg.clone();
+    let spill2 = spill_path.clone();
+    let open_source = move || -> Result<Box<dyn data::ChunkSource>> {
+        match &spill2 {
+            Some(p) => Ok(Box::new(data::MmapChunks::new(p, data::stream::DEFAULT_CHUNK_ROWS)?)),
+            None => make_chunk_source(&cfg2),
+        }
+    };
+
     let t0 = std::time::Instant::now();
-    let (model, stats) =
-        cascade::train_streaming_multiclass(src.as_mut(), shard_rows, &cfg.params, &ccfg)?;
+    let (model, stats, net) = if ranks > 1 {
+        // Cascade × distributed: the driver replays identically on every
+        // rank of the intra sub-world and each pool solve is row-sharded
+        // across it, so the model is bit-identical to the 1-rank run and
+        // the collective chatter lands in the `intra` ledger below.
+        use parasvm::cluster::{CostModel, Topology, LEVEL_INTRA};
+        let topo = Topology::single(
+            LEVEL_INTRA,
+            ranks,
+            CostModel { latency: cfg.intra_latency, bandwidth: cfg.intra_bandwidth },
+        );
+        let universe = topo.universe();
+        let p = cfg.params;
+        let open = open_source.clone();
+        let mut outs = universe.run(move |mut comm| {
+            let mut src = open()?;
+            cascade::train_streaming_multiclass_on(&mut comm, src.as_mut(), shard_rows, &p, &ccfg)
+        });
+        let first = outs.swap_remove(0)?;
+        for o in outs {
+            o?;
+        }
+        (first.0, first.1, Some(topo.net()))
+    } else {
+        let mut src = open_source()?;
+        let (model, stats) =
+            cascade::train_streaming_multiclass(src.as_mut(), shard_rows, &cfg.params, &ccfg)?;
+        (model, stats, None)
+    };
     println!(
         "trained {} binary problems in {} ({} classes, d={})",
         model.binaries.len(),
@@ -336,8 +432,19 @@ fn cmd_train_streaming_cascade(
             fmt_secs(st.total_secs())
         );
     }
+    if let Some(net) = net {
+        for l in &net.levels {
+            println!(
+                "  level {:<5} {} msgs, {} bytes, wire {}",
+                l.level,
+                l.messages,
+                l.bytes,
+                fmt_secs(l.sim_secs)
+            );
+        }
+    }
     // Accuracy by re-streaming: one chunk resident at a time.
-    src.reset()?;
+    let mut src = open_source()?;
     let (mut correct, mut total) = (0usize, 0usize);
     while let Some(chunk) = src.next_chunk()? {
         let d = chunk.d();

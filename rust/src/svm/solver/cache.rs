@@ -133,6 +133,29 @@ pub trait KernelSource {
     fn stats(&self) -> CacheStats;
 }
 
+/// A [`KernelSource`] that serves a contiguous column *window* of the
+/// kernel matrix: `row(i)` has length `cols().len()` and entry `t` holds
+/// `K(i, cols().lo + t)`. This is the rank-facing view of the distributed
+/// engine's SPMD body ([`super::distributed::solve_on_source`]), with two
+/// implementations that are bit-identical row-for-row:
+///
+/// * a sliced [`KernelCache`] (`new_slice`) — private per solve, window
+///   rows evaluated over the pair problem's packed shard;
+/// * [`super::shared::SharedWindowSource`] — a window gather out of the
+///   rank's cross-pair [`super::shared::SharedKernelCache`], which
+///   persists full-width global rows across sequential pair solves and
+///   counts reuse as [`CacheStats::cross_pair_hits`].
+pub trait WindowSource: KernelSource {
+    /// The column window `row()` serves.
+    fn cols(&self) -> RowSlice;
+}
+
+impl WindowSource for KernelCache<'_> {
+    fn cols(&self) -> RowSlice {
+        KernelCache::cols(self)
+    }
+}
+
 /// LRU row cache over the RBF kernel of a row-major dataset.
 pub struct KernelCache<'a> {
     /// Packed panel layout + raw matrix + squared norms, built once per

@@ -36,7 +36,36 @@
 //! O(shard + survivors), never the full dataset. Both paths share the
 //! same shard solver and merge order, so with matching shard boundaries
 //! they produce bitwise-identical models (pinned by a test below).
+//!
+//! # Warm-started merge tree
+//!
+//! Every pool above the leaves is a union of *already solved*
+//! sub-problems, and an SV's dual weight in the union rarely moves far
+//! from its weight in the child. So each [`Pool`] carries its rows'
+//! last-converged alphas up the tree: `survivors` keeps the solved
+//! weights, `merge` concatenates them in id order, and the polish rounds
+//! seed from the previous root (re-admitted violators enter at zero —
+//! they held no dual weight). [`solve_pool`] hands that seed to
+//! [`working_set::solve_seeded`], which repairs it onto the feasible set
+//! (box-clip + equality restore) and converges under the *same* KKT
+//! stopping test as a cold solve — fewer iterations, same tolerance.
+//! [`CascadeConfig::warm_start`] = false restores the cold tree
+//! bit-for-bit (leaf solves are always cold either way: their seed is
+//! all-zero, which replays the cold trajectory exactly).
+//!
+//! # Cascade × distributed
+//!
+//! [`solve_on`] / [`solve_streaming_on`] run the SAME driver replicated
+//! on every rank of a [`Comm`]: pools, merges, and polish scans are
+//! deterministic, so all ranks hold identical state, and each
+//! mixed-class pool solve is row-sharded across the communicator through
+//! [`distributed::solve_on_seeded`] — the per-iteration candidate
+//! collectives land in the communicator's topology ledger, so a
+//! hierarchical run reports cascade traffic per level like any other
+//! intra-world solve. Single-class pools skip the engine on every rank
+//! (no collective), keeping the replicas in lockstep.
 
+use crate::cluster::Comm;
 use crate::data::stream::ChunkSource;
 use crate::data::BinaryProblem;
 use crate::error::{Error, Result};
@@ -46,6 +75,7 @@ use crate::svm::smo::SmoSolution;
 use crate::svm::SvmParams;
 
 use super::cache::{CacheStats, KernelCache};
+use super::distributed::{self, DistributedSmo};
 use super::panel::RowEval;
 use super::shrink::ShrinkStats;
 use super::slice::RowSlice;
@@ -72,11 +102,21 @@ pub struct CascadeConfig {
     pub row_eval: RowEval,
     /// Max polish rescan rounds after the root solve.
     pub max_rescans: usize,
+    /// Seed every merge/polish solve from the children's converged alphas
+    /// (feasibility-repaired; same KKT stopping test, fewer iterations).
+    /// `false` = the cold tree, bit-for-bit.
+    pub warm_start: bool,
 }
 
 impl Default for CascadeConfig {
     fn default() -> Self {
-        CascadeConfig { shards: 4, threads: 1, row_eval: RowEval::default(), max_rescans: 1 }
+        CascadeConfig {
+            shards: 4,
+            threads: 1,
+            row_eval: RowEval::default(),
+            max_rescans: 1,
+            warm_start: true,
+        }
     }
 }
 
@@ -99,15 +139,22 @@ pub struct CascadeOutcome {
     pub rescans_used: usize,
     /// Rows in the final (polished) root problem.
     pub final_rows: usize,
+    /// Sub-solves that started from a nonzero (warm) seed. 0 when
+    /// [`CascadeConfig::warm_start`] is off — and at leaves regardless,
+    /// whose seed is always all-zero.
+    pub warm_solves: usize,
 }
 
 /// One survivor set moving up the tree: global row ids (ascending) plus
-/// owned copies of the corresponding rows and ±1 labels. Owning copies is
-/// what lets the streaming path drop source rows once a shard is solved.
+/// owned copies of the corresponding rows, ±1 labels, and each row's
+/// last-converged dual weight (the warm seed for the next solve; 0 for
+/// rows that have never been solved). Owning copies is what lets the
+/// streaming path drop source rows once a shard is solved.
 struct Pool {
     ids: Vec<usize>,
     x: Vec<f32>,
     y: Vec<f32>,
+    alpha: Vec<f32>,
 }
 
 impl Pool {
@@ -116,6 +163,7 @@ impl Pool {
             ids: Vec::with_capacity(rows),
             x: Vec::with_capacity(rows * d),
             y: Vec::with_capacity(rows),
+            alpha: Vec::with_capacity(rows),
         }
     }
 
@@ -123,25 +171,41 @@ impl Pool {
         self.y.len()
     }
 
+    /// Push a never-solved row (warm seed 0).
     fn push(&mut self, id: usize, row: &[f32], y: f32) {
+        self.push_seeded(id, row, y, 0.0);
+    }
+
+    fn push_seeded(&mut self, id: usize, row: &[f32], y: f32, a: f32) {
         self.ids.push(id);
         self.x.extend_from_slice(row);
         self.y.push(y);
+        self.alpha.push(a);
+    }
+
+    /// Overwrite the carried seed with a freshly converged solution
+    /// (used before the polish merge re-admits violators).
+    fn set_seed(&mut self, alpha: &[f32]) {
+        debug_assert_eq!(alpha.len(), self.len());
+        self.alpha.clear();
+        self.alpha.extend_from_slice(alpha);
     }
 
     /// Keep the rows whose dual survived (`alpha > SV_EPS`), preserving
-    /// ascending id order. An all-zero solution (single-class shard, or a
+    /// ascending id order and carrying the converged weights as the next
+    /// level's warm seed. An all-zero solution (single-class shard, or a
     /// degenerate solve) keeps everything — discarding on no evidence is
     /// how cascades lose classes.
-    fn survivors(self, alpha: &[f32], d: usize) -> Pool {
+    fn survivors(mut self, alpha: &[f32], d: usize) -> Pool {
         debug_assert_eq!(alpha.len(), self.len());
         if alpha.iter().all(|&a| a <= SV_EPS) {
+            self.set_seed(alpha);
             return self;
         }
         let mut out = Pool::with_capacity(self.len(), d);
         for (k, &id) in self.ids.iter().enumerate() {
             if alpha[k] > SV_EPS {
-                out.push(id, &self.x[k * d..(k + 1) * d], self.y[k]);
+                out.push_seeded(id, &self.x[k * d..(k + 1) * d], self.y[k], alpha[k]);
             }
         }
         out
@@ -154,10 +218,10 @@ impl Pool {
         while i < a.len() || j < b.len() {
             let take_a = j >= b.len() || (i < a.len() && a.ids[i] < b.ids[j]);
             if take_a {
-                out.push(a.ids[i], &a.x[i * d..(i + 1) * d], a.y[i]);
+                out.push_seeded(a.ids[i], &a.x[i * d..(i + 1) * d], a.y[i], a.alpha[i]);
                 i += 1;
             } else {
-                out.push(b.ids[j], &b.x[j * d..(j + 1) * d], b.y[j]);
+                out.push_seeded(b.ids[j], &b.x[j * d..(j + 1) * d], b.y[j], b.alpha[j]);
                 j += 1;
             }
         }
@@ -172,6 +236,7 @@ struct Acc {
     iters: usize,
     peak_cache_bytes: usize,
     solves: usize,
+    warm_solves: usize,
 }
 
 impl Acc {
@@ -182,6 +247,7 @@ impl Acc {
             iters: 0,
             peak_cache_bytes: 0,
             solves: 0,
+            warm_solves: 0,
         }
     }
 
@@ -209,42 +275,87 @@ impl Acc {
     }
 }
 
-/// Solve one pool through the cached working-set engine, with the same
-/// budget formula on both the in-RAM and the streaming path (that shared
-/// formula is what makes the two paths bitwise-comparable).
+/// Where each pool's QP actually runs.
+enum PoolBackend<'c> {
+    /// In-process cached working-set engine (shrinking on).
+    Local,
+    /// Row-sharded across every rank of the communicator: all ranks run
+    /// the replicated cascade driver and enter each mixed-class solve
+    /// collectively ([`distributed::solve_on_seeded`], unshrunk — the
+    /// R-rank trajectory replays the 1-rank one bit-for-bit).
+    World(&'c mut Comm),
+}
+
+/// Solve one pool, with the same engine configuration on both the in-RAM
+/// and the streaming path (that shared formula is what makes the two
+/// paths bitwise-comparable). With `cfg.warm_start`, a pool carrying any
+/// nonzero alpha is solved seeded — repaired onto the feasible set, same
+/// KKT stopping test.
 fn solve_pool(
     pool: &Pool,
     d: usize,
     p: &SvmParams,
     cfg: &CascadeConfig,
     acc: &mut Acc,
-) -> SmoSolution {
+    backend: &mut PoolBackend<'_>,
+) -> Result<SmoSolution> {
     let m = pool.len();
     let has_pos = pool.y.iter().any(|&v| v > 0.0);
     let has_neg = pool.y.iter().any(|&v| v < 0.0);
     if !(has_pos && has_neg) {
         // Single-class pool: the dual optimum is alpha = 0 and SMO would
-        // report instant convergence; skip the engine entirely.
-        return SmoSolution {
+        // report instant convergence; skip the engine entirely (on every
+        // replica — no collective, so the ranks stay in lockstep).
+        return Ok(SmoSolution {
             alpha: vec![0.0; m],
             bias: 0.0,
             iters: 0,
             b_up: 0.0,
             b_low: 0.0,
             converged: true,
-        };
+        });
     }
-    let engine_cfg = EngineConfig {
-        threads: cfg.threads,
-        row_eval: cfg.row_eval,
-        ..EngineConfig::cached_shrink((m / 4).max(2))
-    };
-    let row_threads = super::parallel::resolve_threads(cfg.threads);
-    let mut src = KernelCache::new(&pool.x, m, d, p.gamma, engine_cfg.cache_rows, row_threads)
-        .with_eval(cfg.row_eval);
-    let (sol, shrink) = working_set::solve(&mut src, &pool.y, p, &engine_cfg);
-    acc.absorb(m, src.stats(), shrink, sol.iters);
-    sol
+    let seed = (cfg.warm_start && pool.alpha.iter().any(|&a| a > 0.0)).then_some(&pool.alpha[..]);
+    if seed.is_some() {
+        acc.warm_solves += 1;
+    }
+    match backend {
+        PoolBackend::Local => {
+            let engine_cfg = EngineConfig {
+                threads: cfg.threads,
+                row_eval: cfg.row_eval,
+                ..EngineConfig::cached_shrink((m / 4).max(2))
+            };
+            let row_threads = super::parallel::resolve_threads(cfg.threads);
+            let mut src =
+                KernelCache::new(&pool.x, m, d, p.gamma, engine_cfg.cache_rows, row_threads)
+                    .with_eval(cfg.row_eval);
+            let (sol, shrink) = match seed {
+                Some(s) => working_set::solve_seeded(&mut src, &pool.y, p, &engine_cfg, s),
+                None => working_set::solve(&mut src, &pool.y, p, &engine_cfg),
+            };
+            acc.absorb(m, src.stats(), shrink, sol.iters);
+            Ok(sol)
+        }
+        PoolBackend::World(comm) => {
+            let prob = BinaryProblem {
+                x: pool.x.clone(),
+                y: pool.y.clone(),
+                d,
+                pos_class: 0,
+                neg_class: 1,
+            };
+            let engine = DistributedSmo::auto(comm.size(), m, comm.model())
+                .with_threads(cfg.threads)
+                .with_eval(cfg.row_eval);
+            let out = match seed {
+                Some(s) => distributed::solve_on_seeded(comm, &prob, p, &engine.cfg, s)?,
+                None => distributed::solve_on(comm, &prob, p, &engine.cfg)?,
+            };
+            acc.absorb(m, out.cache, out.shrink, out.solution.iters);
+            Ok(out.solution)
+        }
+    }
 }
 
 /// One merge level with fold pairing: pool `i` joins pool `i + half`.
@@ -275,7 +386,8 @@ fn reduce_pools(
     p: &SvmParams,
     cfg: &CascadeConfig,
     acc: &mut Acc,
-) -> (Pool, SmoSolution, usize) {
+    backend: &mut PoolBackend<'_>,
+) -> Result<(Pool, SmoSolution, usize)> {
     pools.retain(|pl| pl.len() > 0);
     assert!(!pools.is_empty(), "cascade needs at least one non-empty shard");
     let mut levels = 0usize;
@@ -283,16 +395,14 @@ fn reduce_pools(
         levels += 1;
         if pools.len() == 1 {
             let pool = pools.pop().expect("one pool");
-            let sol = solve_pool(&pool, d, p, cfg, acc);
-            return (pool, sol, levels);
+            let sol = solve_pool(&pool, d, p, cfg, acc, backend)?;
+            return Ok((pool, sol, levels));
         }
-        let surv: Vec<Pool> = pools
-            .into_iter()
-            .map(|pl| {
-                let sol = solve_pool(&pl, d, p, cfg, acc);
-                pl.survivors(&sol.alpha, d)
-            })
-            .collect();
+        let mut surv: Vec<Pool> = Vec::with_capacity(pools.len());
+        for pl in pools {
+            let sol = solve_pool(&pl, d, p, cfg, acc, backend)?;
+            surv.push(pl.survivors(&sol.alpha, d));
+        }
         pools = merge_level(surv, d);
     }
 }
@@ -324,6 +434,31 @@ fn violates(y: f32, f: f32, tol: f32) -> bool {
 
 /// Run the cascade over an in-RAM binary problem.
 pub fn solve(prob: &BinaryProblem, p: &SvmParams, cfg: &CascadeConfig) -> CascadeOutcome {
+    solve_with(prob, p, cfg, &mut PoolBackend::Local)
+        .expect("local cascade solve is infallible")
+}
+
+/// The collective in-RAM cascade: every rank of `comm` calls this with
+/// the same replicated problem and config; each mixed-class pool solve is
+/// row-sharded across the communicator and the per-iteration collectives
+/// account into the communicator's topology ledger. Returns an identical
+/// [`CascadeOutcome`] on every rank (the driver is deterministic and the
+/// distributed engine's outcome is replicated).
+pub fn solve_on(
+    comm: &mut Comm,
+    prob: &BinaryProblem,
+    p: &SvmParams,
+    cfg: &CascadeConfig,
+) -> Result<CascadeOutcome> {
+    solve_with(prob, p, cfg, &mut PoolBackend::World(comm))
+}
+
+fn solve_with(
+    prob: &BinaryProblem,
+    p: &SvmParams,
+    cfg: &CascadeConfig,
+    backend: &mut PoolBackend<'_>,
+) -> Result<CascadeOutcome> {
     let n = prob.n();
     let d = prob.d;
     assert!(n > 0, "empty problem");
@@ -343,7 +478,7 @@ pub fn solve(prob: &BinaryProblem, p: &SvmParams, cfg: &CascadeConfig) -> Cascad
             pl
         })
         .collect();
-    let (mut pool, mut sol, levels) = reduce_pools(pools, d, p, cfg, &mut acc);
+    let (mut pool, mut sol, levels) = reduce_pools(pools, d, p, cfg, &mut acc, backend)?;
 
     let mut rescans_used = 0usize;
     while rescans_used < cfg.max_rescans {
@@ -383,8 +518,11 @@ pub fn solve(prob: &BinaryProblem, p: &SvmParams, cfg: &CascadeConfig) -> Cascad
             break;
         }
         rescans_used += 1;
+        // Seed the re-solve from the previous root: the root's converged
+        // weights carry over; re-admitted violators enter at zero.
+        pool.set_seed(&sol.alpha);
         pool = Pool::merge(pool, violators, d);
-        sol = solve_pool(&pool, d, p, cfg, &mut acc);
+        sol = solve_pool(&pool, d, p, cfg, &mut acc, backend)?;
     }
 
     let mut alpha = vec![0.0f32; n];
@@ -392,7 +530,7 @@ pub fn solve(prob: &BinaryProblem, p: &SvmParams, cfg: &CascadeConfig) -> Cascad
         alpha[g] = sol.alpha[k];
     }
     let final_rows = pool.len();
-    CascadeOutcome {
+    Ok(CascadeOutcome {
         outcome: SolveOutcome {
             solution: SmoSolution {
                 alpha,
@@ -413,7 +551,8 @@ pub fn solve(prob: &BinaryProblem, p: &SvmParams, cfg: &CascadeConfig) -> Cascad
         peak_cache_bytes: acc.peak_cache_bytes,
         rescans_used,
         final_rows,
-    }
+        warm_solves: acc.warm_solves,
+    })
 }
 
 /// The cascade as a [`DualSolver`] engine (the coordinator's
@@ -457,6 +596,8 @@ pub struct StreamingOutcome {
     pub rescans_used: usize,
     pub final_rows: usize,
     pub peak_cache_bytes: usize,
+    /// Sub-solves that started from a nonzero (warm) seed.
+    pub warm_solves: usize,
 }
 
 /// Out-of-core cascade for one OvO pair: stream the source, keep rows of
@@ -476,6 +617,36 @@ pub fn solve_streaming(
     shard_rows: usize,
     p: &SvmParams,
     cfg: &CascadeConfig,
+) -> Result<StreamingOutcome> {
+    solve_streaming_with(source, pos, neg, shard_rows, p, cfg, &mut PoolBackend::Local)
+}
+
+/// The collective out-of-core cascade: every rank of `comm` streams its
+/// OWN resettable view of the same data (sources are per-rank — chunk
+/// streams are not shareable across rank threads) and runs the replicated
+/// driver; each mixed-class pool solve is row-sharded across the
+/// communicator. Identical sources ⇒ identical pools on every rank ⇒ an
+/// identical [`StreamingOutcome`] everywhere.
+pub fn solve_streaming_on(
+    comm: &mut Comm,
+    source: &mut dyn ChunkSource,
+    pos: usize,
+    neg: usize,
+    shard_rows: usize,
+    p: &SvmParams,
+    cfg: &CascadeConfig,
+) -> Result<StreamingOutcome> {
+    solve_streaming_with(source, pos, neg, shard_rows, p, cfg, &mut PoolBackend::World(comm))
+}
+
+fn solve_streaming_with(
+    source: &mut dyn ChunkSource,
+    pos: usize,
+    neg: usize,
+    shard_rows: usize,
+    p: &SvmParams,
+    cfg: &CascadeConfig,
+    backend: &mut PoolBackend<'_>,
 ) -> Result<StreamingOutcome> {
     assert!(shard_rows > 0, "shard_rows must be positive");
     let t0 = std::time::Instant::now();
@@ -506,14 +677,14 @@ pub fn solve_streaming(
             next_id += 1;
             if pl.len() == shard_rows {
                 let full = shard.take().expect("shard present");
-                let sol = solve_pool(&full, width, p, cfg, &mut acc);
+                let sol = solve_pool(&full, width, p, cfg, &mut acc, backend)?;
                 pools.push(full.survivors(&sol.alpha, width));
             }
         }
     }
     if let Some(tail) = shard.take() {
         let width = d.expect("width known once any row was kept");
-        let sol = solve_pool(&tail, width, p, cfg, &mut acc);
+        let sol = solve_pool(&tail, width, p, cfg, &mut acc, backend)?;
         pools.push(tail.survivors(&sol.alpha, width));
     }
     let d = d.ok_or_else(|| Error::Data("empty stream".into()))?;
@@ -525,11 +696,11 @@ pub fn solve_streaming(
     // roots, so only run the merge tree when there is something to merge.
     let (mut pool, mut sol, levels) = if shards == 1 {
         let pool = pools.pop().expect("one pool");
-        let sol = solve_pool(&pool, d, p, cfg, &mut acc);
+        let sol = solve_pool(&pool, d, p, cfg, &mut acc, backend)?;
         (pool, sol, 1)
     } else {
         let next = merge_level(pools, d);
-        let (pool, sol, upper) = reduce_pools(next, d, p, cfg, &mut acc);
+        let (pool, sol, upper) = reduce_pools(next, d, p, cfg, &mut acc, backend)?;
         (pool, sol, upper + 1)
     };
 
@@ -573,8 +744,9 @@ pub fn solve_streaming(
             break;
         }
         rescans_used += 1;
+        pool.set_seed(&sol.alpha);
         pool = Pool::merge(pool, violators, d);
-        sol = solve_pool(&pool, d, p, cfg, &mut acc);
+        sol = solve_pool(&pool, d, p, cfg, &mut acc, backend)?;
     }
 
     let model = model_from_pool(&pool, &sol, d, p, (pos, neg));
@@ -594,6 +766,7 @@ pub fn solve_streaming(
         rescans_used,
         final_rows: pool.len(),
         peak_cache_bytes: acc.peak_cache_bytes,
+        warm_solves: acc.warm_solves,
     })
 }
 
@@ -627,6 +800,31 @@ pub fn train_streaming_multiclass(
     p: &SvmParams,
     cfg: &CascadeConfig,
 ) -> Result<(OvoModel, Vec<TrainStats>)> {
+    train_streaming_multiclass_with(source, shard_rows, p, cfg, &mut PoolBackend::Local)
+}
+
+/// Collective variant of [`train_streaming_multiclass`]: every rank of
+/// `comm` supplies its own resettable source over the same data and all
+/// pairs train through [`solve_streaming_on`] — the `--streaming
+/// --cascade-shards N --solver-ranks R` composition. The returned
+/// ensemble is identical on every rank.
+pub fn train_streaming_multiclass_on(
+    comm: &mut Comm,
+    source: &mut dyn ChunkSource,
+    shard_rows: usize,
+    p: &SvmParams,
+    cfg: &CascadeConfig,
+) -> Result<(OvoModel, Vec<TrainStats>)> {
+    train_streaming_multiclass_with(source, shard_rows, p, cfg, &mut PoolBackend::World(comm))
+}
+
+fn train_streaming_multiclass_with(
+    source: &mut dyn ChunkSource,
+    shard_rows: usize,
+    p: &SvmParams,
+    cfg: &CascadeConfig,
+    backend: &mut PoolBackend<'_>,
+) -> Result<(OvoModel, Vec<TrainStats>)> {
     let mut names = source.class_names();
     if names.is_empty() {
         source.reset()?;
@@ -641,7 +839,7 @@ pub fn train_streaming_multiclass(
     let mut stats = Vec::new();
     let mut d = 0usize;
     for (a, b) in ovo_pairs(n_classes) {
-        let out = solve_streaming(source, a, b, shard_rows, p, cfg)?;
+        let out = solve_streaming_with(source, a, b, shard_rows, p, cfg, backend)?;
         d = out.model.d;
         binaries.push(out.model);
         stats.push(out.stats);
@@ -747,6 +945,133 @@ mod tests {
         for (a, b) in streamed.model.sv.iter().zip(&m_ram.sv) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn warm_start_never_exceeds_cold_iterations_and_agrees() {
+        let (_, prob) = synth_pair(400, 6, 11);
+        let p = SvmParams::default();
+        let cold_cfg =
+            CascadeConfig { shards: 4, warm_start: false, ..CascadeConfig::default() };
+        let warm_cfg = CascadeConfig { shards: 4, warm_start: true, ..CascadeConfig::default() };
+        let cold = solve(&prob, &p, &cold_cfg);
+        let warm = solve(&prob, &p, &warm_cfg);
+        assert!(cold.outcome.solution.converged);
+        assert!(warm.outcome.solution.converged);
+        assert_eq!(cold.warm_solves, 0);
+        // 4 leaves (cold by construction) -> 2 merges + 1 root, all
+        // carrying seeds: at least the root and merge solves are warm.
+        assert!(warm.warm_solves > 0, "no merge solve started warm");
+        assert!(
+            warm.outcome.solution.iters <= cold.outcome.solution.iters,
+            "warm tree took {} iters, cold took {}",
+            warm.outcome.solution.iters,
+            cold.outcome.solution.iters
+        );
+        let (wa, ca) = (&warm.outcome.solution, &cold.outcome.solution);
+        let m_w = BinaryModel::from_dense(&prob, &wa.alpha, wa.bias, p.gamma);
+        let m_c = BinaryModel::from_dense(&prob, &ca.alpha, ca.bias, p.gamma);
+        let agree = prediction_agreement(&m_w, &m_c, &prob.x, prob.n());
+        assert!(agree >= CASCADE_AGREEMENT_MIN, "warm/cold agreement {agree}");
+    }
+
+    #[test]
+    fn single_shard_cascade_is_warm_start_invariant_bitwise() {
+        // One shard = one cold solve (zero seed) + a polish scan that
+        // finds nothing: the warm flag must not perturb a single bit.
+        let (_, prob) = synth_pair(180, 4, 3);
+        let p = SvmParams::default();
+        let off = CascadeConfig { shards: 1, warm_start: false, ..CascadeConfig::default() };
+        let on = CascadeConfig { shards: 1, warm_start: true, ..CascadeConfig::default() };
+        let a = solve(&prob, &p, &off);
+        let b = solve(&prob, &p, &on);
+        assert_eq!(b.warm_solves, 0, "zero-seed solves must not count as warm");
+        assert_eq!(a.outcome.solution.bias.to_bits(), b.outcome.solution.bias.to_bits());
+        for (x, y) in a.outcome.solution.alpha.iter().zip(&b.outcome.solution.alpha) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a.outcome.solution.iters, b.outcome.solution.iters);
+    }
+
+    #[test]
+    fn distributed_cascade_is_rank_count_invariant_and_crosses_the_wire() {
+        use crate::cluster::{CostModel, Topology, LEVEL_INTRA};
+        let (_, prob) = synth_pair(300, 5, 17);
+        let p = SvmParams::default();
+        let cfg = CascadeConfig { shards: 4, ..CascadeConfig::default() };
+        let run = |ranks: usize| {
+            let topo = Topology::single(LEVEL_INTRA, ranks, CostModel::shm());
+            let universe = topo.universe();
+            let prob = Arc::new(prob.clone());
+            let mut outs = universe.run(move |mut comm| {
+                solve_on(&mut comm, &prob, &p, &cfg).expect("distributed cascade")
+            });
+            // Replicated driver: every rank must report the same outcome.
+            let first = outs.swap_remove(0);
+            for o in &outs {
+                assert_eq!(
+                    o.outcome.solution.bias.to_bits(),
+                    first.outcome.solution.bias.to_bits()
+                );
+            }
+            (first, topo.net())
+        };
+        let (o1, net1) = run(1);
+        let (o3, net3) = run(3);
+        // The unshrunk distributed engine replays the 1-rank trajectory,
+        // so the whole tree is rank-count invariant bit-for-bit.
+        assert_eq!(o1.levels, o3.levels);
+        assert_eq!(o1.final_rows, o3.final_rows);
+        assert_eq!(o1.outcome.solution.bias.to_bits(), o3.outcome.solution.bias.to_bits());
+        for (a, b) in o1.outcome.solution.alpha.iter().zip(&o3.outcome.solution.alpha) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(o3.warm_solves > 0, "distributed merge solves should start warm");
+        // Pool solves really went collective: candidate exchanges on the
+        // 3-rank wire, none on the 1-rank loopback.
+        assert_eq!(net1.bytes(), 0);
+        assert!(net3.level(LEVEL_INTRA).unwrap().bytes > 0);
+        // And the result still agrees with the direct dense solve.
+        let direct = WorkingSetSmo::default().solve(&prob, &p);
+        let s = &o3.outcome.solution;
+        let m_c = BinaryModel::from_dense(&prob, &s.alpha, s.bias, p.gamma);
+        let dsol = &direct.solution;
+        let m_d = BinaryModel::from_dense(&prob, &dsol.alpha, dsol.bias, p.gamma);
+        let agree = prediction_agreement(&m_c, &m_d, &prob.x, prob.n());
+        assert!(agree >= CASCADE_AGREEMENT_MIN, "agreement {agree}");
+    }
+
+    #[test]
+    fn distributed_streaming_cascade_matches_single_rank_bitwise() {
+        use crate::cluster::{CostModel, Topology, LEVEL_INTRA};
+        let spec = SynthSpec { rows: 240, d: 4, classes: 2 };
+        let p = SvmParams::default();
+        let cfg = CascadeConfig { shards: 4, ..CascadeConfig::default() };
+        let run = |ranks: usize| {
+            let topo = Topology::single(LEVEL_INTRA, ranks, CostModel::shm());
+            let universe = topo.universe();
+            let mut outs = universe.run(move |mut comm| {
+                // Per-rank source: chunk streams are rank-local state.
+                let mut src = SynthChunks::new(spec, 21, 37);
+                train_streaming_multiclass_on(&mut comm, &mut src, 60, &p, &cfg)
+                    .expect("distributed streaming cascade")
+            });
+            (outs.swap_remove(0), topo.net())
+        };
+        let ((m1, _), _) = run(1);
+        let ((m2, stats2), net2) = run(2);
+        assert_eq!(m1.binaries.len(), m2.binaries.len());
+        for (a, b) in m1.binaries.iter().zip(&m2.binaries) {
+            assert_eq!(a.bias.to_bits(), b.bias.to_bits());
+            assert_eq!(a.coef.len(), b.coef.len());
+            for (x, y) in a.coef.iter().zip(&b.coef) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        assert!(stats2.iter().all(|s| s.converged));
+        assert!(net2.level(LEVEL_INTRA).unwrap().bytes > 0);
+        let ds = crate::data::synth::generate(&spec, 21);
+        assert!(m2.accuracy(&ds.x, &ds.y) > 0.9);
     }
 
     #[test]

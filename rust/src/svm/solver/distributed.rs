@@ -39,24 +39,33 @@
 //! caches are each GPU's kernel-tile memory, and the per-iteration
 //! all-reduce is the `MPI_Allreduce(MINLOC)` of distributed SMO codes.
 //!
-//! Two entry points, one SPMD body:
+//! Entry points, one SPMD body:
 //!
 //! * [`solve_on`] — the hierarchical entry: call collectively from every
 //!   rank of **any** communicator (typically one derived from a worker
 //!   world with [`crate::cluster::Comm::split_with`], pinned to the
 //!   `intra` level). Traffic lands in the communicator's own level
 //!   ledger; the returned outcome is identical on every rank.
+//! * [`solve_on_seeded`] — the warm-started collective entry: a replicated
+//!   alpha seed is feasibility-repaired identically on every rank
+//!   ([`super::working_set::repair_seed`]) and each rank rebuilds its
+//!   f-slice from the seeded SVs before entering the loop. Same stopping
+//!   test; an all-zero seed replays the cold trajectory bit-for-bit.
+//! * [`solve_on_source`] — the body over a caller-built column-window
+//!   source ([`WindowSource`]): how the coordinator threads the
+//!   rank-persistent shared cache through the engine so kernel rows
+//!   survive across sequential pair solves (cross-pair hits counted).
 //! * [`DistributedSmo::solve`] — the standalone [`DualSolver`] entry: it
 //!   spawns a private single-level `intra` [`Topology`] world and reports
 //!   that level in [`SolveOutcome::net`].
 
 use std::sync::Arc;
 
-use super::cache::{CacheStats, KernelCache, KernelSource};
+use super::cache::{CacheStats, KernelCache, KernelSource, WindowSource};
 use super::parallel;
 use super::shrink::{ActiveSet, ShrinkStats};
 use super::slice::RowSlice;
-use super::working_set::{in_low, in_up, wss2_gain, EngineConfig, Extremes, Selection};
+use super::working_set::{in_low, in_up, repair_seed, wss2_gain, EngineConfig, Extremes, Selection};
 use super::{DualSolver, NetReport, SolveOutcome};
 use crate::cluster::{Comm, CostModel, PairCandidate, Topology, LEVEL_INTRA};
 use crate::data::BinaryProblem;
@@ -154,6 +163,26 @@ impl DualSolver for DistributedSmo {
         out.net = topo.net();
         out
     }
+
+    fn solve_seeded(&self, prob: &BinaryProblem, p: &SvmParams, seed: &[f32]) -> SolveOutcome {
+        let topo = Topology::single(LEVEL_INTRA, self.ranks, self.net);
+        let universe = topo.universe();
+        let prob: Arc<BinaryProblem> = Arc::new(prob.clone());
+        let seed: Arc<[f32]> = seed.into();
+        let (params, cfg) = (*p, self.cfg);
+
+        let t0 = std::time::Instant::now();
+        let mut outs = universe.run(move |mut comm| {
+            solve_on_seeded(&mut comm, &prob, &params, &cfg, &seed)
+                .unwrap_or_else(|e| panic!("distributed warm solve: {e}"))
+        });
+        let solve_secs = t0.elapsed().as_secs_f64();
+
+        let mut out = outs.swap_remove(0);
+        out.solve_secs = solve_secs;
+        out.net = topo.net();
+        out
+    }
 }
 
 /// The collective hierarchical entry: every rank of `comm` calls this with
@@ -168,8 +197,58 @@ pub fn solve_on(
     p: &SvmParams,
     cfg: &EngineConfig,
 ) -> Result<SolveOutcome> {
+    solve_on_with(comm, prob, p, cfg, None)
+}
+
+/// Warm-started collective solve: every rank repairs the same seed with
+/// [`repair_seed`] (deterministic, so the replicated alpha stays
+/// replicated), rebuilds its f-slice from the seeded support vectors (one
+/// column-window row per nonzero alpha), and runs the ordinary SPMD loop.
+/// Same full-set KKT stopping test as [`solve_on`]; an all-zero seed
+/// replays the cold trajectory bit-for-bit.
+pub fn solve_on_seeded(
+    comm: &mut Comm,
+    prob: &BinaryProblem,
+    p: &SvmParams,
+    cfg: &EngineConfig,
+    seed: &[f32],
+) -> Result<SolveOutcome> {
+    solve_on_with(comm, prob, p, cfg, Some(seed))
+}
+
+fn solve_on_with(
+    comm: &mut Comm,
+    prob: &BinaryProblem,
+    p: &SvmParams,
+    cfg: &EngineConfig,
+    seed: Option<&[f32]>,
+) -> Result<SolveOutcome> {
+    let n = prob.n();
+    let my = RowSlice::partition(n, comm.size())[comm.rank()];
+    let threads = parallel::resolve_threads(cfg.threads);
+    let mut cache =
+        KernelCache::new_slice(&prob.x, n, prob.d, p.gamma, my, cfg.cache_rows, threads)
+            .with_eval(cfg.row_eval);
+    solve_on_source(comm, &mut cache, &prob.y, p, cfg, seed)
+}
+
+/// The most general collective entry: the SPMD body over a caller-built
+/// column-window source. The source's window MUST be this rank's share of
+/// `RowSlice::partition(n, comm.size())`. This is how the coordinator's
+/// hierarchical path threads the rank-persistent
+/// [`super::shared::SharedWindowSource`] through the engine, so kernel
+/// rows survive across sequential pair solves and cross-pair reuse is
+/// counted ([`CacheStats::cross_pair_hits`]) exactly like the flat path.
+pub fn solve_on_source(
+    comm: &mut Comm,
+    src: &mut dyn WindowSource,
+    y: &[f32],
+    p: &SvmParams,
+    cfg: &EngineConfig,
+    seed: Option<&[f32]>,
+) -> Result<SolveOutcome> {
     let t0 = std::time::Instant::now();
-    let out = solve_rank(comm, &prob.x, &prob.y, prob.d, p, cfg)?;
+    let out = solve_rank(comm, src, y, p, cfg, seed)?;
     Ok(SolveOutcome {
         solution: out.sol,
         cache: out.cache,
@@ -189,28 +268,42 @@ fn enc(ix: usize) -> u64 {
     }
 }
 
-/// The SPMD body: one rank's share of the cooperative solve.
+/// The SPMD body: one rank's share of the cooperative solve. `src` serves
+/// this rank's column window (asserted to match the row partition).
 fn solve_rank(
     comm: &mut Comm,
-    x: &[f32],
+    src: &mut dyn WindowSource,
     y: &[f32],
-    d: usize,
     p: &SvmParams,
     cfg: &EngineConfig,
+    seed: Option<&[f32]>,
 ) -> Result<RankOutcome> {
     let n = y.len();
-    let my = RowSlice::partition(n, comm.size())[comm.rank()];
+    let my = src.cols();
+    debug_assert_eq!(
+        my,
+        RowSlice::partition(n, comm.size())[comm.rank()],
+        "window source must cover this rank's row partition"
+    );
     let c = p.c as f64;
     let tol = p.tol as f64;
     let eps = 1e-10f64;
     let threads = parallel::resolve_threads(cfg.threads);
-    let mut cache = KernelCache::new_slice(x, n, d, p.gamma, my, cfg.cache_rows, threads)
-        .with_eval(cfg.row_eval);
 
     let yd: Vec<f64> = y.iter().map(|&v| v as f64).collect();
-    // Replicated dual state, sharded optimality state.
-    let mut alpha = vec![0.0f64; n];
+    // Replicated dual state, sharded optimality state. A warm seed is
+    // repaired identically on every rank (repair is deterministic), so
+    // the replicated alpha stays replicated; each rank then rebuilds its
+    // own f-slice from the seeded support vectors.
+    let mut alpha = match seed {
+        Some(s) => repair_seed(y, c, s),
+        None => vec![0.0f64; n],
+    };
     let mut f: Vec<f64> = (my.lo..my.hi).map(|g| -yd[g]).collect();
+    if seed.is_some() && alpha.iter().any(|&a| a > eps) {
+        let all: Vec<usize> = (0..my.len()).collect();
+        reconstruct_f_slice(src, &yd, &alpha, &mut f, &all, eps);
+    }
     let mut active = ActiveSet::full(my.len());
 
     let mut iters = 0usize;
@@ -258,7 +351,7 @@ fn solve_rank(
                 break;
             }
             let stale = active.unshrink();
-            reconstruct_f_slice(&mut cache, &yd, &alpha, &mut f, &stale, eps);
+            reconstruct_f_slice(src, &yd, &alpha, &mut f, &stale, eps);
             since_shrink = 0;
             continue;
         }
@@ -270,7 +363,7 @@ fn solve_rank(
         // violating I_low window of row i, then one MAXLOC all-reduce
         // (the winner's f-entry rides along as the candidate value).
         if cfg.selection == Selection::Wss2 {
-            let ri = cache.row(gi);
+            let ri = src.row(gi);
             let mut best = PairCandidate::none_max();
             for &lt in &active.idx {
                 let g = my.global(lt);
@@ -307,12 +400,14 @@ fn solve_rank(
         let covers = my.contains(gi) || my.contains(gj);
         let mut pair = None;
         let kij = if covers {
-            let (ri, rj) = cache.pair(gi, gj);
+            let (ri, rj) = src.pair(gi, gj);
             let k = if my.contains(gj) { ri[my.local(gj)] } else { rj[my.local(gi)] };
             pair = Some((ri, rj));
             k
         } else {
-            parallel::rbf_entry(x, cache.norms(), gi, gj, d, p.gamma)
+            // One O(d) scalar entry — the same f32 expression (same bits)
+            // as a window read on a covering rank.
+            src.entry(gi, gj)
         };
         let (yi, yj) = (yd[gi], yd[gj]);
         let eta = ((1.0f32 + 1.0f32 - 2.0 * kij) as f64).max(1e-12);
@@ -344,13 +439,13 @@ fn solve_rank(
                 // Off-window rank: the pair was never fetched, so the
                 // fetch and the update collapse into one panel sweep.
                 None => {
-                    let _ = cache.pair_update(gi, gj, ci, cj, &mut f, threads);
+                    let _ = src.pair_update(gi, gj, ci, cj, &mut f, threads);
                 }
             }
         } else {
             let (ri, rj) = match pair {
                 Some(p) => p,
-                None => cache.pair(gi, gj),
+                None => src.pair(gi, gj),
             };
             for &lt in &active.idx {
                 f[lt] += ci * ri[lt] as f64 + cj * rj[lt] as f64;
@@ -390,13 +485,17 @@ fn solve_rank(
     // Exchange per-rank engine counters so every rank reports identical
     // world-wide totals (resident/min-active sums are the aggregate
     // memory/active footprints across shards). u64 frames: hit/miss
-    // counters overflow f32 integer precision on long solves.
-    let cs = cache.stats();
+    // counters overflow f32 integer precision on long solves. Slot 3
+    // carries cross-pair hits — zero for private per-solve caches,
+    // nonzero when the rank's window source persists rows across pairs
+    // ([`super::shared::SharedWindowSource`]).
+    let cs = src.stats();
     let ss = active.stats;
     let frame = [
         cs.hits,
         cs.misses,
         cs.evictions,
+        cs.cross_pair_hits,
         cs.max_resident as u64,
         ss.shrink_passes as u64,
         ss.shrunk_total as u64,
@@ -410,11 +509,12 @@ fn solve_rank(
         cache_total.hits += fr[0];
         cache_total.misses += fr[1];
         cache_total.evictions += fr[2];
-        cache_total.max_resident += fr[3] as usize;
-        shrink_total.shrink_passes += fr[4] as usize;
-        shrink_total.shrunk_total += fr[5] as usize;
-        shrink_total.unshrinks += fr[6] as usize;
-        shrink_total.min_active += fr[7] as usize;
+        cache_total.cross_pair_hits += fr[3];
+        cache_total.max_resident += fr[4] as usize;
+        shrink_total.shrink_passes += fr[5] as usize;
+        shrink_total.shrunk_total += fr[6] as usize;
+        shrink_total.unshrinks += fr[7] as usize;
+        shrink_total.min_active += fr[8] as usize;
     }
     Ok(RankOutcome { sol, cache: cache_total, shrink: shrink_total })
 }
@@ -424,7 +524,7 @@ fn solve_rank(
 /// column-window row per SV (the shard twin of the single-rank
 /// `reconstruct_f`; `stale` holds local offsets).
 fn reconstruct_f_slice(
-    cache: &mut KernelCache<'_>,
+    src: &mut dyn WindowSource,
     yd: &[f64],
     alpha: &[f64],
     f: &mut [f64],
@@ -434,7 +534,7 @@ fn reconstruct_f_slice(
     if stale.is_empty() {
         return;
     }
-    let my = cache.cols();
+    let my = src.cols();
     for &lt in stale {
         f[lt] = -yd[my.global(lt)];
     }
@@ -442,7 +542,7 @@ fn reconstruct_f_slice(
         if aj <= eps {
             continue;
         }
-        let row = cache.row(j);
+        let row = src.row(j);
         let w = aj * yd[j];
         for &lt in stale {
             f[lt] += w * row[lt] as f64;
@@ -606,6 +706,35 @@ mod tests {
         let out = dist.solve(&prob, &p);
         assert_eq!(out.solution.iters, 10);
         assert!(!out.solution.converged);
+    }
+
+    #[test]
+    fn zero_seed_replays_cold_trajectory_across_ranks() {
+        let prob = blobs(30, 4, 1.3, 19);
+        let p = SvmParams::default();
+        let dist = DistributedSmo::new(3, EngineConfig::cached(0), CostModel::free());
+        let cold = dist.solve(&prob, &p);
+        let zeros = vec![0.0f32; prob.n()];
+        let warm = dist.solve_seeded(&prob, &p, &zeros);
+        assert_bitwise_equal(&warm.solution, &cold.solution, "zero seed, 3 ranks");
+    }
+
+    #[test]
+    fn warm_seed_converges_with_fewer_iterations_and_same_kkt() {
+        let prob = blobs(35, 4, 1.5, 31);
+        let p = SvmParams::default();
+        let n = prob.n();
+        let k = kernel::rbf_gram(&prob.x, n, prob.d, p.gamma);
+        let dist = DistributedSmo::new(2, EngineConfig::cached(0), CostModel::free());
+        let cold = dist.solve(&prob, &p);
+        assert!(cold.solution.converged);
+        // Seeding from the converged solution: no violating pair remains.
+        let warm = dist.solve_seeded(&prob, &p, &cold.solution.alpha);
+        assert!(warm.solution.converged);
+        assert_eq!(warm.solution.iters, 0);
+        assert!(
+            smo::kkt_violation(&k, &prob.y, &warm.solution.alpha, p.c) <= 2.0 * p.tol + 1e-4
+        );
     }
 
     #[test]

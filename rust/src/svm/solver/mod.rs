@@ -187,6 +187,31 @@
 //! datasets instead (the third entry on the relaxation ladder, after
 //! SIMD and f16).
 //!
+//! # Cold merge tree → warm-started merge tree
+//!
+//! Through PR 7 every solve in the cascade — each fold-merge union, every
+//! polish round — started from `alpha = 0`, re-deriving from scratch
+//! dual weights its *own children had already converged*. The warm-start
+//! surface fixes that: [`working_set::solve_seeded`] (and
+//! [`distributed::solve_on_seeded`] for row-sharded solves) accepts an
+//! initial alpha, projects it onto the feasible set with
+//! [`working_set::repair_seed`] (clip to the box `[0, C]`, restore
+//! `Σ αᵢ yᵢ = 0` by draining the surplus side — never raising an alpha,
+//! so repair cannot invent support vectors), rebuilds
+//! `f[t] = −y_t + Σ_j α_j y_j K(t,j)` from the seeded SVs (one kernel row
+//! per nonzero alpha, the same rows a converged solve holds hot), and
+//! runs the ordinary working-set loop from there. The stopping test is
+//! untouched: a warm solve converges to the *same* full-set KKT tolerance
+//! as a cold one — seeding moves the starting point on the dual
+//! landscape, never the destination. An all-zero seed replays the cold
+//! trajectory bit-for-bit, so every bit-identity guarantee above
+//! survives. [`cascade`] threads alphas up the merge tree (survivor
+//! selection keeps each SV's weight; merged children each satisfy the
+//! equality constraint, so their union does too and repair is a no-op)
+//! and seeds each polish round from the previous root with re-admitted
+//! violators entering at zero; total merge-tree iterations are counted
+//! and gated ≤ cold in `solver_ablation`.
+//!
 //! All engines return duals that agree with the sequential oracle within
 //! float tolerance (the unshrunk cached and distributed engines are
 //! bit-identical; shrinking re-verifies KKT on the full index set before
@@ -213,7 +238,7 @@ pub use panel::{
 };
 pub use shrink::{ActiveSet, ShrinkStats};
 pub use slice::RowSlice;
-pub use working_set::{EngineConfig, Selection};
+pub use working_set::{repair_seed, EngineConfig, Selection};
 
 pub use crate::cluster::{LevelNet, NetReport};
 
@@ -249,6 +274,19 @@ pub trait DualSolver: Send + Sync {
 
     /// Solve the dual for one binary problem.
     fn solve(&self, prob: &BinaryProblem, p: &SvmParams) -> SolveOutcome;
+
+    /// Warm-started solve from an initial alpha seed (`seed.len() == n`).
+    /// The seed is an *optimization hint*, not a semantic change: engines
+    /// that honor it project it onto the feasible set
+    /// ([`working_set::repair_seed`]) and converge to the same full-set
+    /// KKT tolerance as a cold solve, typically in fewer iterations. The
+    /// default implementation ignores the seed and solves cold — correct
+    /// for engines without a seeding path (the dense oracle stays the
+    /// bit-exact reference).
+    fn solve_seeded(&self, prob: &BinaryProblem, p: &SvmParams, seed: &[f32]) -> SolveOutcome {
+        let _ = seed;
+        self.solve(prob, p)
+    }
 }
 
 /// The legacy dense engine: full Gram build, then the sequential full-scan
@@ -345,6 +383,31 @@ impl DualSolver for WorkingSetSmo {
         )
         .with_eval(self.cfg.row_eval);
         let (solution, shrink) = working_set::solve(&mut src, &prob.y, p, &self.cfg);
+        let solve_secs = t0.elapsed().as_secs_f64();
+        SolveOutcome {
+            solution,
+            cache: src.stats(),
+            shrink,
+            gram_secs: 0.0,
+            solve_secs,
+            net: NetReport::none(),
+        }
+    }
+
+    fn solve_seeded(&self, prob: &BinaryProblem, p: &SvmParams, seed: &[f32]) -> SolveOutcome {
+        let n = prob.n();
+        let row_threads = parallel::resolve_threads(self.cfg.threads);
+        let t0 = std::time::Instant::now();
+        let mut src = KernelCache::new(
+            &prob.x,
+            n,
+            prob.d,
+            p.gamma,
+            self.cfg.cache_rows,
+            row_threads,
+        )
+        .with_eval(self.cfg.row_eval);
+        let (solution, shrink) = working_set::solve_seeded(&mut src, &prob.y, p, &self.cfg, seed);
         let solve_secs = t0.elapsed().as_secs_f64();
         SolveOutcome {
             solution,

@@ -32,9 +32,10 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use super::cache::{CacheStats, KernelSource};
+use super::cache::{CacheStats, KernelSource, WindowSource};
 use super::panel::{DatasetView, RowEval};
 use super::parallel;
+use super::slice::RowSlice;
 
 /// A full-width resident row and the pair-handle that paid for it.
 struct Slot {
@@ -134,6 +135,22 @@ impl<'a> SharedKernelCache<'a> {
         debug_assert!(idx.iter().all(|&g| g < self.n));
         let handle = self.next_handle.fetch_add(1, Ordering::Relaxed);
         SharedPairSource { cache: self, idx, handle, stats: CacheStats::default() }
+    }
+
+    /// A *column-window* [`KernelSource`] over this cache for the
+    /// distributed engine's SPMD body
+    /// ([`crate::svm::solver::distributed::solve_on_source`]): `row(i)`
+    /// is the `cols` window of pair-local row `i`, gathered out of the
+    /// full-width global row exactly like [`SharedPairSource`] — so the
+    /// window rows are bit-identical to a private sliced
+    /// [`super::cache::KernelCache`]'s, while the underlying full-width
+    /// rows persist across sequential pair solves. Rows another pair
+    /// already paid for surface as [`CacheStats::cross_pair_hits`].
+    pub fn window_source(&self, idx: Vec<usize>, cols: RowSlice) -> SharedWindowSource<'_, 'a> {
+        debug_assert!(idx.iter().all(|&g| g < self.n));
+        debug_assert!(cols.hi <= idx.len());
+        let handle = self.next_handle.fetch_add(1, Ordering::Relaxed);
+        SharedWindowSource { cache: self, idx, cols, handle, stats: CacheStats::default() }
     }
 
     /// Lock-and-probe: on a hit, refresh recency and clone the row.
@@ -323,6 +340,70 @@ impl KernelSource for SharedPairSource<'_, '_> {
     }
 }
 
+/// One *distributed* pair solve's window onto the shared cache: the
+/// rank-facing [`WindowSource`] of
+/// [`crate::svm::solver::distributed::solve_on_source`]. `row(i)` serves
+/// the configured column window of pair-local row `i` (length
+/// `cols.len()`), gathered from the shared full-width global row; `entry`
+/// stays valid in the full pair-local index space. A distinct handle per
+/// source means rows inserted by earlier pair solves count as cross-pair
+/// hits — the distributed twin of the flat path's accounting.
+pub struct SharedWindowSource<'c, 'a> {
+    cache: &'c SharedKernelCache<'a>,
+    idx: Vec<usize>,
+    cols: RowSlice,
+    handle: u64,
+    stats: CacheStats,
+}
+
+impl SharedWindowSource<'_, '_> {
+    fn gather(&self, full: &[f32]) -> Arc<[f32]> {
+        self.idx[self.cols.lo..self.cols.hi].iter().map(|&g| full[g]).collect()
+    }
+}
+
+impl KernelSource for SharedWindowSource<'_, '_> {
+    fn n(&self) -> usize {
+        self.idx.len()
+    }
+
+    fn row(&mut self, i: usize) -> Arc<[f32]> {
+        let full = self.cache.global_row(self.idx[i], self.handle, &mut self.stats);
+        self.gather(&full)
+    }
+
+    fn entry(&mut self, i: usize, j: usize) -> f32 {
+        parallel::rbf_entry(
+            self.cache.view.x(),
+            self.cache.view.norms(),
+            self.idx[i],
+            self.idx[j],
+            self.cache.d,
+            self.cache.gamma,
+        )
+    }
+
+    fn pair(&mut self, i: usize, j: usize) -> (Arc<[f32]>, Arc<[f32]>) {
+        let (fi, fj) =
+            self.cache.global_pair(self.idx[i], self.idx[j], self.handle, &mut self.stats);
+        (self.gather(&fi), self.gather(&fj))
+    }
+
+    // pair_update: the default two-pass form — the shared rows are
+    // full-width, so a fused window update would need the gather first
+    // anyway (same reasoning as SharedPairSource).
+
+    fn stats(&self) -> CacheStats {
+        self.stats
+    }
+}
+
+impl WindowSource for SharedWindowSource<'_, '_> {
+    fn cols(&self) -> RowSlice {
+        self.cols
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -425,6 +506,68 @@ mod tests {
         assert_eq!(SharedKernelCache::budget_rows_for_mb(0, 1000), 2);
         assert_eq!(SharedKernelCache::budget_rows_for_mb(1, 64), 64);
         assert_eq!(SharedKernelCache::budget_rows_for_mb(1, 1024), 256);
+    }
+
+    #[test]
+    fn shared_window_distributed_solve_is_bit_identical_and_counts_cross_pair_hits() {
+        use crate::cluster::{CostModel, Universe};
+        use crate::svm::solver::distributed::{self, DistributedSmo};
+        use crate::svm::solver::slice::RowSlice;
+        use crate::svm::solver::DualSolver;
+
+        let ds = three_class_ds();
+        let p = SvmParams::default();
+        let cfg = EngineConfig::cached(0);
+        let ranks = 2usize;
+        // Reference: the private-window-cache distributed engine, per pair.
+        let pairs = [(0usize, 1usize), (0, 2)];
+        let reference: Vec<_> = pairs
+            .iter()
+            .map(|&(a, b)| {
+                let prob = ds.binary_pair(a, b);
+                DistributedSmo::new(ranks, cfg, CostModel::free()).solve(&prob, &p).solution
+            })
+            .collect();
+        // One shared cache per rank, persisting across BOTH pair solves.
+        let ds2 = std::sync::Arc::new(ds.clone());
+        let world = Universe::new(ranks, CostModel::free());
+        let outs = world.run(move |mut comm| {
+            let shared =
+                SharedKernelCache::new(&ds2.x, ds2.n, ds2.d, p.gamma, ds2.n, 1);
+            let mut sols = Vec::new();
+            for &(a, b) in &pairs {
+                let prob = ds2.binary_pair(a, b);
+                let my = RowSlice::partition(prob.n(), comm.size())[comm.rank()];
+                let mut src = shared.window_source(ds2.pair_indices(a, b), my);
+                let out =
+                    distributed::solve_on_source(&mut comm, &mut src, &prob.y, &p, &cfg, None)
+                        .unwrap();
+                sols.push(out.solution);
+            }
+            // Deterministic reuse probe: a fresh handle sweeping the (0,1)
+            // rows hits whatever the two solves left resident, and every
+            // such hit is cross-pair by construction.
+            let idx01 = ds2.pair_indices(0, 1);
+            let w = RowSlice::full(idx01.len());
+            let mut probe = shared.window_source(idx01, w);
+            for i in 0..probe.n() {
+                let _ = probe.row(i);
+            }
+            let cross = probe.stats().cross_pair_hits;
+            (sols, cross)
+        });
+        for (sols, cross) in &outs {
+            for (s, r) in sols.iter().zip(&reference) {
+                assert_eq!(s.iters, r.iters, "shared-window trajectory diverged");
+                assert_eq!(s.bias.to_bits(), r.bias.to_bits());
+                for (x, y) in s.alpha.iter().zip(&r.alpha) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+            // The (0,2) solve reuses the class-0 rows the (0,1) solve paid
+            // for — world-wide cross-pair hits must be nonzero.
+            assert!(*cross > 0, "expected cross-pair reuse across sequential pair solves");
+        }
     }
 
     #[test]

@@ -237,6 +237,46 @@ fn scan_range(
     e
 }
 
+/// Project a warm-start seed onto the dual-feasible set.
+///
+/// Two deterministic moves, in order:
+///  1. **Box**: clip every alpha to `[0, C]`.
+///  2. **Equality**: restore `Σ αᵢ yᵢ = 0` by *draining* alphas on the
+///     surplus side toward zero, ascending index order, first-come — never
+///     raising any alpha, so repair cannot invent support vectors the seed
+///     did not have. (If `Σ αᵢ yᵢ > 0` the positive class carries at least
+///     that much mass, so a pure drain always suffices; mirrored for the
+///     negative side.)
+///
+/// A second sweep mops up f64 rounding from the first; the residual after
+/// repair is a few ulps of accumulation, far inside the solver's KKT
+/// tolerance. An already-feasible seed (e.g. the union of converged child
+/// solutions, each with `Σ αᵢ yᵢ = 0`) passes through bit-unchanged.
+pub fn repair_seed(y: &[f32], c: f64, seed: &[f32]) -> Vec<f64> {
+    assert_eq!(seed.len(), y.len());
+    let mut alpha: Vec<f64> = seed.iter().map(|&a| (a as f64).clamp(0.0, c)).collect();
+    for _pass in 0..2 {
+        let delta: f64 = alpha.iter().zip(y).map(|(&a, &yi)| a * yi as f64).sum();
+        if delta == 0.0 {
+            break;
+        }
+        let surplus_pos = delta > 0.0;
+        let mut need = delta.abs();
+        for (a, &yi) in alpha.iter_mut().zip(y) {
+            if need <= 0.0 {
+                break;
+            }
+            if surplus_pos != (yi > 0.0) {
+                continue;
+            }
+            let cut = a.min(need);
+            *a -= cut;
+            need -= cut;
+        }
+    }
+    alpha
+}
+
 /// Solve the dual with the working-set engine. Returns the solution plus
 /// the shrink bookkeeping (cache counters live on `src`).
 pub fn solve(
@@ -244,6 +284,33 @@ pub fn solve(
     y: &[f32],
     p: &SvmParams,
     cfg: &EngineConfig,
+) -> (SmoSolution, ShrinkStats) {
+    solve_with(src, y, p, cfg, None)
+}
+
+/// Warm-started solve: [`repair_seed`] projects `seed` onto the feasible
+/// set, `f` is rebuilt from the seeded support vectors (one kernel row per
+/// nonzero alpha — the same rows a converged solve would hold hot), and
+/// the ordinary working-set loop runs from there. The converged duals
+/// satisfy the *same* full-set KKT tolerance as a cold solve — warm
+/// starting moves the starting point, never the stopping test. An
+/// all-zero seed reproduces the cold trajectory bit-for-bit.
+pub fn solve_seeded(
+    src: &mut dyn KernelSource,
+    y: &[f32],
+    p: &SvmParams,
+    cfg: &EngineConfig,
+    seed: &[f32],
+) -> (SmoSolution, ShrinkStats) {
+    solve_with(src, y, p, cfg, Some(seed))
+}
+
+fn solve_with(
+    src: &mut dyn KernelSource,
+    y: &[f32],
+    p: &SvmParams,
+    cfg: &EngineConfig,
+    seed: Option<&[f32]>,
 ) -> (SmoSolution, ShrinkStats) {
     let n = y.len();
     assert_eq!(src.n(), n);
@@ -253,8 +320,17 @@ pub fn solve(
     let threads = parallel::resolve_threads(cfg.threads);
 
     let yd: Vec<f64> = y.iter().map(|&v| v as f64).collect();
-    let mut alpha = vec![0.0f64; n];
+    let mut alpha = match seed {
+        Some(s) => repair_seed(y, c, s),
+        None => vec![0.0f64; n],
+    };
     let mut f: Vec<f64> = yd.iter().map(|&v| -v).collect();
+    if seed.is_some() && alpha.iter().any(|&a| a > eps) {
+        // f[t] = -y_t + Σ_j α_j y_j K(t,j): the reconstruct_f pattern over
+        // every index, one kernel row per seeded SV.
+        let all: Vec<usize> = (0..n).collect();
+        reconstruct_f(src, &yd, &alpha, &mut f, &all, eps);
+    }
     let mut active = ActiveSet::full(n);
 
     let mut iters = 0usize;
@@ -597,6 +673,125 @@ mod tests {
         assert_eq!(sol.iters, 0);
         // No violating pair was ever selected, so no kernel row was needed.
         assert_eq!(cache.stats().misses, 0);
+    }
+
+    #[test]
+    fn repair_seed_clips_to_box_and_restores_equality() {
+        for seed in [3u64, 11, 42, 77] {
+            let prob = blobs(20, 3, 1.0, seed);
+            let c = 1.0f64;
+            // Deterministic pseudo-random infeasible seed: out-of-box values
+            // of both signs, unbalanced across classes.
+            let raw: Vec<f32> = (0..prob.n())
+                .map(|i| {
+                    let h = (i as u64).wrapping_mul(seed.wrapping_mul(2654435761)).wrapping_add(7);
+                    ((h % 400) as f32) / 100.0 - 1.0 // in [-1, 3)
+                })
+                .collect();
+            let rep = repair_seed(&prob.y, c, &raw);
+            let mut dot = 0.0f64;
+            for (i, &a) in rep.iter().enumerate() {
+                let clipped = (raw[i] as f64).clamp(0.0, c);
+                assert!((0.0..=c).contains(&a), "box violated: {a}");
+                assert!(a <= clipped + 1e-12, "repair raised an alpha: {a} > {clipped}");
+                dot += a * prob.y[i] as f64;
+            }
+            assert!(dot.abs() < 1e-9, "equality residual {dot} (seed {seed})");
+        }
+    }
+
+    #[test]
+    fn repair_seed_keeps_feasible_seeds_unchanged() {
+        let prob = blobs(25, 4, 1.5, 9);
+        let p = SvmParams::default();
+        let mut cache = KernelCache::new(&prob.x, prob.n(), prob.d, p.gamma, 0, 1);
+        let (sol, _) = solve(&mut cache, &prob.y, &p, &EngineConfig::default());
+        let rep = repair_seed(&prob.y, p.c as f64, &sol.alpha);
+        for (r, &a) in rep.iter().zip(&sol.alpha) {
+            assert_eq!(*r, a as f64, "feasible seed must pass through unchanged");
+        }
+    }
+
+    #[test]
+    fn zero_seed_is_bit_identical_to_cold() {
+        let prob = blobs(40, 4, 1.0, 13);
+        let p = SvmParams::default();
+        let n = prob.n();
+        let mut c1 = KernelCache::new(&prob.x, n, prob.d, p.gamma, 0, 1);
+        let (cold, _) = solve(&mut c1, &prob.y, &p, &EngineConfig::default());
+        let mut c2 = KernelCache::new(&prob.x, n, prob.d, p.gamma, 0, 1);
+        let zeros = vec![0.0f32; n];
+        let (warm, _) = solve_seeded(&mut c2, &prob.y, &p, &EngineConfig::default(), &zeros);
+        assert_eq!(cold.iters, warm.iters);
+        assert_eq!(cold.bias.to_bits(), warm.bias.to_bits());
+        for (a, b) in cold.alpha.iter().zip(&warm.alpha) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn warm_from_converged_solution_takes_no_iterations() {
+        for seed in [8u64, 21, 29] {
+            let prob = blobs(30, 4, 1.2, seed);
+            let p = SvmParams::default();
+            let n = prob.n();
+            let mut c1 = KernelCache::new(&prob.x, n, prob.d, p.gamma, 0, 1);
+            let (cold, _) = solve(&mut c1, &prob.y, &p, &EngineConfig::default());
+            assert!(cold.converged);
+            let mut c2 = KernelCache::new(&prob.x, n, prob.d, p.gamma, 0, 1);
+            let (warm, _) = solve_seeded(&mut c2, &prob.y, &p, &EngineConfig::default(), &cold.alpha);
+            assert!(warm.converged);
+            assert_eq!(warm.iters, 0, "an optimal seed has no violating pair left");
+        }
+    }
+
+    #[test]
+    fn warm_start_meets_full_kkt_and_never_exceeds_cold_iterations() {
+        // The cascade seeding shape: solve a subset, scatter its alphas into
+        // a full-length seed, warm-start the full problem. The warm solve
+        // must hit the same full-set KKT tolerance in no more iterations
+        // than cold.
+        for seed in [7u64, 19, 37, 53] {
+            let prob = blobs(35, 4, 1.5, seed);
+            let p = SvmParams::default();
+            let n = prob.n();
+            let k = kernel::rbf_gram(&prob.x, n, prob.d, p.gamma);
+
+            let mut c_cold = KernelCache::new(&prob.x, n, prob.d, p.gamma, 0, 1);
+            let (cold, _) = solve(&mut c_cold, &prob.y, &p, &EngineConfig::default());
+            assert!(cold.converged);
+
+            // Subset = first 60% of rows (both classes present: blobs lays
+            // out per_class of each, and 60% > 50%).
+            let m = n * 3 / 5;
+            let sub_x = prob.x[..m * prob.d].to_vec();
+            let sub_y = prob.y[..m].to_vec();
+            let mut c_sub = KernelCache::new(&sub_x, m, prob.d, p.gamma, 0, 1);
+            let (sub, _) = solve(&mut c_sub, &sub_y, &p, &EngineConfig::default());
+            let mut seed_alpha = vec![0.0f32; n];
+            seed_alpha[..m].copy_from_slice(&sub.alpha);
+
+            let mut c_warm = KernelCache::new(&prob.x, n, prob.d, p.gamma, 0, 1);
+            let (warm, _) =
+                solve_seeded(&mut c_warm, &prob.y, &p, &EngineConfig::default(), &seed_alpha);
+            assert!(warm.converged);
+            assert!(
+                smo::kkt_violation(&k, &prob.y, &warm.alpha, p.c) <= 2.0 * p.tol + 1e-4,
+                "warm solve must satisfy the same full-set KKT tolerance (seed {seed})"
+            );
+            let mut dot = 0.0f64;
+            for i in 0..n {
+                assert!(warm.alpha[i] >= -1e-6 && warm.alpha[i] <= p.c + 1e-6);
+                dot += (warm.alpha[i] * prob.y[i]) as f64;
+            }
+            assert!(dot.abs() < 1e-3);
+            assert!(
+                warm.iters <= cold.iters,
+                "warm {} > cold {} iterations (seed {seed})",
+                warm.iters,
+                cold.iters
+            );
+        }
     }
 
     #[test]
