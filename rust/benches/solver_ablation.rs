@@ -7,9 +7,11 @@
 //! serve-throughput comparison (legacy per-pair path vs the compiled
 //! shared-SV engine at 1 and 2 shard workers, and the f16 quantized pack
 //! with its accuracy delta, on iris/wdbc), the per-rank shared
-//! cross-pair kernel-row cache on the OvO workload, and the
+//! cross-pair kernel-row cache on the OvO workload, the
 //! direct-vs-cascade scaling curve on the growing synthetic two-class
-//! workload, each point run warm-started and cold (schema v8).
+//! workload, each point run warm-started and cold, and the elastic
+//! recovery-overhead row: the same checkpointed 4-rank solve fault-free
+//! vs with rank 1 killed mid-solve (schema v9).
 //!
 //! Native-only — runs from a clean checkout, no `make artifacts` needed:
 //!
@@ -31,8 +33,10 @@
 //! cascade front disagrees with the direct solve beyond the documented
 //! tolerance or fails to beat it at the largest row count, if the
 //! warm-started merge tree spends more SMO iterations than the cold one
-//! anywhere on the curve (the warm seed must never cost work), or if the
-//! shared cross-pair cache records no reuse on the OvO workload.
+//! anywhere on the curve (the warm seed must never cost work), if the
+//! shared cross-pair cache records no reuse on the OvO workload, or if
+//! the killed-rank elastic run failed to detect and restore (a recovery
+//! row that never recovered prices nothing).
 
 use parasvm::harness::{
     run_solver_ablation, LABEL_PANEL_FUSED, LABEL_SCALAR_ROWS, LABEL_SIMD_ROWS,
@@ -204,4 +208,29 @@ fn main() {
     );
     assert!(sc.hit_rate > 0.0, "shared cache recorded no hits");
     assert!(sc.cross_pair_hits > 0, "shared cache recorded no cross-pair reuse");
+
+    // Recovery gate: the killed-rank elastic run must actually have gone
+    // through detect → restore (the harness already pinned its solution
+    // bitwise to the fault-free run), and the overhead number must be a
+    // real measurement.
+    let rec = ablation.recovery.first().expect("recovery row");
+    println!(
+        "elastic recovery (kill rank {}/{} at iter {}): fault-free {:.3}s killed {:.3}s \
+         ({:.2}x), {} detections {} restores {} wasted iters",
+        rec.kill_rank,
+        rec.ranks,
+        rec.kill_iter,
+        rec.fault_free_secs,
+        rec.killed_secs,
+        rec.overhead_ratio,
+        rec.detections,
+        rec.restores,
+        rec.wasted_iters
+    );
+    assert_eq!(rec.detections, 1, "killed-rank run detected {} failures", rec.detections);
+    assert!(rec.restores >= 1, "killed-rank run never restored a checkpoint");
+    assert!(
+        rec.fault_free_secs > 0.0 && rec.killed_secs > 0.0 && rec.overhead_ratio > 0.0,
+        "recovery row carries no measurement"
+    );
 }

@@ -15,6 +15,7 @@ pub const TAG_REDUCE: u32 = 0xC000_0004;
 pub const TAG_BARRIER: u32 = 0xC000_0005;
 pub const TAG_REDUCE_PAIR: u32 = 0xC000_0006;
 pub const TAG_ALLGATHER: u32 = 0xC000_0007;
+pub const TAG_FAULT: u32 = 0xC000_0008;
 
 /// One rank's candidate in a MINLOC/MAXLOC-style reduction: a comparison
 /// `key`, the global `index` it belongs to (`u64::MAX` = "no candidate"),
@@ -295,6 +296,84 @@ impl Comm {
         }
     }
 
+    /// Failure consensus: after a collective fails with a dead-peer
+    /// signature (a fast-failing send to a dropped inbox, or a receive
+    /// timeout), every survivor calls this on the SAME communicator the
+    /// failure happened on, and all of them return the same list of dead
+    /// ranks (comm-rank indices) — the `RankFailed(r)` verdict the
+    /// recovery path re-shards around.
+    ///
+    /// Two phases, all on [`TAG_FAULT`]:
+    /// 1. *Probe*: send an alive-probe to every peer, then receive one
+    ///    from each. A failed send (inbox gone) is death evidence now; a
+    ///    probe that never arrives is death evidence after the timeout.
+    /// 2. *Union*: exchange suspicion masks with every believed-alive
+    ///    peer and take the union, so survivors that never talked to the
+    ///    dead rank directly (e.g. non-roots of a root-relayed collective
+    ///    that only saw the root go quiet) still agree on WHO died.
+    ///
+    /// Probes run under a doubled receive timeout: survivors enter
+    /// consensus up to one full timeout apart (the root detects a dead
+    /// send instantly, non-roots only when their relay receive expires),
+    /// and a live peer must not be condemned for that skew. Assumes
+    /// fail-stop ranks (dead or responsive — what [`super::FaultPlan`]
+    /// scripts); a rank that is merely slower than 2x the timeout is
+    /// indistinguishable from dead, as in any timeout-based detector.
+    pub fn failure_consensus(&mut self) -> Result<Vec<usize>> {
+        let me = self.rank();
+        let saved = self.recv_timeout();
+        self.set_recv_timeout(saved * 2);
+        let verdict = self.failure_consensus_inner(me);
+        self.set_recv_timeout(saved);
+        let suspect = verdict?;
+        if suspect[me] {
+            return Err(Error::Cluster(format!(
+                "rank {me}: survivors declared this rank dead (partitioned world)"
+            )));
+        }
+        Ok((0..self.size()).filter(|&r| suspect[r]).collect())
+    }
+
+    fn failure_consensus_inner(&mut self, me: usize) -> Result<Vec<bool>> {
+        let mut suspect = vec![false; self.size()];
+        for dst in 0..self.size() {
+            if dst != me && self.send(dst, TAG_FAULT, vec![1]).is_err() {
+                suspect[dst] = true;
+            }
+        }
+        for src in 0..self.size() {
+            if src != me && !suspect[src] && self.recv(src, TAG_FAULT).is_err() {
+                suspect[src] = true;
+            }
+        }
+        // Per-sender FIFO ordering means a peer's phase-1 probe is always
+        // matched before its phase-2 mask, even when the peer races ahead.
+        let mine: Vec<u64> =
+            (0..self.size()).filter(|&r| suspect[r]).map(|r| r as u64).collect();
+        for dst in 0..self.size() {
+            if dst != me && !suspect[dst] {
+                // A failed mask send is re-classified by the recv below.
+                let _ = self.send_u64s(dst, TAG_FAULT, &mine);
+            }
+        }
+        for src in 0..self.size() {
+            if src == me || suspect[src] {
+                continue;
+            }
+            match self.recv_u64s(src, TAG_FAULT) {
+                Ok(mask) => {
+                    for r in mask {
+                        if (r as usize) < self.size() {
+                            suspect[r as usize] = true;
+                        }
+                    }
+                }
+                Err(_) => suspect[src] = true,
+            }
+        }
+        Ok(suspect)
+    }
+
     /// Barrier: empty gather + empty bcast.
     pub fn barrier(&mut self) -> Result<()> {
         if self.rank() == 0 {
@@ -558,5 +637,66 @@ mod tests {
         // root sends 3 messages of 1 KiB
         assert_eq!(stats.messages(), 3);
         assert_eq!(stats.bytes(), 3 * 1024);
+    }
+
+    #[test]
+    fn failure_consensus_agrees_on_the_dead_rank() {
+        use std::time::Duration;
+        // Rank 2 dies before the round; every survivor must converge on
+        // the same verdict, including ranks that would not have noticed
+        // the death directly.
+        let out = Universe::new(4, CostModel::free())
+            .with_recv_timeout(Duration::from_millis(100))
+            .run(|mut c| {
+                if c.rank() == 2 {
+                    return vec![usize::MAX];
+                }
+                c.failure_consensus().unwrap()
+            });
+        for r in [0, 1, 3] {
+            assert_eq!(out[r], vec![2], "rank {r} verdict");
+        }
+    }
+
+    #[test]
+    fn failure_consensus_with_all_ranks_alive_is_empty() {
+        let out = Universe::new(3, CostModel::free()).run(|mut c| c.failure_consensus().unwrap());
+        for v in out {
+            assert!(v.is_empty());
+        }
+    }
+
+    #[test]
+    fn failure_consensus_handles_multiple_dead_ranks() {
+        use std::time::Duration;
+        let out = Universe::new(5, CostModel::free())
+            .with_recv_timeout(Duration::from_millis(100))
+            .run(|mut c| {
+                if c.rank() == 1 || c.rank() == 3 {
+                    return vec![usize::MAX];
+                }
+                c.failure_consensus().unwrap()
+            });
+        for r in [0, 2, 4] {
+            assert_eq!(out[r], vec![1, 3], "rank {r} verdict");
+        }
+    }
+
+    #[test]
+    fn failure_consensus_tolerates_a_merely_slow_rank() {
+        use std::time::Duration;
+        // Rank 1 is late to the round by well under the doubled probe
+        // horizon: nobody may condemn it.
+        let out = Universe::new(3, CostModel::free())
+            .with_recv_timeout(Duration::from_millis(200))
+            .run(|mut c| {
+                if c.rank() == 1 {
+                    std::thread::sleep(Duration::from_millis(80));
+                }
+                c.failure_consensus().unwrap()
+            });
+        for v in out {
+            assert!(v.is_empty(), "slow is not dead: {v:?}");
+        }
     }
 }

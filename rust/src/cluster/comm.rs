@@ -24,6 +24,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::costmodel::{CostModel, NetStats};
+use super::fault::FaultPlan;
 use crate::error::{Error, Result};
 
 /// Message envelope on the simulated wire. `src` is a world-mesh index;
@@ -72,14 +73,16 @@ struct SplitSlot {
 
 impl SplitBoard {
     /// Publish `(color, key)` under `(parent ctx, split seq)` and block
-    /// until all `size` parent ranks have published; returns the full
-    /// table ordered by parent rank. The slot is freed once every rank has
-    /// read it. Times out (instead of deadlocking) if a peer never joins
-    /// the collective.
+    /// until every rank in `expected` (ascending parent ranks; the whole
+    /// parent world for an ordinary split, the survivor set for a
+    /// post-failure one) has published; returns the full table ordered by
+    /// parent rank. The slot is freed once every expected rank has read
+    /// it. Times out (instead of deadlocking) if a peer never joins the
+    /// collective, naming the ranks still missing from the slot.
     fn exchange(
         &self,
         slot: (u32, u32),
-        size: usize,
+        expected: &[usize],
         rank: usize,
         color: u64,
         key: u64,
@@ -92,11 +95,11 @@ impl SplitBoard {
         loop {
             {
                 let s = slots.get_mut(&slot).expect("split slot vanished");
-                if s.entries.len() == size {
+                if s.entries.len() == expected.len() {
                     let table: Vec<(usize, u64, u64)> =
                         s.entries.iter().map(|(&r, &(c, k))| (r, c, k)).collect();
                     s.reads += 1;
-                    if s.reads == size {
+                    if s.reads == expected.len() {
                         slots.remove(&slot);
                     }
                     self.cv.notify_all();
@@ -105,6 +108,16 @@ impl SplitBoard {
             }
             let remaining = deadline.saturating_duration_since(Instant::now());
             if remaining.is_zero() {
+                // Name the absentees BEFORE withdrawing our own entry —
+                // the diagnostic must describe the slot as we saw it.
+                let missing: Vec<String> = {
+                    let s = slots.get(&slot);
+                    expected
+                        .iter()
+                        .filter(|r| !s.is_some_and(|s| s.entries.contains_key(r)))
+                        .map(|r| r.to_string())
+                        .collect()
+                };
                 // Withdraw our entry so a late-arriving peer cannot
                 // "complete" the split with a member that already gave up —
                 // it will time out (fail fast) against the missing entry
@@ -119,7 +132,8 @@ impl SplitBoard {
                     }
                 }
                 return Err(Error::Cluster(format!(
-                    "rank {rank}: timeout in Comm::split (a peer never joined the collective)"
+                    "rank {rank}: timeout in Comm::split (rank(s) {} never joined the collective)",
+                    missing.join(", ")
                 )));
             }
             slots = self
@@ -167,6 +181,8 @@ pub struct Comm {
     /// Collective split counter (derives deterministic child contexts).
     splits: u32,
     board: Arc<SplitBoard>,
+    /// Scripted faults for this world (empty outside fault tests).
+    faults: Arc<FaultPlan>,
 }
 
 impl Comm {
@@ -180,6 +196,8 @@ impl Comm {
         stats: Arc<NetStats>,
         model: CostModel,
         board: Arc<SplitBoard>,
+        recv_timeout: Duration,
+        faults: Arc<FaultPlan>,
     ) -> Comm {
         Comm {
             rank,
@@ -191,9 +209,10 @@ impl Comm {
             mailbox: Arc::new(Mutex::new(Mailbox::new(inbox))),
             stats,
             model,
-            recv_timeout: Duration::from_secs(30),
+            recv_timeout,
             splits: 0,
             board,
+            faults,
         }
     }
 
@@ -213,11 +232,44 @@ impl Comm {
         self.model
     }
 
-    /// Override the receive timeout (default 30s). Derived communicators
-    /// inherit the parent's value at split time. Failure-injection tests
-    /// use short timeouts to exercise the deadlock-detection path.
+    /// Override the receive timeout (the world default comes from
+    /// `Universe::with_recv_timeout`, itself 30s unless configured, e.g.
+    /// via `--comm-timeout`). Derived communicators inherit the parent's
+    /// value at split time. Failure-injection tests use short timeouts to
+    /// exercise the deadlock-detection path.
     pub fn set_recv_timeout(&mut self, timeout: Duration) {
         self.recv_timeout = timeout;
+    }
+
+    /// The timeout after which a silent peer is suspected dead.
+    pub fn recv_timeout(&self) -> Duration {
+        self.recv_timeout
+    }
+
+    /// My rank in the *world* mesh (stable across splits; the rank space
+    /// [`FaultPlan`] addresses).
+    pub fn world_rank(&self) -> usize {
+        self.world_rank
+    }
+
+    /// Communicator rank -> world rank for every member of this comm.
+    pub fn group(&self) -> &[usize] {
+        &self.group
+    }
+
+    /// Apply any scripted fault for this rank at solver iteration `iter`:
+    /// scripted delays sleep inline; returns `true` when the plan kills
+    /// this rank here, in which case the caller must abandon the solve and
+    /// let the rank thread die (dropping its inbox, so peers observe the
+    /// real failure signatures: fast-failing sends and timed-out recvs).
+    pub fn fault_tick(&self, iter: usize) -> bool {
+        if self.faults.is_empty() {
+            return false;
+        }
+        if let Some(d) = self.faults.delay_at(self.world_rank, iter) {
+            std::thread::sleep(d);
+        }
+        self.faults.kills_at(self.world_rank, iter)
     }
 
     /// MPI_Comm_split: collectively derive a sub-communicator from this
@@ -249,9 +301,10 @@ impl Comm {
         stats: Arc<NetStats>,
     ) -> Result<Comm> {
         self.splits += 1;
+        let expected: Vec<usize> = (0..self.size).collect();
         let table = self.board.exchange(
             (self.ctx, self.splits),
-            self.size,
+            &expected,
             self.rank,
             color as u64,
             key as u64,
@@ -281,6 +334,55 @@ impl Comm {
             recv_timeout: self.recv_timeout,
             splits: 0,
             board: Arc::clone(&self.board),
+            faults: Arc::clone(&self.faults),
+        })
+    }
+
+    /// Derive a sub-communicator over the `survivors` of this one —
+    /// [`Comm::split`] for a world that has lost ranks. An ordinary split
+    /// is collective over ALL parent ranks, so a dead peer would stall it
+    /// until timeout; here the rendezvous waits only for the listed
+    /// survivors (ascending parent ranks, which must include the caller).
+    /// Every survivor must pass the same list — they agreed on it in the
+    /// failure-consensus round — and ranks keep their relative order, so
+    /// the pair reductions' rank-order tie-breaking is preserved.
+    ///
+    /// The child inherits this communicator's level (model + stats),
+    /// timeout, and fault plan, under a fresh context id — stale traffic
+    /// from the failed epoch can never match the new communicator.
+    pub fn split_survivors(&mut self, survivors: &[usize]) -> Result<Comm> {
+        assert!(
+            survivors.windows(2).all(|w| w[0] < w[1]),
+            "survivor list must be ascending and duplicate-free"
+        );
+        let me = survivors
+            .iter()
+            .position(|&r| r == self.rank)
+            .expect("caller must be in its own survivor list");
+        self.splits += 1;
+        self.board.exchange(
+            (self.ctx, self.splits),
+            survivors,
+            self.rank,
+            0,
+            self.rank as u64,
+            self.recv_timeout,
+        )?;
+        let group: Vec<usize> = survivors.iter().map(|&r| self.group[r]).collect();
+        Ok(Comm {
+            rank: me,
+            size: survivors.len(),
+            ctx: derive_ctx(self.ctx, self.splits, 0),
+            group: Arc::new(group),
+            world_rank: self.world_rank,
+            senders: Arc::clone(&self.senders),
+            mailbox: Arc::clone(&self.mailbox),
+            stats: Arc::clone(&self.stats),
+            model: self.model,
+            recv_timeout: self.recv_timeout,
+            splits: 0,
+            board: Arc::clone(&self.board),
+            faults: Arc::clone(&self.faults),
         })
     }
 
@@ -579,5 +681,71 @@ mod tests {
             }
         });
         assert!(out[0] && out[1], "both ranks must observe the failed split");
+    }
+
+    #[test]
+    fn split_timeout_names_the_missing_ranks() {
+        // Rank 2 never joins; the survivors' diagnostics must say WHICH
+        // rank is absent, not just that "a peer" is.
+        let out = Universe::new(3, CostModel::free()).run(|mut comm| {
+            if comm.rank() == 2 {
+                return String::new();
+            }
+            comm.set_recv_timeout(Duration::from_millis(50));
+            comm.split(0, 0).unwrap_err().to_string()
+        });
+        for msg in &out[..2] {
+            assert!(msg.contains("split"), "{msg}");
+            // The first withdrawer may appear in the other's list too, but
+            // the truly absent rank must always be named.
+            assert!(msg.contains('2'), "{msg}");
+            assert!(msg.contains("never joined"), "{msg}");
+        }
+    }
+
+    #[test]
+    fn split_survivors_regroups_without_the_dead_rank() {
+        // Rank 1 "dies" (returns early, dropping its inbox); survivors
+        // 0, 2, 3 regroup by rendezvousing among themselves only — an
+        // ordinary split would stall against the dead member.
+        let out = Universe::new(4, CostModel::free()).run(|mut comm| {
+            if comm.rank() == 1 {
+                return -1.0f32;
+            }
+            let mut sub = comm.split_survivors(&[0, 2, 3]).unwrap();
+            assert_eq!(sub.size(), 3);
+            assert_eq!(sub.group(), &[0, 2, 3], "world ranks preserved in order");
+            if sub.rank() == 0 {
+                sub.send_f32s(2, 9, &[7.5]).unwrap();
+                0.0
+            } else if sub.rank() == 2 {
+                sub.recv_f32s(0, 9).unwrap()[0]
+            } else {
+                0.0
+            }
+        });
+        assert_eq!(out[3], 7.5, "parent rank 3 is survivor rank 2");
+    }
+
+    #[test]
+    fn stale_parent_traffic_does_not_cross_into_the_survivor_comm() {
+        // A message sent on the parent context before the failure must not
+        // satisfy a receive on the freshly derived survivor context.
+        let out = Universe::new(3, CostModel::free()).run(|mut comm| {
+            if comm.rank() == 2 {
+                // The "failing" rank gets one last parent-ctx message out
+                // before dying.
+                comm.send_f32s(0, 4, &[666.0]).unwrap();
+                return 0.0f32;
+            }
+            let mut sub = comm.split_survivors(&[0, 1]).unwrap();
+            if sub.rank() == 1 {
+                sub.send_f32s(0, 4, &[1.25]).unwrap();
+                0.0
+            } else {
+                sub.recv_f32s(1, 4).unwrap()[0]
+            }
+        });
+        assert_eq!(out[0], 1.25, "survivor recv must skip the stale epoch's payload");
     }
 }

@@ -1,0 +1,195 @@
+//! Deterministic fault injection and recovery accounting.
+//!
+//! Real clusters lose ranks at the worst possible iteration; a simulated
+//! cluster can lose them at a *chosen* one. A [`FaultPlan`] scripts
+//! failures against world ranks — kill rank `r` when its solver reaches
+//! iteration `k`, or delay it there by `d` — and travels through the
+//! [`super::Universe`] into every rank's [`super::Comm`], so the solver
+//! loop can consult it with one cheap call per iteration
+//! ([`super::Comm::fault_tick`]). A killed rank's thread simply returns:
+//! its inbox receiver drops, peers' sends to it fail fast with
+//! "rank r hung up", and their receives time out — exactly the two
+//! signatures the recovery path classifies as a suspected failure.
+//!
+//! Because the plan is data (not a random process), a kill at iteration
+//! `k` reproduces the same detection, the same survivor consensus, and —
+//! with checkpoint restore — the same bit-for-bit resumed trajectory on
+//! every run, which is what makes recovery *testable* rather than merely
+//! plausible.
+//!
+//! [`FaultReport`] is the ledger on the other side: how many failures
+//! were detected, how many times the rows were re-sharded over survivors,
+//! how many checkpoint restores happened, and how many solver iterations
+//! were thrown away (work past the last consistent checkpoint). It rides
+//! in `SolveOutcome` next to the per-level `NetReport`s and rolls up
+//! through `MulticlassReport`.
+
+use std::time::Duration;
+
+use crate::error::Error;
+
+/// Does this error carry a dead-peer signature — a send into a dropped
+/// inbox ("hung up") or an expired receive ("timeout")? Those are the
+/// only two ways a fail-stop rank manifests to its peers, and the only
+/// errors the recovery path treats as survivable; anything else (length
+/// mismatches, invalid ranks, decode failures) is a logic error and
+/// still fails fast.
+pub fn is_comm_failure(e: &Error) -> bool {
+    match e {
+        Error::Cluster(m) => m.contains("hung up") || m.contains("timeout"),
+        _ => false,
+    }
+}
+
+/// One scripted fault against a single world rank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Fault {
+    /// Rank `rank` dies when its solver reaches iteration `iter`.
+    Kill { rank: usize, iter: usize },
+    /// Rank `rank` stalls for `delay` at iteration `iter` (alive but slow
+    /// — must *not* be mistaken for dead by a well-tuned timeout).
+    Delay { rank: usize, iter: usize, delay: Duration },
+}
+
+/// A deterministic script of rank failures, keyed by (world rank,
+/// solver iteration). Empty by default: no faults, zero overhead.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Script rank `rank` to die when its solve reaches iteration `iter`.
+    pub fn kill(mut self, rank: usize, iter: usize) -> FaultPlan {
+        self.faults.push(Fault::Kill { rank, iter });
+        self
+    }
+
+    /// Script rank `rank` to stall for `delay` at iteration `iter`.
+    pub fn delay(mut self, rank: usize, iter: usize, delay: Duration) -> FaultPlan {
+        self.faults.push(Fault::Delay { rank, iter, delay });
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Does the plan kill `rank` at exactly iteration `iter`? (A dead
+    /// rank's thread is gone, so a match can only ever fire once.)
+    pub fn kills_at(&self, rank: usize, iter: usize) -> bool {
+        self.faults
+            .iter()
+            .any(|f| matches!(f, Fault::Kill { rank: r, iter: k } if *r == rank && *k == iter))
+    }
+
+    /// The scripted stall for `rank` at iteration `iter`, if any.
+    pub fn delay_at(&self, rank: usize, iter: usize) -> Option<Duration> {
+        self.faults.iter().find_map(|f| match f {
+            Fault::Delay { rank: r, iter: k, delay } if *r == rank && *k == iter => Some(*delay),
+            _ => None,
+        })
+    }
+}
+
+/// Recovery-event counters for one (possibly multi-attempt) solve.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultReport {
+    /// Rank failures agreed on by survivor consensus.
+    pub detections: u64,
+    /// Times the row partition was recomputed over a smaller world.
+    pub resharding_rounds: u64,
+    /// Checkpoint restores (a cold restart after a failure with no usable
+    /// checkpoint does not count).
+    pub restores: u64,
+    /// Solver iterations discarded: progress past the last consistent
+    /// checkpoint at the moment a failure was detected.
+    pub wasted_iters: u64,
+}
+
+impl FaultReport {
+    /// The quiet report: nothing failed, nothing recovered.
+    pub fn none() -> FaultReport {
+        FaultReport::default()
+    }
+
+    /// True when any recovery event was recorded.
+    pub fn any(&self) -> bool {
+        *self != FaultReport::default()
+    }
+
+    /// Accumulate another report (used by multiclass roll-up).
+    pub fn merge(&mut self, other: &FaultReport) {
+        self.detections += other.detections;
+        self.resharding_rounds += other.resharding_rounds;
+        self.restores += other.restores;
+        self.wasted_iters += other.wasted_iters;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comm_failure_classifier_matches_only_dead_peer_signatures() {
+        assert!(is_comm_failure(&Error::Cluster("rank 3 hung up".into())));
+        assert!(is_comm_failure(&Error::Cluster(
+            "rank 0: timeout waiting for (src=1, tag=7)".into()
+        )));
+        assert!(!is_comm_failure(&Error::Cluster("allreduce length mismatch".into())));
+        assert!(!is_comm_failure(&Error::Data("spill x: bad magic".into())));
+    }
+
+    #[test]
+    fn empty_plan_matches_nothing() {
+        let plan = FaultPlan::new();
+        assert!(plan.is_empty());
+        assert!(!plan.kills_at(0, 0));
+        assert_eq!(plan.delay_at(0, 0), None);
+    }
+
+    #[test]
+    fn kill_matches_only_its_rank_and_iteration() {
+        let plan = FaultPlan::new().kill(1, 40);
+        assert!(plan.kills_at(1, 40));
+        assert!(!plan.kills_at(1, 39));
+        assert!(!plan.kills_at(1, 41));
+        assert!(!plan.kills_at(0, 40));
+        assert!(!plan.is_empty());
+    }
+
+    #[test]
+    fn delay_reports_its_duration() {
+        let plan = FaultPlan::new().delay(2, 7, Duration::from_millis(5));
+        assert_eq!(plan.delay_at(2, 7), Some(Duration::from_millis(5)));
+        assert_eq!(plan.delay_at(2, 8), None);
+        assert!(!plan.kills_at(2, 7));
+    }
+
+    #[test]
+    fn plans_compose_kills_and_delays() {
+        let plan = FaultPlan::new().kill(3, 10).delay(1, 5, Duration::from_millis(1)).kill(2, 10);
+        assert!(plan.kills_at(3, 10));
+        assert!(plan.kills_at(2, 10));
+        assert_eq!(plan.delay_at(1, 5), Some(Duration::from_millis(1)));
+    }
+
+    #[test]
+    fn report_merge_sums_counters() {
+        let mut a =
+            FaultReport { detections: 1, resharding_rounds: 1, restores: 2, wasted_iters: 30 };
+        let b = FaultReport { detections: 1, resharding_rounds: 0, restores: 1, wasted_iters: 12 };
+        a.merge(&b);
+        assert_eq!(
+            a,
+            FaultReport { detections: 2, resharding_rounds: 1, restores: 3, wasted_iters: 42 }
+        );
+        assert!(a.any());
+        assert!(!FaultReport::none().any());
+    }
+}

@@ -51,15 +51,52 @@
 //! `(key, parent rank)`, so `key = parent rank` (or a constant) keeps the
 //! contiguous ascending order that makes the MINLOC/MAXLOC reductions'
 //! tie-breaking bit-identical to a serial ascending scan.
+//!
+//! # Surviving rank loss: detect, agree, re-shard, resume
+//!
+//! Through PR 8 a dead rank meant a clean abort: sends to its dropped
+//! inbox failed fast ("rank r hung up"), receives from it timed out, and
+//! the failure-injection tests pinned down that we *error out* rather
+//! than deadlock. The elastic layer turns that abort into a recovery:
+//!
+//! 1. **Detect** — any collective erroring with a dead-peer signature
+//!    ([`fault::is_comm_failure`]) makes the survivor enter
+//!    [`Comm::failure_consensus`]: an alive-probe round plus a
+//!    suspicion-mask union on the failed communicator, after which every
+//!    survivor holds the *same* dead-rank list. The receive timeout
+//!    (default 30s, `--comm-timeout`, [`Universe::with_recv_timeout`])
+//!    doubles as the failure-detection horizon.
+//! 2. **Agree & regroup** — survivors derive a fresh sub-world with
+//!    [`Comm::split_survivors`]: the split-board rendezvous waits only
+//!    for the agreed survivor set (an ordinary [`Comm::split`] would
+//!    stall against the dead member), keeps relative rank order (so the
+//!    pair reductions' tie-breaking is unchanged), and mints a fresh
+//!    context id so stale traffic from the failed epoch can never match.
+//! 3. **Re-shard & resume** — the solver re-partitions rows over the
+//!    survivors and restores the last consistent checkpoint (exact f64
+//!    alpha + full gradient + active set; format documented in
+//!    `data::checkpoint`, written atomically via write-then-rename and
+//!    validated — magic/version/length/checksum/problem-fingerprint —
+//!    before a single word is trusted). Because the distributed
+//!    trajectory is partition-independent, the resumed solve replays the
+//!    fault-free trajectory bit-for-bit.
+//!
+//! Faults themselves are first-class test inputs: a [`FaultPlan`]
+//! scripts kills/delays by (world rank, iteration) through the
+//! [`Universe`], and a [`FaultReport`] counts detections, resharding
+//! rounds, checkpoint restores, and wasted iterations next to the
+//! per-level [`NetReport`]s.
 
 pub mod collectives;
 pub mod comm;
 pub mod costmodel;
+pub mod fault;
 pub mod topology;
 pub mod universe;
 
 pub use collectives::PairCandidate;
 pub use comm::Comm;
 pub use costmodel::{CostModel, NetStats};
+pub use fault::{is_comm_failure, FaultPlan, FaultReport};
 pub use topology::{Level, LevelNet, NetReport, Topology, LEVEL_INTER, LEVEL_INTRA};
 pub use universe::Universe;

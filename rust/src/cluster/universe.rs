@@ -11,15 +11,23 @@
 
 use std::sync::mpsc;
 use std::sync::Arc;
+use std::time::Duration;
 
 use super::comm::{Comm, Envelope, SplitBoard};
 use super::costmodel::{CostModel, NetStats};
+use super::fault::FaultPlan;
+
+/// The receive timeout every rank starts with unless the universe (or
+/// `--comm-timeout`) says otherwise.
+pub const DEFAULT_RECV_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// A P-rank SPMD world.
 pub struct Universe {
     size: usize,
     model: CostModel,
     stats: Arc<NetStats>,
+    recv_timeout: Duration,
+    faults: Arc<FaultPlan>,
 }
 
 impl Universe {
@@ -31,7 +39,30 @@ impl Universe {
     /// (e.g. the first level of a [`super::Topology`]).
     pub fn with_stats(size: usize, model: CostModel, stats: Arc<NetStats>) -> Universe {
         assert!(size > 0, "universe needs at least one rank");
-        Universe { size, model, stats }
+        Universe {
+            size,
+            model,
+            stats,
+            recv_timeout: DEFAULT_RECV_TIMEOUT,
+            faults: Arc::new(FaultPlan::default()),
+        }
+    }
+
+    /// Set the default receive timeout every rank's world communicator
+    /// starts with (derived communicators inherit it at split time). This
+    /// is the `--comm-timeout` knob; it doubles as the failure-detection
+    /// horizon — a peer silent for this long is suspected dead.
+    pub fn with_recv_timeout(mut self, timeout: Duration) -> Universe {
+        self.recv_timeout = timeout;
+        self
+    }
+
+    /// Script deterministic faults (kill/delay by world rank + iteration)
+    /// into this world; every rank's [`Comm::fault_tick`] consults the
+    /// same plan.
+    pub fn with_faults(mut self, faults: FaultPlan) -> Universe {
+        self.faults = Arc::new(faults);
+        self
     }
 
     pub fn size(&self) -> usize {
@@ -75,6 +106,8 @@ impl Universe {
                 Arc::clone(&self.stats),
                 self.model,
                 Arc::clone(&board),
+                self.recv_timeout,
+                Arc::clone(&self.faults),
             );
             let f = Arc::clone(&f);
             handles.push(
@@ -151,5 +184,35 @@ mod tests {
         });
         assert_eq!(level.bytes(), 32);
         assert_eq!(level.messages(), 1);
+    }
+
+    #[test]
+    fn configured_recv_timeout_reaches_every_rank() {
+        let out = Universe::new(2, CostModel::free())
+            .with_recv_timeout(Duration::from_millis(40))
+            .run(|mut comm| {
+                assert_eq!(comm.recv_timeout(), Duration::from_millis(40));
+                if comm.rank() == 0 {
+                    // And it actually governs recv on a silent peer.
+                    comm.recv_f32s(1, 0).unwrap_err().to_string()
+                } else {
+                    String::new()
+                }
+            });
+        assert!(out[0].contains("timeout"), "{}", out[0]);
+    }
+
+    #[test]
+    fn fault_plan_kills_and_delays_deterministically() {
+        let plan = FaultPlan::new().kill(1, 3).delay(0, 0, Duration::from_millis(1));
+        let out = Universe::new(2, CostModel::free()).with_faults(plan).run(|comm| {
+            for iter in 0..10 {
+                if comm.fault_tick(iter) {
+                    return iter as i64;
+                }
+            }
+            -1
+        });
+        assert_eq!(out, vec![-1, 3], "rank 1 dies exactly at iteration 3, rank 0 never");
     }
 }

@@ -9,7 +9,7 @@ use crate::backend::Solver;
 use crate::cluster::CostModel;
 use crate::coordinator::{Partition, TrainConfig};
 use crate::error::{Error, Result};
-use crate::svm::solver::RowEval;
+use crate::svm::solver::{ElasticConfig, RowEval};
 use crate::svm::SvmParams;
 use crate::util::args::Args;
 use crate::util::json::{self, Json};
@@ -80,6 +80,24 @@ pub struct RunConfig {
     /// with `cascade_shards > 1` the trainer never materializes the full
     /// dataset at all ([`crate::svm::solver::cascade::solve_streaming`]).
     pub streaming: bool,
+    /// Receive timeout in seconds for every communicator in the run
+    /// (`--comm-timeout`, 0 = the library default of 30s), inherited by
+    /// every derived comm. Doubles as the failure-detection horizon for
+    /// elastic solves — shorter means faster rank-loss detection but
+    /// less slack for a slow peer.
+    pub comm_timeout: f64,
+    /// Checkpoint file for elastic distributed solves (`--checkpoint`,
+    /// empty = off): the solver snapshots alpha/gradient/active-set
+    /// there every `checkpoint_every` iterations (atomic write-then-
+    /// rename) and restores from it after rank loss or on restart.
+    pub checkpoint: String,
+    /// Snapshot cadence in iterations (`--checkpoint-every`, 0 = never
+    /// snapshot even when a checkpoint path is set).
+    pub checkpoint_every: usize,
+    /// Rank-loss recovery attempts before an elastic solve gives up
+    /// (`--max-rank-retries`), with exponential backoff between
+    /// attempts.
+    pub max_rank_retries: usize,
 }
 
 impl Default for RunConfig {
@@ -104,6 +122,10 @@ impl Default for RunConfig {
             cache_mb: 0,
             cascade_shards: 0,
             streaming: false,
+            comm_timeout: 0.0,
+            checkpoint: String::new(),
+            checkpoint_every: 0,
+            max_rank_retries: 1,
         }
     }
 }
@@ -125,6 +147,24 @@ impl RunConfig {
             row_eval: self.row_eval,
             cache_mb: self.cache_mb,
             cascade_shards: self.cascade_shards,
+            comm_timeout: self.comm_timeout,
+        }
+    }
+
+    /// The elastic-solve knobs as an [`ElasticConfig`] for
+    /// [`crate::svm::solver::DistributedSmo::solve_elastic`]: checkpoint
+    /// path/cadence, retry bound and the shared comm timeout. Backoff
+    /// keeps the library default; faults stay unscripted (a `FaultPlan`
+    /// is a test/bench input, not a run configuration).
+    pub fn elastic_config(&self) -> ElasticConfig {
+        ElasticConfig {
+            checkpoint: (!self.checkpoint.is_empty())
+                .then(|| std::path::PathBuf::from(&self.checkpoint)),
+            checkpoint_every: self.checkpoint_every,
+            max_rank_retries: self.max_rank_retries,
+            comm_timeout: (self.comm_timeout > 0.0)
+                .then(|| std::time::Duration::from_secs_f64(self.comm_timeout)),
+            ..ElasticConfig::default()
         }
     }
 
@@ -148,6 +188,14 @@ impl RunConfig {
         if args.flag("streaming") {
             self.streaming = true;
         }
+        self.comm_timeout = args.get("comm-timeout").map_err(e)?.unwrap_or(self.comm_timeout);
+        if let Some(v) = args.opt("checkpoint") {
+            self.checkpoint = v.to_string();
+        }
+        self.checkpoint_every =
+            args.get("checkpoint-every").map_err(e)?.unwrap_or(self.checkpoint_every);
+        self.max_rank_retries =
+            args.get("max-rank-retries").map_err(e)?.unwrap_or(self.max_rank_retries);
         if let Some(v) = args.opt("backend") {
             self.backend = v.parse().map_err(e)?;
         }
@@ -198,6 +246,9 @@ impl RunConfig {
         if !(0.0..=1.0).contains(&self.train_frac) {
             return Err(Error::Config("train-frac must be in [0,1]".into()));
         }
+        if !self.comm_timeout.is_finite() || self.comm_timeout < 0.0 {
+            return Err(Error::Config("comm-timeout must be >= 0 seconds".into()));
+        }
         Ok(())
     }
 
@@ -230,6 +281,10 @@ impl RunConfig {
             ("cache_mb", json::num(self.cache_mb as f64)),
             ("cascade_shards", json::num(self.cascade_shards as f64)),
             ("streaming", json::num(if self.streaming { 1.0 } else { 0.0 })),
+            ("comm_timeout", json::num(self.comm_timeout)),
+            ("checkpoint", json::s(&self.checkpoint)),
+            ("checkpoint_every", json::num(self.checkpoint_every as f64)),
+            ("max_rank_retries", json::num(self.max_rank_retries as f64)),
             (
                 "partition",
                 json::s(match self.partition {
@@ -313,6 +368,18 @@ impl RunConfig {
         }
         if let Some(v) = gn("streaming") {
             c.streaming = v != 0.0;
+        }
+        if let Some(v) = gn("comm_timeout") {
+            c.comm_timeout = v;
+        }
+        if let Some(v) = gs("checkpoint") {
+            c.checkpoint = v.to_string();
+        }
+        if let Some(v) = gn("checkpoint_every") {
+            c.checkpoint_every = v as usize;
+        }
+        if let Some(v) = gn("max_rank_retries") {
+            c.max_rank_retries = v as usize;
         }
         if let Some(v) = gn("c") {
             c.params.c = v as f32;
@@ -418,6 +485,45 @@ mod tests {
         // Defaults stay off through a roundtrip.
         let off = RunConfig::from_json(&RunConfig::default().to_json()).unwrap();
         assert_eq!((off.cache_mb, off.cascade_shards, off.streaming), (0, 0, false));
+    }
+
+    #[test]
+    fn recovery_plumbing() {
+        // CLI override, JSON roundtrip, TrainConfig/ElasticConfig mapping
+        // and validation for the survivability knobs.
+        let args = Args::parse(
+            "train --comm-timeout 2.5 --checkpoint /tmp/solve.ck --checkpoint-every 100 \
+             --max-rank-retries 3"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let mut c = RunConfig::default();
+        assert_eq!(c.comm_timeout, 0.0);
+        assert!(c.checkpoint.is_empty());
+        assert_eq!((c.checkpoint_every, c.max_rank_retries), (0, 1));
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.comm_timeout, 2.5);
+        assert_eq!(c.checkpoint, "/tmp/solve.ck");
+        assert_eq!((c.checkpoint_every, c.max_rank_retries), (100, 3));
+        assert_eq!(c.train_config().comm_timeout, 2.5);
+        let ec = c.elastic_config();
+        assert_eq!(ec.checkpoint.as_deref(), Some(std::path::Path::new("/tmp/solve.ck")));
+        assert_eq!(ec.checkpoint_every, 100);
+        assert_eq!(ec.max_rank_retries, 3);
+        assert_eq!(ec.comm_timeout, Some(std::time::Duration::from_secs_f64(2.5)));
+        let back = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.comm_timeout, 2.5);
+        assert_eq!(back.checkpoint, "/tmp/solve.ck");
+        assert_eq!((back.checkpoint_every, back.max_rank_retries), (100, 3));
+        // Defaults mean "off": no checkpoint path, library timeout.
+        let off = RunConfig::default().elastic_config();
+        assert!(off.checkpoint.is_none());
+        assert!(off.comm_timeout.is_none());
+        // A negative horizon is rejected.
+        let bad =
+            Args::parse("x --comm-timeout -1".split_whitespace().map(String::from)).unwrap();
+        assert!(RunConfig::default().apply_args(&bad).is_err());
     }
 
     #[test]

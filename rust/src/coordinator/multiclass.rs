@@ -57,7 +57,7 @@ use std::sync::Arc;
 use super::pairs::{assign, size_cost, Partition};
 use super::wire;
 use crate::backend::{Solver, SvmBackend};
-use crate::cluster::{CostModel, NetReport, Topology};
+use crate::cluster::{CostModel, FaultReport, NetReport, Topology};
 use crate::data::{BinaryProblem, Dataset};
 use crate::error::{Error, Result};
 use crate::svm::multiclass::ovo_pairs;
@@ -126,6 +126,13 @@ pub struct TrainConfig {
     /// replicated on the worker's sub-world and every pool solve is
     /// row-sharded across it ([`cascade::solve_on`]).
     pub cascade_shards: usize,
+    /// Receive timeout for every communicator in the run, in seconds
+    /// (`--comm-timeout`). 0 = the library default (30s). The world
+    /// universe is built with this horizon and every derived comm
+    /// (intra solver sub-worlds, worker-leads peers) inherits it — it is
+    /// both the hang-detection bound and, for elastic solves, the
+    /// failure-detection horizon.
+    pub comm_timeout: f64,
 }
 
 impl Default for TrainConfig {
@@ -142,6 +149,7 @@ impl Default for TrainConfig {
             row_eval: crate::svm::solver::RowEval::default(),
             cache_mb: 0,
             cascade_shards: 0,
+            comm_timeout: 0.0,
         }
     }
 }
@@ -203,6 +211,12 @@ pub struct MulticlassReport {
     /// [`TrainConfig::cache_mb`] is 0. `cross_pair_hits > 0` is the
     /// signal the cross-pair sharing actually fired.
     pub shared_cache: CacheStats,
+    /// Recovery ledger summed over all workers' pair solves (rank-loss
+    /// detections, resharding rounds, checkpoint restores, wasted
+    /// iterations). All-zero ([`FaultReport::none`]) on fault-free runs —
+    /// today's coordinator paths solve fail-fast, so a non-zero ledger
+    /// can only come from elastic solves feeding the per-worker trailer.
+    pub fault: FaultReport,
 }
 
 impl MulticlassReport {
@@ -256,7 +270,10 @@ pub fn train_multiclass(
         )));
     }
     let topo = cfg.topology();
-    let universe = topo.universe();
+    let mut universe = topo.universe();
+    if cfg.comm_timeout > 0.0 {
+        universe = universe.with_recv_timeout(std::time::Duration::from_secs_f64(cfg.comm_timeout));
+    }
     let t0 = std::time::Instant::now();
 
     let ds_frame = Arc::new(wire::encode_dataset(ds)?);
@@ -345,6 +362,10 @@ pub fn train_multiclass(
         } else {
             resolve_pair_threads(cfg2.pair_threads, total_ranks, probs.len())
         };
+        // Recovery ledger for this rank's solves. Only the hierarchical
+        // (sequential) path can contribute; the flat path solves are
+        // fail-fast and leave it zero.
+        let mut fault = FaultReport::none();
         type PairOut = Result<(crate::svm::BinaryModel, TrainStats)>;
         let mut outs: Vec<Option<PairOut>> = (0..probs.len()).map(|_| None).collect();
         // Fail fast like the old sequential `?` loop: the first error stops
@@ -362,6 +383,7 @@ pub fn train_multiclass(
                         &local_ds,
                         pairs[*pi],
                         prob,
+                        &mut fault,
                     )
                 } else {
                     solve_flat_pair(
@@ -474,17 +496,23 @@ pub fn train_multiclass(
             ]);
             models.push(model);
         }
-        // Per-worker shared-cache trailer: [hits, misses, evictions,
-        // cross_pair_hits, max_resident] after the per-pair records
-        // (zeros when the shared cache is off; summed over the worker's
-        // solver ranks on the hierarchical path). Counts are exact in f32
-        // up to 2^24 — plenty for the budgeted caches this wires up.
+        // Per-worker trailer after the per-pair records: the shared-cache
+        // counters [hits, misses, evictions, cross_pair_hits,
+        // max_resident] (zeros when the shared cache is off; summed over
+        // the worker's solver ranks on the hierarchical path) followed by
+        // the recovery ledger [detections, resharding_rounds, restores,
+        // wasted_iters] (zeros on fail-fast paths). Counts are exact in
+        // f32 up to 2^24 — plenty for both.
         stats_frame.extend_from_slice(&[
             cs.hits as f32,
             cs.misses as f32,
             cs.evictions as f32,
             cs.cross_pair_hits as f32,
             cs.max_resident as f32,
+            fault.detections as f32,
+            fault.resharding_rounds as f32,
+            fault.restores as f32,
+            fault.wasted_iters as f32,
         ]);
 
         // (4) gather models at the leader — the only post-training
@@ -518,6 +546,7 @@ pub fn train_multiclass(
     let mut binaries = Vec::with_capacity(pairs.len());
     let mut pair_reports = Vec::with_capacity(pairs.len());
     let mut shared_cache = CacheStats::default();
+    let mut fault = FaultReport::none();
     for (worker, (mf, sf)) in frames.iter().zip(stat_frames.iter()).enumerate() {
         let models = wire::decode_models(mf)?;
         let n_models = models.len();
@@ -540,12 +569,18 @@ pub fn train_multiclass(
             binaries.push(model);
         }
         let tail = &sf[n_models * 8..];
-        if tail.len() == 5 {
+        if tail.len() == 9 {
             shared_cache.hits += tail[0] as u64;
             shared_cache.misses += tail[1] as u64;
             shared_cache.evictions += tail[2] as u64;
             shared_cache.cross_pair_hits += tail[3] as u64;
             shared_cache.max_resident = shared_cache.max_resident.max(tail[4] as usize);
+            fault.merge(&FaultReport {
+                detections: tail[5] as u64,
+                resharding_rounds: tail[6] as u64,
+                restores: tail[7] as u64,
+                wasted_iters: tail[8] as u64,
+            });
         }
     }
     // Canonical order for the ensemble (pair order, not arrival order).
@@ -571,6 +606,7 @@ pub fn train_multiclass(
         net,
         workers: cfg.workers,
         shared_cache,
+        fault,
     };
     Ok((model, report))
 }
@@ -618,6 +654,7 @@ fn solve_flat_pair(
             gram_secs: 0.0,
             solve_secs: t0.elapsed().as_secs_f64(),
             net: NetReport::none(),
+            fault: FaultReport::none(),
         };
         return Ok(model_from_outcome(prob, &out, &cfg.params));
     }
@@ -630,7 +667,10 @@ fn solve_flat_pair(
 /// row-sharded across the sub-world), then the rank-persistent shared
 /// window cache (`--cache-mb`, cross-pair reuse counted per rank), then
 /// the private per-solve window caches. The non-cascade routes stay
-/// bit-identical to the flat single-rank baseline.
+/// bit-identical to the flat single-rank baseline. Each solve's recovery
+/// ledger is merged into `fault` (zero today — these entry points are
+/// fail-fast — but the wire format already carries it to the leader).
+#[allow(clippy::too_many_arguments)]
 fn solve_hier_pair(
     intra: &mut crate::cluster::Comm,
     cfg: &TrainConfig,
@@ -639,6 +679,7 @@ fn solve_hier_pair(
     ds: &Dataset,
     ab: (usize, usize),
     prob: &BinaryProblem,
+    fault: &mut FaultReport,
 ) -> Result<(BinaryModel, TrainStats)> {
     use crate::svm::solver::{distributed, DistributedSmo, RowSlice};
     if cfg.cascade_shards > 1 {
@@ -650,6 +691,7 @@ fn solve_hier_pair(
             warm_start: true,
         };
         let out = cascade::solve_on(intra, prob, &cfg.params, &ccfg)?;
+        fault.merge(&out.outcome.fault);
         return Ok(model_from_outcome(prob, &out.outcome, &cfg.params));
     }
     let engine = DistributedSmo::auto(intra.size(), prob.n(), cfg.intra_net)
@@ -662,6 +704,7 @@ fn solve_hier_pair(
     } else {
         distributed::solve_on(intra, prob, &cfg.params, &engine.cfg)?
     };
+    fault.merge(&out.fault);
     Ok(model_from_outcome(prob, &out, &cfg.params))
 }
 
@@ -959,6 +1002,24 @@ mod tests {
         assert!(r.makespan_secs() <= r.wall_secs + 1e-3);
         assert!(r.imbalance() >= 1.0);
         assert!(r.total_iters() > 0);
+    }
+
+    #[test]
+    fn fault_ledger_is_zero_and_comm_timeout_is_inert_on_healthy_runs() {
+        // --comm-timeout only moves the hang-detection horizon; on a
+        // healthy cluster it must not perturb a single coefficient, and
+        // the recovery ledger must stay all-zero on both paths.
+        let ds = iris::load();
+        let be = Arc::new(NativeBackend::new());
+        let (m0, r0) = train_multiclass(&ds, be.clone(), &quick_cfg(2)).unwrap();
+        assert!(!r0.fault.any(), "{:?}", r0.fault);
+        let cfg = TrainConfig { solver_ranks: 2, comm_timeout: 10.0, ..quick_cfg(2) };
+        let (m, r) = train_multiclass(&ds, be, &cfg).unwrap();
+        assert!(!r.fault.any(), "{:?}", r.fault);
+        for (a, b) in m0.binaries.iter().zip(m.binaries.iter()) {
+            assert_eq!(a.coef, b.coef);
+            assert_eq!(a.bias, b.bias);
+        }
     }
 
     #[test]

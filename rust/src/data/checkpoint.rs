@@ -1,0 +1,326 @@
+//! Solver checkpoint codec: the small state that lets a long solve
+//! outlive a dead rank.
+//!
+//! The distributed SMO loop is replicated-alpha / sliced-gradient: the
+//! full per-iteration state is one `alpha` vector, one gradient vector
+//! `f`, the active (unshrunk) index set, and two loop counters. That is
+//! a few MB even at cascade scale — cheap enough to snapshot every N
+//! iterations and small enough that a restore costs less than the
+//! iterations it saves. This module is the on-disk format; the snapshot
+//! /restore choreography lives in `svm::solver::distributed`.
+//!
+//! Values are stored as exact little-endian bit patterns (f64 via
+//! `to_bits`), because recovery promises a *bit-for-bit* resumed
+//! trajectory: reconstructing `f` from `alpha` in floating point would
+//! already diverge in the last ulp. The gradient is stored as the FULL
+//! vector (assembled from per-rank slices at snapshot time), so a
+//! restore can re-slice it over a *different* rank count — that is what
+//! makes survivor re-sharding possible.
+//!
+//! Like the spill codec next door, a checkpoint is validated entirely up
+//! front: magic, version, exact length, a payload checksum (a torn or
+//! bit-flipped file must not resurrect a wrong trajectory), and a
+//! problem fingerprint (a checkpoint for a different dataset or
+//! different hyperparameters is *stale*, and silently resuming from it
+//! would be worse than starting cold). Writes go to a `.tmp` sibling and
+//! are published with an atomic rename, so a crash mid-write leaves the
+//! previous checkpoint intact, never a half-written one.
+//!
+//! # Layout (all little-endian)
+//!
+//! ```text
+//! [0..4)   magic  b"PSCK"
+//! [4..8)   version u32 (= 1)
+//! [8..16)  fingerprint u64 (problem identity: n, labels, hyperparams)
+//! [16..24) iters u64 (global iteration count at snapshot)
+//! [24..32) since_shrink u64 (iterations since the last shrink pass)
+//! [32..40) n u64 (rows; alpha and f are each n f64 bit patterns)
+//! [40..48) n_active u64
+//! then n × u64 alpha bits, n × u64 f bits,
+//! then n_active × u64 ascending global active indices,
+//! then an FNV-1a u64 checksum of every preceding byte
+//! ```
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+const MAGIC: &[u8; 4] = b"PSCK";
+const VERSION: u32 = 1;
+const HEADER_BYTES: usize = 48;
+
+/// FNV-1a over a word stream; used both for the payload checksum and
+/// (by the solver) to fingerprint the problem a checkpoint belongs to.
+pub fn fingerprint<I: IntoIterator<Item = u64>>(words: I) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+fn fnv_bytes(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Everything a resumed solve needs to replay the uninterrupted
+/// trajectory bit-for-bit, independent of the rank count it restores on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SolverCheckpoint {
+    /// Problem identity (see [`fingerprint`]); a mismatch on restore is
+    /// a stale checkpoint and is rejected.
+    pub fingerprint: u64,
+    /// Global iteration count at snapshot time.
+    pub iters: usize,
+    /// Iterations since the last shrink pass (replicated loop counter).
+    pub since_shrink: usize,
+    /// Replicated dual variables, exact f64 state (not the f32 export).
+    pub alpha: Vec<f64>,
+    /// The FULL gradient vector, assembled from per-rank slices; a
+    /// restore re-slices it over however many survivors remain.
+    pub f: Vec<f64>,
+    /// Ascending global indices still active (unshrunk).
+    pub active: Vec<u64>,
+}
+
+fn expected_len(n: u64, n_active: u64) -> u64 {
+    HEADER_BYTES as u64 + 16 * n + 8 * n_active + 8
+}
+
+/// Serialize `ck` to `path` atomically: write a `.tmp` sibling, then
+/// rename over the target. Readers never observe a partial file.
+pub fn write_checkpoint(path: &Path, ck: &SolverCheckpoint) -> Result<()> {
+    assert_eq!(ck.alpha.len(), ck.f.len(), "alpha and f must cover the same rows");
+    let io = |e: std::io::Error| Error::Data(format!("checkpoint {}: {e}", path.display()));
+
+    let n = ck.alpha.len() as u64;
+    let n_active = ck.active.len() as u64;
+    let mut bytes = Vec::with_capacity(expected_len(n, n_active) as usize);
+    bytes.extend_from_slice(MAGIC);
+    bytes.extend_from_slice(&VERSION.to_le_bytes());
+    bytes.extend_from_slice(&ck.fingerprint.to_le_bytes());
+    bytes.extend_from_slice(&(ck.iters as u64).to_le_bytes());
+    bytes.extend_from_slice(&(ck.since_shrink as u64).to_le_bytes());
+    bytes.extend_from_slice(&n.to_le_bytes());
+    bytes.extend_from_slice(&n_active.to_le_bytes());
+    for &a in &ck.alpha {
+        bytes.extend_from_slice(&a.to_bits().to_le_bytes());
+    }
+    for &v in &ck.f {
+        bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    for &g in &ck.active {
+        bytes.extend_from_slice(&g.to_le_bytes());
+    }
+    let sum = fnv_bytes(&bytes);
+    bytes.extend_from_slice(&sum.to_le_bytes());
+
+    let mut tmp_name = path.as_os_str().to_owned();
+    tmp_name.push(".tmp");
+    let tmp = PathBuf::from(tmp_name);
+    {
+        let mut w = BufWriter::new(File::create(&tmp).map_err(io)?);
+        w.write_all(&bytes).map_err(io)?;
+        w.flush().map_err(io)?;
+    }
+    std::fs::rename(&tmp, path).map_err(io)
+}
+
+/// Open, validate, and decode a checkpoint. Every structural check —
+/// magic, version, exact length, payload checksum — and the problem
+/// `expect` fingerprint happen here, before a single word of state is
+/// handed to the solver.
+pub fn read_checkpoint(path: &Path, expect: u64) -> Result<SolverCheckpoint> {
+    let bad = |what: &str| Error::Data(format!("checkpoint {}: {what}", path.display()));
+    let io = |e: std::io::Error| Error::Data(format!("checkpoint {}: {e}", path.display()));
+    let bytes = std::fs::read(path).map_err(io)?;
+    if bytes.len() < HEADER_BYTES + 8 {
+        return Err(bad("truncated header"));
+    }
+    if &bytes[0..4] != MAGIC {
+        return Err(bad("bad magic (not a checkpoint file)"));
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().expect("4 bytes"));
+    if version != VERSION {
+        return Err(bad(&format!("unsupported version {version} (want {VERSION})")));
+    }
+    let word = |off: usize| u64::from_le_bytes(bytes[off..off + 8].try_into().expect("8 bytes"));
+    let fingerprint = word(8);
+    let iters = word(16);
+    let since_shrink = word(24);
+    let n = word(32);
+    let n_active = word(40);
+    if bytes.len() as u64 != expected_len(n, n_active) {
+        return Err(bad("length disagrees with header counts (truncated or corrupt)"));
+    }
+    let body_end = bytes.len() - 8;
+    let stored_sum = u64::from_le_bytes(bytes[body_end..].try_into().expect("8 bytes"));
+    if fnv_bytes(&bytes[..body_end]) != stored_sum {
+        return Err(bad("payload checksum mismatch (corrupt checkpoint)"));
+    }
+    if fingerprint != expect {
+        return Err(bad("fingerprint mismatch (stale checkpoint for a different problem)"));
+    }
+    if n_active > n {
+        return Err(bad("more active indices than rows (corrupt header)"));
+    }
+
+    let n = n as usize;
+    let n_active = n_active as usize;
+    let mut off = HEADER_BYTES;
+    let mut take = |count: usize| {
+        let out: Vec<u64> = bytes[off..off + 8 * count]
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().expect("8 bytes")))
+            .collect();
+        off += 8 * count;
+        out
+    };
+    let alpha: Vec<f64> = take(n).into_iter().map(f64::from_bits).collect();
+    let f: Vec<f64> = take(n).into_iter().map(f64::from_bits).collect();
+    let active = take(n_active);
+    if active.windows(2).any(|w| w[0] >= w[1]) || active.last().is_some_and(|&g| g >= n as u64) {
+        return Err(bad("active indices not ascending in-range (corrupt checkpoint)"));
+    }
+    Ok(SolverCheckpoint {
+        fingerprint,
+        iters: iters as usize,
+        since_shrink: since_shrink as usize,
+        alpha,
+        f,
+        active,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("parasvm_checkpoint_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample(fp: u64) -> SolverCheckpoint {
+        SolverCheckpoint {
+            fingerprint: fp,
+            iters: 123,
+            since_shrink: 7,
+            alpha: vec![0.0, -0.0, 1.5, f64::from_bits(0x3FF0_0000_0000_0001), 2e-308],
+            f: vec![-1.0, 0.25, f64::from_bits(0xBFF0_0000_0000_0001), 3.75, 0.0],
+            active: vec![0, 2, 3],
+        }
+    }
+
+    #[test]
+    fn round_trip_is_bitwise() {
+        let path = tmp("rt.ckpt");
+        let fp = fingerprint([5u64, 42]);
+        let want = sample(fp);
+        write_checkpoint(&path, &want).unwrap();
+        let got = read_checkpoint(&path, fp).unwrap();
+        assert_eq!((got.iters, got.since_shrink), (want.iters, want.since_shrink));
+        assert_eq!(got.active, want.active);
+        for (a, b) in got.alpha.iter().zip(&want.alpha) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in got.f.iter().zip(&want.f) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rewrite_replaces_atomically_and_leaves_no_tmp() {
+        let path = tmp("rewrite.ckpt");
+        let fp = fingerprint([9u64]);
+        write_checkpoint(&path, &sample(fp)).unwrap();
+        let mut second = sample(fp);
+        second.iters = 999;
+        write_checkpoint(&path, &second).unwrap();
+        assert_eq!(read_checkpoint(&path, fp).unwrap().iters, 999);
+        let mut tmp_name = path.as_os_str().to_owned();
+        tmp_name.push(".tmp");
+        assert!(!PathBuf::from(tmp_name).exists(), "tmp sibling must be renamed away");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn corrupt_truncated_and_stale_checkpoints_are_rejected() {
+        let path = tmp("corrupt.ckpt");
+        let fp = fingerprint([1u64, 2, 3]);
+        write_checkpoint(&path, &sample(fp)).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        let err = read_checkpoint(&path, fp).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+
+        // Unsupported version.
+        let mut bad = bytes.clone();
+        bad[4] = 99;
+        std::fs::write(&path, &bad).unwrap();
+        let err = read_checkpoint(&path, fp).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+
+        // Truncated payload.
+        std::fs::write(&path, &bytes[..bytes.len() - 9]).unwrap();
+        assert!(read_checkpoint(&path, fp).is_err());
+
+        // Header row count inflated past the file.
+        let mut bad = bytes.clone();
+        let n = u64::from_le_bytes(bytes[32..40].try_into().unwrap());
+        bad[32..40].copy_from_slice(&(n + 7).to_le_bytes());
+        std::fs::write(&path, &bad).unwrap();
+        assert!(read_checkpoint(&path, fp).is_err());
+
+        // A flipped payload bit fails the checksum.
+        let mut bad = bytes.clone();
+        bad[HEADER_BYTES + 3] ^= 0x10;
+        std::fs::write(&path, &bad).unwrap();
+        let err = read_checkpoint(&path, fp).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+
+        // Stale: intact file, wrong problem.
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_checkpoint(&path, fp ^ 1).unwrap_err();
+        assert!(err.to_string().contains("fingerprint"), "{err}");
+
+        // Pristine bytes with the right fingerprint still load fine.
+        assert!(read_checkpoint(&path, fp).is_ok());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn unsorted_active_indices_are_rejected() {
+        let path = tmp("unsorted.ckpt");
+        let fp = fingerprint([77u64]);
+        let mut ck = sample(fp);
+        ck.active = vec![3, 2];
+        write_checkpoint(&path, &ck).unwrap();
+        let err = read_checkpoint(&path, fp).unwrap_err();
+        assert!(err.to_string().contains("ascending"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn fingerprint_is_order_sensitive_and_stable() {
+        assert_eq!(fingerprint([1u64, 2]), fingerprint([1u64, 2]));
+        assert_ne!(fingerprint([1u64, 2]), fingerprint([2u64, 1]));
+        assert_ne!(fingerprint([] as [u64; 0]), fingerprint([0u64]));
+    }
+}

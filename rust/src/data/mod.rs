@@ -31,7 +31,13 @@
 //! O(1) `reset()` — repeat passes are `f32::from_le_bytes` copies out of
 //! the OS page cache instead of tokenizer work, and the class table is
 //! known before the first chunk (no discovery pass).
+//!
+//! [`checkpoint`] is the spill codec's sibling for *solver* state: the
+//! small per-iteration snapshot (alpha, gradient, active set, counters)
+//! that lets a distributed solve restore after a rank failure and resume
+//! the exact trajectory, written atomically and validated up front.
 
+pub mod checkpoint;
 pub mod csv;
 pub mod dataset;
 pub mod iris;
@@ -43,6 +49,7 @@ pub mod stream;
 pub mod synth;
 pub mod wdbc;
 
+pub use checkpoint::{read_checkpoint, write_checkpoint, SolverCheckpoint};
 pub use dataset::{BinaryProblem, Dataset};
 pub use spill::{write_spill, MmapChunks, SpillInfo};
 pub use stream::{Chunk, ChunkSource, ChunkedDataset, CsvChunks, DatasetChunks, SynthChunks};

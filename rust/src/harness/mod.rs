@@ -19,8 +19,8 @@ pub use serve_bench::{
     f16_deltas, run_serve_bench, serve_speedups, serve_table, ServeRow, SERVE_BENCH_DATASETS,
 };
 pub use solver_ablation::{
-    run_solver_ablation, DistRow, HierRow, ScaleRow, SharedCacheRow, SolverAblation,
-    LABEL_PANEL_FUSED, LABEL_PANEL_ROWS, LABEL_SCALAR_ROWS, LABEL_SIMD_ROWS,
+    run_solver_ablation, DistRow, HierRow, RecoveryRow, ScaleRow, SharedCacheRow,
+    SolverAblation, LABEL_PANEL_FUSED, LABEL_PANEL_ROWS, LABEL_SCALAR_ROWS, LABEL_SIMD_ROWS,
 };
 pub use tables::{
     run_table3, run_table4, run_table5, run_table6, Table3Row, Table4Row, Table56Row,

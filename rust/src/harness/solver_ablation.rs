@@ -10,16 +10,16 @@
 //! artifacts, no device), so it runs from a clean checkout and in CI — it
 //! is the reproducible speedup story for the `svm::solver` subsystem. The
 //! bench wrapper (`benches/solver_ablation.rs`) renders the table, writes
-//! the machine-readable `BENCH_solver.json` (schema v8: everything v7
+//! the machine-readable `BENCH_solver.json` (schema v9: everything v8
 //! carried — panel/simd row-eval ratios, per-level `net_levels`,
 //! `hierarchical`, the `serve` rows with `f16_accuracy_deltas` and
 //! `serve_speedup_vs_legacy`, the `scaling` curve of direct-vs-cascade
-//! solves and the `shared_cache_ovo` row — plus the warm-vs-cold merge
-//! tree split inside each `scaling` point: the cascade now runs twice
-//! per row count, once seeding every fold-merge solve from its
-//! children's converged alphas and once from zero, and the row records
-//! both iteration totals and the warm-solve count) that later PRs diff
-//! against, and enforces the panel-vs-scalar, simd-vs-fused,
+//! solves with the warm-vs-cold merge-tree split, and the
+//! `shared_cache_ovo` row — plus the `recovery` row: the same elastic
+//! 4-rank solve run fault-free and with one scripted mid-solve rank
+//! kill, recording the wall-time overhead ratio and the FaultReport
+//! counters of the killed run) that later PRs diff against, and
+//! enforces the panel-vs-scalar, simd-vs-fused,
 //! compiled-vs-legacy-serve, f16-accuracy, cascade-agreement,
 //! warm-le-cold-iterations and shared-cache-hit regression guards CI
 //! runs on every push.
@@ -27,15 +27,15 @@
 use std::sync::Arc;
 
 use crate::backend::{NativeBackend, Solver, SvmBackend};
-use crate::cluster::{CostModel, LevelNet};
+use crate::cluster::{CostModel, FaultPlan, LevelNet};
 use crate::coordinator::{train_multiclass, TrainConfig};
 use crate::error::Result;
 use crate::metrics::bench::{bench, BenchConfig};
 use crate::metrics::table::Table;
 use crate::svm::solver::cascade::{self, CascadeConfig};
 use crate::svm::solver::{
-    model_from_outcome, DenseSmo, DistributedSmo, DualSolver, EngineConfig, RowEval,
-    WorkingSetSmo,
+    model_from_outcome, DenseSmo, DistributedSmo, DualSolver, ElasticConfig, EngineConfig,
+    RowEval, WorkingSetSmo,
 };
 use crate::util::json::{self, Json};
 
@@ -120,6 +120,28 @@ pub struct ScaleRow {
     pub warm_solves: usize,
 }
 
+/// Recovery overhead: the same elastic 4-rank solve run fault-free and
+/// with one scripted mid-solve rank kill (checkpoint → detect → agree →
+/// re-shard → restore → resume). Both runs checkpoint at the same
+/// cadence, so the wall-time ratio prices exactly the failure: the
+/// detection horizon, the consensus round, the survivor re-shard and the
+/// iterations replayed since the last snapshot.
+#[derive(Debug, Clone)]
+pub struct RecoveryRow {
+    pub ranks: usize,
+    pub kill_rank: usize,
+    pub kill_iter: usize,
+    pub checkpoint_every: usize,
+    pub fault_free_secs: f64,
+    pub killed_secs: f64,
+    /// killed / fault-free median wall time (>= 1 in practice — the
+    /// recovery price CI diffs across PRs).
+    pub overhead_ratio: f64,
+    pub detections: u64,
+    pub restores: u64,
+    pub wasted_iters: u64,
+}
+
 /// The per-rank shared kernel-row cache on the OvO workload: one LRU
 /// budget serving all pairs of the rank, so rows fetched for one pair
 /// satisfy later pairs (`cross_pair_hits`).
@@ -165,6 +187,8 @@ pub struct SolverAblation {
     pub scaling: Vec<ScaleRow>,
     /// The cross-pair shared-cache OvO row (schema v7).
     pub shared_cache: Vec<SharedCacheRow>,
+    /// The elastic fault-free vs killed-rank overhead row (schema v9).
+    pub recovery: Vec<RecoveryRow>,
 }
 
 fn levels_json(levels: &[LevelNet]) -> Json {
@@ -187,7 +211,7 @@ impl SolverAblation {
     /// Machine-readable form for `BENCH_solver.json`.
     pub fn to_json(&self) -> Json {
         json::obj(vec![
-            ("schema", json::s("parasvm-solver-ablation/v8")),
+            ("schema", json::s("parasvm-solver-ablation/v9")),
             ("dataset", json::s(&self.dataset)),
             ("n", json::num(self.n as f64)),
             ("d", json::num(self.d as f64)),
@@ -368,6 +392,31 @@ impl SolverAblation {
                         .collect(),
                 ),
             ),
+            (
+                "recovery",
+                json::arr(
+                    self.recovery
+                        .iter()
+                        .map(|r| {
+                            json::obj(vec![
+                                ("ranks", json::num(r.ranks as f64)),
+                                ("kill_rank", json::num(r.kill_rank as f64)),
+                                ("kill_iter", json::num(r.kill_iter as f64)),
+                                (
+                                    "checkpoint_every",
+                                    json::num(r.checkpoint_every as f64),
+                                ),
+                                ("fault_free_secs", json::num(r.fault_free_secs)),
+                                ("killed_secs", json::num(r.killed_secs)),
+                                ("overhead_ratio", json::num(r.overhead_ratio)),
+                                ("detections", json::num(r.detections as f64)),
+                                ("restores", json::num(r.restores as f64)),
+                                ("wasted_iters", json::num(r.wasted_iters as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ])
     }
 }
@@ -541,6 +590,75 @@ pub fn run_solver_ablation(
         ]);
         dist_rows.push(row);
     }
+
+    // Recovery overhead: the elastic 4-rank engine on the same binary
+    // problem, fault-free vs rank 1 killed mid-solve. Both runs
+    // checkpoint every few iterations to a scratch file — removed before
+    // every sample, since a stale final checkpoint would let the next
+    // solve resume at convergence and skip the kill — so the ratio
+    // prices exactly the failure path: detection, consensus, survivor
+    // re-shard, and the iterations replayed since the last snapshot.
+    let ck_path = std::env::temp_dir()
+        .join(format!("parasvm_ablation_recovery_{}.ck", std::process::id()));
+    let recovery_engine =
+        DistributedSmo::new(4, EngineConfig::cached((budget / 4).max(2)), CostModel::gige10());
+    let base_elastic = ElasticConfig {
+        checkpoint: Some(ck_path.clone()),
+        checkpoint_every: 4,
+        max_rank_retries: 2,
+        backoff: std::time::Duration::from_millis(1),
+        comm_timeout: Some(std::time::Duration::from_millis(200)),
+        ..Default::default()
+    };
+    let mut free_last = None;
+    let free_r = bench("elastic fault-free (4 ranks)", cfg, || {
+        std::fs::remove_file(&ck_path).ok();
+        free_last =
+            Some(recovery_engine.solve_elastic(&prob, &w.params, &base_elastic).unwrap());
+    });
+    let killed_elastic =
+        ElasticConfig { faults: FaultPlan::new().kill(1, 5), ..base_elastic.clone() };
+    let mut killed_last = None;
+    let killed_r = bench("elastic killed-rank (4 ranks)", cfg, || {
+        std::fs::remove_file(&ck_path).ok();
+        killed_last =
+            Some(recovery_engine.solve_elastic(&prob, &w.params, &killed_elastic).unwrap());
+    });
+    std::fs::remove_file(&ck_path).ok();
+    let free_out = free_last.expect("bench ran at least once");
+    let killed_out = killed_last.expect("bench ran at least once");
+    // Recovery is exact (partition independence): a perf run must never
+    // publish an overhead number for a solve that drifted.
+    assert_eq!(
+        free_out.solution.iters, killed_out.solution.iters,
+        "recovered trajectory diverged from the fault-free run"
+    );
+    let fault_free_secs = free_r.summary.median;
+    let killed_secs = killed_r.summary.median;
+    let recovery_row = RecoveryRow {
+        ranks: 4,
+        kill_rank: 1,
+        kill_iter: 5,
+        checkpoint_every: 4,
+        fault_free_secs,
+        killed_secs,
+        overhead_ratio: if fault_free_secs > 0.0 { killed_secs / fault_free_secs } else { 0.0 },
+        detections: killed_out.fault.detections,
+        restores: killed_out.fault.restores,
+        wasted_iters: killed_out.fault.wasted_iters,
+    };
+    table.row(&[
+        "elastic recovery (kill 1/4)".into(),
+        format!("{:.4}", recovery_row.killed_secs),
+        format!("{:.2}x fault-free", recovery_row.overhead_ratio),
+        String::new(),
+        String::new(),
+        String::new(),
+        format!(
+            "{} det / {} restore / {} wasted",
+            recovery_row.detections, recovery_row.restores, recovery_row.wasted_iters
+        ),
+    ]);
 
     // OvO: sequential pairs vs concurrent pairs on the same 4-rank world.
     let (ds, params) = super::multiclass_workload(ovo_per_class, seed);
@@ -756,6 +874,7 @@ pub fn run_solver_ablation(
         f16_accuracy_deltas,
         scaling,
         shared_cache: vec![shared_row],
+        recovery: vec![recovery_row],
     };
     Ok((table, ablation))
 }
@@ -858,6 +977,16 @@ mod tests {
         assert_eq!(sc.cache_mb, 32);
         assert!(sc.hit_rate > 0.0, "shared cache never hit");
         assert!(sc.cross_pair_hits > 0, "no cross-pair reuse on the OvO workload");
+        // Schema v9: the elastic recovery-overhead row. The killed run
+        // must actually have recovered (one detection, >= 1 restore) —
+        // a kill that never fired would price nothing.
+        assert_eq!(ab.recovery.len(), 1);
+        let rec = &ab.recovery[0];
+        assert_eq!((rec.ranks, rec.kill_rank, rec.kill_iter), (4, 1, 5));
+        assert!(rec.fault_free_secs > 0.0 && rec.killed_secs > 0.0);
+        assert!(rec.overhead_ratio > 0.0);
+        assert_eq!(rec.detections, 1, "{rec:?}");
+        assert!(rec.restores >= 1, "{rec:?}");
         let rendered = table.render();
         assert!(rendered.contains("dense"));
         assert!(rendered.contains("parallel"));
@@ -868,8 +997,13 @@ mod tests {
         assert!(rendered.contains("serve wdbc compiled-w2"));
         assert!(rendered.contains("scaling n=300"));
         assert!(rendered.contains("shared-cache"));
+        assert!(rendered.contains("elastic recovery"));
         let j = ab.to_json();
-        assert_eq!(j.get("schema").and_then(Json::as_str), Some("parasvm-solver-ablation/v8"));
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some("parasvm-solver-ablation/v9"));
+        let rj = &j.get("recovery").and_then(Json::as_arr).unwrap()[0];
+        assert!(rj.get("overhead_ratio").is_some());
+        assert!(rj.get("restores").is_some());
+        assert!(rj.get("wasted_iters").is_some());
         assert_eq!(j.get("scaling").and_then(Json::as_arr).unwrap().len(), 1);
         let sj = &j.get("scaling").and_then(Json::as_arr).unwrap()[0];
         assert!(sj.get("warm_iters").is_some());

@@ -107,6 +107,16 @@ fn print_help() {
                               and replay every later pass from it — polish\n\
                               rescans and per-pair re-streams become page-\n\
                               cache byte copies instead of CSV re-parses\n\
+           --comm-timeout S   receive timeout in seconds for every\n\
+                              communicator (default 30); also the rank-\n\
+                              loss detection horizon for elastic solves\n\
+           --checkpoint FILE  elastic solves snapshot alpha/gradient/\n\
+                              active-set here (atomic write-then-rename)\n\
+                              and restore after rank loss or on restart\n\
+           --checkpoint-every N  snapshot cadence in solver iterations\n\
+                              (0 = never, default)\n\
+           --max-rank-retries N  rank-loss recovery attempts before an\n\
+                              elastic solve gives up (default 1)\n\
            --config FILE      load a JSON RunConfig (CLI flags override)\n\
            --seed N           dataset/run seed (default 42)\n\
          serve options:\n\
@@ -396,7 +406,11 @@ fn cmd_train_streaming_cascade(
             ranks,
             CostModel { latency: cfg.intra_latency, bandwidth: cfg.intra_bandwidth },
         );
-        let universe = topo.universe();
+        let mut universe = topo.universe();
+        if cfg.comm_timeout > 0.0 {
+            universe = universe
+                .with_recv_timeout(std::time::Duration::from_secs_f64(cfg.comm_timeout));
+        }
         let p = cfg.params;
         let open = open_source.clone();
         let mut outs = universe.run(move |mut comm| {

@@ -80,7 +80,7 @@ use super::panel::RowEval;
 use super::shrink::ShrinkStats;
 use super::slice::RowSlice;
 use super::working_set::{self, EngineConfig};
-use super::{DualSolver, NetReport, SolveOutcome};
+use super::{DualSolver, FaultReport, NetReport, SolveOutcome};
 
 /// Minimum prediction agreement (fraction of rows classified the same)
 /// the cascade must reach against the direct solve on tier-1 datasets.
@@ -545,6 +545,7 @@ fn solve_with(
             gram_secs: 0.0,
             solve_secs: t0.elapsed().as_secs_f64(),
             net: NetReport::none(),
+            fault: FaultReport::none(),
         },
         levels,
         shard_rows,

@@ -58,8 +58,19 @@
 //! * [`DistributedSmo::solve`] — the standalone [`DualSolver`] entry: it
 //!   spawns a private single-level `intra` [`Topology`] world and reports
 //!   that level in [`SolveOutcome::net`].
+//! * [`DistributedSmo::solve_elastic`] — the survivable entry: the same
+//!   SPMD body, plus periodic checkpoints ([`ElasticConfig`]) and a
+//!   recovery loop that turns a dead rank into a consensus verdict
+//!   ([`crate::cluster::Comm::failure_consensus`]), a survivor sub-world
+//!   ([`crate::cluster::Comm::split_survivors`]), a row re-partition, and
+//!   a checkpoint restore. Because the trajectory is partition-
+//!   independent (the bitwise property pinned by the tests below), the
+//!   recovered solve finishes with the same solution the fault-free run
+//!   would have produced.
 
+use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Duration;
 
 use super::cache::{CacheStats, KernelCache, KernelSource, WindowSource};
 use super::parallel;
@@ -67,9 +78,12 @@ use super::shrink::{ActiveSet, ShrinkStats};
 use super::slice::RowSlice;
 use super::working_set::{in_low, in_up, repair_seed, wss2_gain, EngineConfig, Extremes, Selection};
 use super::{DualSolver, NetReport, SolveOutcome};
-use crate::cluster::{Comm, CostModel, PairCandidate, Topology, LEVEL_INTRA};
+use crate::cluster::{
+    is_comm_failure, Comm, CostModel, FaultPlan, FaultReport, PairCandidate, Topology, LEVEL_INTRA,
+};
+use crate::data::checkpoint::{self, SolverCheckpoint};
 use crate::data::BinaryProblem;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::svm::smo::SmoSolution;
 use crate::svm::SvmParams;
 
@@ -116,6 +130,79 @@ impl DistributedSmo {
     pub fn with_eval(mut self, row_eval: crate::svm::solver::RowEval) -> DistributedSmo {
         self.cfg.row_eval = row_eval;
         self
+    }
+
+    /// The survivable standalone solve: the ordinary SPMD body wrapped in
+    /// checkpointing and the detect → agree → re-shard → restore recovery
+    /// loop of [`ElasticConfig`]. Returns the same solution a fault-free
+    /// run would (partition independence), with the recovery ledger in
+    /// [`SolveOutcome::fault`]. Errors only when every rank died or a
+    /// failure exhausted `max_rank_retries`.
+    pub fn solve_elastic(
+        &self,
+        prob: &BinaryProblem,
+        p: &SvmParams,
+        elastic: &ElasticConfig,
+    ) -> Result<SolveOutcome> {
+        let topo = Topology::single(LEVEL_INTRA, self.ranks, self.net);
+        let mut universe = topo.universe().with_faults(elastic.faults.clone());
+        if let Some(t) = elastic.comm_timeout {
+            universe = universe.with_recv_timeout(t);
+        }
+        let prob: Arc<BinaryProblem> = Arc::new(prob.clone());
+        let (params, cfg) = (*p, self.cfg);
+        let elastic = elastic.clone();
+
+        let t0 = std::time::Instant::now();
+        let outs =
+            universe.run(move |mut comm| elastic_rank(&mut comm, &prob, &params, &cfg, &elastic));
+        let solve_secs = t0.elapsed().as_secs_f64();
+
+        // Killed ranks hand back None; every survivor holds the identical
+        // outcome (solution, counters, and fault ledger alike).
+        let mut out = outs
+            .into_iter()
+            .flatten()
+            .next()
+            .ok_or_else(|| Error::Cluster("elastic solve: every rank died".into()))??;
+        out.solve_secs = solve_secs;
+        out.net = topo.net();
+        Ok(out)
+    }
+}
+
+/// Policy for [`DistributedSmo::solve_elastic`]: how often to checkpoint,
+/// where, and how hard to try to outlive rank failures.
+#[derive(Debug, Clone)]
+pub struct ElasticConfig {
+    /// Checkpoint file (written atomically by rank 0). `None` disables
+    /// snapshots AND restart-from-disk; recovery then restarts cold.
+    pub checkpoint: Option<PathBuf>,
+    /// Snapshot every N iterations (0 = never, even with a path — the
+    /// path may still seed a resume from a previous run's checkpoint).
+    pub checkpoint_every: usize,
+    /// Recovery attempts before a failure becomes fatal (`--max-rank-retries`).
+    pub max_rank_retries: usize,
+    /// Base of the exponential backoff between recovery attempts
+    /// (attempt k sleeps `backoff * 2^k`).
+    pub backoff: Duration,
+    /// Receive-timeout override for the spawned world (`--comm-timeout`);
+    /// doubles as the failure-detection horizon.
+    pub comm_timeout: Option<Duration>,
+    /// Scripted faults for recovery tests (empty in production).
+    pub faults: FaultPlan,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> ElasticConfig {
+        ElasticConfig {
+            checkpoint: None,
+            checkpoint_every: 0,
+            max_rank_retries: 1,
+            backoff: Duration::from_millis(50),
+            comm_timeout: None,
+            faults: FaultPlan::default(),
+        }
     }
 }
 
@@ -256,6 +343,7 @@ pub fn solve_on_source(
         gram_secs: 0.0,
         solve_secs: t0.elapsed().as_secs_f64(),
         net: NetReport::none(),
+        fault: FaultReport::none(),
     })
 }
 
@@ -268,6 +356,31 @@ fn enc(ix: usize) -> u64 {
     }
 }
 
+/// One rank's resumable share of the replicated-alpha / sliced-gradient
+/// loop state: everything iteration k+1 reads from iteration k. (The
+/// thresholds `b_up`/`b_low` are derived fresh each iteration from the
+/// pair all-reduces, so they are loop-local, not state.)
+struct LoopState {
+    /// Replicated duals, exact f64 (identical on every rank).
+    alpha: Vec<f64>,
+    /// My slice of the gradient, incrementally maintained f64.
+    f: Vec<f64>,
+    /// My shard's active set (local offsets).
+    active: ActiveSet,
+    /// Global iteration count (replicated).
+    iters: usize,
+    /// Iterations since the last shrink pass (replicated).
+    since_shrink: usize,
+}
+
+/// Checkpointing duty for one solve: where rank 0 publishes snapshots,
+/// how often, and the problem fingerprint stamped into them.
+struct CheckpointSpec {
+    path: PathBuf,
+    every: usize,
+    fingerprint: u64,
+}
+
 /// The SPMD body: one rank's share of the cooperative solve. `src` serves
 /// this rank's column window (asserted to match the row partition).
 fn solve_rank(
@@ -278,6 +391,20 @@ fn solve_rank(
     cfg: &EngineConfig,
     seed: Option<&[f32]>,
 ) -> Result<RankOutcome> {
+    let state = cold_state(comm, src, y, p, seed);
+    solve_rank_from(comm, src, y, p, cfg, state, None, &mut 0)
+}
+
+/// Build the iteration-zero state (optionally warm-seeded): the historical
+/// entry path, byte-for-byte — a checkpoint restore builds the same struct
+/// from saved state instead ([`restored_state`]).
+fn cold_state(
+    comm: &mut Comm,
+    src: &mut dyn WindowSource,
+    y: &[f32],
+    p: &SvmParams,
+    seed: Option<&[f32]>,
+) -> LoopState {
     let n = y.len();
     let my = src.cols();
     debug_assert_eq!(
@@ -286,16 +413,13 @@ fn solve_rank(
         "window source must cover this rank's row partition"
     );
     let c = p.c as f64;
-    let tol = p.tol as f64;
     let eps = 1e-10f64;
-    let threads = parallel::resolve_threads(cfg.threads);
-
     let yd: Vec<f64> = y.iter().map(|&v| v as f64).collect();
     // Replicated dual state, sharded optimality state. A warm seed is
     // repaired identically on every rank (repair is deterministic), so
     // the replicated alpha stays replicated; each rank then rebuilds its
     // own f-slice from the seeded support vectors.
-    let mut alpha = match seed {
+    let alpha = match seed {
         Some(s) => repair_seed(y, c, s),
         None => vec![0.0f64; n],
     };
@@ -304,14 +428,131 @@ fn solve_rank(
         let all: Vec<usize> = (0..my.len()).collect();
         reconstruct_f_slice(src, &yd, &alpha, &mut f, &all, eps);
     }
-    let mut active = ActiveSet::full(my.len());
+    let active = ActiveSet::full(my.len());
+    LoopState { alpha, f, active, iters: 0, since_shrink: 0 }
+}
 
-    let mut iters = 0usize;
-    let mut since_shrink = 0usize;
+/// Slice a restored checkpoint onto this rank's (possibly re-sharded)
+/// partition: the full gradient is cut to my rows, the global active list
+/// is filtered and localized. Exact bit patterns throughout — this is what
+/// makes the resumed trajectory identical to the uninterrupted one.
+fn restored_state(my: RowSlice, ck: &SolverCheckpoint) -> LoopState {
+    let f = ck.f[my.lo..my.hi].to_vec();
+    let idx: Vec<usize> = ck
+        .active
+        .iter()
+        .map(|&g| g as usize)
+        .filter(|&g| my.contains(g))
+        .map(|g| my.local(g))
+        .collect();
+    LoopState {
+        alpha: ck.alpha.clone(),
+        f,
+        active: ActiveSet::from_indices(my.len(), idx),
+        iters: ck.iters,
+        since_shrink: ck.since_shrink,
+    }
+}
+
+/// The problem identity stamped into checkpoints: rows, exact label bits,
+/// and the hyperparameters that shape the trajectory. A restore against a
+/// different fingerprint is stale and rejected by the codec.
+fn problem_fingerprint(y: &[f32], p: &SvmParams) -> u64 {
+    checkpoint::fingerprint(
+        std::iter::once(y.len() as u64)
+            .chain(y.iter().map(|v| v.to_bits() as u64))
+            .chain([
+                p.c.to_bits() as u64,
+                p.gamma.to_bits() as u64,
+                p.tol.to_bits() as u64,
+                p.max_iter as u64,
+            ]),
+    )
+}
+
+/// Snapshot the replicated/sliced state as one consistent checkpoint:
+/// gradient slices and active lists are allgathered as exact bit patterns
+/// (contiguous ascending shards concatenate back into the full vectors),
+/// and rank 0 publishes the file atomically. Collective — every rank
+/// participates even though one writes.
+#[allow(clippy::too_many_arguments)]
+fn snapshot(
+    comm: &mut Comm,
+    spec: &CheckpointSpec,
+    my: RowSlice,
+    alpha: &[f64],
+    f: &[f64],
+    active: &ActiveSet,
+    iters: usize,
+    since_shrink: usize,
+) -> Result<()> {
+    let f_bits: Vec<u64> = f.iter().map(|v| v.to_bits()).collect();
+    let active_global: Vec<u64> = active.idx.iter().map(|&lt| my.global(lt) as u64).collect();
+    let world_f = comm.allgather_u64s(&f_bits)?;
+    let world_active = comm.allgather_u64s(&active_global)?;
+    if comm.rank() == 0 {
+        let full_f: Vec<f64> = world_f.iter().flatten().map(|&b| f64::from_bits(b)).collect();
+        let full_active: Vec<u64> = world_active.into_iter().flatten().collect();
+        let ck = SolverCheckpoint {
+            fingerprint: spec.fingerprint,
+            iters,
+            since_shrink,
+            alpha: alpha.to_vec(),
+            f: full_f,
+            active: full_active,
+        };
+        checkpoint::write_checkpoint(&spec.path, &ck)?;
+    }
+    Ok(())
+}
+
+/// The iteration loop proper, from an arbitrary starting state. The body
+/// is the historical loop expression-for-expression; the only additions
+/// are the per-iteration fault tick (a no-op without a [`FaultPlan`]) and
+/// the periodic checkpoint collective (absent without a spec) — neither
+/// touches a float, so cold runs replay the pre-elastic trajectory
+/// bitwise. `progress` mirrors the iteration counter outward so the
+/// recovery loop can price wasted work when this returns an error.
+#[allow(clippy::too_many_arguments)]
+fn solve_rank_from(
+    comm: &mut Comm,
+    src: &mut dyn WindowSource,
+    y: &[f32],
+    p: &SvmParams,
+    cfg: &EngineConfig,
+    state: LoopState,
+    ckpt: Option<&CheckpointSpec>,
+    progress: &mut usize,
+) -> Result<RankOutcome> {
+    let my = src.cols();
+    let c = p.c as f64;
+    let tol = p.tol as f64;
+    let eps = 1e-10f64;
+    let threads = parallel::resolve_threads(cfg.threads);
+    let yd: Vec<f64> = y.iter().map(|&v| v as f64).collect();
+
+    let LoopState { mut alpha, mut f, mut active, mut iters, mut since_shrink } = state;
+    let mut last_saved = iters;
     let (mut b_up, mut b_low) = (0.0f64, 0.0f64);
     let mut converged = false;
 
     while iters < p.max_iter {
+        *progress = iters;
+        // Scripted fault injection: a killed rank abandons the solve here,
+        // BEFORE the checkpoint collective, so a snapshot is never signed
+        // by a rank that did not live through it.
+        if comm.fault_tick(iters) {
+            return Err(Error::Cluster(format!(
+                "rank {}: killed by fault plan at iteration {iters}",
+                comm.rank()
+            )));
+        }
+        if let Some(spec) = ckpt {
+            if spec.every > 0 && iters > 0 && iters % spec.every == 0 && iters != last_saved {
+                snapshot(comm, spec, my, &alpha, &f, &active, iters, since_shrink)?;
+                last_saved = iters;
+            }
+        }
         // (1) local extremes over my active shard (global indices).
         let mut e = Extremes::empty();
         for &lt in &active.idx {
@@ -517,6 +758,100 @@ fn solve_rank(
         shrink_total.min_active += fr[8] as usize;
     }
     Ok(RankOutcome { sol, cache: cache_total, shrink: shrink_total })
+}
+
+/// One rank's elastic solve: the SPMD body wrapped in the
+/// detect → agree → re-shard → restore recovery loop. Returns `None` when
+/// this rank was scripted dead (its thread exits, its inbox drops, and
+/// peers observe the fail-stop signatures); every survivor returns the
+/// identical outcome, fault ledger included (survivors run in lockstep,
+/// so they count the same events).
+fn elastic_rank(
+    comm: &mut Comm,
+    prob: &BinaryProblem,
+    p: &SvmParams,
+    cfg: &EngineConfig,
+    elastic: &ElasticConfig,
+) -> Option<Result<SolveOutcome>> {
+    let n = prob.n();
+    let threads = parallel::resolve_threads(cfg.threads);
+    let fp = problem_fingerprint(&prob.y, p);
+    let spec = elastic.checkpoint.as_ref().map(|path| CheckpointSpec {
+        path: path.clone(),
+        every: elastic.checkpoint_every,
+        fingerprint: fp,
+    });
+
+    let t0 = std::time::Instant::now();
+    let mut report = FaultReport::none();
+    let mut attempt = 0usize;
+    let mut progress = 0usize;
+    loop {
+        // (Re-)shard rows over the current world and rebuild this rank's
+        // column-window cache for its new share.
+        let my = RowSlice::partition(n, comm.size())[comm.rank()];
+        let mut cache =
+            KernelCache::new_slice(&prob.x, n, prob.d, p.gamma, my, cfg.cache_rows, threads)
+                .with_eval(cfg.row_eval);
+        // Resume from the last consistent checkpoint when one exists for
+        // THIS problem (stale/corrupt files are rejected by the codec and
+        // fall back to a cold start). All ranks read the same published
+        // file, so the restore decision stays replicated.
+        let state = match spec.as_ref().and_then(|s| checkpoint::read_checkpoint(&s.path, fp).ok())
+        {
+            Some(ck) => {
+                report.restores += 1;
+                restored_state(my, &ck)
+            }
+            None => cold_state(comm, &mut cache, &prob.y, p, None),
+        };
+        // Iterations past the restart point were thrown away by the failure.
+        report.wasted_iters += progress.saturating_sub(state.iters) as u64;
+        progress = state.iters;
+        let run =
+            solve_rank_from(comm, &mut cache, &prob.y, p, cfg, state, spec.as_ref(), &mut progress);
+        match run {
+            Ok(out) => {
+                return Some(Ok(SolveOutcome {
+                    solution: out.sol,
+                    cache: out.cache,
+                    shrink: out.shrink,
+                    gram_secs: 0.0,
+                    solve_secs: t0.elapsed().as_secs_f64(),
+                    net: NetReport::none(),
+                    fault: report,
+                }));
+            }
+            // The scripted death: this rank simply stops participating.
+            Err(Error::Cluster(m)) if m.contains("killed by fault plan") => return None,
+            Err(e) if is_comm_failure(&e) && attempt < elastic.max_rank_retries => {
+                // Exponential backoff BEFORE consensus: every survivor
+                // sleeps the same amount, so their entry skew into the
+                // probe round stays bounded by the detection skew (which
+                // the consensus round's doubled timeout already covers).
+                std::thread::sleep(elastic.backoff * (1u32 << attempt.min(16)));
+                let dead = match comm.failure_consensus() {
+                    Ok(d) => d,
+                    Err(e) => return Some(Err(e)),
+                };
+                if dead.is_empty() {
+                    // A timeout with every peer alive is not a rank loss;
+                    // fail fast rather than retry a logic error.
+                    return Some(Err(e));
+                }
+                report.detections += dead.len() as u64;
+                let survivors: Vec<usize> =
+                    (0..comm.size()).filter(|r| !dead.contains(r)).collect();
+                match comm.split_survivors(&survivors) {
+                    Ok(sub) => *comm = sub,
+                    Err(e) => return Some(Err(e)),
+                }
+                report.resharding_rounds += 1;
+                attempt += 1;
+            }
+            Err(e) => return Some(Err(e)),
+        }
+    }
 }
 
 /// Rebuild the stale local f-entries after a reactivation:
@@ -750,5 +1085,141 @@ mod tests {
             "distributed+wss2"
         );
         assert_eq!(DistributedSmo::auto(0, 100, free).ranks, 1, "ranks clamp to >= 1");
+    }
+
+    /// Fresh checkpoint path in the system temp dir (tests run in
+    /// parallel, so each gets its own file).
+    fn tmp_ckpt(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(name);
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    #[test]
+    fn elastic_with_no_faults_matches_the_plain_solve_bitwise() {
+        let prob = blobs(30, 4, 1.2, 37);
+        let p = SvmParams::default();
+        let dist = DistributedSmo::new(3, EngineConfig::cached(0), CostModel::free());
+        let plain = dist.solve(&prob, &p);
+        let out = dist.solve_elastic(&prob, &p, &ElasticConfig::default()).unwrap();
+        assert_bitwise_equal(&out.solution, &plain.solution, "elastic, no faults");
+        assert_eq!(out.fault, FaultReport::none());
+    }
+
+    #[test]
+    fn killed_rank_recovers_on_survivors_with_checkpoint_restore() {
+        // The acceptance scenario: rank 1 of 4 dies at iteration 12; the
+        // three survivors agree it is dead, re-shard, restore the
+        // iteration-10 checkpoint, and replay the fault-free trajectory.
+        let prob = blobs(30, 4, 1.0, 29); // overlapping: long trajectory
+        let p = SvmParams::default();
+        let dist = DistributedSmo::new(4, EngineConfig::cached(0), CostModel::free());
+        let fault_free = dist.solve(&prob, &p);
+        assert!(fault_free.solution.converged);
+        assert!(fault_free.solution.iters > 15, "need room for the scripted kill");
+
+        let path = tmp_ckpt("parasvm_elastic_recover.psck");
+        let elastic = ElasticConfig {
+            checkpoint: Some(path.clone()),
+            checkpoint_every: 5,
+            max_rank_retries: 2,
+            backoff: Duration::from_millis(1),
+            comm_timeout: Some(Duration::from_millis(300)),
+            faults: FaultPlan::new().kill(1, 12),
+        };
+        let out = dist.solve_elastic(&prob, &p, &elastic).unwrap();
+        let _ = std::fs::remove_file(&path);
+
+        assert!(out.solution.converged);
+        assert_bitwise_equal(&out.solution, &fault_free.solution, "recovered vs fault-free");
+        assert_eq!(out.fault.detections, 1, "exactly one rank loss");
+        assert_eq!(out.fault.resharding_rounds, 1);
+        assert_eq!(out.fault.restores, 1, "one checkpoint restore");
+        assert_eq!(out.fault.wasted_iters, 2, "killed at 12, restored at 10");
+    }
+
+    #[test]
+    fn checkpoint_resume_replays_the_uninterrupted_tail_bitwise() {
+        // Run A checkpoints as it solves and leaves its last snapshot on
+        // disk; run B resumes from that file and must land on the exact
+        // same solution — the satellite's bitwise-resume guarantee.
+        let prob = blobs(30, 4, 1.1, 43);
+        let p = SvmParams::default();
+        let dist = DistributedSmo::new(2, EngineConfig::cached(0), CostModel::free());
+        let path = tmp_ckpt("parasvm_elastic_resume.psck");
+        let elastic = ElasticConfig {
+            checkpoint: Some(path.clone()),
+            checkpoint_every: 7,
+            ..ElasticConfig::default()
+        };
+        let a = dist.solve_elastic(&prob, &p, &elastic).unwrap();
+        assert!(a.solution.converged);
+        assert_eq!(a.fault, FaultReport::none(), "run A saw no faults and no restores");
+        assert!(path.exists(), "run A must leave its last checkpoint behind");
+
+        let b = dist.solve_elastic(&prob, &p, &elastic).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_bitwise_equal(&b.solution, &a.solution, "resumed vs uninterrupted");
+        assert_eq!(b.fault.restores, 1, "run B restored from run A's checkpoint");
+        assert_eq!(b.fault.detections, 0);
+    }
+
+    #[test]
+    fn cold_recovery_without_a_checkpoint_restarts_from_scratch() {
+        let prob = blobs(25, 4, 1.0, 53);
+        let p = SvmParams::default();
+        let dist = DistributedSmo::new(3, EngineConfig::cached(0), CostModel::free());
+        let fault_free = dist.solve(&prob, &p);
+        assert!(fault_free.solution.iters > 10, "need room for the scripted kill");
+
+        let elastic = ElasticConfig {
+            backoff: Duration::from_millis(1),
+            comm_timeout: Some(Duration::from_millis(300)),
+            faults: FaultPlan::new().kill(2, 8),
+            ..ElasticConfig::default()
+        };
+        let out = dist.solve_elastic(&prob, &p, &elastic).unwrap();
+        assert_bitwise_equal(&out.solution, &fault_free.solution, "cold restart vs fault-free");
+        assert_eq!(out.fault.detections, 1);
+        assert_eq!(out.fault.resharding_rounds, 1);
+        assert_eq!(out.fault.restores, 0, "no checkpoint: restart is cold, not a restore");
+        assert_eq!(out.fault.wasted_iters, 8, "everything before the kill is re-done");
+    }
+
+    #[test]
+    fn world_degrades_to_a_single_survivor_and_still_converges() {
+        let prob = blobs(20, 3, 1.2, 61);
+        let p = SvmParams::default();
+        let dist = DistributedSmo::new(2, EngineConfig::cached(0), CostModel::free());
+        let fault_free = dist.solve(&prob, &p);
+        let elastic = ElasticConfig {
+            backoff: Duration::from_millis(1),
+            comm_timeout: Some(Duration::from_millis(300)),
+            faults: FaultPlan::new().kill(1, 6),
+            ..ElasticConfig::default()
+        };
+        let out = dist.solve_elastic(&prob, &p, &elastic).unwrap();
+        assert!(out.solution.converged);
+        assert_bitwise_equal(&out.solution, &fault_free.solution, "single-survivor fallback");
+        assert_eq!(out.fault.detections, 1);
+        assert_eq!(out.fault.resharding_rounds, 1);
+    }
+
+    #[test]
+    fn scripted_delay_is_tolerated_not_detected() {
+        // A slow rank under a well-tuned timeout is NOT a failure: no
+        // detection, no re-shard, and the trajectory is untouched.
+        let prob = blobs(25, 4, 1.3, 71);
+        let p = SvmParams::default();
+        let dist = DistributedSmo::new(2, EngineConfig::cached(0), CostModel::free());
+        let plain = dist.solve(&prob, &p);
+        let elastic = ElasticConfig {
+            comm_timeout: Some(Duration::from_secs(5)),
+            faults: FaultPlan::new().delay(1, 5, Duration::from_millis(30)),
+            ..ElasticConfig::default()
+        };
+        let out = dist.solve_elastic(&prob, &p, &elastic).unwrap();
+        assert_bitwise_equal(&out.solution, &plain.solution, "delayed vs undelayed");
+        assert_eq!(out.fault, FaultReport::none());
     }
 }

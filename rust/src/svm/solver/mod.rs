@@ -212,6 +212,30 @@
 //! violators entering at zero; total merge-tree iterations are counted
 //! and gated ≤ cold in `solver_ablation`.
 //!
+//! # Fail-fast → checkpoint, re-shard, resume
+//!
+//! Through PR 8 a rank lost mid-solve meant the whole distributed solve
+//! errored out (cleanly — the failure-injection suite pinned down "error,
+//! never deadlock", but still a total loss of progress). The elastic
+//! entry ([`DistributedSmo::solve_elastic`], policy in
+//! [`distributed::ElasticConfig`]) climbs the next rung: rank 0
+//! periodically publishes an atomic checkpoint of the exact solver state
+//! (f64 alpha bit patterns, the full gradient assembled from the
+//! per-rank f-slices, the shrink set, the iteration count, and a problem
+//! fingerprint — format in `data::checkpoint`), and when a collective
+//! errors with a dead-peer signature the survivors agree on who died
+//! ([`crate::cluster::Comm::failure_consensus`]), derive a survivor
+//! sub-world ([`crate::cluster::Comm::split_survivors`]), re-partition
+//! the rows ([`slice::RowSlice::partition`] over the smaller world),
+//! restore the last checkpoint, and resume — down to a single-rank world
+//! if need be. Partition independence (the bitwise guarantee above) is
+//! what makes this *exact*: the resumed trajectory passes the same
+//! full-set KKT stopping test and lands on the same solution bit-for-bit
+//! as the fault-free run. Recovery work is counted in
+//! [`SolveOutcome::fault`] (a [`crate::cluster::FaultReport`]); scripted
+//! faults ([`crate::cluster::FaultPlan`]) make the whole path
+//! deterministic enough to property-test.
+//!
 //! All engines return duals that agree with the sequential oracle within
 //! float tolerance (the unshrunk cached and distributed engines are
 //! bit-identical; shrinking re-verifies KKT on the full index set before
@@ -240,7 +264,8 @@ pub use shrink::{ActiveSet, ShrinkStats};
 pub use slice::RowSlice;
 pub use working_set::{repair_seed, EngineConfig, Selection};
 
-pub use crate::cluster::{LevelNet, NetReport};
+pub use crate::cluster::{FaultPlan, FaultReport, LevelNet, NetReport};
+pub use distributed::ElasticConfig;
 
 use crate::data::BinaryProblem;
 use crate::svm::model::{BinaryModel, TrainStats};
@@ -262,6 +287,11 @@ pub struct SolveOutcome {
     /// solves; empty for hierarchical `solve_on` runs, whose traffic
     /// accumulates in the owning topology's ledgers).
     pub net: NetReport,
+    /// Recovery ledger: rank-loss detections, resharding rounds,
+    /// checkpoint restores and wasted iterations. All zero
+    /// ([`FaultReport::none`]) for single-host engines and fault-free
+    /// distributed solves.
+    pub fault: FaultReport,
 }
 
 /// A dual QP engine: one strategy for working-set selection + kernel
@@ -338,6 +368,7 @@ impl DualSolver for DenseSmo {
             gram_secs,
             solve_secs,
             net: NetReport::none(),
+            fault: FaultReport::none(),
         }
     }
 }
@@ -391,6 +422,7 @@ impl DualSolver for WorkingSetSmo {
             gram_secs: 0.0,
             solve_secs,
             net: NetReport::none(),
+            fault: FaultReport::none(),
         }
     }
 
@@ -416,6 +448,7 @@ impl DualSolver for WorkingSetSmo {
             gram_secs: 0.0,
             solve_secs,
             net: NetReport::none(),
+            fault: FaultReport::none(),
         }
     }
 }

@@ -90,6 +90,20 @@ impl ActiveSet {
         removed
     }
 
+    /// Rebuild an active set from a saved index list (checkpoint restore):
+    /// `idx` must be ascending, in-range, and duplicate-free. Stats start
+    /// fresh — a restored solve reports only its own shrink work.
+    pub fn from_indices(n: usize, idx: Vec<usize>) -> ActiveSet {
+        let mut active = vec![false; n];
+        for &t in &idx {
+            assert!(t < n, "active index {t} out of range {n}");
+            active[t] = true;
+        }
+        assert!(idx.windows(2).all(|w| w[0] < w[1]), "active indices must be ascending");
+        let min_active = idx.len();
+        ActiveSet { idx, active, stats: ShrinkStats { min_active, ..Default::default() } }
+    }
+
     /// Reactivate everything; returns the indices that were inactive (whose
     /// f-entries are stale and must be reconstructed by the caller).
     pub fn unshrink(&mut self) -> Vec<usize> {
@@ -140,6 +154,18 @@ mod tests {
         let mut a = ActiveSet::full(4);
         assert!(a.unshrink().is_empty());
         assert_eq!(a.stats.unshrinks, 0);
+    }
+
+    #[test]
+    fn from_indices_restores_membership_and_iteration_order() {
+        let a = ActiveSet::from_indices(6, vec![0, 2, 5]);
+        assert_eq!(a.idx, vec![0, 2, 5]);
+        assert!(a.contains(0) && a.contains(2) && a.contains(5));
+        assert!(!a.contains(1) && !a.contains(3) && !a.contains(4));
+        assert!(!a.is_full());
+        let mut b = ActiveSet::from_indices(3, vec![0, 1, 2]);
+        assert!(b.is_full());
+        assert_eq!(b.unshrink(), Vec::<usize>::new());
     }
 
     #[test]
