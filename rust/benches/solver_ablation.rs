@@ -9,9 +9,11 @@
 //! with its accuracy delta, on iris/wdbc), the per-rank shared
 //! cross-pair kernel-row cache on the OvO workload, the
 //! direct-vs-cascade scaling curve on the growing synthetic two-class
-//! workload, each point run warm-started and cold, and the elastic
-//! recovery-overhead row: the same checkpointed 4-rank solve fault-free
-//! vs with rank 1 killed mid-solve (schema v9).
+//! workload, each point run warm-started and cold plus the streamed
+//! cascade on a 2-rank world with the leaf pass replicated vs
+//! partitioned, and the elastic recovery-overhead row: the same
+//! checkpointed 4-rank solve fault-free vs with rank 1 killed mid-solve
+//! (schema v10).
 //!
 //! Native-only — runs from a clean checkout, no `make artifacts` needed:
 //!
@@ -34,6 +36,9 @@
 //! tolerance or fails to beat it at the largest row count, if the
 //! warm-started merge tree spends more SMO iterations than the cold one
 //! anywhere on the curve (the warm seed must never cost work), if the
+//! partitioned leaf pass is slower than the replicated one at the
+//! largest row count (it solves 1/R of the leaves per rank, so losing
+//! wall-clock means the survivor gather ate the saving), if the
 //! shared cross-pair cache records no reuse on the OvO workload, or if
 //! the killed-rank elastic run failed to detect and restore (a recovery
 //! row that never recovered prices nothing).
@@ -197,6 +202,39 @@ fn main() {
             r.cold_iters
         );
     }
+
+    // Partitioned-leaf gate: with the leaf pass sharded by rank each of
+    // the 2 ranks streams/solves half the leaves, so at the largest row
+    // count the partitioned run must not lose wall-clock to the
+    // replicated one (identical models — the harness already pinned them
+    // bitwise), and every row must show the ~R× per-rank streamed-byte
+    // reduction that motivates the mode.
+    for r in &ablation.scaling {
+        println!(
+            "partitioned n={}: replicated {:.3}s partitioned {:.3}s ({:.2}x), \
+             {}B -> {}B max/rank streamed",
+            r.rows,
+            r.replicated_secs,
+            r.partitioned_secs,
+            r.partitioned_speedup,
+            r.replicated_streamed_bytes,
+            r.partitioned_streamed_bytes
+        );
+        assert!(
+            r.partitioned_streamed_bytes < r.replicated_streamed_bytes,
+            "partitioned leaves did not cut per-rank streamed bytes at n={}: {} >= {}",
+            r.rows,
+            r.partitioned_streamed_bytes,
+            r.replicated_streamed_bytes
+        );
+    }
+    let last = ablation.scaling.last().unwrap();
+    assert!(
+        last.partitioned_speedup >= 1.0,
+        "partitioned leaf pass slower than replicated at n={}: {:.2}x",
+        last.rows,
+        last.partitioned_speedup
+    );
 
     // Shared-cache gate: on the OvO workload the per-rank cache must see
     // reuse both within a pair (hit rate) and across pairs — zero

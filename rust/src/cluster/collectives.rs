@@ -278,6 +278,81 @@ impl Comm {
         Ok(out)
     }
 
+    /// Ragged *section* all-gather — the cascade's survivor exchange.
+    /// Every rank contributes zero or more sections, each a `key` (e.g. a
+    /// leaf-shard index), an exact u64 `meta` frame (e.g. global row ids —
+    /// f32 integers stop being exact at 2^24, far below million-row id
+    /// spaces), and an f32 `payload` (e.g. packed rows/labels/alphas).
+    /// Every rank receives the union of all ranks' sections stable-sorted
+    /// by `key` (ties keep contributing-rank order), identical everywhere.
+    ///
+    /// Wire format: one u64 header frame per rank
+    /// `[n_sections, (key, meta_len, payload_len, meta..)*]` plus one f32
+    /// frame of concatenated payloads, exchanged through the existing
+    /// root-relayed allgathers — so the traffic lands in this
+    /// communicator's level ledger like any other collective.
+    pub fn gather_sections(
+        &mut self,
+        keys: &[u64],
+        meta: &[Vec<u64>],
+        payload: &[Vec<f32>],
+    ) -> Result<Vec<(u64, Vec<u64>, Vec<f32>)>> {
+        if keys.len() != meta.len() || keys.len() != payload.len() {
+            return Err(Error::Cluster(format!(
+                "gather_sections: {} keys, {} meta frames, {} payloads",
+                keys.len(),
+                meta.len(),
+                payload.len()
+            )));
+        }
+        let meta_total: usize = meta.iter().map(|m| m.len()).sum();
+        let mut head = Vec::with_capacity(1 + keys.len() * 3 + meta_total);
+        head.push(keys.len() as u64);
+        for ((k, m), p) in keys.iter().zip(meta).zip(payload) {
+            head.push(*k);
+            head.push(m.len() as u64);
+            head.push(p.len() as u64);
+            head.extend_from_slice(m);
+        }
+        let mut body = Vec::with_capacity(payload.iter().map(|p| p.len()).sum());
+        for p in payload {
+            body.extend_from_slice(p);
+        }
+        let heads = self.allgather_u64s(&head)?;
+        let bodies = self.allgather_f32s(&body)?;
+        let mut out = Vec::new();
+        for (h, b) in heads.iter().zip(&bodies) {
+            if h.is_empty() {
+                return Err(Error::Cluster("section frame empty".into()));
+            }
+            let n = h[0] as usize;
+            let mut pos = 1usize;
+            let mut bpos = 0usize;
+            for _ in 0..n {
+                if pos + 3 > h.len() {
+                    return Err(Error::Cluster("section header truncated".into()));
+                }
+                let key = h[pos];
+                let mlen = h[pos + 1] as usize;
+                let plen = h[pos + 2] as usize;
+                pos += 3;
+                if pos + mlen > h.len() || bpos + plen > b.len() {
+                    return Err(Error::Cluster("section frame truncated".into()));
+                }
+                out.push((key, h[pos..pos + mlen].to_vec(), b[bpos..bpos + plen].to_vec()));
+                pos += mlen;
+                bpos += plen;
+            }
+            if pos != h.len() || bpos != b.len() {
+                return Err(Error::Cluster("section frame has trailing data".into()));
+            }
+        }
+        // Stable: equal keys keep rank order, so the result is the same
+        // deterministic sequence on every rank.
+        out.sort_by_key(|s| s.0);
+        Ok(out)
+    }
+
     /// Gather on an explicit tag (so collectives built on top of gather do
     /// not collide with user-level [`Comm::gather_f32s`] traffic).
     fn gather_at(&mut self, root: usize, data: &[f32], tag: u32) -> Result<Option<Vec<Vec<f32>>>> {
@@ -498,6 +573,95 @@ mod tests {
                 assert_eq!(buf, &vec![big[r], r as u64]);
             }
         }
+    }
+
+    #[test]
+    fn gather_sections_unions_ragged_sections_sorted_by_key() {
+        // Rank r contributes r sections (rank 0 contributes none — an
+        // empty contribution must not desynchronize the collective) with
+        // interleaved keys, ragged meta/payload lengths, and ids beyond
+        // the f32-exact range.
+        let out = Universe::new(3, CostModel::free()).run(|mut c| {
+            let r = c.rank();
+            let mut keys = Vec::new();
+            let mut meta = Vec::new();
+            let mut payload = Vec::new();
+            for s in 0..r {
+                keys.push((10 * s + r) as u64);
+                meta.push(vec![(1u64 << 40) + (r * 10 + s) as u64; s + 1]);
+                payload.push(vec![r as f32 + s as f32 * 0.5; 2 * s + 1]);
+            }
+            c.gather_sections(&keys, &meta, &payload).unwrap()
+        });
+        for sections in out {
+            // rank 1: key 1; rank 2: keys 2, 12 -> sorted [1, 2, 12].
+            assert_eq!(sections.iter().map(|s| s.0).collect::<Vec<_>>(), vec![1, 2, 12]);
+            assert_eq!(sections[0].1, vec![(1u64 << 40) + 10]);
+            assert_eq!(sections[0].2, vec![1.0]);
+            assert_eq!(sections[1].1, vec![(1u64 << 40) + 20]);
+            assert_eq!(sections[1].2, vec![2.0]);
+            assert_eq!(sections[2].1, vec![(1u64 << 40) + 21; 2]);
+            assert_eq!(sections[2].2, vec![2.5; 3]);
+        }
+    }
+
+    #[test]
+    fn gather_sections_is_identical_on_every_rank_and_ties_keep_rank_order() {
+        let out = Universe::new(4, CostModel::free()).run(|mut c| {
+            // Every rank contributes one section under the SAME key; the
+            // stable sort must keep contributing-rank order.
+            let keys = [7u64];
+            let meta = vec![vec![c.rank() as u64]];
+            let payload = vec![vec![c.rank() as f32]];
+            c.gather_sections(&keys, &meta, &payload).unwrap()
+        });
+        let first = &out[0];
+        assert_eq!(first.len(), 4);
+        for (r, s) in first.iter().enumerate() {
+            assert_eq!((s.0, s.1[0], s.2[0]), (7, r as u64, r as f32));
+        }
+        for sections in &out[1..] {
+            assert_eq!(sections, first, "all ranks must hold the same union");
+        }
+    }
+
+    #[test]
+    fn gather_sections_payloads_are_bit_exact_and_may_be_empty() {
+        let out = Universe::new(2, CostModel::free()).run(|mut c| {
+            if c.rank() == 0 {
+                // A section with an empty payload (all-zero survivor set)
+                // still travels.
+                c.gather_sections(&[3], &[vec![9]], &[Vec::new()]).unwrap()
+            } else {
+                c.gather_sections(&[1], &[vec![4]], &[vec![1.0 + f32::EPSILON]]).unwrap()
+            }
+        });
+        for sections in out {
+            assert_eq!(sections.len(), 2);
+            assert_eq!((sections[0].0, sections[0].2.len()), (1, 1));
+            assert_eq!(sections[0].2[0].to_bits(), (1.0f32 + f32::EPSILON).to_bits());
+            assert_eq!((sections[1].0, sections[1].1[0], sections[1].2.len()), (3, 9, 0));
+        }
+    }
+
+    #[test]
+    fn gather_sections_rejects_mismatched_inputs() {
+        Universe::new(1, CostModel::free()).run(|mut c| {
+            assert!(c.gather_sections(&[1, 2], &[vec![0]], &[vec![0.0]]).is_err());
+        });
+    }
+
+    #[test]
+    fn gather_sections_accounts_wire_traffic() {
+        let u = Universe::new(2, CostModel::gige10());
+        let stats = u.stats();
+        u.run(|mut c| {
+            let keys = [c.rank() as u64];
+            let meta = vec![vec![0u64; 4]];
+            let payload = vec![vec![0.0f32; 8]];
+            c.gather_sections(&keys, &meta, &payload).unwrap();
+        });
+        assert!(stats.bytes() > 0, "survivor gather must land in the ledger");
     }
 
     #[test]

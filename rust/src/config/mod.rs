@@ -75,6 +75,17 @@ pub struct RunConfig {
     /// solve): shard → SV merge tree → polish per pair. Flat SMO path
     /// only; agreement-pinned, not bit-identical.
     pub cascade_shards: usize,
+    /// Partition streamed cascade leaves across solver ranks
+    /// (`--leaf-partition` / `--no-leaf-partition`, default on): each
+    /// rank streams and solves only the leaf shards it owns, then a
+    /// survivor-gather collective rebuilds the merge pools everywhere.
+    /// Off replays the replicated leaf pass bitwise. No effect on
+    /// single-rank or in-RAM runs.
+    pub leaf_partition: bool,
+    /// Cascade polish rescan bound (`--max-rescans`): extra full-stream
+    /// KKT rescans after the root solve, each warm-started from the
+    /// previous round's alpha (0 = accept the root solution as-is).
+    pub max_rescans: usize,
     /// Out-of-core ingest (`--streaming`): load the dataset through the
     /// chunked streaming layer instead of one whole-file read. Combined
     /// with `cascade_shards > 1` the trainer never materializes the full
@@ -121,6 +132,8 @@ impl Default for RunConfig {
             row_eval: RowEval::default(),
             cache_mb: 0,
             cascade_shards: 0,
+            leaf_partition: true,
+            max_rescans: 1,
             streaming: false,
             comm_timeout: 0.0,
             checkpoint: String::new(),
@@ -147,6 +160,8 @@ impl RunConfig {
             row_eval: self.row_eval,
             cache_mb: self.cache_mb,
             cascade_shards: self.cascade_shards,
+            leaf_partition: self.leaf_partition,
+            max_rescans: self.max_rescans,
             comm_timeout: self.comm_timeout,
         }
     }
@@ -185,6 +200,17 @@ impl RunConfig {
         self.cache_mb = args.get("cache-mb").map_err(e)?.unwrap_or(self.cache_mb);
         self.cascade_shards =
             args.get("cascade-shards").map_err(e)?.unwrap_or(self.cascade_shards);
+        match (args.flag("leaf-partition"), args.flag("no-leaf-partition")) {
+            (true, true) => {
+                return Err(Error::Config(
+                    "--leaf-partition conflicts with --no-leaf-partition".into(),
+                ))
+            }
+            (true, false) => self.leaf_partition = true,
+            (false, true) => self.leaf_partition = false,
+            (false, false) => {}
+        }
+        self.max_rescans = args.get("max-rescans").map_err(e)?.unwrap_or(self.max_rescans);
         if args.flag("streaming") {
             self.streaming = true;
         }
@@ -280,6 +306,8 @@ impl RunConfig {
             ("row_eval", json::s(self.row_eval.as_str())),
             ("cache_mb", json::num(self.cache_mb as f64)),
             ("cascade_shards", json::num(self.cascade_shards as f64)),
+            ("leaf_partition", json::num(if self.leaf_partition { 1.0 } else { 0.0 })),
+            ("max_rescans", json::num(self.max_rescans as f64)),
             ("streaming", json::num(if self.streaming { 1.0 } else { 0.0 })),
             ("comm_timeout", json::num(self.comm_timeout)),
             ("checkpoint", json::s(&self.checkpoint)),
@@ -365,6 +393,12 @@ impl RunConfig {
         }
         if let Some(v) = gn("cascade_shards") {
             c.cascade_shards = v as usize;
+        }
+        if let Some(v) = gn("leaf_partition") {
+            c.leaf_partition = v != 0.0;
+        }
+        if let Some(v) = gn("max_rescans") {
+            c.max_rescans = v as usize;
         }
         if let Some(v) = gn("streaming") {
             c.streaming = v != 0.0;
@@ -485,6 +519,51 @@ mod tests {
         // Defaults stay off through a roundtrip.
         let off = RunConfig::from_json(&RunConfig::default().to_json()).unwrap();
         assert_eq!((off.cache_mb, off.cascade_shards, off.streaming), (0, 0, false));
+    }
+
+    #[test]
+    fn leaf_partition_and_rescan_plumbing() {
+        // CLI override, JSON roundtrip and TrainConfig mapping for the
+        // partitioned-cascade knobs; the flag pair is a conflict when
+        // both are given, and the default stays on through a roundtrip.
+        let args = Args::parse_with_flags(
+            "train --no-leaf-partition --max-rescans 3".split_whitespace().map(String::from),
+            &["leaf-partition", "no-leaf-partition"],
+        )
+        .unwrap();
+        let mut c = RunConfig::default();
+        assert!(c.leaf_partition);
+        assert_eq!(c.max_rescans, 1);
+        c.apply_args(&args).unwrap();
+        assert!(!c.leaf_partition);
+        assert_eq!(c.max_rescans, 3);
+        let tc = c.train_config();
+        assert!(!tc.leaf_partition);
+        assert_eq!(tc.max_rescans, 3);
+        let back = RunConfig::from_json(&c.to_json()).unwrap();
+        assert!(!back.leaf_partition);
+        assert_eq!(back.max_rescans, 3);
+        let on = Args::parse_with_flags(
+            "train --leaf-partition".split_whitespace().map(String::from),
+            &["leaf-partition", "no-leaf-partition"],
+        )
+        .unwrap();
+        let mut c2 = RunConfig { leaf_partition: false, ..Default::default() };
+        c2.apply_args(&on).unwrap();
+        assert!(c2.leaf_partition);
+        let both = Args::parse_with_flags(
+            "train --leaf-partition --no-leaf-partition"
+                .split_whitespace()
+                .map(String::from),
+            &["leaf-partition", "no-leaf-partition"],
+        )
+        .unwrap();
+        let err = RunConfig::default().apply_args(&both).unwrap_err();
+        assert!(err.to_string().contains("conflicts"), "{err}");
+        // Defaults survive a roundtrip: partitioning stays on.
+        let off = RunConfig::from_json(&RunConfig::default().to_json()).unwrap();
+        assert!(off.leaf_partition);
+        assert_eq!(off.max_rescans, 1);
     }
 
     #[test]

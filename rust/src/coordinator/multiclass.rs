@@ -126,6 +126,20 @@ pub struct TrainConfig {
     /// replicated on the worker's sub-world and every pool solve is
     /// row-sharded across it ([`cascade::solve_on`]).
     pub cascade_shards: usize,
+    /// Partition the *streaming* cascade's leaf pass across solver ranks
+    /// (`--leaf-partition`, default on): each rank streams and solves
+    /// only the leaf shards it owns, then the survivor-gather collective
+    /// rebuilds the merge pools everywhere. The in-RAM cascade here is
+    /// already replicated over materialized data, so this knob only
+    /// changes runs driven through
+    /// [`cascade::solve_streaming_on`] — it is carried in the
+    /// [`CascadeConfig`] either way so one config describes both paths.
+    pub leaf_partition: bool,
+    /// Cascade polish rescan bound (`--max-rescans`): full-pass KKT
+    /// rescans after the root solve, each warm-started from the previous
+    /// round's alpha via the seeded distributed solve (counted in
+    /// `warm_solves`). 0 accepts the root solution as-is.
+    pub max_rescans: usize,
     /// Receive timeout for every communicator in the run, in seconds
     /// (`--comm-timeout`). 0 = the library default (30s). The world
     /// universe is built with this horizon and every derived comm
@@ -149,6 +163,8 @@ impl Default for TrainConfig {
             row_eval: crate::svm::solver::RowEval::default(),
             cache_mb: 0,
             cascade_shards: 0,
+            leaf_partition: true,
+            max_rescans: 1,
             comm_timeout: 0.0,
         }
     }
@@ -217,6 +233,14 @@ pub struct MulticlassReport {
     /// today's coordinator paths solve fail-fast, so a non-zero ledger
     /// can only come from elastic solves feeding the per-worker trailer.
     pub fault: FaultReport,
+    /// Bytes of row data materialized from chunk streams, summed over the
+    /// workers' trailers. Always zero on the in-RAM coordinator paths
+    /// here (they materialize everything up front, streaming nothing);
+    /// the out-of-core CLI path reports its per-rank counters directly
+    /// from [`cascade::StreamingOutcome::streamed_bytes`]. The slot
+    /// exists so the wire format and report already carry the counter
+    /// when a streaming coordinator path lands.
+    pub streamed_bytes: u64,
 }
 
 impl MulticlassReport {
@@ -499,10 +523,14 @@ pub fn train_multiclass(
         // Per-worker trailer after the per-pair records: the shared-cache
         // counters [hits, misses, evictions, cross_pair_hits,
         // max_resident] (zeros when the shared cache is off; summed over
-        // the worker's solver ranks on the hierarchical path) followed by
-        // the recovery ledger [detections, resharding_rounds, restores,
-        // wasted_iters] (zeros on fail-fast paths). Counts are exact in
-        // f32 up to 2^24 — plenty for both.
+        // the worker's solver ranks on the hierarchical path), the
+        // recovery ledger [detections, resharding_rounds, restores,
+        // wasted_iters] (zeros on fail-fast paths), and the per-worker
+        // streamed-bytes counter — always zero here because every
+        // coordinator path materializes its data up front; only the
+        // out-of-core CLI path (`cascade::train_streaming_multiclass_on`)
+        // streams, and it reports per rank directly. Counts are exact in
+        // f32 up to 2^24 — plenty for all three.
         stats_frame.extend_from_slice(&[
             cs.hits as f32,
             cs.misses as f32,
@@ -513,6 +541,7 @@ pub fn train_multiclass(
             fault.resharding_rounds as f32,
             fault.restores as f32,
             fault.wasted_iters as f32,
+            0.0, // streamed_bytes: in-RAM paths never stream
         ]);
 
         // (4) gather models at the leader — the only post-training
@@ -547,6 +576,7 @@ pub fn train_multiclass(
     let mut pair_reports = Vec::with_capacity(pairs.len());
     let mut shared_cache = CacheStats::default();
     let mut fault = FaultReport::none();
+    let mut streamed_bytes = 0u64;
     for (worker, (mf, sf)) in frames.iter().zip(stat_frames.iter()).enumerate() {
         let models = wire::decode_models(mf)?;
         let n_models = models.len();
@@ -569,7 +599,7 @@ pub fn train_multiclass(
             binaries.push(model);
         }
         let tail = &sf[n_models * 8..];
-        if tail.len() == 9 {
+        if tail.len() == 10 {
             shared_cache.hits += tail[0] as u64;
             shared_cache.misses += tail[1] as u64;
             shared_cache.evictions += tail[2] as u64;
@@ -581,6 +611,7 @@ pub fn train_multiclass(
                 restores: tail[7] as u64,
                 wasted_iters: tail[8] as u64,
             });
+            streamed_bytes += tail[9] as u64;
         }
     }
     // Canonical order for the ensemble (pair order, not arrival order).
@@ -607,6 +638,7 @@ pub fn train_multiclass(
         workers: cfg.workers,
         shared_cache,
         fault,
+        streamed_bytes,
     };
     Ok((model, report))
 }
@@ -630,8 +662,9 @@ fn solve_flat_pair(
             shards: cfg.cascade_shards,
             threads: engine_threads,
             row_eval: cfg.row_eval,
-            max_rescans: 1,
+            max_rescans: cfg.max_rescans,
             warm_start: true,
+            leaf_partition: cfg.leaf_partition,
         };
         let out = cascade::solve(prob, &cfg.params, &ccfg);
         return Ok(model_from_outcome(prob, &out.outcome, &cfg.params));
@@ -687,8 +720,9 @@ fn solve_hier_pair(
             shards: cfg.cascade_shards,
             threads: engine_threads,
             row_eval: cfg.row_eval,
-            max_rescans: 1,
+            max_rescans: cfg.max_rescans,
             warm_start: true,
+            leaf_partition: cfg.leaf_partition,
         };
         let out = cascade::solve_on(intra, prob, &cfg.params, &ccfg)?;
         fault.merge(&out.outcome.fault);
@@ -914,8 +948,10 @@ mod tests {
             assert!(p.stats.converged);
             assert!(p.stats.n_sv > 0);
         }
-        // Cascade runs leave the shared-cache trailer zeroed.
+        // Cascade runs leave the shared-cache trailer zeroed, and in-RAM
+        // paths stream nothing.
         assert_eq!(report.shared_cache.hits, 0);
+        assert_eq!(report.streamed_bytes, 0);
     }
 
     #[test]

@@ -21,7 +21,14 @@
 //! packs `DatasetView` panels tile-by-tile with O(chunk) scratch and is
 //! bit-identical to the batch pack. The cascade solver
 //! (`svm::solver::cascade`) can also train straight off a `ChunkSource`
-//! one shard at a time, never holding the full matrix at once.
+//! one shard at a time, never holding the full matrix at once — and on
+//! a multi-rank world with leaf partitioning each rank materializes
+//! only the leaf shards it owns, so per-rank streamed bytes drop ~R×.
+//! [`stream::SplitChunks`] carves a deterministic held-out view out of
+//! any chunk stream by global row index (train view / every-k-th-row
+//! held view), which is how `eval --streaming` scores a model without
+//! ever materializing the full matrix: train on one view, re-stream the
+//! other through the compiled model one chunk at a time.
 //!
 //! Out-of-core training re-streams its source many times (leaf pass,
 //! polish rescans, one pass per OvO pair, accuracy pass), and for CSV
@@ -52,7 +59,9 @@ pub mod wdbc;
 pub use checkpoint::{read_checkpoint, write_checkpoint, SolverCheckpoint};
 pub use dataset::{BinaryProblem, Dataset};
 pub use spill::{write_spill, MmapChunks, SpillInfo};
-pub use stream::{Chunk, ChunkSource, ChunkedDataset, CsvChunks, DatasetChunks, SynthChunks};
+pub use stream::{
+    Chunk, ChunkSource, ChunkedDataset, CsvChunks, DatasetChunks, SplitChunks, SynthChunks,
+};
 pub use synth::SynthSpec;
 
 use crate::util::rng::Rng;

@@ -257,6 +257,73 @@ impl ChunkSource for DatasetChunks {
     }
 }
 
+/// Deterministic held-out split over any chunk stream: global row `i`
+/// of the inner source belongs to the held-out view when
+/// `i % every == every - 1` and to the train view otherwise, so the two
+/// views partition the stream (every-1)/every : 1/every without ever
+/// materializing it. Chunk streams are stateful, so wrap two
+/// independently opened sources to get both sides; the assignment
+/// depends only on the global row index, making it stable across
+/// resets and chunk sizes. Chunks left empty by the filter are skipped,
+/// never yielded.
+///
+/// This is what `eval --streaming` trains and scores against: the train
+/// view feeds the streaming cascade, the held view is re-streamed
+/// through the compiled model one chunk at a time.
+pub struct SplitChunks {
+    inner: Box<dyn ChunkSource>,
+    every: usize,
+    held: bool,
+    seen: usize,
+}
+
+impl SplitChunks {
+    /// The training view: rows with `i % every != every - 1`.
+    pub fn train(inner: Box<dyn ChunkSource>, every: usize) -> SplitChunks {
+        assert!(every >= 2, "split needs every >= 2");
+        SplitChunks { inner, every, held: false, seen: 0 }
+    }
+
+    /// The held-out view: every `every`-th row (`i % every == every - 1`).
+    pub fn held(inner: Box<dyn ChunkSource>, every: usize) -> SplitChunks {
+        assert!(every >= 2, "split needs every >= 2");
+        SplitChunks { inner, every, held: true, seen: 0 }
+    }
+}
+
+impl ChunkSource for SplitChunks {
+    fn next_chunk(&mut self) -> Result<Option<Chunk>> {
+        loop {
+            let Some(chunk) = self.inner.next_chunk()? else {
+                return Ok(None);
+            };
+            let d = chunk.d();
+            let mut x = Vec::new();
+            let mut y = Vec::new();
+            for (k, &label) in chunk.y.iter().enumerate() {
+                let held = (self.seen + k) % self.every == self.every - 1;
+                if held == self.held {
+                    x.extend_from_slice(&chunk.x[k * d..(k + 1) * d]);
+                    y.push(label);
+                }
+            }
+            self.seen += chunk.y.len();
+            if !y.is_empty() {
+                return Ok(Some(Chunk { x, y }));
+            }
+        }
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.seen = 0;
+        self.inner.reset()
+    }
+
+    fn class_names(&self) -> Vec<String> {
+        self.inner.class_names()
+    }
+}
+
 /// A dataset ingested chunk-by-chunk into a pre-packed panel view.
 ///
 /// Peak ingest memory is the finished storage itself (row-major matrix +
@@ -415,6 +482,47 @@ mod tests {
         }
         assert_eq!(first, second);
         assert_eq!(first.len(), 3);
+    }
+
+    #[test]
+    fn split_chunks_partition_the_stream_and_ignore_chunk_size() {
+        let spec = SynthSpec::parse("synth:103x4x3").unwrap();
+        let whole = synth::generate(&spec, 11);
+        let open =
+            |rows: usize| Box::new(SynthChunks::new(spec, 11, rows)) as Box<dyn ChunkSource>;
+        let drain = |src: &mut dyn ChunkSource| {
+            let (mut x, mut y) = (Vec::new(), Vec::new());
+            while let Some(c) = src.next_chunk().unwrap() {
+                assert!(!c.y.is_empty(), "empty chunks must be skipped, not yielded");
+                x.extend_from_slice(&c.x);
+                y.extend_from_slice(&c.y);
+            }
+            (x, y)
+        };
+        // The oracle: filter the whole matrix by global row index.
+        let keep = |held: bool| {
+            let (mut x, mut y) = (Vec::new(), Vec::new());
+            for i in 0..whole.n {
+                if (i % 5 == 4) == held {
+                    x.extend_from_slice(&whole.x[i * whole.d..(i + 1) * whole.d]);
+                    y.push(whole.y[i]);
+                }
+            }
+            (x, y)
+        };
+        let (want_train, want_held) = (keep(false), keep(true));
+        assert_eq!(want_train.1.len(), 83);
+        assert_eq!(want_held.1.len(), 20);
+        for rows in [1usize, 7, 32, 103, 500] {
+            let mut train = SplitChunks::train(open(rows), 5);
+            let mut held = SplitChunks::held(open(rows), 5);
+            assert_eq!(drain(&mut train), want_train, "chunk_rows={rows}");
+            assert_eq!(drain(&mut held), want_held, "chunk_rows={rows}");
+            // Reset replays the identical filtered stream.
+            held.reset().unwrap();
+            assert_eq!(drain(&mut held), want_held);
+            assert_eq!(held.class_names(), spec.class_names());
+        }
     }
 
     #[test]

@@ -10,25 +10,28 @@
 //! artifacts, no device), so it runs from a clean checkout and in CI — it
 //! is the reproducible speedup story for the `svm::solver` subsystem. The
 //! bench wrapper (`benches/solver_ablation.rs`) renders the table, writes
-//! the machine-readable `BENCH_solver.json` (schema v9: everything v8
+//! the machine-readable `BENCH_solver.json` (schema v10: everything v9
 //! carried — panel/simd row-eval ratios, per-level `net_levels`,
 //! `hierarchical`, the `serve` rows with `f16_accuracy_deltas` and
 //! `serve_speedup_vs_legacy`, the `scaling` curve of direct-vs-cascade
-//! solves with the warm-vs-cold merge-tree split, and the
-//! `shared_cache_ovo` row — plus the `recovery` row: the same elastic
-//! 4-rank solve run fault-free and with one scripted mid-solve rank
-//! kill, recording the wall-time overhead ratio and the FaultReport
-//! counters of the killed run) that later PRs diff against, and
+//! solves with the warm-vs-cold merge-tree split, the
+//! `shared_cache_ovo` row, and the `recovery` row pricing one scripted
+//! mid-solve rank kill — plus the scaling rows' replicated-vs-
+//! partitioned streamed-cascade columns: the same rows streamed on a
+//! 2-rank world with the leaf pass replicated and then partitioned,
+//! recording both wall times, the speedup ratio, and the max per-rank
+//! streamed bytes of each mode) that later PRs diff against, and
 //! enforces the panel-vs-scalar, simd-vs-fused,
 //! compiled-vs-legacy-serve, f16-accuracy, cascade-agreement,
-//! warm-le-cold-iterations and shared-cache-hit regression guards CI
-//! runs on every push.
+//! warm-le-cold-iterations, shared-cache-hit and
+//! partitioned-ge-replicated regression guards CI runs on every push.
 
 use std::sync::Arc;
 
 use crate::backend::{NativeBackend, Solver, SvmBackend};
-use crate::cluster::{CostModel, FaultPlan, LevelNet};
+use crate::cluster::{CostModel, FaultPlan, LevelNet, Topology, LEVEL_INTRA};
 use crate::coordinator::{train_multiclass, TrainConfig};
+use crate::data::{SynthChunks, SynthSpec};
 use crate::error::Result;
 use crate::metrics::bench::{bench, BenchConfig};
 use crate::metrics::table::Table;
@@ -118,6 +121,24 @@ pub struct ScaleRow {
     /// Sub-solves that actually started from a nonzero seed (merge and
     /// polish solves; leaves are always cold).
     pub warm_solves: usize,
+    /// Median wall time of the 2-rank streamed cascade with the leaf
+    /// pass replicated: every rank streams the full source and solves
+    /// every leaf (the pre-PR-10 composition).
+    pub replicated_secs: f64,
+    /// Median wall time of the identical run with `leaf_partition` on:
+    /// each rank streams/solves only the leaves it owns, survivors are
+    /// gathered. The model is bit-identical to the replicated run.
+    pub partitioned_secs: f64,
+    /// replicated / partitioned median wall time (>= 1 means the
+    /// partitioned leaf pass wins; CI gates this at the largest row
+    /// count).
+    pub partitioned_speedup: f64,
+    /// Max per-rank streamed bytes with the replicated leaf pass (every
+    /// rank materializes the full stream).
+    pub replicated_streamed_bytes: u64,
+    /// Max per-rank streamed bytes with the partitioned leaf pass —
+    /// ~1/R of the replicated figure plus the shared polish bytes.
+    pub partitioned_streamed_bytes: u64,
 }
 
 /// Recovery overhead: the same elastic 4-rank solve run fault-free and
@@ -211,7 +232,7 @@ impl SolverAblation {
     /// Machine-readable form for `BENCH_solver.json`.
     pub fn to_json(&self) -> Json {
         json::obj(vec![
-            ("schema", json::s("parasvm-solver-ablation/v9")),
+            ("schema", json::s("parasvm-solver-ablation/v10")),
             ("dataset", json::s(&self.dataset)),
             ("n", json::num(self.n as f64)),
             ("d", json::num(self.d as f64)),
@@ -370,6 +391,20 @@ impl SolverAblation {
                                 ("warm_iters", json::num(r.warm_iters as f64)),
                                 ("cold_iters", json::num(r.cold_iters as f64)),
                                 ("warm_solves", json::num(r.warm_solves as f64)),
+                                ("replicated_secs", json::num(r.replicated_secs)),
+                                ("partitioned_secs", json::num(r.partitioned_secs)),
+                                (
+                                    "partitioned_speedup",
+                                    json::num(r.partitioned_speedup),
+                                ),
+                                (
+                                    "replicated_streamed_bytes",
+                                    json::num(r.replicated_streamed_bytes as f64),
+                                ),
+                                (
+                                    "partitioned_streamed_bytes",
+                                    json::num(r.partitioned_streamed_bytes as f64),
+                                ),
                             ])
                         })
                         .collect(),
@@ -796,6 +831,7 @@ pub fn run_solver_ablation(
             row_eval: RowEval::default(),
             max_rescans: 1,
             warm_start: true,
+            leaf_partition: true,
         };
         let mut clast = None;
         let cr = bench(&format!("cascade n={rows}"), cfg, || {
@@ -810,6 +846,54 @@ pub fn run_solver_ablation(
             cold_last = Some(cascade::solve(&sprob, &sw.params, &cold_cfg));
         });
         let cold = cold_last.expect("bench ran at least once");
+        // Replicated vs partitioned streamed cascade on a 2-rank intra
+        // world: the same rows off the synthetic chunk source, leaf pass
+        // replicated (every rank streams/solves everything — the
+        // pre-partition composition) and then partitioned (each rank
+        // materializes only the leaves it owns, survivors gathered).
+        // Models are bit-identical; wall time and max per-rank streamed
+        // bytes are the payoff columns.
+        let spec = SynthSpec::parse(&format!("synth:{rows}x16x2"))
+            .expect("scaling spec is well-formed");
+        let stream_shard_rows = rows.div_ceil(8).max(2);
+        let params = sw.params;
+        let mut run_stream = |partition: bool, label: &str| {
+            let scfg = CascadeConfig { leaf_partition: partition, ..warm_cfg };
+            let mut last: Option<(crate::svm::OvoModel, u64)> = None;
+            let r = bench(label, cfg, || {
+                let topo = Topology::single(LEVEL_INTRA, 2, CostModel::shm());
+                let outs = topo.universe().run(move |mut comm| {
+                    let mut src = SynthChunks::new(spec, seed, 1024);
+                    cascade::train_streaming_multiclass_on(
+                        &mut comm,
+                        &mut src,
+                        stream_shard_rows,
+                        &params,
+                        &scfg,
+                    )
+                });
+                let mut model = None;
+                let mut max_bytes = 0u64;
+                for o in outs {
+                    let (m, _, b) = o.expect("streamed cascade rank failed");
+                    max_bytes = max_bytes.max(b);
+                    model.get_or_insert(m);
+                }
+                last = Some((model.expect("at least one rank"), max_bytes));
+            });
+            let (model, bytes) = last.expect("bench ran at least once");
+            (r.summary.median, model, bytes)
+        };
+        let (replicated_secs, rep_model, replicated_streamed_bytes) =
+            run_stream(false, &format!("cascade-replicated n={rows}"));
+        let (partitioned_secs, part_model, partitioned_streamed_bytes) =
+            run_stream(true, &format!("cascade-partitioned n={rows}"));
+        // A perf row for a partitioned run that drifted would be
+        // meaningless — the partition must replay the replicated path.
+        for (a, b) in rep_model.binaries.iter().zip(part_model.binaries.iter()) {
+            assert_eq!(a.coef, b.coef, "partitioned leaf pass drifted at n={rows}");
+            assert_eq!(a.bias, b.bias, "partitioned leaf pass drifted at n={rows}");
+        }
         let (direct_model, _) = model_from_outcome(&sprob, &direct_out, &sw.params);
         let (casc_model, _) = model_from_outcome(&sprob, &casc.outcome, &sw.params);
         let agreement =
@@ -828,6 +912,15 @@ pub fn run_solver_ablation(
             warm_iters: casc.outcome.solution.iters,
             cold_iters: cold.outcome.solution.iters,
             warm_solves: casc.warm_solves,
+            replicated_secs,
+            partitioned_secs,
+            partitioned_speedup: if partitioned_secs > 0.0 {
+                replicated_secs / partitioned_secs
+            } else {
+                0.0
+            },
+            replicated_streamed_bytes,
+            partitioned_streamed_bytes,
         };
         table.row(&[
             format!("scaling n={} direct vs cascade-8", row.rows),
@@ -837,6 +930,18 @@ pub fn run_solver_ablation(
             String::new(),
             String::new(),
             format!("agree {:.3} peak {}B", row.agreement, row.peak_cache_bytes),
+        ]);
+        table.row(&[
+            format!("scaling n={} replicated vs partitioned-2r", row.rows),
+            format!("{:.4}", row.partitioned_secs),
+            format!("{:.2}x replicated", row.partitioned_speedup),
+            String::new(),
+            String::new(),
+            String::new(),
+            format!(
+                "{}B -> {}B max/rank streamed",
+                row.replicated_streamed_bytes, row.partitioned_streamed_bytes
+            ),
         ]);
         scaling.push(row);
     }
@@ -972,6 +1077,18 @@ mod tests {
             s.warm_iters,
             s.cold_iters
         );
+        // Schema v10: the replicated-vs-partitioned streamed columns.
+        // Partitioning must at least halve-ish the max per-rank streamed
+        // bytes on a 2-rank world (leaf bytes drop 2x; polish bytes are
+        // shared), and both timings must be real.
+        assert!(s.replicated_secs > 0.0 && s.partitioned_secs > 0.0);
+        assert!(s.partitioned_speedup > 0.0);
+        assert!(
+            s.partitioned_streamed_bytes < s.replicated_streamed_bytes,
+            "partitioned rank streamed as much as replicated: {} vs {}",
+            s.partitioned_streamed_bytes,
+            s.replicated_streamed_bytes
+        );
         assert_eq!(ab.shared_cache.len(), 1);
         let sc = &ab.shared_cache[0];
         assert_eq!(sc.cache_mb, 32);
@@ -998,8 +1115,9 @@ mod tests {
         assert!(rendered.contains("scaling n=300"));
         assert!(rendered.contains("shared-cache"));
         assert!(rendered.contains("elastic recovery"));
+        assert!(rendered.contains("replicated vs partitioned-2r"));
         let j = ab.to_json();
-        assert_eq!(j.get("schema").and_then(Json::as_str), Some("parasvm-solver-ablation/v9"));
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some("parasvm-solver-ablation/v10"));
         let rj = &j.get("recovery").and_then(Json::as_arr).unwrap()[0];
         assert!(rj.get("overhead_ratio").is_some());
         assert!(rj.get("restores").is_some());
@@ -1010,6 +1128,11 @@ mod tests {
         assert!(sj.get("cold_iters").is_some());
         assert!(sj.get("warm_solves").is_some());
         assert!(sj.get("cold_cascade_secs").is_some());
+        assert!(sj.get("replicated_secs").is_some());
+        assert!(sj.get("partitioned_secs").is_some());
+        assert!(sj.get("partitioned_speedup").is_some());
+        assert!(sj.get("replicated_streamed_bytes").is_some());
+        assert!(sj.get("partitioned_streamed_bytes").is_some());
         assert_eq!(j.get("shared_cache_ovo").and_then(Json::as_arr).unwrap().len(), 1);
         assert!(j.get("panel_speedup_vs_scalar").is_some());
         assert!(j.get("simd_speedup_vs_fused").is_some());

@@ -35,8 +35,17 @@ use parasvm::util::args::Args;
 use parasvm::util::fmt_secs;
 use parasvm::util::rng::Rng;
 
-const FLAGS: &[&str] =
-    &["verbose", "help", "quick", "no-scale", "legacy-serve", "f16-serve", "streaming"];
+const FLAGS: &[&str] = &[
+    "verbose",
+    "help",
+    "quick",
+    "no-scale",
+    "legacy-serve",
+    "f16-serve",
+    "streaming",
+    "leaf-partition",
+    "no-leaf-partition",
+];
 
 fn main() {
     let args = match Args::parse_with_flags(std::env::args().skip(1), FLAGS) {
@@ -102,6 +111,19 @@ fn print_help() {
                               there), and composes with --solver-ranks R\n\
                               (each pool QP row-sharded across the intra\n\
                               sub-world, bit-identical to R=1)\n\
+           --leaf-partition   (with --streaming --cascade-shards and\n\
+                              --solver-ranks R > 1, default on) partition\n\
+                              the cascade leaf pass: each rank streams and\n\
+                              solves only the leaf shards it owns, then a\n\
+                              survivor-gather collective rebuilds the merge\n\
+                              pools everywhere — per-rank streamed bytes\n\
+                              and leaf kernel work drop ~R×\n\
+           --no-leaf-partition  replicated leaf pass (every rank re-streams\n\
+                              and re-solves every leaf; bitwise replay of\n\
+                              the pre-partition path)\n\
+           --max-rescans N    cascade polish rescan bound (default 1); each\n\
+                              round re-streams the source for KKT violators\n\
+                              and warm-starts from the previous alpha\n\
            --spill FILE       (with --streaming --cascade-shards) parse the\n\
                               source once into a packed binary spill at FILE\n\
                               and replay every later pass from it — polish\n\
@@ -227,16 +249,10 @@ fn cmd_train(args: &Args, eval: bool) -> Result<()> {
     args.finish().map_err(parasvm::Error::Config)?;
     if cfg.streaming && cfg.cascade_shards > 1 {
         // Fully out-of-core: the cascade trains straight off the chunk
-        // source, one shard resident at a time. No held-out split here —
-        // train accuracy is reported by re-streaming the source.
-        if eval {
-            return Err(parasvm::Error::Config(
-                "--streaming with --cascade-shards trains on the full stream; use `train` \
-                 (accuracy is reported by re-streaming the source)"
-                    .into(),
-            ));
-        }
-        return cmd_train_streaming_cascade(&cfg, spill_path, save_path);
+        // source, one shard resident at a time. `eval` carves a
+        // deterministic held-out view out of the stream by global row
+        // index and scores it through the compiled model chunk-by-chunk.
+        return cmd_train_streaming_cascade(&cfg, spill_path, save_path, eval);
     }
     if spill_path.is_some() {
         return Err(parasvm::Error::Config(
@@ -306,22 +322,29 @@ fn cmd_train(args: &Args, eval: bool) -> Result<()> {
 }
 
 /// Out-of-core cascade training: `--streaming --cascade-shards N`, with
-/// two optional composers: `--spill FILE` converts the text/generator
+/// three optional composers: `--spill FILE` converts the text/generator
 /// stream into a packed binary spill ONCE and replays every later pass
-/// (leaves, polish rescans, remaining pairs, accuracy) from it, and
-/// `--solver-ranks R` runs the cascade driver replicated on an `intra`
-/// sub-world with every pool QP row-sharded across the R ranks.
+/// (leaves, polish rescans, remaining pairs, accuracy) from it,
+/// `--solver-ranks R` runs the cascade on an `intra` sub-world with
+/// every pool QP row-sharded across the R ranks (and, by default, the
+/// leaf pass partitioned so each rank streams/solves only the shards it
+/// owns — `--no-leaf-partition` for the replicated replay), and `eval`
+/// holds out every k-th row of the stream (k from `--train-frac`) and
+/// scores it through the compiled model one chunk at a time.
 ///
 /// Differences from the in-RAM path, by design:
 /// * no min-max scaling — the stream is consumed as-is (`synth:` data is
 ///   generated pre-scaled; CSV users pre-scale themselves),
-/// * no `--per-class` subsampling and no held-out split,
-/// * train accuracy is computed by re-streaming the source through the
-///   trained ensemble, one chunk resident at a time.
+/// * no `--per-class` subsampling; the held-out split is the
+///   deterministic every-k-th-row [`data::SplitChunks`] carve, not the
+///   stratified shuffle,
+/// * accuracy passes re-stream the source through the trained ensemble,
+///   one chunk resident at a time — nothing is ever fully materialized.
 fn cmd_train_streaming_cascade(
     cfg: &RunConfig,
     spill_path: Option<std::path::PathBuf>,
     save_path: Option<std::path::PathBuf>,
+    eval: bool,
 ) -> Result<()> {
     use parasvm::svm::solver::cascade::{self, CascadeConfig};
 
@@ -335,6 +358,18 @@ fn cmd_train_streaming_cascade(
             "--per-class needs the in-RAM path; drop it or drop --cascade-shards".into(),
         ));
     }
+    // Held-out carve for `eval`: every k-th global row, k derived from
+    // --train-frac (0.8 -> every 5th row held out).
+    let every = if eval {
+        if cfg.train_frac >= 1.0 {
+            return Err(parasvm::Error::Config(
+                "eval --streaming needs --train-frac < 1 to carve a held-out split".into(),
+            ));
+        }
+        Some(((1.0 / (1.0 - cfg.train_frac)).round() as usize).max(2))
+    } else {
+        None
+    };
     // Optional spill: parse the source once into packed f32 rows, then
     // every later pass is byte copies out of the page cache.
     let spill_info = match &spill_path {
@@ -365,41 +400,62 @@ fn cmd_train_streaming_cascade(
     } else {
         None
     };
-    let shard_rows = known_rows.map_or(8192, |n| n.div_ceil(cfg.cascade_shards).max(1024));
+    // Leaf sizing targets the rows the cascade will actually see: the
+    // train view when `eval` holds rows out, the whole stream otherwise.
+    let train_rows = known_rows.map(|n| match every {
+        Some(k) => n - n / k,
+        None => n,
+    });
+    let shard_rows = train_rows.map_or(8192, |n| n.div_ceil(cfg.cascade_shards).max(1024));
     let ccfg = CascadeConfig {
         shards: cfg.cascade_shards,
         threads: 0,
         row_eval: cfg.row_eval,
-        max_rescans: 1,
+        max_rescans: cfg.max_rescans,
         warm_start: true,
+        leaf_partition: cfg.leaf_partition,
     };
     let ranks = cfg.solver_ranks.max(1);
     println!(
-        "streaming cascade train: {} ({} rows/leaf, {} rows/chunk, {} solver rank(s), \
-         unscaled stream)",
+        "streaming cascade {}: {} ({} rows/leaf, {} rows/chunk, {} solver rank(s), \
+         {} leaves, unscaled stream)",
+        if eval { "eval" } else { "train" },
         cfg.dataset,
         shard_rows,
         data::stream::DEFAULT_CHUNK_ROWS,
-        ranks
+        ranks,
+        if ranks > 1 && cfg.leaf_partition { "partitioned" } else { "replicated" }
     );
     // Fresh resettable source on demand: the spill when one was written,
     // the raw stream otherwise. Every solver rank opens its own — chunk
     // streams are stateful and cannot be shared across rank threads.
     let cfg2 = cfg.clone();
     let spill2 = spill_path.clone();
-    let open_source = move || -> Result<Box<dyn data::ChunkSource>> {
+    let open_raw = move || -> Result<Box<dyn data::ChunkSource>> {
         match &spill2 {
             Some(p) => Ok(Box::new(data::MmapChunks::new(p, data::stream::DEFAULT_CHUNK_ROWS)?)),
             None => make_chunk_source(&cfg2),
         }
     };
+    // Training (and train accuracy) see the train view when evaluating;
+    // the held view is scored separately below.
+    let open_source = {
+        let open_raw = open_raw.clone();
+        move || -> Result<Box<dyn data::ChunkSource>> {
+            Ok(match every {
+                Some(k) => Box::new(data::SplitChunks::train(open_raw()?, k)),
+                None => open_raw()?,
+            })
+        }
+    };
 
     let t0 = std::time::Instant::now();
-    let (model, stats, net) = if ranks > 1 {
-        // Cascade × distributed: the driver replays identically on every
-        // rank of the intra sub-world and each pool solve is row-sharded
-        // across it, so the model is bit-identical to the 1-rank run and
-        // the collective chatter lands in the `intra` ledger below.
+    let (model, stats, net, streamed) = if ranks > 1 {
+        // Cascade × distributed: merge-tree and root solves are
+        // row-sharded over the intra sub-world; with leaf partitioning
+        // each rank streams and solves only its own leaves and the
+        // survivor-gather chatter lands in the `intra` ledger below.
+        // The model is identical on every rank either way.
         use parasvm::cluster::{CostModel, Topology, LEVEL_INTRA};
         let topo = Topology::single(
             LEVEL_INTRA,
@@ -413,20 +469,24 @@ fn cmd_train_streaming_cascade(
         }
         let p = cfg.params;
         let open = open_source.clone();
-        let mut outs = universe.run(move |mut comm| {
+        let outs = universe.run(move |mut comm| {
             let mut src = open()?;
             cascade::train_streaming_multiclass_on(&mut comm, src.as_mut(), shard_rows, &p, &ccfg)
         });
-        let first = outs.swap_remove(0)?;
+        let mut streamed = Vec::with_capacity(outs.len());
+        let mut first = None;
         for o in outs {
-            o?;
+            let (model, stats, bytes) = o?;
+            streamed.push(bytes);
+            first.get_or_insert((model, stats));
         }
-        (first.0, first.1, Some(topo.net()))
+        let (model, stats) = first.expect("universe ran at least one rank");
+        (model, stats, Some(topo.net()), streamed)
     } else {
         let mut src = open_source()?;
-        let (model, stats) =
+        let (model, stats, bytes) =
             cascade::train_streaming_multiclass(src.as_mut(), shard_rows, &cfg.params, &ccfg)?;
-        (model, stats, None)
+        (model, stats, None, vec![bytes])
     };
     println!(
         "trained {} binary problems in {} ({} classes, d={})",
@@ -457,17 +517,28 @@ fn cmd_train_streaming_cascade(
             );
         }
     }
-    // Accuracy by re-streaming: one chunk resident at a time.
-    let mut src = open_source()?;
-    let (mut correct, mut total) = (0usize, 0usize);
-    while let Some(chunk) = src.next_chunk()? {
-        let d = chunk.d();
-        for (i, &y) in chunk.y.iter().enumerate() {
-            total += 1;
-            correct += usize::from(model.predict(&chunk.x[i * d..(i + 1) * d]) == y as usize);
-        }
+    for (r, b) in streamed.iter().enumerate() {
+        println!("  rank {r}: {b} streamed bytes materialized");
     }
-    println!("train accuracy (re-streamed): {:.4}", correct as f64 / total.max(1) as f64);
+    // Accuracy by re-streaming, one chunk resident at a time, scored in
+    // batches through the compiled shared-SV engine.
+    let compiled = model.compile();
+    let mut score = |src: &mut dyn data::ChunkSource| -> Result<f64> {
+        let (mut correct, mut total) = (0usize, 0usize);
+        while let Some(chunk) = src.next_chunk()? {
+            let m = chunk.y.len();
+            let pred = compiled.predict_batch(&chunk.x, m);
+            total += m;
+            correct += pred.iter().zip(&chunk.y).filter(|&(&p, &y)| p == y as usize).count();
+        }
+        Ok(correct as f64 / total.max(1) as f64)
+    };
+    let mut src = open_source()?;
+    println!("train accuracy (re-streamed): {:.4}", score(src.as_mut())?);
+    if let Some(k) = every {
+        let mut held = data::SplitChunks::held(open_raw()?, k);
+        println!("test  accuracy (held-out 1/{k} rows, re-streamed): {:.4}", score(&mut held)?);
+    }
     if let Some(path) = save_path {
         parasvm::svm::persist::save(&model, &path)?;
         println!("model saved to {}", path.display());

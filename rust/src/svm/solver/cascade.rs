@@ -64,6 +64,23 @@
 //! hierarchical run reports cascade traffic per level like any other
 //! intra-world solve. Single-class pools skip the engine on every rank
 //! (no collective), keeping the replicas in lockstep.
+//!
+//! # Partitioned leaves
+//!
+//! With [`CascadeConfig::leaf_partition`] (the default) the streaming
+//! leaf pass is *partitioned* instead of replicated: leaf shard `k` is
+//! owned by rank `k % R`, every rank scans the stream (leaf boundaries
+//! are positional) but only the owner materializes and solves its shards
+//! — locally, with the unshrunk single-rank engine that the distributed
+//! engine's bitwise rank-invariance property guarantees replays the
+//! collective solve's trajectory exactly. A ragged survivor-gather
+//! collective ([`Comm::gather_sections`]) then rebuilds the identical
+//! survivor pools on every rank in leaf order, and the merge tree, root,
+//! and polish solves stay row-sharded over the full world exactly as
+//! before. Per-rank materialized bytes and leaf kernel work drop ~R×;
+//! `leaf_partition = false` (or a 1-rank world) replays the replicated
+//! path bit-for-bit. Single-class leaves contribute their full pool to
+//! the gather like any other leaf, so ranks never desynchronize.
 
 use crate::cluster::Comm;
 use crate::data::stream::ChunkSource;
@@ -106,6 +123,12 @@ pub struct CascadeConfig {
     /// (feasibility-repaired; same KKT stopping test, fewer iterations).
     /// `false` = the cold tree, bit-for-bit.
     pub warm_start: bool,
+    /// Partition the streaming leaf pass across the communicator's ranks
+    /// (leaf `k` owned by rank `k % R`, survivors re-assembled through
+    /// [`Comm::gather_sections`]) instead of replicating every leaf solve
+    /// on every rank. `false` = the replicated driver, bit-for-bit. No
+    /// effect on 1-rank worlds or the in-RAM path.
+    pub leaf_partition: bool,
 }
 
 impl Default for CascadeConfig {
@@ -116,6 +139,7 @@ impl Default for CascadeConfig {
             row_eval: RowEval::default(),
             max_rescans: 1,
             warm_start: true,
+            leaf_partition: true,
         }
     }
 }
@@ -273,6 +297,46 @@ impl Acc {
         }
         s
     }
+
+    /// Exact u64 counter frame for the partitioned leaf pass: each rank
+    /// solves only its own leaves, then the frames are allgathered and
+    /// merged so every rank still reports tree-wide totals (what the
+    /// replicated driver reported for free).
+    fn to_words(&self) -> [u64; 13] {
+        [
+            self.cache.hits as u64,
+            self.cache.misses as u64,
+            self.cache.evictions as u64,
+            self.cache.cross_pair_hits as u64,
+            self.cache.max_resident as u64,
+            self.shrink.shrink_passes as u64,
+            self.shrink.shrunk_total as u64,
+            self.shrink.unshrinks as u64,
+            self.shrink.min_active as u64,
+            self.iters as u64,
+            self.peak_cache_bytes as u64,
+            self.solves as u64,
+            self.warm_solves as u64,
+        ]
+    }
+
+    /// Merge one rank's counter frame: sums for the additive counters,
+    /// max/min for the water marks.
+    fn absorb_words(&mut self, w: &[u64; 13]) {
+        self.cache.hits += w[0] as usize;
+        self.cache.misses += w[1] as usize;
+        self.cache.evictions += w[2] as usize;
+        self.cache.cross_pair_hits += w[3] as usize;
+        self.cache.max_resident = self.cache.max_resident.max(w[4] as usize);
+        self.shrink.shrink_passes += w[5] as usize;
+        self.shrink.shrunk_total += w[6] as usize;
+        self.shrink.unshrinks += w[7] as usize;
+        self.shrink.min_active = self.shrink.min_active.min(w[8] as usize);
+        self.iters += w[9] as usize;
+        self.peak_cache_bytes = self.peak_cache_bytes.max(w[10] as usize);
+        self.solves += w[11] as usize;
+        self.warm_solves += w[12] as usize;
+    }
 }
 
 /// Where each pool's QP actually runs.
@@ -356,6 +420,116 @@ fn solve_pool(
             Ok(out.solution)
         }
     }
+}
+
+/// Solve one *owned* leaf locally on a partitioned world: the unshrunk
+/// single-rank engine (same WSS1 rule the distributed engine runs). The
+/// distributed engine's pinned rank-invariance property — any rank count,
+/// any cache budget replays the single-rank `EngineConfig::cached`
+/// trajectory bit-for-bit — is what makes this owner-local solve produce
+/// exactly the survivors (ids, labels, AND converged alpha bits) that the
+/// replicated driver's collective leaf solve would have, so the merge
+/// tree above sees identical pools either way. Leaves are always cold
+/// (never-solved rows carry a zero seed), so there is no seeded branch.
+fn solve_leaf_local(
+    pool: &Pool,
+    d: usize,
+    p: &SvmParams,
+    cfg: &CascadeConfig,
+    acc: &mut Acc,
+) -> SmoSolution {
+    let m = pool.len();
+    let has_pos = pool.y.iter().any(|&v| v > 0.0);
+    let has_neg = pool.y.iter().any(|&v| v < 0.0);
+    if !(has_pos && has_neg) {
+        // Single-class leaf: alpha = 0 instantly, same as the replicated
+        // skip — the pool still joins the survivor gather afterwards.
+        return SmoSolution {
+            alpha: vec![0.0; m],
+            bias: 0.0,
+            iters: 0,
+            b_up: 0.0,
+            b_low: 0.0,
+            converged: true,
+        };
+    }
+    let engine_cfg = EngineConfig {
+        threads: cfg.threads,
+        row_eval: cfg.row_eval,
+        ..EngineConfig::cached((m / 4).max(8))
+    };
+    let row_threads = super::parallel::resolve_threads(cfg.threads);
+    let mut src = KernelCache::new(&pool.x, m, d, p.gamma, engine_cfg.cache_rows, row_threads)
+        .with_eval(cfg.row_eval);
+    let (sol, shrink) = working_set::solve(&mut src, &pool.y, p, &engine_cfg);
+    acc.absorb(m, src.stats(), shrink, sol.iters);
+    sol
+}
+
+/// Survivor-gather barrier of the partitioned leaf pass: exchange every
+/// rank's owned survivor pools (key = leaf index, meta = global row ids,
+/// payload = `[y | alpha | rows]`) through [`Comm::gather_sections`] and
+/// rebuild the full leaf-ordered pool list — identical on every rank —
+/// then allgather the owned-leaf counter frames so each rank's ledger
+/// reports tree-wide totals. Single-class leaves travel like any other
+/// leaf (their survivor set is the whole shard), which is what keeps the
+/// ranks in lockstep for the collective merge solves that follow.
+fn gather_survivors(
+    backend: &mut PoolBackend<'_>,
+    pools: Vec<Pool>,
+    keys: &[u64],
+    leaves: usize,
+    d: usize,
+    acc: &mut Acc,
+    leaf_acc: &Acc,
+) -> Result<Vec<Pool>> {
+    let PoolBackend::World(comm) = backend else {
+        unreachable!("partitioned leaf pass requires a world backend");
+    };
+    let mut meta: Vec<Vec<u64>> = Vec::with_capacity(pools.len());
+    let mut payload: Vec<Vec<f32>> = Vec::with_capacity(pools.len());
+    for pl in &pools {
+        meta.push(pl.ids.iter().map(|&id| id as u64).collect());
+        let mut body = Vec::with_capacity(pl.len() * (2 + d));
+        body.extend_from_slice(&pl.y);
+        body.extend_from_slice(&pl.alpha);
+        body.extend_from_slice(&pl.x);
+        payload.push(body);
+    }
+    let sections = comm.gather_sections(keys, &meta, &payload)?;
+    if sections.len() != leaves {
+        return Err(Error::Cluster(format!(
+            "survivor gather saw {} leaves, expected {leaves}",
+            sections.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(sections.len());
+    for (_, ids, body) in sections {
+        let m = ids.len();
+        if body.len() != m * (2 + d) {
+            return Err(Error::Cluster(format!(
+                "survivor section holds {m} rows but {} payload values",
+                body.len()
+            )));
+        }
+        let mut pl = Pool::with_capacity(m, d);
+        for k in 0..m {
+            let row = &body[2 * m + k * d..2 * m + (k + 1) * d];
+            pl.push_seeded(ids[k] as usize, row, body[k], body[m + k]);
+        }
+        out.push(pl);
+    }
+    // Every rank absorbs every rank's owned-leaf counter frame (its own
+    // included — partitioned leaf solves bypassed `acc`), so the
+    // reported totals match what the replicated driver counted.
+    for frame in comm.allgather_u64s(&leaf_acc.to_words())? {
+        let words: [u64; 13] = frame
+            .as_slice()
+            .try_into()
+            .map_err(|_| Error::Cluster(format!("leaf counter frame len {}", frame.len())))?;
+        acc.absorb_words(&words);
+    }
+    Ok(out)
 }
 
 /// One merge level with fold pairing: pool `i` joins pool `i + half`.
@@ -599,6 +773,12 @@ pub struct StreamingOutcome {
     pub peak_cache_bytes: usize,
     /// Sub-solves that started from a nonzero (warm) seed.
     pub warm_solves: usize,
+    /// Bytes THIS rank materialized into pools (leaf rows plus polish
+    /// re-admissions; row payloads only). Replicated mode materializes
+    /// every kept row on every rank; the partitioned leaf pass drops this
+    /// ~R× — the per-rank counter is what the scaling claim is made of,
+    /// so it is deliberately NOT averaged across ranks.
+    pub streamed_bytes: u64,
 }
 
 /// Out-of-core cascade for one OvO pair: stream the source, keep rows of
@@ -653,9 +833,26 @@ fn solve_streaming_with(
     let t0 = std::time::Instant::now();
     source.reset()?;
     let mut acc = Acc::new();
+    // Partitioned leaf pass (R > 1 worlds with `leaf_partition`): leaf
+    // `k` belongs to rank `k % R`. Every rank still scans the stream —
+    // leaf boundaries are positional, so the scan itself is what keeps
+    // the ranks' leaf indexing identical — but only the owner
+    // materializes rows and solves; owned-leaf counters accumulate
+    // separately so tree-wide totals can be rebuilt after the gather.
+    let part = match backend {
+        PoolBackend::World(comm) if cfg.leaf_partition && comm.size() > 1 => {
+            Some((comm.rank(), comm.size()))
+        }
+        _ => None,
+    };
+    let mut leaf_acc = Acc::new();
+    let mut streamed_bytes = 0u64;
     let mut d: Option<usize> = None;
     let mut shard: Option<Pool> = None;
     let mut pools: Vec<Pool> = Vec::new();
+    let mut owned_keys: Vec<u64> = Vec::new();
+    let mut leaf_idx = 0usize;
+    let mut leaf_rows = 0usize;
     let mut next_id = 0usize;
     // Leaf pass: solve each full shard as soon as it closes, so at most
     // one unsolved shard plus survivor pools are ever resident.
@@ -673,24 +870,51 @@ fn solve_streaming_with(
             } else {
                 continue;
             };
-            let pl = shard.get_or_insert_with(|| Pool::with_capacity(shard_rows, width));
-            pl.push(next_id, &chunk.x[r * width..(r + 1) * width], sign);
+            let owned = match part {
+                Some((rank, ranks)) => leaf_idx % ranks == rank,
+                None => true,
+            };
+            if owned {
+                let pl = shard.get_or_insert_with(|| Pool::with_capacity(shard_rows, width));
+                pl.push(next_id, &chunk.x[r * width..(r + 1) * width], sign);
+                streamed_bytes += (width * 4) as u64;
+            }
             next_id += 1;
-            if pl.len() == shard_rows {
-                let full = shard.take().expect("shard present");
-                let sol = solve_pool(&full, width, p, cfg, &mut acc, backend)?;
-                pools.push(full.survivors(&sol.alpha, width));
+            leaf_rows += 1;
+            if leaf_rows == shard_rows {
+                if let Some(full) = shard.take() {
+                    let sol = match part {
+                        Some(_) => {
+                            owned_keys.push(leaf_idx as u64);
+                            solve_leaf_local(&full, width, p, cfg, &mut leaf_acc)
+                        }
+                        None => solve_pool(&full, width, p, cfg, &mut acc, backend)?,
+                    };
+                    pools.push(full.survivors(&sol.alpha, width));
+                }
+                leaf_idx += 1;
+                leaf_rows = 0;
             }
         }
     }
     if let Some(tail) = shard.take() {
         let width = d.expect("width known once any row was kept");
-        let sol = solve_pool(&tail, width, p, cfg, &mut acc, backend)?;
+        let sol = match part {
+            Some(_) => {
+                owned_keys.push(leaf_idx as u64);
+                solve_leaf_local(&tail, width, p, cfg, &mut leaf_acc)
+            }
+            None => solve_pool(&tail, width, p, cfg, &mut acc, backend)?,
+        };
         pools.push(tail.survivors(&sol.alpha, width));
     }
     let d = d.ok_or_else(|| Error::Data("empty stream".into()))?;
-    if pools.is_empty() || pools.iter().all(|pl| pl.len() == 0) {
+    if next_id == 0 {
         return Err(Error::Data(format!("no rows of classes {pos}/{neg} in stream")));
+    }
+    if part.is_some() {
+        let leaves = leaf_idx + usize::from(leaf_rows > 0);
+        pools = gather_survivors(backend, pools, &owned_keys, leaves, d, &mut acc, &leaf_acc)?;
     }
     let shards = pools.len();
     // The leaf level is already solved; reduce_pools re-solves singleton
@@ -745,6 +969,11 @@ fn solve_streaming_with(
             break;
         }
         rescans_used += 1;
+        streamed_bytes += (violators.len() * d * 4) as u64;
+        // Warm polish: the previous round's converged alphas seed the
+        // re-solve (re-admitted violators enter at zero), and the seeded
+        // distributed engine rebuilds each rank's f-slice from that seed
+        // — round k+1 never cold-starts.
         pool.set_seed(&sol.alpha);
         pool = Pool::merge(pool, violators, d);
         sol = solve_pool(&pool, d, p, cfg, &mut acc, backend)?;
@@ -768,6 +997,7 @@ fn solve_streaming_with(
         final_rows: pool.len(),
         peak_cache_bytes: acc.peak_cache_bytes,
         warm_solves: acc.warm_solves,
+        streamed_bytes,
     })
 }
 
@@ -794,13 +1024,15 @@ fn scan_block(
 /// Train a full OvO ensemble out-of-core: one [`solve_streaming`] pass
 /// per class pair (the source is reset between pairs). Class names come
 /// from the source; a source that only learns labels while streaming
-/// (CSV) gets one extra discovery pass up front.
+/// (CSV) gets one extra discovery pass up front. The third element is
+/// the bytes THIS rank materialized into pools, summed over the pairs
+/// (the partitioned leaf pass drops it ~R× on an R-rank world).
 pub fn train_streaming_multiclass(
     source: &mut dyn ChunkSource,
     shard_rows: usize,
     p: &SvmParams,
     cfg: &CascadeConfig,
-) -> Result<(OvoModel, Vec<TrainStats>)> {
+) -> Result<(OvoModel, Vec<TrainStats>, u64)> {
     train_streaming_multiclass_with(source, shard_rows, p, cfg, &mut PoolBackend::Local)
 }
 
@@ -808,14 +1040,15 @@ pub fn train_streaming_multiclass(
 /// `comm` supplies its own resettable source over the same data and all
 /// pairs train through [`solve_streaming_on`] — the `--streaming
 /// --cascade-shards N --solver-ranks R` composition. The returned
-/// ensemble is identical on every rank.
+/// ensemble is identical on every rank; the streamed-bytes counter is
+/// per-rank.
 pub fn train_streaming_multiclass_on(
     comm: &mut Comm,
     source: &mut dyn ChunkSource,
     shard_rows: usize,
     p: &SvmParams,
     cfg: &CascadeConfig,
-) -> Result<(OvoModel, Vec<TrainStats>)> {
+) -> Result<(OvoModel, Vec<TrainStats>, u64)> {
     train_streaming_multiclass_with(source, shard_rows, p, cfg, &mut PoolBackend::World(comm))
 }
 
@@ -825,7 +1058,7 @@ fn train_streaming_multiclass_with(
     p: &SvmParams,
     cfg: &CascadeConfig,
     backend: &mut PoolBackend<'_>,
-) -> Result<(OvoModel, Vec<TrainStats>)> {
+) -> Result<(OvoModel, Vec<TrainStats>, u64)> {
     let mut names = source.class_names();
     if names.is_empty() {
         source.reset()?;
@@ -838,20 +1071,22 @@ fn train_streaming_multiclass_with(
     let n_classes = names.len();
     let mut binaries = Vec::new();
     let mut stats = Vec::new();
+    let mut streamed_bytes = 0u64;
     let mut d = 0usize;
     for (a, b) in ovo_pairs(n_classes) {
         let out = solve_streaming_with(source, a, b, shard_rows, p, cfg, backend)?;
         d = out.model.d;
+        streamed_bytes += out.streamed_bytes;
         binaries.push(out.model);
         stats.push(out.stats);
     }
-    Ok((OvoModel::new(n_classes, d, binaries, names), stats))
+    Ok((OvoModel::new(n_classes, d, binaries, names), stats, streamed_bytes))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::stream::SynthChunks;
+    use crate::data::stream::{DatasetChunks, SynthChunks};
     use crate::data::SynthSpec;
     use crate::svm::solver::WorkingSetSmo;
 
@@ -997,6 +1232,7 @@ mod tests {
     #[test]
     fn distributed_cascade_is_rank_count_invariant_and_crosses_the_wire() {
         use crate::cluster::{CostModel, Topology, LEVEL_INTRA};
+        use std::sync::Arc;
         let (_, prob) = synth_pair(300, 5, 17);
         let p = SvmParams::default();
         let cfg = CascadeConfig { shards: 4, ..CascadeConfig::default() };
@@ -1059,8 +1295,8 @@ mod tests {
             });
             (outs.swap_remove(0), topo.net())
         };
-        let ((m1, _), _) = run(1);
-        let ((m2, stats2), net2) = run(2);
+        let ((m1, _, streamed1), _) = run(1);
+        let ((m2, stats2, streamed2), net2) = run(2);
         assert_eq!(m1.binaries.len(), m2.binaries.len());
         for (a, b) in m1.binaries.iter().zip(&m2.binaries) {
             assert_eq!(a.bias.to_bits(), b.bias.to_bits());
@@ -1071,6 +1307,10 @@ mod tests {
         }
         assert!(stats2.iter().all(|s| s.converged));
         assert!(net2.level(LEVEL_INTRA).unwrap().bytes > 0);
+        // The default partitioned leaf pass halves what each rank
+        // materializes (leaf rows split 2 ways; polish re-admissions
+        // stay replicated on both sides of the comparison).
+        assert!(streamed2 < streamed1, "partitioned rank streamed {streamed2} >= {streamed1}");
         let ds = crate::data::synth::generate(&spec, 21);
         assert!(m2.accuracy(&ds.x, &ds.y) > 0.9);
     }
@@ -1082,10 +1322,126 @@ mod tests {
         let mut source = SynthChunks::new(spec, 5, 64);
         let p = SvmParams::default();
         let cfg = CascadeConfig::default();
-        let (model, stats) = train_streaming_multiclass(&mut source, 64, &p, &cfg).unwrap();
+        let (model, stats, streamed) =
+            train_streaming_multiclass(&mut source, 64, &p, &cfg).unwrap();
         assert_eq!(model.binaries.len(), 3);
         assert_eq!(stats.len(), 3);
+        assert!(streamed > 0, "local streaming must account materialized bytes");
         let acc = model.accuracy(&ds.x, &ds.y);
         assert!(acc > 0.9, "synth accuracy {acc}");
+    }
+
+    #[test]
+    fn partitioned_streaming_replays_the_replicated_path_bitwise() {
+        use crate::cluster::{CostModel, Topology, LEVEL_INTRA};
+        // 240 rows / shard_rows 60 -> 4 full leaves, split 2-and-2 across
+        // a 2-rank world. max_rescans 0 isolates the leaf pass, so the
+        // per-rank materialized bytes must drop EXACTLY 2x.
+        let spec = SynthSpec { rows: 240, d: 5, classes: 2 };
+        let p = SvmParams::default();
+        let run = |partition: bool| {
+            let cfg = CascadeConfig {
+                shards: 4,
+                max_rescans: 0,
+                leaf_partition: partition,
+                ..CascadeConfig::default()
+            };
+            let topo = Topology::single(LEVEL_INTRA, 2, CostModel::shm());
+            let universe = topo.universe();
+            universe.run(move |mut comm| {
+                let mut src = SynthChunks::new(spec, 33, 37);
+                solve_streaming_on(&mut comm, &mut src, 0, 1, 60, &p, &cfg)
+                    .expect("streaming cascade")
+            })
+        };
+        let repl = run(false);
+        let part = run(true);
+        for (r, q) in repl.iter().zip(&part) {
+            assert_eq!(r.model.bias.to_bits(), q.model.bias.to_bits());
+            assert_eq!(r.model.coef.len(), q.model.coef.len());
+            for (x, y) in r.model.coef.iter().zip(&q.model.coef) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            assert_eq!(r.levels, q.levels);
+            assert_eq!(r.shards, q.shards);
+            assert_eq!(r.final_rows, q.final_rows);
+            assert_eq!(r.warm_solves, q.warm_solves);
+            assert_eq!(r.stats.iters, q.stats.iters, "gathered counters must match");
+            assert_eq!(2 * q.streamed_bytes, r.streamed_bytes, "leaf bytes must halve");
+        }
+    }
+
+    #[test]
+    fn partitioned_single_class_leaves_stay_in_lockstep() {
+        use crate::cluster::{CostModel, Topology, LEVEL_INTRA};
+        // Class-sorted stream: the leading leaves are pure single-class
+        // shards. Their owners solve them trivially (alpha = 0, keep all
+        // rows) but must still contribute them to the survivor gather —
+        // a skipped section would desynchronize the merge collectives.
+        let (ds, _) = synth_pair(240, 4, 29);
+        let mut idx: Vec<usize> = (0..ds.n).collect();
+        idx.sort_by_key(|&i| ds.y[i]);
+        let sorted = ds.select(&idx);
+        let p = SvmParams::default();
+        let run = |ranks: usize, partition: bool| {
+            let cfg = CascadeConfig {
+                shards: 4,
+                leaf_partition: partition,
+                ..CascadeConfig::default()
+            };
+            let topo = Topology::single(LEVEL_INTRA, ranks, CostModel::shm());
+            let universe = topo.universe();
+            let src_ds = sorted.clone();
+            let mut outs = universe.run(move |mut comm| {
+                let mut src = DatasetChunks::new(src_ds.clone(), 37);
+                solve_streaming_on(&mut comm, &mut src, 0, 1, 60, &p, &cfg)
+                    .expect("sorted partitioned cascade")
+            });
+            outs.swap_remove(0)
+        };
+        let repl = run(2, false);
+        let part = run(2, true);
+        let three = run(3, true);
+        for q in [&part, &three] {
+            assert_eq!(repl.model.bias.to_bits(), q.model.bias.to_bits());
+            for (x, y) in repl.model.coef.iter().zip(&q.model.coef) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            assert_eq!(repl.final_rows, q.final_rows);
+        }
+        assert!(repl.model.n_sv() > 0, "cascade lost every SV on sorted data");
+    }
+
+    #[test]
+    fn warm_polish_never_exceeds_cold_iterations_across_rescans() {
+        // Multiple polish rounds: round k+1 must seed from round k's
+        // converged alphas (the --max-rescans warm-start story), so the
+        // warm tree + polish never spends more SMO iterations than cold.
+        let spec = SynthSpec { rows: 300, d: 4, classes: 2 };
+        let p = SvmParams::default();
+        let run = |warm: bool| {
+            let cfg = CascadeConfig {
+                shards: 4,
+                max_rescans: 3,
+                warm_start: warm,
+                ..CascadeConfig::default()
+            };
+            let mut src = SynthChunks::new(spec, 47, 41);
+            solve_streaming(&mut src, 0, 1, 75, &p, &cfg).unwrap()
+        };
+        let warm = run(true);
+        let cold = run(false);
+        assert_eq!(cold.warm_solves, 0);
+        assert!(warm.warm_solves > 0, "no solve started warm");
+        assert!(
+            warm.stats.iters <= cold.stats.iters,
+            "warm polish took {} iters, cold took {}",
+            warm.stats.iters,
+            cold.stats.iters
+        );
+        let ds = crate::data::synth::generate(&spec, 47);
+        let prob = ds.binary_pair(0, 1);
+        let agree = prediction_agreement(&warm.model, &cold.model, &prob.x, prob.n());
+        assert!(agree >= CASCADE_AGREEMENT_MIN, "warm/cold agreement {agree}");
     }
 }

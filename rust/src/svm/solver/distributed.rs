@@ -34,6 +34,12 @@
 //! single-rank [`super::WorkingSetSmo`] (and hence to the dense oracle);
 //! with shrinking on it satisfies the same full-set KKT tolerance because
 //! apparent convergence triggers a global reactivation-and-verify pass.
+//! That rank-invariance property is load-bearing beyond regression
+//! testing: the cascade's partitioned leaf pass
+//! (`cascade::CascadeConfig::leaf_partition`) solves each leaf locally on
+//! its owning rank instead of collectively on all R, and relies on this
+//! pinned guarantee for the owner-local solve to reproduce the replicated
+//! collective solve bit-for-bit.
 //!
 //! The paper's MPI-CUDA analogy: ranks are MPICH processes, the per-rank
 //! caches are each GPU's kernel-tile memory, and the per-iteration

@@ -236,6 +236,27 @@
 //! faults ([`crate::cluster::FaultPlan`]) make the whole path
 //! deterministic enough to property-test.
 //!
+//! # Replicated leaves → partitioned leaves
+//!
+//! Composing the cascade with the distributed engine originally meant
+//! *replication*: every rank of a streaming multi-rank world streamed
+//! every leaf shard, solved every leaf through the row-sharded
+//! collective engine, and only the per-leaf rows were split R ways —
+//! so per-rank streamed bytes and per-rank leaf kernel work never
+//! dropped below the single-rank cost. The partitioned leaf pass
+//! ([`CascadeConfig::leaf_partition`], default on) inverts the
+//! assignment: leaf `k` belongs to rank `k % R`, only the owner
+//! materializes and solves it (locally — a single-rank working-set
+//! solve, which the pinned rank-invariance property guarantees is
+//! bit-identical to the collective solve the replicated path ran), and
+//! a ragged survivor gather ([`crate::cluster::Comm::gather_sections`])
+//! rebuilds identical leaf-ordered survivor pools on every rank before
+//! the merge tree takes over, row-sharded across the full world as
+//! before. Per-rank streamed bytes and leaf solve work drop ~R×; the
+//! price is one gather of O(survivors) rows per pair. Turning the knob
+//! off replays the replicated trajectory bitwise — the gather reorders
+//! no rows and the merge tree sees the same pools either way.
+//!
 //! All engines return duals that agree with the sequential oracle within
 //! float tolerance (the unshrunk cached and distributed engines are
 //! bit-identical; shrinking re-verifies KKT on the full index set before

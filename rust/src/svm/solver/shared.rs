@@ -28,6 +28,12 @@
 //! Hits on rows another pair inserted are surfaced as
 //! [`CacheStats::cross_pair_hits`] — the direct measure of the cross-pair
 //! overlap this cache exists to exploit.
+//!
+//! Scope note: the cascade's partitioned leaf tier does *not* route
+//! through this cache — each owner-local leaf solve is a short-lived
+//! single-rank solve over its own shard's rows (disjoint global ids
+//! across leaves, so there is no cross-solve overlap to exploit) and
+//! keeps the ordinary private per-solve [`super::cache::KernelCache`].
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};

@@ -92,6 +92,56 @@ fn shared_cache_is_deterministic_across_pair_threads() {
     assert!(m1.accuracy(&ds.x, &ds.y) >= 0.9);
 }
 
+/// The partitioned leaf pass must replay the replicated one bit-for-bit
+/// off a binary spill too — the production out-of-core composition is
+/// `--spill`/`.spill` replay plus `--solver-ranks`, so the equality has
+/// to hold when every rank re-streams the same packed file, not just
+/// the in-RAM and generator sources the unit tests pin. With the polish
+/// isolated off (`max_rescans: 0`) the per-rank materialized bytes must
+/// drop exactly 2x on the 2-rank world.
+#[test]
+fn partitioned_spill_streamed_cascade_matches_replicated_bitwise() {
+    use parasvm::cluster::{CostModel, Topology, LEVEL_INTRA};
+    let dir = std::env::temp_dir().join("parasvm_cascade_part_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("part_{}.spill", std::process::id()));
+    let spec = SynthSpec { rows: 240, d: 5, classes: 2 };
+    data::write_spill(&mut SynthChunks::new(spec, 33, 64), &path).unwrap();
+    let p = parasvm::svm::SvmParams::default();
+    let run = |partition: bool| {
+        let ccfg = CascadeConfig {
+            shards: 4,
+            max_rescans: 0,
+            leaf_partition: partition,
+            ..CascadeConfig::default()
+        };
+        let topo = Topology::single(LEVEL_INTRA, 2, CostModel::shm());
+        let spill = path.clone();
+        topo.universe().run(move |mut comm| {
+            // Per-rank replay of the same packed spill file.
+            let mut src = data::MmapChunks::new(&spill, 37).expect("spill replay");
+            cascade::solve_streaming_on(&mut comm, &mut src, 0, 1, 60, &p, &ccfg)
+                .expect("spill-streamed cascade")
+        })
+    };
+    let repl = run(false);
+    let part = run(true);
+    for (r, q) in repl.iter().zip(&part) {
+        assert_eq!(r.model.bias.to_bits(), q.model.bias.to_bits());
+        assert_eq!(r.model.coef.len(), q.model.coef.len());
+        for (a, b) in r.model.coef.iter().zip(&q.model.coef) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in r.model.sv.iter().zip(&q.model.sv) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(r.final_rows, q.final_rows);
+        assert_eq!(r.stats.iters, q.stats.iters);
+        assert_eq!(2 * q.streamed_bytes, r.streamed_bytes, "leaf bytes must halve");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
 /// End to end out-of-core: the cascade trains a 3-class OvO ensemble
 /// straight off the chunk source, one shard resident at a time, and the
 /// result classifies the (identical, in-RAM) data accurately.
@@ -102,10 +152,14 @@ fn streaming_cascade_trains_synth_multiclass() {
     let p = hyperparams_for(&ds);
     let ccfg = CascadeConfig { shards: 4, ..Default::default() };
     let mut src = SynthChunks::new(spec, 42, 256);
-    let (model, stats) = cascade::train_streaming_multiclass(&mut src, 750, &p, &ccfg).unwrap();
+    let (model, stats, streamed_bytes) =
+        cascade::train_streaming_multiclass(&mut src, 750, &p, &ccfg).unwrap();
     assert_eq!(model.binaries.len(), 3);
     assert_eq!(model.n_classes, 3);
     assert!(stats.iter().all(|s| s.n_sv > 0));
+    // Single-rank: every leaf is owned locally, so the accounting must
+    // cover at least one full materialization of the training matrix.
+    assert!(streamed_bytes >= (spec.rows * spec.d * 4) as u64, "streamed {streamed_bytes}B");
     let acc = model.accuracy(&ds.x, &ds.y);
     assert!(acc >= 0.9, "streaming cascade accuracy {acc}");
 }
